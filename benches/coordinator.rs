@@ -1,0 +1,83 @@
+//! Coordinator micro-benchmarks: batcher throughput, router dispatch,
+//! end-to-end mock serving latency vs batch policy (the L3 hot path that
+//! must NOT be the bottleneck — DESIGN.md §10).
+//!
+//! Run: `cargo bench --bench coordinator`.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use gaq_md::coordinator::{
+    Backend, BatchPolicy, Batcher, InferenceRequest, Server, ServerConfig,
+};
+use gaq_md::util::benchkit::{black_box, Bench};
+
+fn mk_req(id: u64) -> (InferenceRequest, mpsc::Receiver<gaq_md::coordinator::InferenceResponse>) {
+    let (tx, rx) = mpsc::channel();
+    (
+        InferenceRequest {
+            id,
+            variant: "mock".into(),
+            positions: vec![0.5; 72],
+            reply: tx,
+            enqueued: Instant::now(),
+        },
+        rx,
+    )
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+
+    // ---- batcher push/take ---------------------------------------------------
+    b.run("batcher/push_take_64", || {
+        let mut batcher = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(100),
+        });
+        let mut rxs = Vec::with_capacity(64);
+        for i in 0..64 {
+            let (r, rx) = mk_req(i);
+            batcher.push(r);
+            rxs.push(rx);
+        }
+        let mut total = 0;
+        while !batcher.is_empty() {
+            total += batcher.take_batch().len();
+        }
+        black_box(total)
+    });
+
+    // ---- end-to-end mock server: latency under different policies ------------
+    for (max_batch, wait_us) in [(1usize, 0u64), (8, 200), (32, 1000)] {
+        let server = Server::start(ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_micros(wait_us),
+            },
+            variants: vec![("mock".into(), Backend::Mock { n_atoms: 24 }, 2)],
+        })
+        .expect("server");
+
+        b.run(&format!("serve_mock/b{max_batch}_w{wait_us}us_x32"), || {
+            let pend: Vec<_> = (0..32)
+                .map(|_| server.submit("mock", vec![0.5; 72]).unwrap())
+                .collect();
+            let mut acc = 0.0f32;
+            for p in pend {
+                acc += p.wait_timeout(Duration::from_secs(10)).unwrap().energy_ev;
+            }
+            black_box(acc)
+        });
+        let m = server.metrics();
+        println!(
+            "  policy(b={max_batch}, w={wait_us}us): mean_batch={:.2} p50={:?} p99={:?}",
+            m.mean_batch_size(),
+            m.percentile(0.50).unwrap_or_default(),
+            m.percentile(0.99).unwrap_or_default()
+        );
+        server.shutdown();
+    }
+
+    b.report();
+}

@@ -1,0 +1,120 @@
+//! Fig. 3 — NVE energy conservation (short-horizon bench variant).
+//!
+//! Runs a scaled-down NVE trajectory per variant and reports the drift
+//! rate (meV/atom/ps) + explosion flag — the quantities behind Fig. 3.
+//! The full-length driver (with per-step energy trace CSV) is
+//! `cargo run --release --example md_simulation`.
+//!
+//! Expected shape: FP32 and GAQ stable with comparable drift; naive INT8
+//! drifts hard or explodes. Also validates the integrator itself on the
+//! classical oracle (drift ~ 0).
+//!
+//! Run: `cargo bench --bench fig3_nve` (needs `make artifacts` for model rows).
+
+use gaq_md::md::drift::DriftTracker;
+use gaq_md::md::integrator::{langevin_step, verlet_step, MdState};
+use gaq_md::md::{ClassicalProvider, ForceProvider};
+use gaq_md::molecule::Molecule;
+use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::util::prng::Rng;
+
+fn run_nve(
+    provider: &mut dyn ForceProvider,
+    positions: Vec<f64>,
+    masses: Vec<f64>,
+    steps: usize,
+    dt: f64,
+    temp: f64,
+    seed: u64,
+) -> anyhow::Result<gaq_md::md::drift::DriftReport> {
+    let n_atoms = masses.len();
+    let mut state = MdState::new(positions, masses);
+    let mut rng = Rng::new(seed);
+    state.thermalize(temp, &mut rng);
+
+    let (_, mut forces) = provider.energy_forces(&state.positions)?;
+    for _ in 0..100 {
+        let (_, f) = langevin_step(&mut state, &forces, dt, 0.02, temp, &mut rng, provider)?;
+        forces = f;
+    }
+    state.remove_com_velocity();
+
+    let mut tracker = DriftTracker::new(n_atoms);
+    let (pe0, f0) = provider.energy_forces(&state.positions)?;
+    forces = f0;
+    tracker.record(0.0, pe0 + state.kinetic_energy(), state.temperature());
+    for _ in 0..steps {
+        let (pe, f) = verlet_step(&mut state, &forces, dt, provider)?;
+        forces = f;
+        tracker.record(state.time_fs, pe + state.kinetic_energy(), state.temperature());
+        if tracker.exploded() {
+            break;
+        }
+    }
+    Ok(tracker.report())
+}
+
+fn main() {
+    let fast = std::env::var("GAQ_BENCH_FAST").ok().as_deref() == Some("1");
+    let steps = if fast { 400 } else { 2000 };
+    let dt = 0.5;
+    let temp = 300.0;
+
+    println!("=== Fig. 3 bench: NVE drift over {steps} steps (dt={dt} fs, T0={temp} K) ===");
+    println!(
+        "{:<16} {:>16} {:>14} {:>12}  status",
+        "force field", "drift meV/at/ps", "excursion", "rms fluct"
+    );
+
+    // integrator validation row: the analytic classical oracle
+    let mol = Molecule::azobenzene_builtin();
+    let mut cp = ClassicalProvider { ff: mol.ff.clone() };
+    let rep = run_nve(&mut cp, mol.positions.clone(), mol.masses.clone(), steps, dt, temp, 1)
+        .expect("classical NVE");
+    println!(
+        "{:<16} {:>+16.4} {:>14.3} {:>12.3}  {}",
+        "classical-FF",
+        rep.drift_mev_atom_ps,
+        rep.max_excursion_mev_atom,
+        rep.rms_fluct_mev_atom,
+        if rep.exploded { "EXPLODED" } else { "stable" }
+    );
+
+    // compiled model rows
+    let dir = gaq_md::resolve_artifacts_dir(None);
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("(model rows skipped: {e} — run `make artifacts`)");
+            return;
+        }
+    };
+    for name in ["fp32", "gaq_w4a8", "degree_quant", "naive_int8"] {
+        let Ok(v) = manifest.variant(name) else { continue };
+        let engine = Engine::cpu().expect("pjrt");
+        let ff = std::sync::Arc::new(
+            CompiledForceField::load(&engine, v, manifest.molecule.n_atoms()).expect("compile"),
+        );
+        let mut provider = ModelForceProvider::new(ff);
+        match run_nve(
+            &mut provider,
+            manifest.molecule.positions.clone(),
+            manifest.molecule.masses.clone(),
+            steps,
+            dt,
+            temp,
+            1,
+        ) {
+            Ok(rep) => println!(
+                "{:<16} {:>+16.4} {:>14.3} {:>12.3}  {}",
+                name,
+                rep.drift_mev_atom_ps,
+                rep.max_excursion_mev_atom,
+                rep.rms_fluct_mev_atom,
+                if rep.exploded { "EXPLODED" } else { "stable" }
+            ),
+            Err(e) => println!("{:<16} failed: {e}", name),
+        }
+    }
+    println!("\npaper: naive INT8 explodes <100 ps; FP32/GAQ drift < 0.15 meV/atom/ps");
+}

@@ -1,0 +1,100 @@
+//! Table I — per-layer complexity with and without quantisation.
+//!
+//! Two parts:
+//! 1. The analytic cost model (costmodel::Arch) evaluated at the paper's
+//!    l_max per architecture — reproduces the table's asymptotic forms and
+//!    the constant-factor gain rho_k = k/32.
+//! 2. A *measured* validation: per-layer byte traffic emulated with the
+//!    quantized GEMM at each architecture's channel multiplier, verifying
+//!    the measured time follows the model's scaling (who is most
+//!    expensive, by roughly what factor).
+//!
+//! Run: `cargo bench --bench table1_complexity`.
+
+use gaq_md::costmodel::{rho, speedup, Arch};
+use gaq_md::quant::gemm::{gemm_f32, gemm_i8};
+use gaq_md::quant::pack::quantize_i8;
+use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::prng::Rng;
+
+fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| (r.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+fn main() {
+    // ---- part 1: the analytic table -----------------------------------------
+    let (n, avg_n, f) = (24u64, 12u64, 32u64);
+    println!("=== Table I: per-layer complexity (n={n}, <N>={avg_n}, F={f}) ===");
+    println!(
+        "{:<11} {:>5} {:>14} {:>16} {:>16} {:>8}",
+        "Arch", "lmax", "C_full(FP32)", "C_quant(k=8)", "C_quant(k=4)", "gain_8"
+    );
+    for arch in Arch::ALL {
+        let cf = arch.cost_full(n, avg_n, f);
+        println!(
+            "{:<11} {:>5} {:>14} {:>16.0} {:>16.0} {:>8.3}",
+            arch.name(),
+            arch.lmax(),
+            cf,
+            arch.cost_quant(n, avg_n, f, 8),
+            arch.cost_quant(n, avg_n, f, 4),
+            rho(8),
+        );
+    }
+    println!(
+        "\ntheoretical speedups: S_8 = {:.0}x, S_4 = {:.0}x (Eq. 11)",
+        speedup(8),
+        speedup(4)
+    );
+
+    // ---- part 2: measured per-layer proxy -----------------------------------
+    // Emulate one message-passing layer per architecture: a GEMM of shape
+    // [n*<N>, C_arch] x [C_arch, C_arch] where C_arch is the architecture's
+    // effective channel count from the Table I formula (normalised so
+    // So3krates == F).
+    let mut b = Bench::from_env();
+    println!("\n=== measured per-layer proxy (f32 vs int8) ===");
+    let base = Arch::So3krates.cost_full(n, avg_n, f) as f64;
+    let mut rows = Vec::new();
+    for arch in Arch::ALL {
+        let mult = (arch.cost_full(n, avg_n, f) as f64 / base).sqrt();
+        let c = ((f as f64 * mult).round() as usize).clamp(8, 512);
+        let m = (n * avg_n) as usize;
+        let a = random_vec(m * c, 1);
+        let w = random_vec(c * c, 2);
+        let mut out = vec![0f32; m * c];
+        let qa = quantize_i8(&a);
+        let qw = quantize_i8(&w);
+        let s_f = b.run(&format!("layer/{}/f32", arch.name()), || {
+            gemm_f32(black_box(&a), &w, &mut out, m, c, c)
+        });
+        let s_q = b.run(&format!("layer/{}/int8", arch.name()), || {
+            gemm_i8(black_box(&qa), &qw, &mut out, m, c, c)
+        });
+        rows.push((arch, c, s_f.median_ns, s_q.median_ns));
+    }
+    println!(
+        "{:<11} {:>8} {:>14} {:>14} {:>10}",
+        "Arch", "C_eff", "f32 med", "int8 med", "gain"
+    );
+    for (arch, c, f_ns, q_ns) in &rows {
+        println!(
+            "{:<11} {:>8} {:>12.0}ns {:>12.0}ns {:>9.2}x",
+            arch.name(),
+            c,
+            f_ns,
+            q_ns,
+            f_ns / q_ns
+        );
+    }
+    // scaling sanity: NequIP proxy must dominate So3krates proxy
+    let so3 = rows.iter().find(|r| r.0 == Arch::So3krates).unwrap().2;
+    let neq = rows.iter().find(|r| r.0 == Arch::NequIP).unwrap().2;
+    println!(
+        "\nNequIP/So3krates measured ratio: {:.1}x (model predicts {:.1}x at these sizes)",
+        neq / so3,
+        Arch::NequIP.cost_full(n, avg_n, f) as f64 / base
+    );
+    b.report();
+}

@@ -1,0 +1,106 @@
+//! LEE deep-dive: Table III plus codebook-resolution ablation.
+//!
+//! 1. Deployed-model LEE per variant over many rotations AND multiple
+//!    configurations (reference + thermally perturbed) — the robustness
+//!    check behind "stable across R" (Sec. III-A).
+//! 2. Standalone MDDQ commutation error vs oct codebook bits (4..10),
+//!    compared against the covering-radius bound of Prop. 3.4.
+//!
+//! ```bash
+//! cargo run --release --example lee_analysis -- [--rotations 32]
+//! ```
+
+use gaq_md::quant::codebook::covering_radius_oct;
+use gaq_md::quant::mddq::{commutation_error, mddq_quantize, naive_quantize};
+use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::util::cli::Args;
+use gaq_md::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n_rot = args.get_usize("rotations", 32);
+    let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
+
+    // ---- part 1: deployed models ---------------------------------------------
+    match Manifest::load(&dir) {
+        Ok(manifest) => {
+            println!("=== deployed-model LEE ({n_rot} rotations, 3 configurations) ===");
+            println!(
+                "{:<14} {:>12} {:>12} {:>12}",
+                "variant", "ref geom", "perturbed", "hot (x2)"
+            );
+            let mut rng = Rng::new(5);
+            let base = manifest.molecule.positions.clone();
+            let mut pert = base.clone();
+            for x in pert.iter_mut() {
+                *x += 0.03 * rng.gaussian();
+            }
+            let mut hot = base.clone();
+            for x in hot.iter_mut() {
+                *x += 0.08 * rng.gaussian();
+            }
+            for name in ["fp32", "naive_int8", "degree_quant", "svq_kmeans", "lsq_w4a8", "qdrop_w4a8", "gaq_w4a8"] {
+                let Ok(v) = manifest.variant(name) else { continue };
+                let engine = Engine::cpu()?;
+                let ff = std::sync::Arc::new(CompiledForceField::load(
+                    &engine,
+                    v,
+                    manifest.molecule.n_atoms(),
+                )?);
+                let mut provider = ModelForceProvider::new(ff);
+                let a = gaq_md::lee::measure_lee(&mut provider, &base, n_rot, 3)?;
+                let b = gaq_md::lee::measure_lee(&mut provider, &pert, n_rot, 4)?;
+                let c = gaq_md::lee::measure_lee(&mut provider, &hot, n_rot, 5)?;
+                println!(
+                    "{:<14} {:>12.4} {:>12.4} {:>12.4}",
+                    name, a.force_lee_mev_a, b.force_lee_mev_a, c.force_lee_mev_a
+                );
+            }
+        }
+        Err(e) => println!("(deployed-model section skipped: {e})"),
+    }
+
+    // ---- part 2: codebook-resolution ablation ----------------------------------
+    println!("\n=== MDDQ commutation error vs oct codebook bits (Prop. 3.4) ===");
+    println!(
+        "{:<14} {:>14} {:>14} {:>16}",
+        "codebook", "mean eps_d", "max eps_d", "2*sin(delta/2)*m"
+    );
+    let n = 6000;
+    for bits in [4u32, 5, 6, 8, 10] {
+        let delta = covering_radius_oct(bits, 20_000, 1);
+        let mut rng = Rng::new(13);
+        let (mut sum, mut max) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let rot = rng.rotation();
+            let m = rng.range_f64(0.05, 2.0);
+            let u = rng.unit_vec();
+            let v = [u[0] * m, u[1] * m, u[2] * m];
+            let e = commutation_error(|x| mddq_quantize(x, 2.0, 8, bits), &rot, v);
+            sum += e;
+            max = max.max(e);
+        }
+        // worst-case bound: both Q(Rv) and RQ(v) within delta of Rv-direction
+        let bound = 2.0 * 2.0 * (delta / 2.0).sin() * 2.0; // 2 * sin * max_m, doubled (two quantisations)
+        println!(
+            "oct-{bits:<9} {:>14.6} {:>14.6} {:>16.6}",
+            sum / n as f64,
+            max,
+            bound
+        );
+    }
+    // naive reference
+    let mut rng = Rng::new(13);
+    let (mut sum, mut max) = (0.0f64, 0.0f64);
+    for _ in 0..n {
+        let rot = rng.rotation();
+        let m = rng.range_f64(0.05, 2.0);
+        let u = rng.unit_vec();
+        let v = [u[0] * m, u[1] * m, u[2] * m];
+        let e = commutation_error(|x| naive_quantize(x, 2.0, 8), &rot, v);
+        sum += e;
+        max = max.max(e);
+    }
+    println!("{:<14} {:>14.6} {:>14.6} {:>16}", "naive-INT8", sum / n as f64, max, "-");
+    Ok(())
+}

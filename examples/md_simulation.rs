@@ -1,0 +1,198 @@
+//! Fig. 3 driver — NVE energy conservation across quantization variants.
+//!
+//! Equilibrates with Langevin, then runs NVE with each variant's compiled
+//! force field, logging the total-energy trace (the Fig. 3 curves) to
+//! `fig3_nve.csv` and printing drift statistics. This is the END-TO-END
+//! validation driver: trained L2 model -> AOT artifact -> PJRT engine ->
+//! L3 integrator, no python on the step path.
+//!
+//! ```bash
+//! cargo run --release --example md_simulation -- \
+//!     [--steps 20000] [--dt 0.5] [--temperature 300] \
+//!     [--variants fp32,gaq_w4a8,naive_int8] [--csv fig3_nve.csv]
+//! ```
+
+use std::io::Write;
+
+use gaq_md::md::drift::DriftTracker;
+use gaq_md::md::integrator::{langevin_step, verlet_step, MdState};
+use gaq_md::md::{ClassicalProvider, ForceProvider};
+use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::util::cli::Args;
+use gaq_md::util::prng::Rng;
+
+struct Trace {
+    name: String,
+    times: Vec<f64>,
+    energies: Vec<f64>,
+    report: gaq_md::md::drift::DriftReport,
+    steps_per_s: f64,
+}
+
+fn run_variant(
+    name: &str,
+    provider: &mut dyn ForceProvider,
+    positions: Vec<f64>,
+    masses: Vec<f64>,
+    steps: usize,
+    dt: f64,
+    temp: f64,
+    equil: usize,
+    seed: u64,
+    sample_every: usize,
+) -> anyhow::Result<Trace> {
+    let n_atoms = masses.len();
+    let mut state = MdState::new(positions, masses);
+    let mut rng = Rng::new(seed);
+    state.thermalize(temp, &mut rng);
+
+    let (_, mut forces) = provider.energy_forces(&state.positions)?;
+    for _ in 0..equil {
+        let (_, f) = langevin_step(&mut state, &forces, dt, 0.02, temp, &mut rng, provider)?;
+        forces = f;
+    }
+    state.remove_com_velocity();
+
+    let mut tracker = DriftTracker::new(n_atoms);
+    let mut times = Vec::new();
+    let mut energies = Vec::new();
+    let (pe0, f0) = provider.energy_forces(&state.positions)?;
+    forces = f0;
+    tracker.record(0.0, pe0 + state.kinetic_energy(), state.temperature());
+
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let (pe, f) = verlet_step(&mut state, &forces, dt, provider)?;
+        forces = f;
+        let etot = pe + state.kinetic_energy();
+        tracker.record(state.time_fs, etot, state.temperature());
+        if step % sample_every == 0 {
+            times.push(state.time_fs);
+            energies.push(etot);
+        }
+        if tracker.exploded() {
+            eprintln!("  [{name}] exploded at step {step} (t = {:.1} fs)", state.time_fs);
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let report = tracker.report();
+    Ok(Trace {
+        name: name.to_string(),
+        times,
+        energies,
+        steps_per_s: report.steps as f64 / wall,
+        report,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
+    let steps = args.get_usize("steps", 20_000);
+    let dt = args.get_f64("dt", 0.5);
+    let temp = args.get_f64("temperature", 300.0);
+    let equil = args.get_usize("equil", 500);
+    let seed = args.get_u64("seed", 0);
+    let csv_path = args.get_or("csv", "fig3_nve.csv").to_string();
+    let sample_every = (steps / 400).max(1);
+
+    let manifest = Manifest::load(&dir)?;
+    let mol = &manifest.molecule;
+    println!(
+        "Fig. 3 — NVE, {} atoms, dt={dt} fs, {steps} steps = {:.2} ps, T0={temp} K",
+        mol.n_atoms(),
+        steps as f64 * dt / 1000.0
+    );
+
+    let variant_names: Vec<String> = args
+        .get_or("variants", "fp32,gaq_w4a8,naive_int8")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    let mut traces: Vec<Trace> = Vec::new();
+
+    // reference: the classical oracle (validates integrator & horizon)
+    let mut cp = ClassicalProvider { ff: mol.ff.clone() };
+    traces.push(run_variant(
+        "classical",
+        &mut cp,
+        mol.positions.clone(),
+        mol.masses.clone(),
+        steps,
+        dt,
+        temp,
+        equil,
+        seed,
+        sample_every,
+    )?);
+
+    for name in &variant_names {
+        let Ok(v) = manifest.variant(name) else {
+            eprintln!("  ({name}: not in manifest, skipped)");
+            continue;
+        };
+        let engine = Engine::cpu()?;
+        let ff = std::sync::Arc::new(CompiledForceField::load(&engine, v, mol.n_atoms())?);
+        let mut provider = ModelForceProvider::new(ff);
+        traces.push(run_variant(
+            name,
+            &mut provider,
+            mol.positions.clone(),
+            mol.masses.clone(),
+            steps,
+            dt,
+            temp,
+            equil,
+            seed,
+            sample_every,
+        )?);
+    }
+
+    // ---- summary (the Fig. 3 caption numbers) --------------------------------
+    println!(
+        "\n{:<14} {:>16} {:>14} {:>12} {:>11}  status",
+        "force field", "drift meV/at/ps", "excursion", "rms fluct", "steps/s"
+    );
+    for t in &traces {
+        println!(
+            "{:<14} {:>+16.4} {:>14.3} {:>12.3} {:>11.1}  {}",
+            t.name,
+            t.report.drift_mev_atom_ps,
+            t.report.max_excursion_mev_atom,
+            t.report.rms_fluct_mev_atom,
+            t.steps_per_s,
+            if t.report.exploded { "EXPLODED" } else { "stable" }
+        );
+    }
+
+    // ---- CSV for plotting -----------------------------------------------------
+    let mut f = std::fs::File::create(&csv_path)?;
+    write!(f, "time_fs")?;
+    for t in &traces {
+        write!(f, ",{}", t.name)?;
+    }
+    writeln!(f)?;
+    let max_len = traces.iter().map(|t| t.times.len()).max().unwrap_or(0);
+    for i in 0..max_len {
+        let time = traces
+            .iter()
+            .find(|t| i < t.times.len())
+            .map(|t| t.times[i])
+            .unwrap_or(0.0);
+        write!(f, "{time}")?;
+        for t in &traces {
+            if i < t.energies.len() {
+                write!(f, ",{}", t.energies[i])?;
+            } else {
+                write!(f, ",")?; // trajectory ended (explosion)
+            }
+        }
+        writeln!(f)?;
+    }
+    println!("\nenergy traces -> {csv_path}");
+    println!("paper shape: naive INT8 diverges <100 ps; FP32 & GAQ flat (<0.15 meV/atom/ps)");
+    Ok(())
+}

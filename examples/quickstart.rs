@@ -1,0 +1,53 @@
+//! Quickstart: load a compiled W4A8 force field and run one inference.
+//!
+//! ```bash
+//! make artifacts                      # once (build-time python)
+//! cargo run --release --example quickstart
+//! ```
+
+use gaq_md::runtime;
+
+fn main() -> anyhow::Result<()> {
+    let dir = gaq_md::resolve_artifacts_dir(None);
+    println!("loading artifacts from {dir}/ ...");
+    let (manifest, _engine, ff) = runtime::load_variant(&dir, "gaq_w4a8")?;
+
+    let mol = &manifest.molecule;
+    println!(
+        "molecule: {} ({} atoms) | variant: {} (W{}/A{})",
+        mol.name,
+        mol.n_atoms(),
+        "gaq_w4a8",
+        manifest.variant("gaq_w4a8")?.w_bits,
+        manifest.variant("gaq_w4a8")?.a_bits,
+    );
+
+    // inference on the reference geometry
+    let positions: Vec<f32> = mol.positions.iter().map(|&x| x as f32).collect();
+    let t = std::time::Instant::now();
+    let (energy, forces) = ff.energy_forces_f32(&positions)?;
+    println!("\nE = {energy:.6} eV   (first call: {:?})", t.elapsed());
+
+    // warm latency
+    let t = std::time::Instant::now();
+    let iters = 50;
+    for _ in 0..iters {
+        ff.energy_forces_f32(&positions)?;
+    }
+    println!("warm latency: {:?}/inference", t.elapsed() / iters);
+
+    let fmax = forces.iter().fold(0f32, |m, v| m.max(v.abs()));
+    println!("max |F| = {fmax:.4} eV/A over {} atoms", mol.n_atoms());
+
+    // batched path
+    let batch: Vec<Vec<f32>> = (0..8).map(|_| positions.clone()).collect();
+    let t = std::time::Instant::now();
+    let out = ff.energy_forces_batch(&batch)?;
+    println!(
+        "batched x8: {:?} total ({:?}/molecule), E[0..3] = {:?}",
+        t.elapsed(),
+        t.elapsed() / 8,
+        &out.iter().take(3).map(|(e, _)| *e).collect::<Vec<_>>()
+    );
+    Ok(())
+}

@@ -1,0 +1,224 @@
+//! Paper-table regenerator: prints Tables I–IV, the Fig. 1(d) summary and
+//! the ablation table from the built artifacts + live measurements.
+//!
+//! ```bash
+//! cargo run --release --example tables            # all tables
+//! cargo run --release --example tables -- table2  # one table
+//! ```
+//!
+//! table1: complexity model     table2: accuracy (E/F-MAE, stability)
+//! table3: LEE                  table4: latency breakdown (summary; the
+//! full sweep is `cargo bench --bench table4_latency`)
+//! summary: Fig 1(d) aggregate  ablations: LSQ/QDrop vs GAQ
+
+use gaq_md::costmodel::{rho, speedup, Arch};
+use gaq_md::quant::gemm::{gemm_f32, gemm_w4a8};
+use gaq_md::quant::pack::{quantize_i4, quantize_i8, stream_f32, stream_i4, stream_i8};
+use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::util::benchkit::{black_box, fmt_ns, Bench};
+use gaq_md::util::cli::Args;
+use gaq_md::util::prng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
+
+    if matches!(which, "all" | "table1") {
+        table1();
+    }
+    if matches!(which, "all" | "table2") {
+        table2(&dir)?;
+    }
+    if matches!(which, "all" | "table3") {
+        table3(&dir, &args)?;
+    }
+    if matches!(which, "all" | "table4") {
+        table4();
+    }
+    if matches!(which, "all" | "summary") {
+        summary(&dir)?;
+    }
+    if matches!(which, "all" | "ablations") {
+        ablations(&dir)?;
+    }
+    Ok(())
+}
+
+fn table1() {
+    let (n, avg_n, f) = (24u64, 12u64, 32u64);
+    println!("\n================ Table I: complexity with & without quantization ================");
+    println!(
+        "{:<11} {:>5} {:>16} {:>16} {:>18}",
+        "Arch", "lmax", "C_full (FP32)", "C_quant (k=8)", "gain = rho_k"
+    );
+    for arch in Arch::ALL {
+        println!(
+            "{:<11} {:>5} {:>16} {:>16.0} {:>18.4}",
+            arch.name(),
+            arch.lmax(),
+            arch.cost_full(n, avg_n, f),
+            arch.cost_quant(n, avg_n, f, 8),
+            rho(8)
+        );
+    }
+    println!("S_8 = {:.0}x, S_4 = {:.0}x theoretical (Eq. 11)", speedup(8), speedup(4));
+}
+
+fn table2(dir: &str) -> anyhow::Result<()> {
+    let m = Manifest::load(dir)?;
+    println!("\n================ Table II: performance on azobenzene (synthetic rMD17) ================");
+    println!(
+        "{:<14} {:>9} {:>10} {:>10}   stability",
+        "Method", "Bits(W/A)", "E-MAE", "F-MAE"
+    );
+    let order = ["fp32", "naive_int8", "svq_kmeans", "degree_quant", "gaq_w4a8"];
+    for name in order {
+        let Ok(v) = m.variant(name) else { continue };
+        let st = if v.metrics.diverged {
+            "Diverged"
+        } else if v.metrics.stable {
+            "Stable"
+        } else if v.scheme == "svq_kmeans" {
+            "Stagnated*"
+        } else {
+            "Degraded"
+        };
+        println!(
+            "{:<14} {:>5}/{:<3} {:>10.2} {:>10.2}   {}",
+            pretty(name),
+            v.w_bits,
+            v.a_bits,
+            v.metrics.e_mae_mev,
+            v.metrics.f_mae_mev_a,
+            st
+        );
+    }
+    println!("* gradient fracture: hard VQ has zero gradients a.e. (Sec IV-B)");
+    println!("paper: FP32 23.2/21.2 | naive 118.2/102.4 | SVQ diverged | DQ 63.2/58.9 | GAQ 9.3/22.6");
+    Ok(())
+}
+
+fn pretty(name: &str) -> &str {
+    match name {
+        "fp32" => "FP32 Baseline",
+        "naive_int8" => "Naive INT8",
+        "svq_kmeans" => "SVQ-KMeans",
+        "degree_quant" => "Degree-Quant",
+        "gaq_w4a8" => "Ours (GAQ)",
+        "lsq_w4a8" => "LSQ (abl.)",
+        "qdrop_w4a8" => "QDrop (abl.)",
+        other => other,
+    }
+}
+
+fn table3(dir: &str, args: &Args) -> anyhow::Result<()> {
+    let m = Manifest::load(dir)?;
+    let n_rot = args.get_usize("rotations", 12);
+    println!("\n================ Table III: symmetry analysis (LEE, deployed artifacts) ================");
+    println!("{:<14} {:>14}   remark", "Method", "LEE (meV/A)");
+    let order = ["fp32", "naive_int8", "degree_quant", "gaq_w4a8"];
+    let mut results = std::collections::BTreeMap::new();
+    for name in order {
+        let Ok(v) = m.variant(name) else { continue };
+        let engine = Engine::cpu()?;
+        let ff = std::sync::Arc::new(CompiledForceField::load(&engine, v, m.molecule.n_atoms())?);
+        let mut provider = ModelForceProvider::new(ff);
+        let rep = gaq_md::lee::measure_lee(&mut provider, &m.molecule.positions, n_rot, 3)?;
+        results.insert(name, rep.force_lee_mev_a);
+        let remark = match name {
+            "fp32" => "~0 (exact equivariance, fp noise)",
+            "naive_int8" => "broken symmetry",
+            "degree_quant" => "partially preserved",
+            "gaq_w4a8" => "preserved (ours)",
+            _ => "",
+        };
+        println!("{:<14} {:>14.4}   {}", pretty(name), rep.force_lee_mev_a, remark);
+    }
+    if let (Some(&n8), Some(&g)) = (results.get("naive_int8"), results.get("gaq_w4a8")) {
+        if g > 0.0 {
+            println!("suppression: {:.1}x (paper: >30x, 5.23 -> 0.15 meV/A)", n8 / g);
+        }
+    }
+    Ok(())
+}
+
+fn table4() {
+    println!("\n================ Table IV: latency breakdown (abridged; full: cargo bench --bench table4_latency) ================");
+    let mut b = Bench::new(50, 200);
+    let mut rng = Rng::new(3);
+    let w: Vec<f32> = (0..(1 << 22)).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let q8 = quantize_i8(&w);
+    let q4 = quantize_i4(&w);
+    let io_f = b.run("io/f32", || stream_f32(black_box(&w))).median_ns;
+    let io_8 = b.run("io/i8", || stream_i8(black_box(&q8))).median_ns;
+    let io_4 = b.run("io/i4", || stream_i4(black_box(&q4))).median_ns;
+
+    let (m, k, n) = (8, 512, 512);
+    let a: Vec<f32> = (0..m * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let wt: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+    let mut c = vec![0f32; m * n];
+    let qa = quantize_i8(&a);
+    let qw = quantize_i4(&wt);
+    let g_f = b.run("gemm/f32", || gemm_f32(black_box(&a), &wt, &mut c, m, k, n)).median_ns;
+    let g_q = b.run("gemm/w4a8", || gemm_w4a8(black_box(&qa), &qw, &mut c, m, k, n)).median_ns;
+
+    println!("{:<24} {:>10} {:>10} {:>9}", "Operation", "FP32", "W4A8", "Speedup");
+    println!("{:<24} {:>10} {:>10} {:>8.2}x", "Memory I/O (weights)", fmt_ns(io_f), fmt_ns(io_4), io_f / io_4);
+    println!("{:<24} {:>10} {:>10} {:>8.2}x  (ideal 4x)", "  (INT8 reference)", fmt_ns(io_f), fmt_ns(io_8), io_f / io_8);
+    println!("{:<24} {:>10} {:>10} {:>8.2}x", "Compute (GEMM)", fmt_ns(g_f), fmt_ns(g_q), g_f / g_q);
+    let tot_f = io_f + g_f;
+    let tot_q = io_4 + g_q;
+    println!("{:<24} {:>10} {:>10} {:>8.2}x", "Total (io+gemm)", fmt_ns(tot_f), fmt_ns(tot_q), tot_f / tot_q);
+    println!("paper: weights 4.0x | GEMM 1.8x | total 2.39x");
+}
+
+fn summary(dir: &str) -> anyhow::Result<()> {
+    let m = Manifest::load(dir)?;
+    println!("\n================ Fig. 1(d) summary ================");
+    let fp32 = m.variant("fp32").ok();
+    let gaq = m.variant("gaq_w4a8").ok();
+    if let (Some(f), Some(g)) = (fp32, gaq) {
+        println!(
+            "accuracy: GAQ E-MAE {:.2} meV vs FP32 {:.2} meV ({})",
+            g.metrics.e_mae_mev,
+            f.metrics.e_mae_mev,
+            if g.metrics.e_mae_mev <= f.metrics.e_mae_mev {
+                "quantization-as-regularizer: GAQ wins"
+            } else {
+                "comparable"
+            }
+        );
+        println!(
+            "memory: weights {:.2} MiB fp32 -> {:.2} MiB at W4 ({:.1}x reduction)",
+            g.weights_bytes as f64 / (1 << 20) as f64,
+            g.weights_bytes as f64 / (1 << 20) as f64 / 8.0,
+            8.0
+        );
+        println!("LEE: {:.3} meV/A (paper ~0.15)", g.metrics.lee_mev_a);
+    }
+    Ok(())
+}
+
+fn ablations(dir: &str) -> anyhow::Result<()> {
+    let m = Manifest::load(dir)?;
+    println!("\n================ Ablations: geometry-agnostic QAT on the equivariant branch ================");
+    println!("{:<14} {:>9} {:>10} {:>10} {:>10}", "Method", "Bits(W/A)", "E-MAE", "F-MAE", "LEE");
+    for name in ["lsq_w4a8", "qdrop_w4a8", "gaq_w4a8"] {
+        let Ok(v) = m.variant(name) else {
+            println!("{:<14} (not built; run `make artifacts AOT_FLAGS=--ablations`)", name);
+            continue;
+        };
+        println!(
+            "{:<14} {:>5}/{:<3} {:>10.2} {:>10.2} {:>10.3}",
+            pretty(name),
+            v.w_bits,
+            v.a_bits,
+            v.metrics.e_mae_mev,
+            v.metrics.f_mae_mev_a,
+            v.metrics.lee_mev_a
+        );
+    }
+    println!("expected: LSQ/QDrop match GAQ on E/F-MAE but leave LEE >> GAQ (geometry matters)");
+    Ok(())
+}

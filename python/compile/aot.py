@@ -1,0 +1,315 @@
+"""AOT pipeline (S7): dataset -> QAT per variant -> HLO text + manifest.
+
+Run once via ``make artifacts``. Python never runs at serving/MD time: the
+Rust binary consumes only what this script writes to ``artifacts/``:
+
+  model_<variant>.hlo.txt          f(r f32[n,3]) -> (E f32[1], F f32[n,3])
+  model_<variant>_batch<B>.hlo.txt batched server variants, B in {1, 8}
+  weights_<variant>.bin            raw little-endian f32 weight image
+  checkpoint_<variant>.npz         trained params (build-cache / tests)
+  dataset.npz                      the sampled azobenzene trajectory split
+  manifest.json                    everything Rust needs (see below)
+
+HLO **text** is the interchange format — the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit ids); the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+The manifest carries: molecule topology + force-field parameters (for the
+Rust classical-MD validation path), per-variant training metrics (Table
+II), python-side LEE at export (Table III cross-check), bit-widths,
+weight-image tensor offsets (Table IV streaming bench), e_shift, masses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .checkpoint import load_params, save_params
+from .datagen import Molecule, azobenzene, ethanol, sample_dataset, sample_dataset_mixed
+from .lee import mean_force_lee
+from .model import ModelConfig, VARIANTS, energy_and_forces
+from .train import Dataset, TrainConfig, train_variant
+
+DEFAULT_VARIANTS = ["fp32", "naive_int8", "degree_quant", "svq_kmeans", "gaq_w4a8"]
+ABLATION_VARIANTS = ["lsq_w4a8", "qdrop_w4a8"]
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    ``print_large_constants=True`` is load-bearing: the default HLO printer
+    elides tensor constants as ``constant({...})`` and the xla_extension
+    0.5.1 text parser silently reads those as *zeros* — i.e. every baked
+    weight would vanish at serve time.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_forcefield_hlo(
+    params, mol: Molecule, cfg: ModelConfig, qcfg, path: str, batch: int | None = None
+) -> None:
+    """Lower eval-mode energy+forces (Pallas forward path) to HLO text."""
+    species = jnp.asarray(mol.species)
+
+    def single(r):
+        e, f = energy_and_forces(
+            params, species, r, cfg, qcfg, train=False, use_pallas=True
+        )
+        return e.reshape(1), f
+
+    if batch is None:
+        fn = single
+        spec = jax.ShapeDtypeStruct((mol.n_atoms, 3), jnp.float32)
+    else:
+        def fn(rs):
+            es, fs = jax.vmap(single)(rs)
+            return es.reshape(batch), fs
+
+        spec = jax.ShapeDtypeStruct((batch, mol.n_atoms, 3), jnp.float32)
+
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# ---------------------------------------------------------------------------
+# Weight image (Table IV streaming bench input)
+# ---------------------------------------------------------------------------
+
+def dump_weight_image(params, path: str):
+    """Concatenate every weight tensor as little-endian f32; return layout."""
+    from .checkpoint import flatten_tree
+
+    flat = flatten_tree(params)
+    layout = []
+    offset = 0
+    with open(path, "wb") as f:
+        for name in sorted(flat.keys()):
+            arr = np.asarray(flat[name], dtype=np.float32)
+            data = arr.tobytes()
+            f.write(data)
+            layout.append({"name": name, "offset": offset, "shape": list(arr.shape)})
+            offset += len(data)
+    return layout, offset
+
+
+# ---------------------------------------------------------------------------
+# Main pipeline
+# ---------------------------------------------------------------------------
+
+def _ff_to_json(ff) -> Dict:
+    return {
+        "bonds": ff.bonds.tolist(),
+        "bond_r0": ff.bond_r0.tolist(),
+        "bond_k": ff.bond_k.tolist(),
+        "angles": ff.angles.tolist(),
+        "angle_t0": ff.angle_t0.tolist(),
+        "angle_k": ff.angle_k.tolist(),
+        "torsions": ff.torsions.tolist(),
+        "torsion_phi0": ff.torsion_phi0.tolist(),
+        "torsion_k": ff.torsion_k.tolist(),
+        "nb_pairs": ff.nb_pairs.tolist(),
+        "nb_eps": ff.nb_eps.tolist(),
+        "nb_sigma": ff.nb_sigma.tolist(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="GAQ AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--variants", default=",".join(DEFAULT_VARIANTS))
+    ap.add_argument("--ablations", action="store_true", help="also train LSQ/QDrop ablations")
+    ap.add_argument("--samples", type=int, default=640)
+    ap.add_argument("--test-samples", type=int, default=128)
+    ap.add_argument("--epochs", type=int, default=60)
+    ap.add_argument("--qat-epochs", type=int, default=40)
+    ap.add_argument("--warmup-epochs", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=5e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true", help="tiny run for CI smoke")
+    ap.add_argument("--force", action="store_true", help="retrain even if checkpoints exist")
+    args = ap.parse_args()
+
+    if args.quick:
+        args.samples, args.test_samples = 96, 32
+        args.epochs, args.qat_epochs, args.warmup_epochs = 4, 3, 1
+
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    variants = [v.strip() for v in args.variants.split(",") if v.strip()]
+    if args.ablations:
+        variants += [v for v in ABLATION_VARIANTS if v not in variants]
+    for v in variants:
+        if v not in VARIANTS:
+            raise SystemExit(f"unknown variant {v!r}; known: {list(VARIANTS)}")
+
+    cfg = ModelConfig()
+    mol = azobenzene()
+
+    # ---- dataset (cached) ---------------------------------------------------
+    ds_path = os.path.join(out, "dataset.npz")
+    n_total = args.samples + args.test_samples
+    if os.path.exists(ds_path) and not args.force:
+        with np.load(ds_path) as z:
+            raw = {k: z[k] for k in z.files}
+        if len(raw["energy"]) != n_total:
+            raw = None
+    else:
+        raw = None
+    if raw is None:
+        print(f"[aot] sampling {n_total} azobenzene configs (Langevin @300K)...")
+        raw = sample_dataset_mixed(mol, n_total, seed=args.seed)
+        np.savez(ds_path, **raw)
+    ds = Dataset(raw["positions"], raw["energy"], raw["forces"])
+    train_ds, test_ds = ds.split(args.test_samples)
+
+    # ---- train all variants (finetune-only protocol) -------------------------
+    manifest: Dict = {
+        "molecule": {
+            "name": mol.name,
+            "numbers": mol.numbers.tolist(),
+            "species": mol.species.tolist(),
+            "masses": mol.masses.tolist(),
+            "positions": mol.positions.tolist(),
+            "force_field": _ff_to_json(mol.ff),
+        },
+        "model": {
+            "layers": cfg.layers,
+            "f": cfg.f,
+            "c": cfg.c,
+            "heads": cfg.heads,
+            "rbf": cfg.rbf,
+            "cutoff": cfg.cutoff,
+            "tau": cfg.tau,
+        },
+        "dataset": {
+            "n_train": len(train_ds.energy),
+            "n_test": len(test_ds.energy),
+            "temperature_k": 300.0,
+            "energy_mean": float(np.mean(train_ds.energy)),
+            "energy_std": float(np.std(train_ds.energy)),
+            "force_rms": float(np.sqrt(np.mean(train_ds.forces**2))),
+        },
+        "variants": {},
+        "batch_sizes": [1, 8],
+        "generated_unix": time.time(),
+    }
+
+    fp32_params = None
+    for name in ["fp32"] + [v for v in variants if v != "fp32"]:
+        if name not in variants and name != "fp32":
+            continue
+        qcfg = VARIANTS[name]
+        ckpt = os.path.join(out, f"checkpoint_{name}.npz")
+        metrics_path = os.path.join(out, f"metrics_{name}.json")
+
+        if os.path.exists(ckpt) and os.path.exists(metrics_path) and not args.force:
+            print(f"[aot] {name}: cached checkpoint")
+            params = load_params(ckpt)
+            with open(metrics_path) as f:
+                metrics = json.load(f)
+        else:
+            epochs = args.epochs if name == "fp32" else args.qat_epochs
+            tcfg = TrainConfig(
+                epochs=epochs,
+                batch=args.batch,
+                lr=args.lr if name == "fp32" else args.lr * 0.4,
+                warmup_epochs=args.warmup_epochs,
+                seed=args.seed,
+            )
+            print(f"[aot] training {name} ({epochs} epochs)...")
+            params, metrics = train_variant(
+                mol, train_ds, test_ds, cfg, qcfg, tcfg, init_from=fp32_params
+            )
+            save_params(ckpt, params)
+            with open(metrics_path, "w") as f:
+                json.dump(metrics, f, indent=2)
+
+        if name == "fp32":
+            fp32_params = params
+
+        # ---- python-side LEE at export (Table III cross-check) --------------
+        species = jnp.asarray(mol.species)
+
+        def forces_fn(r, params=params, qcfg=qcfg):
+            return energy_and_forces(params, species, r, cfg, qcfg, train=False)[1]
+
+        lee = float(
+            mean_force_lee(
+                jax.jit(forces_fn),
+                jnp.asarray(test_ds.positions[0]),
+                jax.random.PRNGKey(args.seed + 7),
+                n_rotations=8,
+            )
+        )
+        metrics["lee_mev_a"] = lee * 1000.0
+
+        # ---- HLO export -------------------------------------------------------
+        hlo = os.path.join(out, f"model_{name}.hlo.txt")
+        print(f"[aot] lowering {name} -> {hlo}")
+        export_forcefield_hlo(params, mol, cfg, qcfg, hlo)
+        for b in manifest["batch_sizes"]:
+            export_forcefield_hlo(
+                params, mol, cfg, qcfg,
+                os.path.join(out, f"model_{name}_batch{b}.hlo.txt"), batch=b,
+            )
+
+        # ---- weight image -----------------------------------------------------
+        layout, nbytes = dump_weight_image(
+            params, os.path.join(out, f"weights_{name}.bin")
+        )
+
+        manifest["variants"][name] = {
+            "scheme": qcfg.scheme,
+            "w_bits": qcfg.w_bits,
+            "a_bits": qcfg.a_bits,
+            "direction_kind": qcfg.direction_kind,
+            "direction_bits": qcfg.direction_bits,
+            "magnitude_bits": qcfg.magnitude_bits,
+            "metrics": metrics,
+            "e_shift": metrics.get("e_shift", 0.0),
+            "hlo": f"model_{name}.hlo.txt",
+            "hlo_batched": {
+                str(b): f"model_{name}_batch{b}.hlo.txt" for b in manifest["batch_sizes"]
+            },
+            "weights_bin": f"weights_{name}.bin",
+            "weights_bytes": nbytes,
+            "weights_layout": layout,
+        }
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {os.path.join(out, 'manifest.json')}")
+
+    # Table II preview
+    print(f"\n{'variant':14s} {'W/A':>6s} {'E-MAE':>9s} {'F-MAE':>9s} {'LEE':>8s}  stable")
+    for name, v in manifest["variants"].items():
+        m = v["metrics"]
+        print(
+            f"{name:14s} {v['w_bits']:>3d}/{v['a_bits']:<3d}"
+            f" {m['e_mae_mev']:>8.2f} {m['f_mae_mev_a']:>8.2f}"
+            f" {m['lee_mev_a']:>8.3f}  {m['stable']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Flat-npz checkpointing for parameter pytrees (substrate).
+
+Params are nested dicts/lists of jnp arrays; we flatten to ``a/b/0/c``
+path keys so a single .npz round-trips the tree exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_params", "load_params", "flatten_tree", "unflatten_tree"]
+
+
+def flatten_tree(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(flatten_tree(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(flatten_tree(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def unflatten_tree(flat: Dict[str, np.ndarray]) -> Any:
+    """Rebuild the nested structure; numeric path segments become lists."""
+    root: Dict[str, Any] = {}
+    for path, val in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jnp.asarray(val)
+
+    def fix(node):
+        if not isinstance(node, dict):
+            return node
+        keys = list(node.keys())
+        if keys and all(k.isdigit() for k in keys):
+            return [fix(node[str(i)]) for i in range(len(keys))]
+        return {k: fix(v) for k, v in node.items()}
+
+    return fix(root)
+
+
+def save_params(path: str, params: Any) -> None:
+    np.savez(path, **flatten_tree(params))
+
+
+def load_params(path: str) -> Any:
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return unflatten_tree(flat)

@@ -1,0 +1,169 @@
+"""Spherical codebooks on S^2 (S2).
+
+Two families, both used by MDDQ (Sec. III-C) and the SVQ baseline:
+
+* **Octahedral encoding** (``oct``): the standard unit-vector quantisation
+  that maps S^2 -> octahedron -> [0,1]^2 and quantises the 2D square at
+  ``bits`` per axis. Near-uniform, O(1) encode/decode, and the default
+  direction quantiser for GAQ W4A8 (8+8 bits = the activation budget of the
+  two angular degrees of freedom).
+* **Fibonacci lattice** (``fib``): ``n`` quasi-uniform points; nearest-
+  neighbour assignment in angle. Used for codebook-size ablations and as
+  the cluster initialisation of the SVQ-KMeans baseline.
+
+Both are *fixed* (data-independent) codebooks, so the covering radius
+(Eq. 6) bounds the angular error for every input (Prop. 3.4).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "fibonacci_sphere",
+    "fib_encode",
+    "fib_decode",
+    "fib_quantize",
+    "oct_encode",
+    "oct_decode",
+    "oct_quantize",
+    "covering_radius_estimate",
+    "expected_angular_error",
+]
+
+
+# ---------------------------------------------------------------------------
+# Fibonacci lattice codebook
+# ---------------------------------------------------------------------------
+
+def fibonacci_sphere(n: int, dtype=np.float32) -> np.ndarray:
+    """(n, 3) quasi-uniform unit vectors (golden-angle spiral)."""
+    i = np.arange(n, dtype=np.float64) + 0.5
+    phi = math.pi * (3.0 - math.sqrt(5.0)) * i
+    z = 1.0 - 2.0 * i / n
+    r = np.sqrt(np.maximum(0.0, 1.0 - z * z))
+    pts = np.stack([r * np.cos(phi), r * np.sin(phi), z], axis=-1)
+    return pts.astype(dtype)
+
+
+def fib_encode(u: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """Nearest codeword indices (max dot = min angle). u: (..., 3)."""
+    # (..., n) dot products; argmax over codewords.
+    dots = jnp.einsum("...k,nk->...n", u, codebook)
+    return jnp.argmax(dots, axis=-1)
+
+
+def fib_decode(idx: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    return codebook[idx]
+
+
+def fib_quantize(u: jnp.ndarray, codebook: jnp.ndarray) -> jnp.ndarray:
+    """decode(encode(u)) — hard assignment, no gradient shaping."""
+    return fib_decode(fib_encode(u, codebook), codebook)
+
+
+# ---------------------------------------------------------------------------
+# Octahedral encoding  (oct-b: b bits per axis)
+# ---------------------------------------------------------------------------
+
+def _oct_wrap(x: jnp.ndarray, y: jnp.ndarray):
+    wx = (1.0 - jnp.abs(y)) * jnp.where(x >= 0.0, 1.0, -1.0)
+    wy = (1.0 - jnp.abs(x)) * jnp.where(y >= 0.0, 1.0, -1.0)
+    return wx, wy
+
+
+def oct_project(u: jnp.ndarray) -> jnp.ndarray:
+    """Project unit vectors (..., 3) onto the octahedral square (..., 2) in [-1,1]^2."""
+    n = jnp.sum(jnp.abs(u), axis=-1, keepdims=True)
+    p = u / (n + 1e-12)
+    px, py, pz = p[..., 0], p[..., 1], p[..., 2]
+    wx, wy = _oct_wrap(px, py)
+    ox = jnp.where(pz < 0.0, wx, px)
+    oy = jnp.where(pz < 0.0, wy, py)
+    return jnp.stack([ox, oy], axis=-1)
+
+
+def oct_unproject(e: jnp.ndarray) -> jnp.ndarray:
+    """Lift octahedral square coords (..., 2) back to unit vectors (..., 3)."""
+    ex, ey = e[..., 0], e[..., 1]
+    ez = 1.0 - jnp.abs(ex) - jnp.abs(ey)
+    wx, wy = _oct_wrap(ex, ey)
+    ux = jnp.where(ez < 0.0, wx, ex)
+    uy = jnp.where(ez < 0.0, wy, ey)
+    v = jnp.stack([ux, uy, ez], axis=-1)
+    return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-12)
+
+
+def oct_encode(u: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Quantise unit vectors to integer grid codes (..., 2) in [0, 2^bits-1]."""
+    levels = (1 << bits) - 1
+    e = oct_project(u)  # [-1, 1]^2
+    g = jnp.round((e * 0.5 + 0.5) * levels)
+    return jnp.clip(g, 0, levels).astype(jnp.int32)
+
+
+def oct_decode(codes: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    levels = (1 << bits) - 1
+    e = codes.astype(jnp.float32) / levels * 2.0 - 1.0
+    return oct_unproject(e)
+
+
+def oct_quantize(u: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """decode(encode(u)): the S^2 codebook quantiser Q_d (forward only)."""
+    return oct_decode(oct_encode(u, bits), bits)
+
+
+# ---------------------------------------------------------------------------
+# Codebook diagnostics (Eq. 6 / Prop 3.4)
+# ---------------------------------------------------------------------------
+
+def covering_radius_estimate(
+    quantize_fn, n_samples: int = 20000, seed: int = 0
+) -> float:
+    """Monte-Carlo estimate of the covering radius delta_d (radians).
+
+    Samples uniform directions, quantises, and returns the max geodesic
+    angular error observed. A lower bound on the true sup, tight for large
+    ``n_samples``.
+    """
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (n_samples, 3))
+    u = u / jnp.linalg.norm(u, axis=-1, keepdims=True)
+    q = quantize_fn(u)
+    dot = jnp.clip(jnp.sum(u * q, axis=-1), -1.0, 1.0)
+    return float(jnp.max(jnp.arccos(dot)))
+
+
+def expected_angular_error(
+    quantize_fn, n_samples: int = 20000, seed: int = 0
+) -> float:
+    """Monte-Carlo mean geodesic angular error (radians)."""
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (n_samples, 3))
+    u = u / jnp.linalg.norm(u, axis=-1, keepdims=True)
+    q = quantize_fn(u)
+    dot = jnp.clip(jnp.sum(u * q, axis=-1), -1.0, 1.0)
+    return float(jnp.mean(jnp.arccos(dot)))
+
+
+def make_direction_quantizer(kind: str = "oct", bits: int = 8, fib_size: int = 256):
+    """Return (quantize_fn, metadata dict) for the requested codebook."""
+    if kind == "oct":
+        fn = partial(oct_quantize, bits=bits)
+        meta = {"kind": "oct", "bits": bits, "index_bits": 2 * bits}
+        return fn, meta
+    if kind == "fib":
+        cb = jnp.asarray(fibonacci_sphere(fib_size))
+        fn = partial(fib_quantize, codebook=cb)
+        meta = {
+            "kind": "fib",
+            "size": fib_size,
+            "index_bits": max(1, math.ceil(math.log2(fib_size))),
+        }
+        return fn, meta
+    raise ValueError(f"unknown direction codebook kind: {kind!r}")

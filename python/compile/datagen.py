@@ -1,0 +1,223 @@
+"""Azobenzene topology + MD-sampled training data (S5).
+
+Builds trans-azobenzene (C12H10N2, 24 atoms) from idealised internal
+coordinates, parameterises the classical oracle on it, and samples
+configurations with Langevin dynamics at T — the synthetic stand-in for
+the rMD17 trajectories (DESIGN.md §2). Ethanol (C2H6O, 9 atoms) is also
+provided for the paper's lighter-molecule sanity check.
+
+Species indexing used across the stack: index = atomic number clipped to
+the embedding table (H=1, C=6, N=7, O=8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .potential import ForceField, build_force_field, energy_and_forces
+
+__all__ = [
+    "Molecule",
+    "azobenzene",
+    "ethanol",
+    "sample_dataset",
+    "sample_dataset_mixed",
+    "MASSES",
+    "KB_EV",
+    "ACC_UNIT",
+]
+
+# amu masses by atomic number
+MASSES: Dict[int, float] = {1: 1.008, 6: 12.011, 7: 14.007, 8: 15.999}
+KB_EV = 8.617333262e-5  # Boltzmann, eV/K
+ACC_UNIT = 9.64853329e-3  # (eV/A)/amu -> A/fs^2
+
+
+@dataclasses.dataclass(frozen=True)
+class Molecule:
+    name: str
+    numbers: np.ndarray  # (n,) atomic numbers
+    positions: np.ndarray  # (n, 3) reference geometry, Angstrom
+    ff: ForceField
+
+    @property
+    def n_atoms(self) -> int:
+        return len(self.numbers)
+
+    @property
+    def masses(self) -> np.ndarray:
+        return np.array([MASSES[int(z)] for z in self.numbers], dtype=np.float32)
+
+    @property
+    def species(self) -> np.ndarray:
+        """Embedding indices (atomic number, capped by the embed table)."""
+        return self.numbers.astype(np.int32)
+
+
+def _ring(center: np.ndarray, normal_rot: np.ndarray, radius: float = 1.394):
+    """Six carbon positions of a benzene ring in the frame ``normal_rot``."""
+    ang = np.arange(6) * np.pi / 3.0
+    local = np.stack([radius * np.cos(ang), radius * np.sin(ang), np.zeros(6)], axis=-1)
+    return center + local @ normal_rot.T
+
+
+def azobenzene() -> Molecule:
+    """Trans-azobenzene: two phenyl rings bridged by N=N.
+
+    Atom order: C0..C5 (ring A), C6..C11 (ring B), N12, N13,
+    H14..H18 (ring A, on C1..C5), H19..H23 (ring B, on C7..C11).
+    C0 and C6 are the ipso carbons bonded to the azo nitrogens.
+    """
+    cc, cn, nn, ch = 1.394, 1.42, 1.25, 1.09
+
+    eye = np.eye(3)
+    ring_a = _ring(np.zeros(3), eye)  # C0 at (cc, 0, 0)
+    # place ring A so that C0 sits at origin pointing +x to N
+    ring_a = ring_a - ring_a[0]
+
+    n1 = ring_a[0] + np.array([cn, 0.0, 0.0])
+    # trans azo: N=N at 120 deg in-plane
+    d2 = np.array([np.cos(np.pi / 3), np.sin(np.pi / 3), 0.0])
+    n2 = n1 + nn * d2
+    c6 = n2 + cn * np.array([1.0, 0.0, 0.0])
+
+    ring_b = _ring(np.zeros(3), eye)
+    ring_b = ring_b - ring_b[0] + c6
+
+    carbons = np.concatenate([ring_a, ring_b], axis=0)
+    pos = [carbons, np.stack([n1, n2])]
+
+    # ring hydrogens: radially outward from ring centroid, skip ipso C
+    hs = []
+    for ring, skip in ((ring_a, 0), (ring_b, 0)):
+        centroid = ring.mean(axis=0)
+        for idx in range(6):
+            if idx == skip:
+                continue
+            out = ring[idx] - centroid
+            out = out / np.linalg.norm(out)
+            hs.append(ring[idx] + ch * out)
+    pos.append(np.stack(hs))
+    positions = np.concatenate(pos, axis=0).astype(np.float32)
+
+    numbers = np.array([6] * 12 + [7] * 2 + [1] * 10, dtype=np.int64)
+
+    bonds = []
+    for base in (0, 6):  # both rings
+        for i in range(6):
+            bonds.append((base + i, base + (i + 1) % 6))
+    bonds += [(0, 12), (12, 13), (13, 6)]  # C-N=N-C bridge
+    h = 14
+    for base in (0, 6):
+        for i in range(1, 6):
+            bonds.append((base + i, h))
+            h += 1
+
+    # the photo-isomerisation coordinate: C0-N12=N13-C6 dihedral
+    torsions = [(0, 12, 13, 6)]
+    ff = build_force_field(positions, bonds, torsions, torsion_k=1.5)
+    return Molecule("azobenzene", numbers, positions, ff)
+
+
+def ethanol() -> Molecule:
+    """CH3-CH2-OH, 9 atoms — the light-molecule FP32 sanity benchmark."""
+    # idealised sp3 geometry
+    cc, co, ch, oh = 1.54, 1.43, 1.09, 0.96
+    t = np.deg2rad(109.47)
+    c0 = np.zeros(3)
+    c1 = np.array([cc, 0.0, 0.0])
+    o2 = c1 + co * np.array([np.cos(np.pi - t), np.sin(np.pi - t), 0.0])
+    # methyl hydrogens on c0
+    h3 = c0 + ch * np.array([-np.cos(np.pi - t), np.sin(np.pi - t), 0.0])
+    h4 = c0 + ch * np.array([-np.cos(np.pi - t), -np.sin(np.pi - t) * 0.5, np.sin(np.pi - t) * 0.866])
+    h5 = c0 + ch * np.array([-np.cos(np.pi - t), -np.sin(np.pi - t) * 0.5, -np.sin(np.pi - t) * 0.866])
+    # methylene hydrogens on c1
+    h6 = c1 + ch * np.array([0.33, -0.62, 0.71])
+    h7 = c1 + ch * np.array([0.33, -0.62, -0.71])
+    h8 = o2 + oh * np.array([np.cos(0.3), np.sin(0.3), 0.0])
+    positions = np.stack([c0, c1, o2, h3, h4, h5, h6, h7, h8]).astype(np.float32)
+    numbers = np.array([6, 6, 8, 1, 1, 1, 1, 1, 1], dtype=np.int64)
+    bonds = [(0, 1), (1, 2), (0, 3), (0, 4), (0, 5), (1, 6), (1, 7), (2, 8)]
+    ff = build_force_field(positions, bonds, torsions=[(3, 0, 1, 2)])
+    return Molecule("ethanol", numbers, positions, ff)
+
+
+def sample_dataset_mixed(
+    mol: Molecule,
+    n_samples: int,
+    temperatures=(150.0, 300.0, 450.0),
+    seed: int = 0,
+    **kw,
+):
+    """Mixed-temperature Langevin sampling (rMD17-style coverage).
+
+    Chunks of ``n_samples/len(T)`` per temperature, interleaved and
+    shuffled deterministically. Wider thermal coverage keeps downstream
+    NVE trajectories in-distribution (cold basins AND hot excursions).
+    """
+    per = n_samples // len(temperatures)
+    rem = n_samples - per * len(temperatures)
+    chunks = []
+    for i, t in enumerate(temperatures):
+        n = per + (1 if i < rem else 0)
+        chunks.append(sample_dataset(mol, n, temperature=t, seed=seed + 101 * i, **kw))
+    out = {k: np.concatenate([c[k] for c in chunks], axis=0) for k in chunks[0]}
+    rng = np.random.default_rng(seed + 999)
+    perm = rng.permutation(len(out["energy"]))
+    return {k: v[perm] for k, v in out.items()}
+
+
+def sample_dataset(
+    mol: Molecule,
+    n_samples: int,
+    temperature: float = 300.0,
+    dt_fs: float = 0.5,
+    stride: int = 20,
+    burnin: int = 500,
+    gamma: float = 0.02,
+    seed: int = 0,
+):
+    """Langevin-MD sample of configurations labelled by the oracle.
+
+    Returns dict of numpy arrays: positions (S, n, 3), energy (S,),
+    forces (S, n, 3). Deterministic in ``seed``.
+    """
+    masses = jnp.asarray(mol.masses)[:, None]
+    kT = KB_EV * temperature
+
+    @jax.jit
+    def step(state, key):
+        r, v = state
+        e, f = energy_and_forces(mol.ff, r)
+        a = f / masses * ACC_UNIT
+        # BAOAB-ish Langevin splitting (sufficient for sampling)
+        v = v + 0.5 * dt_fs * a
+        c1 = jnp.exp(-gamma * dt_fs)
+        sigma = jnp.sqrt(kT / masses * ACC_UNIT * (1.0 - c1 * c1))
+        noise = jax.random.normal(key, v.shape, v.dtype)
+        v = c1 * v + sigma * noise
+        r = r + dt_fs * v
+        e2, f2 = energy_and_forces(mol.ff, r)
+        a2 = f2 / masses * ACC_UNIT
+        v = v + 0.5 * dt_fs * a2
+        return (r, v), (r, e2, f2)
+
+    key = jax.random.PRNGKey(seed)
+    r0 = jnp.asarray(mol.positions)
+    v0 = jnp.zeros_like(r0)
+
+    total = burnin + n_samples * stride
+    keys = jax.random.split(key, total)
+
+    (rT, vT), (rs, es, fs) = jax.lax.scan(step, (r0, v0), keys)
+    sel = burnin + stride * np.arange(n_samples)
+    return {
+        "positions": np.asarray(rs[sel], dtype=np.float32),
+        "energy": np.asarray(es[sel], dtype=np.float32),
+        "forces": np.asarray(fs[sel], dtype=np.float32),
+    }

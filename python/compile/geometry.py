@@ -1,0 +1,129 @@
+"""SO(3) geometry substrate (S1).
+
+Rotations (axis-angle, quaternion, uniform sampling), real spherical
+harmonics up to l=2, and Wigner-D matrices for l<=1. Everything is written
+in pure jnp so it both (a) serves the build-time model/training code and
+(b) lowers into the AOT HLO artifacts.
+
+Conventions
+-----------
+* Real spherical harmonics in the e3nn "component" normalisation:
+  ``Y_0 = 1``, ``Y_1 = sqrt(3) * (x, y, z)`` for unit vectors, so that
+  ``D^(1)(R) = R`` in the (x, y, z) component order.
+* Rotations act on column vectors: ``v' = R @ v``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rotation_from_axis_angle",
+    "rotation_from_quaternion",
+    "random_rotation",
+    "random_rotations",
+    "wigner_d1",
+    "real_sph_harm_l1",
+    "real_sph_harm_l2",
+    "sph_harm_stack",
+    "geodesic_angle",
+    "so3_geodesic_distance",
+]
+
+
+def rotation_from_axis_angle(axis: jnp.ndarray, angle: jnp.ndarray) -> jnp.ndarray:
+    """Rodrigues' formula. ``axis`` need not be normalised; zero-safe."""
+    axis = axis / (jnp.linalg.norm(axis) + 1e-12)
+    x, y, z = axis[0], axis[1], axis[2]
+    k = jnp.array([[0.0, -z, y], [z, 0.0, -x], [-y, x, 0.0]], dtype=axis.dtype)
+    eye = jnp.eye(3, dtype=axis.dtype)
+    s, c = jnp.sin(angle), jnp.cos(angle)
+    return eye + s * k + (1.0 - c) * (k @ k)
+
+
+def rotation_from_quaternion(q: jnp.ndarray) -> jnp.ndarray:
+    """Unit quaternion (w, x, y, z) -> 3x3 rotation matrix."""
+    q = q / (jnp.linalg.norm(q) + 1e-12)
+    w, x, y, z = q[0], q[1], q[2], q[3]
+    return jnp.array(
+        [
+            [1 - 2 * (y * y + z * z), 2 * (x * y - w * z), 2 * (x * z + w * y)],
+            [2 * (x * y + w * z), 1 - 2 * (x * x + z * z), 2 * (y * z - w * x)],
+            [2 * (x * z - w * y), 2 * (y * z + w * x), 1 - 2 * (x * x + y * y)],
+        ],
+        dtype=q.dtype,
+    )
+
+
+def random_rotation(key: jax.Array, dtype=jnp.float32) -> jnp.ndarray:
+    """Haar-uniform rotation via a uniform unit quaternion (Shoemake)."""
+    q = jax.random.normal(key, (4,), dtype=dtype)
+    return rotation_from_quaternion(q)
+
+
+def random_rotations(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """(n, 3, 3) Haar-uniform rotations."""
+    qs = jax.random.normal(key, (n, 4), dtype=dtype)
+    return jax.vmap(rotation_from_quaternion)(qs)
+
+
+def wigner_d1(rot: jnp.ndarray) -> jnp.ndarray:
+    """Wigner-D matrix for l=1 in the (x, y, z) real basis: identically R."""
+    return rot
+
+
+def real_sph_harm_l1(u: jnp.ndarray) -> jnp.ndarray:
+    """l=1 real spherical harmonics of unit vectors ``u`` (..., 3).
+
+    Component normalisation: ``Y_1m(u) = sqrt(3) * u`` so that
+    ``Y_1(R u) = R Y_1(u)`` (the D-matrix is R itself).
+    """
+    return jnp.sqrt(3.0) * u
+
+
+def real_sph_harm_l2(u: jnp.ndarray) -> jnp.ndarray:
+    """l=2 real spherical harmonics of unit vectors ``u`` (..., 3) -> (..., 5).
+
+    Component normalisation (e3nn order: xy, yz, z^2, xz, x^2-y^2).
+    """
+    x, y, z = u[..., 0], u[..., 1], u[..., 2]
+    s15 = jnp.sqrt(15.0)
+    s5 = jnp.sqrt(5.0)
+    return jnp.stack(
+        [
+            s15 * x * y,
+            s15 * y * z,
+            0.5 * s5 * (3.0 * z * z - 1.0),
+            s15 * x * z,
+            0.5 * s15 * (x * x - y * y),
+        ],
+        axis=-1,
+    )
+
+
+def sph_harm_stack(u: jnp.ndarray, lmax: int = 1) -> jnp.ndarray:
+    """Concatenated real SH features for l=0..lmax of unit vectors ``u``.
+
+    Returns (..., (lmax+1)^2).
+    """
+    parts = [jnp.ones(u.shape[:-1] + (1,), dtype=u.dtype)]
+    if lmax >= 1:
+        parts.append(real_sph_harm_l1(u))
+    if lmax >= 2:
+        parts.append(real_sph_harm_l2(u))
+    if lmax >= 3:
+        raise NotImplementedError("lmax <= 2 supported")
+    return jnp.concatenate(parts, axis=-1)
+
+
+def geodesic_angle(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Angle between unit vectors along the last axis, numerically safe."""
+    dot = jnp.clip(jnp.sum(u * v, axis=-1), -1.0, 1.0)
+    return jnp.arccos(dot)
+
+
+def so3_geodesic_distance(r1: jnp.ndarray, r2: jnp.ndarray) -> jnp.ndarray:
+    """Geodesic distance on SO(3): angle of r1 @ r2^T."""
+    tr = jnp.trace(r1 @ r2.T)
+    return jnp.arccos(jnp.clip((tr - 1.0) / 2.0, -1.0, 1.0))

@@ -1,0 +1,17 @@
+"""L1 Pallas kernels (build-time; lowered with interpret=True).
+
+The three hot-spots of the quantized equivariant transformer:
+
+mddq       MDDQ fake-quant over (N, C, 3) vector features
+attention  cosine-normalised masked attention (Eq. 10)
+qlinear    W4A8 fused fake-quant linear
+
+Each has a pure-jnp oracle in :mod:`ref`; pytest + hypothesis sweep shapes
+against it. ``interpret=True`` is mandatory here: real-TPU lowering emits
+Mosaic custom-calls the CPU PJRT plugin cannot execute (see DESIGN.md §9
+for the TPU tiling/VMEM analysis these kernels are written against).
+"""
+
+from .attention import cosine_attention_pallas  # noqa: F401
+from .mddq import mddq_quantize_pallas  # noqa: F401
+from .qlinear import qlinear_w4a8_pallas  # noqa: F401

@@ -1,0 +1,123 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Each function here is the mathematical definition the corresponding Pallas
+kernel in this package must match (assert_allclose under f32). pytest +
+hypothesis sweep shapes and dtypes against these.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "mddq_quantize_ref",
+    "cosine_attention_ref",
+    "qlinear_w4a8_ref",
+]
+
+_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# MDDQ fake-quant (oct codebook + 8-bit magnitude), forward only
+# ---------------------------------------------------------------------------
+
+def _oct_wrap(x, y):
+    wx = (1.0 - jnp.abs(y)) * jnp.where(x >= 0.0, 1.0, -1.0)
+    wy = (1.0 - jnp.abs(x)) * jnp.where(y >= 0.0, 1.0, -1.0)
+    return wx, wy
+
+
+def _oct_quantize(u: jnp.ndarray, bits: int) -> jnp.ndarray:
+    n = jnp.sum(jnp.abs(u), axis=-1, keepdims=True)
+    p = u / (n + 1e-12)
+    px, py, pz = p[..., 0], p[..., 1], p[..., 2]
+    wx, wy = _oct_wrap(px, py)
+    ex = jnp.where(pz < 0.0, wx, px)
+    ey = jnp.where(pz < 0.0, wy, py)
+    levels = float((1 << bits) - 1)
+    gx = jnp.clip(jnp.round((ex * 0.5 + 0.5) * levels), 0.0, levels)
+    gy = jnp.clip(jnp.round((ey * 0.5 + 0.5) * levels), 0.0, levels)
+    dx = gx / levels * 2.0 - 1.0
+    dy = gy / levels * 2.0 - 1.0
+    dz = 1.0 - jnp.abs(dx) - jnp.abs(dy)
+    wx2, wy2 = _oct_wrap(dx, dy)
+    vx = jnp.where(dz < 0.0, wx2, dx)
+    vy = jnp.where(dz < 0.0, wy2, dy)
+    v = jnp.stack([vx, vy, dz], axis=-1)
+    return v / (jnp.linalg.norm(v, axis=-1, keepdims=True) + 1e-12)
+
+
+def mddq_quantize_ref(
+    v: jnp.ndarray,
+    magnitude_bits: int = 8,
+    direction_bits: int = 8,
+    mag_lo: float | None = None,
+    mag_hi: float | None = None,
+) -> jnp.ndarray:
+    """MDDQ forward: v -> Q_m(||v||) * Q_d(v/||v||), all in f32.
+
+    ``mag_lo``/``mag_hi`` are the magnitude calibration range; when None
+    they are computed per-tensor (min/max of the norms) as in PTQ.
+    """
+    m = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    ez = jnp.zeros_like(v).at[..., 2].set(1.0)
+    u = jnp.where(m > _EPS, v / jnp.maximum(m, _EPS), ez)
+
+    qmax = float(2**magnitude_bits - 1)
+    lo = jnp.min(m) if mag_lo is None else jnp.asarray(mag_lo, v.dtype)
+    hi = jnp.max(m) if mag_hi is None else jnp.asarray(mag_hi, v.dtype)
+    scale = (hi - lo) / qmax + 1e-12
+    qm = jnp.clip(jnp.round((m - lo) / scale), 0.0, qmax) * scale + lo
+
+    qu = _oct_quantize(u, direction_bits)
+    return qm * qu
+
+
+# ---------------------------------------------------------------------------
+# Robust (cosine-normalised) attention — Sec. III-E
+# ---------------------------------------------------------------------------
+
+def cosine_attention_ref(
+    q: jnp.ndarray,  # (n, H, D) invariant queries
+    k: jnp.ndarray,  # (n, H, D) invariant keys
+    mask: jnp.ndarray,  # (n, n) neighbourhood mask (True = edge present)
+    tau: float = 10.0,
+) -> jnp.ndarray:
+    """Cosine-normalised attention weights alpha_ij (n, H, n)  (Eq. 10).
+
+    L2-normalise q and k, logits = tau * cos-sim, masked softmax over the
+    cutoff neighbourhood.
+    """
+    qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + _EPS)
+    kn = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + _EPS)
+    logits = tau * jnp.einsum("ihd,jhd->ihj", qn, kn)
+    neg = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(mask[:, None, :], logits, neg)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits) * mask[:, None, :]
+    return w / (jnp.sum(w, axis=-1, keepdims=True) + _EPS)
+
+
+# ---------------------------------------------------------------------------
+# W4A8 fused fake-quant linear
+# ---------------------------------------------------------------------------
+
+def qlinear_w4a8_ref(
+    x: jnp.ndarray,  # (n, F_in) activations
+    w: jnp.ndarray,  # (F_in, F_out) weights
+    w_bits: int = 4,
+    a_bits: int = 8,
+) -> jnp.ndarray:
+    """Fused fake-quant linear: quantise W per-out-channel (symmetric
+    w_bits) and x per-tensor (symmetric a_bits), then matmul.
+    """
+    wq_max = float(2 ** (w_bits - 1) - 1)
+    ws = jnp.max(jnp.abs(w), axis=0, keepdims=True) / wq_max + 1e-12
+    wq = jnp.clip(jnp.round(w / ws), -wq_max, wq_max) * ws
+
+    aq_max = float(2 ** (a_bits - 1) - 1)
+    xs = jnp.max(jnp.abs(x)) / aq_max + 1e-12
+    xq = jnp.clip(jnp.round(x / xs), -aq_max, aq_max) * xs
+
+    return xq @ wq

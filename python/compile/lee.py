@@ -1,0 +1,58 @@
+"""Local Equivariance Error (Eq. 1) — metric + training regularizer (S12).
+
+    LEE(f; G, R) = || f(rho_in(R) G) - rho_out(R) f(G) ||_2
+
+For force-field models rho_in rotates positions and rho_out rotates the
+predicted per-atom forces; scalar energies are invariant so their LEE term
+is |E(RG) - E(G)|. We report the paper's force-LEE in meV/A (mean over
+atoms and rotations, Table III) and use the same quantity (scaled) as the
+QAT regularizer L_LEE (Sec. III-F).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .geometry import random_rotations
+
+__all__ = ["force_lee", "mean_force_lee", "lee_regularizer"]
+
+
+def force_lee(
+    forces_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    positions: jnp.ndarray,
+    rot: jnp.ndarray,
+) -> jnp.ndarray:
+    """Per-rotation force LEE: mean_i || f(R r)_i - R f(r)_i ||_2 (eV/A)."""
+    f0 = forces_fn(positions)
+    fr = forces_fn(positions @ rot.T)
+    diff = fr - f0 @ rot.T
+    return jnp.mean(jnp.linalg.norm(diff, axis=-1))
+
+
+def mean_force_lee(
+    forces_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    positions: jnp.ndarray,
+    key: jax.Array,
+    n_rotations: int = 16,
+) -> jnp.ndarray:
+    """E_R[LEE] over Haar-uniform rotations (eV/A)."""
+    rots = random_rotations(key, n_rotations)
+    vals = jax.vmap(lambda R: force_lee(forces_fn, positions, R))(rots)
+    return jnp.mean(vals)
+
+
+def lee_regularizer(
+    forces_fn: Callable[[jnp.ndarray], jnp.ndarray],
+    positions: jnp.ndarray,
+    key: jax.Array,
+) -> jnp.ndarray:
+    """Single-rotation stochastic LEE penalty (one R per example/step).
+
+    Applied only to the equivariant (force) outputs, per Sec. III-F.
+    """
+    rot = random_rotations(key, 1)[0]
+    return force_lee(forces_fn, positions, rot)

@@ -1,0 +1,487 @@
+"""L2: So3krates-lite SO(3)-equivariant transformer (S4).
+
+Architecture (Sec. III-B, Fig. 2): each atom carries invariant scalar
+features ``h`` (n, F) and equivariant l=1 vector features ``x`` (n, C, 3).
+Per layer, two branches interact only via attention:
+
+* scalar branch — cosine-normalised self-attention (Eq. 10) over the
+  cutoff neighbourhood, with radial-basis edge filters;
+* vector branch — equivariant messages ``sum_j alpha_ij (s1_ij * u_ij +
+  s2_ij * x_j)`` (spherical-harmonic l=1 edges), followed by invariant
+  norm-feedback into the scalar branch and scalar gating of the vectors.
+
+Energy = sum_i MLP(h_i); forces = -dE/dr via jax.grad, with every
+fake-quant op carrying an STE/Geometric-STE custom VJP so the exported
+force graph is the deployed (quantized) one.
+
+Quantization is injected per the variant config (QuantConfig): this single
+definition lowers to every HLO artifact — FP32 baseline, Naive INT8,
+Degree-Quant, SVQ-KMeans, LSQ/QDrop ablations and GAQ W4A8.
+
+``use_pallas=True`` routes the three hot-spots through the L1 Pallas
+kernels (forward) with jnp backward rules — used for AOT export;
+training uses the numerically identical jnp path for speed (pytest
+asserts both paths agree).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import codebook as cbk
+from .geometry import real_sph_harm_l1  # noqa: F401  (documentational link)
+from .quant import degree as dq
+from .quant import linear as lq
+from .quant import lsq as lsq_q
+from .quant import mddq as mddq_q
+from .quant import qdrop as qdrop_q
+from .quant import svq as svq_q
+
+__all__ = ["ModelConfig", "QuantConfig", "init_params", "energy", "energy_and_forces"]
+
+_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (defaults sized for CPU QAT)."""
+
+    n_species: int = 12  # max atomic number + 1 we embed (H..Na)
+    layers: int = 2
+    f: int = 32  # scalar channels
+    c: int = 8  # l=1 vector channels
+    heads: int = 4
+    head_dim: int = 8  # heads * head_dim == f
+    rbf: int = 16  # radial basis size
+    cutoff: float = 5.0  # Angstrom
+    tau: float = 10.0  # attention temperature (Eq. 10)
+    cosine_attention: bool = True  # robust attention normalisation on/off
+
+    def __post_init__(self):
+        assert self.heads * self.head_dim == self.f, "heads*head_dim must equal f"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Which quantiser runs where. scheme in {fp32, naive_int8, degree_quant,
+    svq_kmeans, lsq, qdrop, gaq} — the paper's Table II/III rows."""
+
+    scheme: str = "fp32"
+    w_bits: int = 8
+    a_bits: int = 8
+    # GAQ equivariant branch:
+    direction_kind: str = "oct"  # 'oct' | 'fib'
+    direction_bits: int = 8  # per axis for oct; log2(size) for fib
+    magnitude_bits: int = 8
+    # SVQ baseline codebook size:
+    svq_k: int = 256
+    # QDrop probability:
+    qdrop_p: float = 0.5
+
+    @property
+    def is_quantized(self) -> bool:
+        return self.scheme != "fp32"
+
+
+VARIANTS: Dict[str, QuantConfig] = {
+    "fp32": QuantConfig(scheme="fp32", w_bits=32, a_bits=32),
+    "naive_int8": QuantConfig(scheme="naive_int8", w_bits=8, a_bits=8),
+    "degree_quant": QuantConfig(scheme="degree_quant", w_bits=8, a_bits=8),
+    "svq_kmeans": QuantConfig(scheme="svq_kmeans", w_bits=8, a_bits=8),
+    "lsq_w4a8": QuantConfig(scheme="lsq", w_bits=4, a_bits=8),
+    "qdrop_w4a8": QuantConfig(scheme="qdrop", w_bits=4, a_bits=8),
+    "gaq_w4a8": QuantConfig(scheme="gaq", w_bits=4, a_bits=8),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, fan_in, fan_out, dtype=jnp.float32):
+    scale = 1.0 / np.sqrt(fan_in)
+    return jax.random.uniform(key, (fan_in, fan_out), dtype, -scale, scale)
+
+
+def init_params(key: jax.Array, cfg: ModelConfig, qcfg: QuantConfig) -> Dict[str, Any]:
+    """Initialise the parameter pytree (plain nested dict)."""
+    keys = iter(jax.random.split(key, 64))
+    p: Dict[str, Any] = {
+        "embed": 0.1 * jax.random.normal(next(keys), (cfg.n_species, cfg.f)),
+        "layers": [],
+        "readout_w1": _dense_init(next(keys), cfg.f, cfg.f),
+        "readout_b1": jnp.zeros((cfg.f,)),
+        "readout_w2": _dense_init(next(keys), cfg.f, 1),
+        "readout_b2": jnp.zeros((1,)),
+        "step_r": jnp.asarray(0.05, jnp.float32),
+        # Learnable attention temperature (Sec III-E: "or learnable scalar").
+        "tau": jnp.asarray(cfg.tau, jnp.float32),
+    }
+    for _ in range(cfg.layers):
+        lp = {
+            "wq": _dense_init(next(keys), cfg.f, cfg.f),
+            "wk": _dense_init(next(keys), cfg.f, cfg.f),
+            "wv": _dense_init(next(keys), cfg.f, cfg.f),
+            "wo": _dense_init(next(keys), cfg.f, cfg.f),
+            # radial filters: rbf -> per-head gate, vector message coeffs
+            "w_rad_h": _dense_init(next(keys), cfg.rbf, cfg.heads),
+            "w_rad_s1": _dense_init(next(keys), cfg.rbf, cfg.c),
+            "w_rad_s2": _dense_init(next(keys), cfg.rbf, cfg.c),
+            # scalar<->vector coupling
+            "w_norm": _dense_init(next(keys), cfg.c, cfg.f),
+            "w_gate": _dense_init(next(keys), cfg.f, cfg.c),
+            "b_gate": jnp.zeros((cfg.c,)),
+            # MLP on scalars
+            "w_mlp1": _dense_init(next(keys), cfg.f, cfg.f),
+            "b_mlp1": jnp.zeros((cfg.f,)),
+            "w_mlp2": _dense_init(next(keys), cfg.f, cfg.f),
+            "b_mlp2": jnp.zeros((cfg.f,)),
+            # LSQ steps (used by gaq / lsq schemes; harmless otherwise)
+            "step_h": jnp.asarray(0.05, jnp.float32),
+            "step_v": jnp.asarray(0.05, jnp.float32),
+        }
+        p["layers"].append(lp)
+
+    if qcfg.scheme == "svq_kmeans":
+        # Fixed spherical centroids (Fibonacci init; k-means refinement is
+        # fitted on calibration data in train.py and written back here).
+        p["svq_centroids"] = jnp.asarray(cbk.fibonacci_sphere(qcfg.svq_k))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Quantizer routing (branch separation, Sec. III-D)
+# ---------------------------------------------------------------------------
+
+
+class QuantizerSuite:
+    """Applies the variant's quantisers to weights / scalar acts / vector acts.
+
+    ``enabled`` implements the staged warm-up: during the first N_warm
+    epochs the equivariant-branch quantiser is off (train.py toggles it).
+    """
+
+    def __init__(
+        self,
+        qcfg: QuantConfig,
+        params: Dict[str, Any],
+        degrees: Optional[jnp.ndarray] = None,
+        rng: Optional[jax.Array] = None,
+        train: bool = False,
+        equivariant_enabled: bool = True,
+        use_pallas: bool = False,
+    ):
+        self.q = qcfg
+        self.params = params
+        self.degrees = degrees
+        self.rng = rng
+        self.train = train
+        self.eq_on = equivariant_enabled
+        self.use_pallas = use_pallas
+        if qcfg.scheme == "gaq":
+            self._dirq, _ = cbk.make_direction_quantizer(
+                qcfg.direction_kind, qcfg.direction_bits, 1 << qcfg.direction_bits
+            )
+
+    def _next_key(self):
+        if self.rng is None:
+            return None
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    # -- weights ------------------------------------------------------------
+
+    def weight(self, w: jnp.ndarray) -> jnp.ndarray:
+        s = self.q.scheme
+        if s == "fp32":
+            return w
+        if s in ("gaq", "lsq", "qdrop"):
+            return lq.per_channel_symmetric_fake_quant(w, self.q.w_bits)
+        if s == "naive_int8":
+            return lq.naive_quant(w, self.q.w_bits)
+        # degree_quant / svq quantise weights with symmetric int8
+        return lq.symmetric_fake_quant(w, self.q.w_bits)
+
+    # -- invariant scalar activations ----------------------------------------
+
+    def scalar(self, h: jnp.ndarray, step: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        s = self.q.scheme
+        if s == "fp32":
+            return h
+        if s == "naive_int8":
+            return lq.naive_quant(h, self.q.a_bits)
+        if s == "degree_quant" and self.degrees is not None:
+            return dq.degree_quant_fake_quant(h, self.degrees, self.q.a_bits)
+        if s in ("gaq", "lsq") and step is not None:
+            return lsq_q.lsq_fake_quant(h, step, self.q.a_bits)
+        if s == "qdrop":
+            return qdrop_q.qdrop_fake_quant(
+                h, self.q.a_bits, self._next_key(), self.q.qdrop_p,
+                deterministic=not self.train,
+            )
+        return lq.symmetric_fake_quant(h, self.q.a_bits)
+
+    # -- fused quantized linear (the W4A8 hot path) ---------------------------
+
+    def linear(self, h: jnp.ndarray, w: jnp.ndarray, step: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Quantised ``h @ w`` with the variant's weight/activation quant.
+
+        GAQ on the export path uses the fused L1 Pallas W4A8 kernel with
+        the learned LSQ step as the activation scale; all other schemes
+        compose their activation and weight quantisers.
+        """
+        if self.q.scheme == "fp32":
+            return h @ w
+        if self.q.scheme == "gaq" and self.use_pallas:
+            return _gaq_qlinear_pallas(h, w, step, self.q.w_bits, self.q.a_bits)
+        return self.scalar(h, step) @ self.weight(w)
+
+    # -- equivariant vector activations --------------------------------------
+
+    def vector(self, x: jnp.ndarray, step: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """x: (n, C, 3). The branch the paper is about."""
+        s = self.q.scheme
+        if s == "fp32" or not self.eq_on:
+            return x
+        if s == "gaq":
+            if self.use_pallas and self.q.direction_kind == "oct":
+                return mddq_q.mddq_fake_quant_pallas(
+                    x, self._dirq, self.q.magnitude_bits, self.q.direction_bits
+                )
+            return mddq_q.mddq_fake_quant(x, self._dirq, self.q.magnitude_bits)
+        if s == "naive_int8":
+            # Cartesian per-tensor min-max on raw components: the failure mode.
+            return lq.naive_quant(x, self.q.a_bits)
+        if s == "degree_quant" and self.degrees is not None:
+            return dq.degree_quant_fake_quant(x, self.degrees, self.q.a_bits)
+        if s == "svq_kmeans":
+            return svq_q.svq_hard_quant(x, self.params["svq_centroids"])
+        if s == "lsq" and step is not None:
+            return lsq_q.lsq_fake_quant(x, step, self.q.a_bits)
+        if s == "qdrop":
+            return qdrop_q.qdrop_fake_quant(
+                x, self.q.a_bits, self._next_key(), self.q.qdrop_p,
+                deterministic=not self.train,
+            )
+        return lq.symmetric_fake_quant(x, self.q.a_bits)
+
+
+def _jnp_gaq_linear(h, w, step, w_bits, a_bits):
+    """jnp reference of the GAQ W4A8 linear (training path)."""
+    hq = lsq_q.lsq_fake_quant(h, step, a_bits)
+    wq = lq.per_channel_symmetric_fake_quant(w, w_bits)
+    return hq @ wq
+
+
+def _gaq_qlinear_pallas(h, w, step, w_bits, a_bits):
+    """Fused Pallas W4A8 linear; backward = exact VJP of the jnp path."""
+    from .kernels.qlinear import qlinear_w4a8_pallas
+
+    @jax.custom_vjp
+    def f(h, w, step):
+        wq_max = float(2 ** (w_bits - 1) - 1)
+        ws = jnp.max(jnp.abs(w), axis=0, keepdims=True) / wq_max + 1e-12
+        return qlinear_w4a8_pallas(
+            h, w, w_bits, a_bits, ws=ws, xs=jnp.abs(step) + 1e-9
+        )
+
+    def f_fwd(h, w, step):
+        return f(h, w, step), (h, w, step)
+
+    def f_bwd(res, g):
+        h, w, step = res
+        _, vjp = jax.vjp(
+            lambda h, w, s: _jnp_gaq_linear(h, w, s, w_bits, a_bits), h, w, step
+        )
+        return vjp(g)
+
+    f.defvjp(f_fwd, f_bwd)
+    return f(h, w, step)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def _radial_basis(d: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """Gaussian RBF x cosine-cutoff envelope. d: (n, n) -> (n, n, K)."""
+    centers = jnp.linspace(0.0, cfg.cutoff, cfg.rbf)
+    gamma = (cfg.rbf / cfg.cutoff) ** 2
+    rbf = jnp.exp(-gamma * (d[..., None] - centers) ** 2)
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d / cfg.cutoff, 0.0, 1.0)) + 1.0)
+    return rbf * env[..., None]
+
+
+def _graph(positions: jnp.ndarray, cfg: ModelConfig):
+    """Cutoff graph: distances, unit offsets, mask, degrees."""
+    n = positions.shape[0]
+    rij = positions[None, :, :] - positions[:, None, :]  # (n, n, 3): j - i
+    d2 = jnp.sum(rij * rij, axis=-1)
+    eye = jnp.eye(n, dtype=bool)
+    d = jnp.sqrt(jnp.where(eye, 1.0, d2))  # guard self-distance
+    mask = jnp.logical_and(d < cfg.cutoff, jnp.logical_not(eye))
+    u = rij / (d[..., None] + _EPS)
+    degrees = jnp.sum(mask, axis=-1).astype(positions.dtype)
+    return d, u, mask, degrees
+
+
+def _softmax_attention_ref(q, k, mask, tau, cosine: bool):
+    """jnp attention weights; cosine-normalised (Eq. 10) or standard."""
+    if cosine:
+        qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + _EPS)
+        kn = k / (jnp.linalg.norm(k, axis=-1, keepdims=True) + _EPS)
+        logits = tau * jnp.einsum("ihd,jhd->ihj", qn, kn)
+    else:
+        dscale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+        logits = dscale * jnp.einsum("ihd,jhd->ihj", q, k)
+    neg = jnp.asarray(-1e30, logits.dtype)
+    logits = jnp.where(mask[:, None, :], logits, neg)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    w = jnp.exp(logits) * mask[:, None, :].astype(logits.dtype)
+    return w / (jnp.sum(w, axis=-1, keepdims=True) + _EPS)
+
+
+@jax.custom_vjp
+def _pallas_cosine_attention(q, k, maskf, tau):
+    from .kernels import cosine_attention_pallas
+
+    return cosine_attention_pallas(q, k, maskf, tau)
+
+
+def _pallas_attn_fwd(q, k, maskf, tau):
+    return _pallas_cosine_attention(q, k, maskf, tau), (q, k, maskf, tau)
+
+
+def _pallas_attn_bwd(res, g):
+    q, k, maskf, tau = res
+    _, vjp = jax.vjp(
+        lambda q, k, t: _softmax_attention_ref(q, k, maskf > 0.5, t, True), q, k, tau
+    )
+    gq, gk, gt = vjp(g)
+    return gq, gk, jnp.zeros_like(maskf), gt
+
+
+_pallas_cosine_attention.defvjp(_pallas_attn_fwd, _pallas_attn_bwd)
+
+
+def _attention_weights(q, k, mask, tau, cfg: ModelConfig, use_pallas: bool):
+    """Cosine attention: Pallas forward + jnp backward when exporting."""
+    if not cfg.cosine_attention:
+        return _softmax_attention_ref(q, k, mask, tau, cosine=False)
+    if not use_pallas:
+        return _softmax_attention_ref(q, k, mask, tau, cosine=True)
+    return _pallas_cosine_attention(q, k, mask.astype(q.dtype), tau)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def energy(
+    params: Dict[str, Any],
+    species: jnp.ndarray,  # (n,) int32 species index
+    positions: jnp.ndarray,  # (n, 3) f32 Angstrom
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    rng: Optional[jax.Array] = None,
+    train: bool = False,
+    equivariant_quant_enabled: bool = True,
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    """Total potential energy (scalar, eV)."""
+    n = positions.shape[0]
+    d, u, mask, degrees = _graph(positions, cfg)
+    rbf = _radial_basis(d, cfg)  # (n, n, K)
+
+    qs = QuantizerSuite(
+        qcfg, params, degrees=degrees, rng=rng, train=train,
+        equivariant_enabled=equivariant_quant_enabled, use_pallas=use_pallas,
+    )
+
+    h = params["embed"][species]  # (n, F)
+    x = jnp.zeros((n, cfg.c, 3), positions.dtype)  # (n, C, 3)
+    maskf = mask.astype(h.dtype)
+    tau = params["tau"]
+
+    for lp in params["layers"]:
+        # ---- invariant attention (Eq. 9/10); W4A8 fused linears ------------
+        q = qs.linear(h, lp["wq"], lp["step_h"]).reshape(n, cfg.heads, cfg.head_dim)
+        k = qs.linear(h, lp["wk"], lp["step_h"]).reshape(n, cfg.heads, cfg.head_dim)
+        v = qs.linear(h, lp["wv"], lp["step_h"]).reshape(n, cfg.heads, cfg.head_dim)
+
+        alpha = _attention_weights(q, k, mask, tau, cfg, use_pallas)  # (n,H,n)
+        rad_h = jax.nn.silu(rbf @ lp["w_rad_h"])  # (n, n, H) radial gates
+        alpha = alpha * jnp.transpose(rad_h, (0, 2, 1))  # invariant d_ij bias
+
+        msg = jnp.einsum("ihj,jhd->ihd", alpha, v).reshape(n, cfg.f)
+        h = h + qs.linear(msg, lp["wo"], lp["step_h"])
+
+        # ---- equivariant message path (l=1 spherical harmonics) -----------
+        s1 = (rbf @ lp["w_rad_s1"]) * maskf[..., None]  # (n, n, C)
+        s2 = (rbf @ lp["w_rad_s2"]) * maskf[..., None]  # (n, n, C)
+        # attention modulation for vectors: mean over heads
+        am = jnp.mean(alpha, axis=1)  # (n, n)
+        # u_ij is Y_1(u)/sqrt(3): the l=1 equivariant edge feature.
+        x_msg = jnp.einsum("ij,ijc,ijk->ick", am, s1, u) + jnp.einsum(
+            "ij,ijc,jck->ick", am, s2, x
+        )
+        x = x + x_msg
+        # quantise the equivariant branch (MDDQ for GAQ)
+        x = qs.vector(x, lp["step_v"])
+
+        # ---- scalar <-> vector coupling (invariant norms / gates) ----------
+        norms = jnp.sqrt(jnp.sum(x * x, axis=-1) + _EPS)  # (n, C) invariant
+        h = h + jax.nn.silu(norms @ lp["w_norm"])
+        gate = jax.nn.sigmoid(h @ lp["w_gate"] + lp["b_gate"])  # (n, C)
+        x = x * gate[..., None]
+
+        # ---- scalar MLP -----------------------------------------------------
+        mid = jax.nn.silu(qs.linear(h, lp["w_mlp1"], lp["step_h"]) + lp["b_mlp1"])
+        h = h + qs.linear(mid, lp["w_mlp2"], lp["step_h"]) + lp["b_mlp2"]
+
+    # ---- readout -------------------------------------------------------------
+    mid = jax.nn.silu(qs.linear(h, params["readout_w1"], params["step_r"]) + params["readout_b1"])
+    e_i = qs.linear(mid, params["readout_w2"], params["step_r"]) + params["readout_b2"]
+    return jnp.sum(e_i)
+
+
+def energy_and_forces(
+    params: Dict[str, Any],
+    species: jnp.ndarray,
+    positions: jnp.ndarray,
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    rng: Optional[jax.Array] = None,
+    train: bool = False,
+    equivariant_quant_enabled: bool = True,
+    use_pallas: bool = False,
+):
+    """(E, F): F = -dE/dr through the STE-equipped quantized graph.
+
+    Fake-quant ops carry STE custom-VJPs, so F is the *deployed* force —
+    not exactly -grad of the reported (rounded) energy. That residual
+    non-conservative component is precisely what Fig. 3 measures.
+    """
+
+    def e_fn(r):
+        return energy(
+            params, species, r, cfg, qcfg, rng=rng, train=train,
+            equivariant_quant_enabled=equivariant_quant_enabled,
+            use_pallas=use_pallas,
+        )
+
+    e, grad = jax.value_and_grad(e_fn)(positions)
+    return e, -grad

@@ -1,0 +1,69 @@
+"""Minimal Adam optimizer (substrate — optax is unavailable offline).
+
+Pytree-agnostic Adam with optional cosine LR decay and global-norm
+clipping; exactly the pieces train.py needs, nothing else.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamConfig", "AdamState", "adam_init", "adam_update", "cosine_lr", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    clip_norm: float = 10.0
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adam_init(params: Any) -> AdamState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Any:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in leaves) + 1e-12)
+    scale = jnp.minimum(1.0, max_norm / gnorm)
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def cosine_lr(base_lr: float, step: jnp.ndarray, total_steps: int, warmup: int = 0) -> jnp.ndarray:
+    """Cosine decay to 10% of base, with optional linear warmup."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(warmup, 1)) if warmup > 0 else 1.0
+    t = jnp.clip(s / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.55 + 0.45 * jnp.cos(jnp.pi * t)  # 1.0 -> 0.1
+    return base_lr * warm * cos
+
+
+def adam_update(cfg: AdamConfig, lr: jnp.ndarray, state: AdamState, params: Any, grads: Any):
+    """One Adam step; returns (new_params, new_state)."""
+    grads = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    mu = jax.tree_util.tree_map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.nu, grads)
+    mhat_scale = 1.0 / (1.0 - cfg.b1**t)
+    vhat_scale = 1.0 / (1.0 - cfg.b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m, v: p - lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + cfg.eps),
+        params,
+        mu,
+        nu,
+    )
+    return new_params, AdamState(step=step, mu=mu, nu=nu)

@@ -1,0 +1,205 @@
+"""Classical "DFT oracle" potential (S5) — the label generator.
+
+rMD17 substitute (DESIGN.md §2): a smooth, exactly SO(3)-invariant
+molecular-mechanics potential
+
+    E = sum_bonds   k_b (r - r0)^2
+      + sum_angles  k_a (theta - theta0)^2
+      + sum_torsion k_t (1 - cos(phi - phi0))      (the azo N=N dihedral)
+      + sum_nb      4 eps [ (sigma/r)^12 - (sigma/r)^6 ]   (pairs > 2 bonds)
+
+parameterised so the constructed azobenzene geometry is its equilibrium.
+Exact rotational invariance of the oracle means any LEE measured on a
+trained model is attributable to the model/quantiser, not the labels.
+
+Implemented in jnp (differentiable: labels F = -dE/dr are analytic) and
+ported to Rust (rust/src/md/classical.rs) for integrator validation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ForceField", "build_force_field", "potential_energy", "energy_and_forces"]
+
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ForceField:
+    """Topology + parameters; all arrays are static numpy (baked per molecule)."""
+
+    bonds: np.ndarray  # (B, 2) int
+    bond_r0: np.ndarray  # (B,) equilibrium lengths
+    bond_k: np.ndarray  # (B,) eV/A^2
+    angles: np.ndarray  # (A, 3) int (i-j-k, j = apex)
+    angle_t0: np.ndarray  # (A,) rad
+    angle_k: np.ndarray  # (A,) eV/rad^2
+    torsions: np.ndarray  # (T, 4) int
+    torsion_phi0: np.ndarray  # (T,) rad
+    torsion_k: np.ndarray  # (T,) eV
+    nb_pairs: np.ndarray  # (P, 2) int, pairs separated by > 2 bonds
+    nb_eps: np.ndarray  # (P,)
+    nb_sigma: np.ndarray  # (P,)
+
+
+def _angle(r, i, j, k):
+    a = r[i] - r[j]
+    b = r[k] - r[j]
+    cos = jnp.sum(a * b, axis=-1) / (
+        jnp.linalg.norm(a, axis=-1) * jnp.linalg.norm(b, axis=-1) + _EPS
+    )
+    return jnp.arccos(jnp.clip(cos, -1.0 + 1e-7, 1.0 - 1e-7))
+
+
+def _dihedral(r, i, j, k, l):
+    b1 = r[j] - r[i]
+    b2 = r[k] - r[j]
+    b3 = r[l] - r[k]
+    n1 = jnp.cross(b1, b2)
+    n2 = jnp.cross(b2, b3)
+    m1 = jnp.cross(n1, b2 / (jnp.linalg.norm(b2, axis=-1, keepdims=True) + _EPS))
+    x = jnp.sum(n1 * n2, axis=-1)
+    y = jnp.sum(m1 * n2, axis=-1)
+    return jnp.arctan2(y, x + _EPS)
+
+
+def potential_energy(ff: ForceField, r: jnp.ndarray) -> jnp.ndarray:
+    """Total classical energy (eV) of positions r (n, 3) in Angstrom."""
+    e = jnp.asarray(0.0, r.dtype)
+
+    if len(ff.bonds):
+        bi, bj = ff.bonds[:, 0], ff.bonds[:, 1]
+        d = jnp.linalg.norm(r[bi] - r[bj], axis=-1)
+        e = e + jnp.sum(ff.bond_k * (d - ff.bond_r0) ** 2)
+
+    if len(ff.angles):
+        th = _angle(r, ff.angles[:, 0], ff.angles[:, 1], ff.angles[:, 2])
+        e = e + jnp.sum(ff.angle_k * (th - ff.angle_t0) ** 2)
+
+    if len(ff.torsions):
+        phi = _dihedral(
+            r, ff.torsions[:, 0], ff.torsions[:, 1], ff.torsions[:, 2], ff.torsions[:, 3]
+        )
+        e = e + jnp.sum(ff.torsion_k * (1.0 - jnp.cos(phi - ff.torsion_phi0)))
+
+    if len(ff.nb_pairs):
+        pi, pj = ff.nb_pairs[:, 0], ff.nb_pairs[:, 1]
+        d = jnp.linalg.norm(r[pi] - r[pj], axis=-1)
+        sr6 = (ff.nb_sigma / (d + _EPS)) ** 6
+        e = e + jnp.sum(4.0 * ff.nb_eps * (sr6 * sr6 - sr6))
+
+    return e
+
+
+def energy_and_forces(ff: ForceField, r: jnp.ndarray):
+    """(E, F = -dE/dr) — analytic oracle labels."""
+    e, g = jax.value_and_grad(lambda r: potential_energy(ff, r))(r)
+    return e, -g
+
+
+def build_force_field(
+    positions: np.ndarray,
+    bonds: List[Tuple[int, int]],
+    torsions: List[Tuple[int, int, int, int]] | None = None,
+    bond_k: float = 30.0,
+    angle_k: float = 3.0,
+    torsion_k: float = 1.0,
+    nb_eps: float = 0.004,
+) -> ForceField:
+    """Parameterise the force field so ``positions`` is its equilibrium.
+
+    Bond lengths / angles / dihedrals measured on the input geometry become
+    r0 / theta0 / phi0. Non-bonded LJ applies to pairs more than two bonds
+    apart, with sigma at the minimum = 0.95 x current distance (mildly
+    attractive basin, keeps rings from collapsing).
+    """
+    pos = np.asarray(positions, dtype=np.float64)
+    n = len(pos)
+    bonds = [tuple(sorted(b)) for b in bonds]
+    bonds_arr = np.asarray(sorted(set(bonds)), dtype=np.int64)
+
+    # adjacency + graph distances up to 3
+    adj = [[] for _ in range(n)]
+    for i, j in bonds_arr:
+        adj[i].append(j)
+        adj[j].append(i)
+
+    # angles: all i-j-k with i<k both bonded to j
+    ang = []
+    for j in range(n):
+        nbrs = sorted(adj[j])
+        for a in range(len(nbrs)):
+            for b in range(a + 1, len(nbrs)):
+                ang.append((nbrs[a], j, nbrs[b]))
+    ang_arr = np.asarray(ang, dtype=np.int64) if ang else np.zeros((0, 3), np.int64)
+
+    # graph distance (BFS, capped at 3) for the non-bonded exclusion list
+    import collections
+
+    dist = np.full((n, n), 99, dtype=np.int64)
+    for s in range(n):
+        dist[s, s] = 0
+        dq = collections.deque([s])
+        while dq:
+            u = dq.popleft()
+            if dist[s, u] >= 3:
+                continue
+            for w in adj[u]:
+                if dist[s, w] > dist[s, u] + 1:
+                    dist[s, w] = dist[s, u] + 1
+                    dq.append(w)
+
+    nb = [(i, j) for i in range(n) for j in range(i + 1, n) if dist[i, j] > 2]
+    nb_arr = np.asarray(nb, dtype=np.int64) if nb else np.zeros((0, 2), np.int64)
+
+    # measure equilibrium values on the reference geometry
+    def blen(i, j):
+        return float(np.linalg.norm(pos[i] - pos[j]))
+
+    bond_r0 = np.array([blen(i, j) for i, j in bonds_arr])
+
+    def bang(i, j, k):
+        a, b = pos[i] - pos[j], pos[k] - pos[j]
+        c = np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b) + _EPS)
+        return float(np.arccos(np.clip(c, -1.0, 1.0)))
+
+    angle_t0 = np.array([bang(*t) for t in ang_arr]) if len(ang_arr) else np.zeros(0)
+
+    tors = torsions or []
+    tors_arr = np.asarray(tors, dtype=np.int64) if tors else np.zeros((0, 4), np.int64)
+
+    def bdih(i, j, k, l):
+        b1, b2, b3 = pos[j] - pos[i], pos[k] - pos[j], pos[l] - pos[k]
+        n1, n2 = np.cross(b1, b2), np.cross(b2, b3)
+        m1 = np.cross(n1, b2 / (np.linalg.norm(b2) + _EPS))
+        return float(np.arctan2(np.dot(m1, n2), np.dot(n1, n2) + _EPS))
+
+    phi0 = np.array([bdih(*t) for t in tors_arr]) if len(tors_arr) else np.zeros(0)
+
+    nb_sigma = (
+        np.array([blen(i, j) for i, j in nb_arr]) * 0.95 / 2.0 ** (1.0 / 6.0)
+        if len(nb_arr)
+        else np.zeros(0)
+    )
+
+    f32 = lambda a: np.asarray(a, dtype=np.float32)
+    return ForceField(
+        bonds=bonds_arr,
+        bond_r0=f32(bond_r0),
+        bond_k=f32(np.full(len(bonds_arr), bond_k)),
+        angles=ang_arr,
+        angle_t0=f32(angle_t0),
+        angle_k=f32(np.full(len(ang_arr), angle_k)),
+        torsions=tors_arr,
+        torsion_phi0=f32(phi0),
+        torsion_k=f32(np.full(len(tors_arr), torsion_k)),
+        nb_pairs=nb_arr,
+        nb_eps=f32(np.full(len(nb_arr), nb_eps)),
+        nb_sigma=f32(nb_sigma),
+    )

@@ -1,0 +1,19 @@
+"""Quantizer library (S3).
+
+Every quantizer is a *fake-quant* transform ``x -> dequant(quant(x))`` in
+f32, so quantized model variants lower to self-contained HLO. The Rust
+side (rust/src/quant/) holds the true packed-integer memory substrate used
+for the bandwidth experiments (Table IV).
+
+Modules
+-------
+ste        straight-through estimators (standard + Geometric, Eq. 8)
+linear     symmetric/asymmetric uniform quantisers (naive INT8, weight INT4)
+lsq        Learned Step-size Quantization [17]
+qdrop      QDrop stochastic quant dropping [19]
+degree     Degree-Quant: per-node-degree ranges [22]
+svq        SVQ-KMeans hard spherical vector quantisation (baseline)
+mddq       Magnitude-Direction Decoupled Quantization (ours, Sec. III-C)
+"""
+
+from . import degree, linear, lsq, mddq, qdrop, ste, svq  # noqa: F401

@@ -1,0 +1,55 @@
+"""Degree-Quant [22]: graph-topology-aware quantisation.
+
+Per-node quantisation ranges scale with node degree: high-degree nodes
+aggregate more messages, so their activations have wider ranges; Tailor et
+al. protect them with degree-dependent scales (and stochastic protective
+masking during QAT). This adapts quantisation to *graph* topology but not
+*geometric* topology — it still quantises vector components on Cartesian
+axes, so it only partially preserves equivariance (Table III).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ste import ste_round
+
+__all__ = ["degree_quant_fake_quant", "protective_mask"]
+
+
+def degree_quant_fake_quant(
+    x: jnp.ndarray,
+    degrees: jnp.ndarray,
+    bits: int = 8,
+) -> jnp.ndarray:
+    """Per-node symmetric fake-quant with degree-scaled ranges.
+
+    Parameters
+    ----------
+    x : (n, ...) node features, leading axis = nodes.
+    degrees : (n,) node degrees (float).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    flat = x.reshape(x.shape[0], -1)
+    base = jax.lax.stop_gradient(jnp.max(jnp.abs(flat), axis=1) + 1e-12)
+    mean_deg = jnp.mean(degrees) + 1e-12
+    # Range widened proportionally to sqrt(degree / mean_degree).
+    widen = jnp.sqrt(jnp.maximum(degrees, 1.0) / mean_deg)
+    scale = (base * widen) / qmax
+    scale = scale.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+    q = jnp.clip(ste_round(x / scale), -qmax, qmax)
+    return q * scale
+
+
+def protective_mask(
+    key: jax.Array, degrees: jnp.ndarray, p_min: float = 0.0, p_max: float = 0.1
+) -> jnp.ndarray:
+    """Stochastic high-degree protection: P(keep FP) grows with degree.
+
+    Returns a (n,) bool mask; True = keep the node in full precision this
+    step (Degree-Quant's training-time protection).
+    """
+    d = degrees / (jnp.max(degrees) + 1e-12)
+    p_protect = p_min + (p_max - p_min) * d
+    return jax.random.bernoulli(key, p_protect)

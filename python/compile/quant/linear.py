@@ -1,0 +1,72 @@
+"""Uniform linear quantisers.
+
+These are the geometry-agnostic building blocks: symmetric (signed) and
+asymmetric (affine) fake-quant with STE gradients. "Naive INT8" in the
+paper's baselines = per-tensor min-max asymmetric quant applied uniformly
+to every feature channel, scalar and vector alike.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ste import ste_round
+
+__all__ = [
+    "symmetric_fake_quant",
+    "asymmetric_fake_quant",
+    "naive_quant",
+    "per_channel_symmetric_fake_quant",
+]
+
+
+def symmetric_fake_quant(x: jnp.ndarray, bits: int, scale: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Signed symmetric quant: levels in [-2^(b-1)+1, 2^(b-1)-1].
+
+    If ``scale`` is None, calibrates per-tensor from max-abs (PTQ style);
+    gradients still flow through ``x`` via STE.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    if scale is None:
+        scale = jax.lax.stop_gradient(jnp.max(jnp.abs(x)) / qmax + 1e-12)
+    q = ste_round(x / scale)
+    q = jnp.clip(q, -qmax, qmax)
+    return q * scale
+
+
+def asymmetric_fake_quant(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Affine min-max quant with zero point; per-tensor calibration."""
+    qmax = float(2**bits - 1)
+    lo = jax.lax.stop_gradient(jnp.min(x))
+    hi = jax.lax.stop_gradient(jnp.max(x))
+    scale = (hi - lo) / qmax + 1e-12
+    q = ste_round((x - lo) / scale)
+    q = jnp.clip(q, 0.0, qmax)
+    return q * scale + lo
+
+
+def naive_quant(x: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """The paper's 'Naive INT8' baseline: per-tensor min-max on everything.
+
+    Applied indiscriminately to vector components this breaks SO(3)
+    equivariance (anisotropic Cartesian grid) — exactly the failure mode
+    Tables II/III demonstrate.
+    """
+    return asymmetric_fake_quant(x, bits)
+
+
+def per_channel_symmetric_fake_quant(w: jnp.ndarray, bits: int, axis: int = -1) -> jnp.ndarray:
+    """Per-output-channel symmetric weight quant (W4 path).
+
+    ``axis`` indexes the output-channel dimension kept un-reduced when
+    computing scales.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != (axis % w.ndim))
+    scale = jax.lax.stop_gradient(
+        jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True) / qmax + 1e-12
+    )
+    q = ste_round(w / scale)
+    q = jnp.clip(q, -qmax, qmax)
+    return q * scale

@@ -1,0 +1,55 @@
+"""Learned Step-size Quantization (LSQ) [17].
+
+The quantisation step ``s`` is a learnable parameter; the gradient w.r.t.
+``s`` follows Esser et al.'s estimator with the 1/sqrt(N * qmax) gradient
+scale. Used (a) on the invariant scalar branch of GAQ and (b) as the
+geometry-agnostic ablation on the equivariant branch (Table "ablations").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["lsq_fake_quant", "init_step"]
+
+
+def init_step(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """LSQ init: 2 * mean|x| / sqrt(qmax)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    return 2.0 * jnp.mean(jnp.abs(x)) / jnp.sqrt(qmax) + 1e-9
+
+
+@jax.custom_vjp
+def _lsq(x: jnp.ndarray, s: jnp.ndarray, qn: float, qp: float):
+    v = jnp.clip(x / s, qn, qp)
+    return jnp.round(v) * s
+
+
+def _lsq_fwd(x, s, qn, qp):
+    return _lsq(x, s, qn, qp), (x, s, qn, qp)
+
+
+def _lsq_bwd(res, g):
+    x, s, qn, qp = res
+    v = x / s
+    below = v <= qn
+    above = v >= qp
+    mid = jnp.logical_not(jnp.logical_or(below, above))
+    # dQ/dx = 1 inside the clip range (STE), 0 outside.
+    gx = jnp.where(mid, g, 0.0)
+    # dQ/ds per Esser et al.: -v + round(v) inside; qn/qp at the clips.
+    ds = jnp.where(mid, jnp.round(v) - v, jnp.where(below, qn, qp))
+    grad_scale = 1.0 / jnp.sqrt(jnp.asarray(x.size, x.dtype) * qp)
+    gs = jnp.sum(g * ds) * grad_scale
+    return gx, gs, None, None
+
+
+_lsq.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def lsq_fake_quant(x: jnp.ndarray, step: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Fake-quant with learnable step ``step`` (a scalar parameter)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    s = jnp.abs(step) + 1e-9
+    return _lsq(x, s, -qmax, qmax)

@@ -1,0 +1,35 @@
+"""QDrop [19]: randomly drop quantisation per element during QAT.
+
+Each activation element is quantised with probability ``p`` and kept in
+full precision otherwise, which smooths the loss landscape of low-bit
+training. Geometry-agnostic — serves as an ablation on the equivariant
+branch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linear import symmetric_fake_quant
+
+__all__ = ["qdrop_fake_quant"]
+
+
+def qdrop_fake_quant(
+    x: jnp.ndarray,
+    bits: int,
+    key: jax.Array | None,
+    p: float = 0.5,
+    deterministic: bool = False,
+) -> jnp.ndarray:
+    """Fake-quant with stochastic element-wise dropping.
+
+    At eval time (``deterministic=True`` or ``key is None``) quantisation
+    is always applied — matching deployed integer inference.
+    """
+    q = symmetric_fake_quant(x, bits)
+    if deterministic or key is None:
+        return q
+    keep_fp = jax.random.bernoulli(key, 1.0 - p, x.shape)
+    return jnp.where(keep_fp, x, q)

@@ -1,0 +1,66 @@
+"""Straight-through estimators.
+
+``ste_round`` — standard Euclidean STE: forward rounds, backward identity.
+
+``geometric_ste_quantize`` — the paper's Geometric STE (Sec. III-D):
+forward applies a direction quantiser on S^2; backward projects the
+cotangent onto the tangent space at the *pre-quantised* direction u,
+filtering the radial component (Eq. 8):
+
+    dL/du := (I - u u^T) dL/dq
+
+Proposition III.1: <u, dL/du> = 0 — checked in tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ste_round", "ste_identity", "geometric_ste_quantize"]
+
+
+@jax.custom_vjp
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def ste_identity(x: jnp.ndarray, qx: jnp.ndarray) -> jnp.ndarray:
+    """Generic STE: forward value qx, gradient flows to x unchanged."""
+    return x + jax.lax.stop_gradient(qx - x)
+
+
+def geometric_ste_quantize(u: jnp.ndarray, quantize_fn) -> jnp.ndarray:
+    """Quantise unit directions with tangent-projected gradients.
+
+    Parameters
+    ----------
+    u : (..., 3) unit vectors (pre-quantised directions).
+    quantize_fn : S^2 -> C codebook quantiser (forward only).
+    """
+
+    @jax.custom_vjp
+    def _q(u):
+        return quantize_fn(u)
+
+    def _q_fwd(u):
+        return quantize_fn(u), u
+
+    def _q_bwd(u, g):
+        # Project the cotangent onto T_u S^2: g - (g . u) u.
+        radial = jnp.sum(g * u, axis=-1, keepdims=True)
+        return (g - radial * u,)
+
+    _q.defvjp(_q_fwd, _q_bwd)
+    return _q(u)

@@ -1,0 +1,63 @@
+"""SVQ-KMeans baseline: hard spherical vector quantisation.
+
+K-Means clustering on S^2 (spherical k-means on direction vectors) with
+*hard* assignments and no gradient approximation. The forward pass snaps
+each direction to its nearest learned centroid; the backward pass is the
+true gradient of that piecewise-constant map — i.e. zero almost
+everywhere. The paper reports this baseline fails to converge ("gradient
+fracture", Table II); we reproduce that behaviour by construction.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..codebook import fibonacci_sphere
+
+__all__ = ["spherical_kmeans", "svq_hard_quant"]
+
+
+def spherical_kmeans(
+    directions: np.ndarray, k: int, iters: int = 25, seed: int = 0
+) -> np.ndarray:
+    """Spherical k-means on unit vectors (N, 3) -> centroids (k, 3).
+
+    Initialised from the Fibonacci lattice (deterministic, well-spread).
+    Empty clusters keep their previous centroid.
+    """
+    rng = np.random.default_rng(seed)
+    x = np.asarray(directions, dtype=np.float64)
+    x = x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+    centroids = fibonacci_sphere(k).astype(np.float64)
+    for _ in range(iters):
+        sims = x @ centroids.T  # (N, k)
+        assign = np.argmax(sims, axis=1)
+        for j in range(k):
+            members = x[assign == j]
+            if len(members) == 0:
+                # re-seed dead centroid at a random sample
+                centroids[j] = x[rng.integers(len(x))]
+                continue
+            m = members.sum(axis=0)
+            n = np.linalg.norm(m)
+            if n > 1e-12:
+                centroids[j] = m / n
+    return centroids.astype(np.float32)
+
+
+def svq_hard_quant(v: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    """Hard VQ of vectors (..., 3): magnitude kept FP, direction snapped.
+
+    Deliberately *no* straight-through estimator: gradients w.r.t. the
+    direction are exactly zero (argmax + gather), reproducing the paper's
+    gradient-fracture failure. Magnitude passes through untouched so the
+    only learning signal is radial.
+    """
+    m = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    u = v / (m + 1e-12)
+    sims = jnp.einsum("...k,nk->...n", u, centroids)
+    idx = jnp.argmax(sims, axis=-1)
+    q = jax.lax.stop_gradient(centroids[idx])
+    return m * q

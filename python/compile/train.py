@@ -1,0 +1,241 @@
+"""QAT trainer (S6) — Sec. III-D training strategy + Sec. IV-A protocol.
+
+Finetune-only protocol: a converged FP32 checkpoint is trained first, then
+each quantized variant starts from it and runs Quantization-Aware Training
+with:
+
+* branch-separated schedules — the equivariant-branch quantiser is frozen
+  (off) for the first ``warmup_epochs`` (staged warm-up);
+* Geometric STE on the MDDQ direction path (inside the model);
+* the LEE regularizer (Sec. III-F) on force outputs, one random rotation
+  per step, weighted by ``lee_weight``;
+* Adam with cosine decay and gradient clipping (optim.py).
+
+Loss = MSE(E) + force_weight * MSE(F) + lee_weight * LEE.
+Metrics reported per variant: E-MAE (meV), F-MAE (meV/A), stability flag —
+the Table II columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .datagen import Molecule
+from .geometry import random_rotations
+from .model import ModelConfig, QuantConfig, energy_and_forces, init_params
+from .optim import AdamConfig, adam_init, adam_update, cosine_lr
+from .quant.svq import spherical_kmeans
+
+__all__ = ["TrainConfig", "train_variant", "evaluate", "Dataset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    epochs: int = 40
+    batch: int = 16
+    lr: float = 2e-3
+    force_weight: float = 25.0
+    lee_weight: float = 0.05
+    warmup_epochs: int = 5  # equivariant-branch quant freeze (paper: 10/80)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Dataset:
+    positions: np.ndarray  # (S, n, 3)
+    energy: np.ndarray  # (S,)
+    forces: np.ndarray  # (S, n, 3)
+
+    def split(self, n_test: int) -> Tuple["Dataset", "Dataset"]:
+        s = len(self.energy) - n_test
+        tr = Dataset(self.positions[:s], self.energy[:s], self.forces[:s])
+        te = Dataset(self.positions[s:], self.energy[s:], self.forces[s:])
+        return tr, te
+
+
+def _loss_fn(
+    params,
+    batch,
+    species,
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    rng,
+    e_shift: float,
+    force_weight: float,
+    lee_weight: float,
+    eq_quant_on: bool,
+):
+    pos, e_ref, f_ref = batch
+    rng_q, rng_rot = jax.random.split(rng)
+
+    def single(r, key):
+        e, f = energy_and_forces(
+            params, species, r, cfg, qcfg, rng=key, train=True,
+            equivariant_quant_enabled=eq_quant_on,
+        )
+        return e, f
+
+    keys = jax.random.split(rng_q, pos.shape[0])
+    e_pred, f_pred = jax.vmap(single)(pos, keys)
+
+    e_loss = jnp.mean((e_pred - (e_ref - e_shift)) ** 2)
+    f_loss = jnp.mean(jnp.sum((f_pred - f_ref) ** 2, axis=-1))
+    loss = e_loss + force_weight * f_loss
+
+    lee = jnp.asarray(0.0)
+    if lee_weight > 0.0 and qcfg.is_quantized:
+        # stochastic LEE penalty on the first example of the batch
+        rot = random_rotations(rng_rot, 1)[0]
+        _, f0 = single(pos[0], keys[0])
+        _, fr = single(pos[0] @ rot.T, keys[0])
+        lee = jnp.mean(jnp.linalg.norm(fr - f0 @ rot.T, axis=-1))
+        loss = loss + lee_weight * lee
+
+    return loss, (e_loss, f_loss, lee)
+
+
+def evaluate(
+    params,
+    ds: Dataset,
+    species,
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    e_shift: float,
+) -> Dict[str, float]:
+    """Test-set E-MAE (meV) and F-MAE (meV/A), deterministic (eval mode)."""
+
+    @jax.jit
+    def single(r):
+        return energy_and_forces(params, species, r, cfg, qcfg, train=False)
+
+    e_pred, f_pred = jax.vmap(single)(jnp.asarray(ds.positions))
+    e_mae = float(jnp.mean(jnp.abs(e_pred + e_shift - ds.energy))) * 1000.0
+    f_mae = float(jnp.mean(jnp.abs(f_pred - ds.forces))) * 1000.0
+    return {"e_mae_mev": e_mae, "f_mae_mev_a": f_mae}
+
+
+def _fit_svq_centroids(params, train_ds: Dataset, k: int) -> jnp.ndarray:
+    """Spherical k-means on label-force directions (calibration data)."""
+    f = train_ds.forces.reshape(-1, 3)
+    norms = np.linalg.norm(f, axis=-1)
+    dirs = f[norms > 1e-6] / norms[norms > 1e-6, None]
+    return jnp.asarray(spherical_kmeans(dirs[:4096], k))
+
+
+def train_variant(
+    mol: Molecule,
+    train_ds: Dataset,
+    test_ds: Dataset,
+    cfg: ModelConfig,
+    qcfg: QuantConfig,
+    tcfg: TrainConfig,
+    init_from: Optional[Dict[str, Any]] = None,
+    log=print,
+) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Train one variant; returns (params, metrics).
+
+    ``init_from`` implements the finetune-only protocol (FP32 checkpoint).
+    """
+    species = jnp.asarray(mol.species)
+    e_shift = float(np.mean(train_ds.energy))
+
+    key = jax.random.PRNGKey(tcfg.seed)
+    key, k_init = jax.random.split(key)
+    params = init_params(k_init, cfg, qcfg)
+    if init_from is not None:
+        # copy matching leaves from the FP32 checkpoint
+        merged = dict(params)
+        for name, val in init_from.items():
+            if name in merged and name != "layers":
+                merged[name] = val
+        merged["layers"] = [
+            {**lp, **{k: v for k, v in src.items() if k in lp}}
+            for lp, src in zip(params["layers"], init_from["layers"])
+        ]
+        params = merged
+
+    if qcfg.scheme == "svq_kmeans":
+        params["svq_centroids"] = _fit_svq_centroids(params, train_ds, qcfg.svq_k)
+
+    acfg = AdamConfig(lr=tcfg.lr)
+    opt = adam_init(params)
+
+    n_train = len(train_ds.energy)
+    steps_per_epoch = max(1, n_train // tcfg.batch)
+    total_steps = tcfg.epochs * steps_per_epoch
+
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("eq_quant_on",))
+    def train_step(params, opt, batch, rng, step, eq_quant_on):
+        (loss, aux), grads = jax.value_and_grad(
+            _loss_fn, has_aux=True
+        )(
+            params, batch, species, cfg, qcfg, rng, e_shift,
+            tcfg.force_weight, tcfg.lee_weight, eq_quant_on,
+        )
+        lr = cosine_lr(tcfg.lr, step, total_steps, warmup=20)
+        params, opt = adam_update(acfg, lr, opt, params, grads)
+        return params, opt, loss, aux
+
+    rng_np = np.random.default_rng(tcfg.seed + 1)
+    losses = []
+    t0 = time.time()
+    step = 0
+    diverged = False
+    for epoch in range(tcfg.epochs):
+        # Staged warm-up (Sec. III-D) is part of *our* method; baselines
+        # quantise the equivariant branch from step 0.
+        if not qcfg.is_quantized:
+            eq_on = False
+        elif qcfg.scheme == "gaq":
+            eq_on = epoch >= tcfg.warmup_epochs
+        else:
+            eq_on = True
+        perm = rng_np.permutation(n_train)
+        ep_loss = 0.0
+        for b in range(steps_per_epoch):
+            idx = perm[b * tcfg.batch : (b + 1) * tcfg.batch]
+            batch = (
+                jnp.asarray(train_ds.positions[idx]),
+                jnp.asarray(train_ds.energy[idx]),
+                jnp.asarray(train_ds.forces[idx]),
+            )
+            key, sub = jax.random.split(key)
+            params, opt, loss, aux = train_step(
+                params, opt, batch, sub, jnp.asarray(step), eq_quant_on=bool(eq_on)
+            )
+            step += 1
+            ep_loss += float(loss)
+        ep_loss /= steps_per_epoch
+        losses.append(ep_loss)
+        if not np.isfinite(ep_loss):
+            diverged = True
+            log(f"  [{qcfg.scheme}] epoch {epoch}: DIVERGED (loss={ep_loss})")
+            break
+        if epoch % 10 == 0 or epoch == tcfg.epochs - 1:
+            log(f"  [{qcfg.scheme}] epoch {epoch:3d} loss {ep_loss:.5f}")
+
+    metrics = evaluate(params, test_ds, species, cfg, qcfg, e_shift)
+    # Stability per Table II: converged, finite, and actually improved.
+    improved = len(losses) > 1 and losses[-1] < losses[0] * 0.9
+    stagnated = len(losses) > 5 and losses[-1] > 0.75 * np.median(losses[:3])
+    metrics.update(
+        {
+            "stable": bool(not diverged and improved),
+            "diverged": bool(diverged),
+            "stagnated": bool(stagnated and not diverged),
+            "final_loss": float(losses[-1]) if losses else float("nan"),
+            "initial_loss": float(losses[0]) if losses else float("nan"),
+            "epochs": len(losses),
+            "e_shift": e_shift,
+            "train_seconds": time.time() - t0,
+        }
+    )
+    return params, metrics

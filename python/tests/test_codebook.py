@@ -1,0 +1,115 @@
+"""S2 codebooks: oct + Fibonacci properties, covering radii (Prop 3.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.codebook import (
+    covering_radius_estimate,
+    expected_angular_error,
+    fib_quantize,
+    fibonacci_sphere,
+    make_direction_quantizer,
+    oct_decode,
+    oct_encode,
+    oct_project,
+    oct_quantize,
+    oct_unproject,
+)
+
+HSET = settings(max_examples=20, deadline=None)
+
+
+def _units(seed, n):
+    v = np.random.default_rng(seed).normal(size=(n, 3))
+    return jnp.asarray((v / np.linalg.norm(v, axis=-1, keepdims=True)).astype(np.float32))
+
+
+class TestOct:
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_project_unproject_roundtrip(self, seed):
+        u = _units(seed, 64)
+        u2 = oct_unproject(oct_project(u))
+        dot = np.sum(np.asarray(u) * np.asarray(u2), axis=-1)
+        assert np.min(dot) > 1.0 - 1e-5
+
+    def test_quantize_outputs_unit_vectors(self):
+        q = np.asarray(oct_quantize(_units(0, 512), bits=8))
+        assert_allclose(np.linalg.norm(q, axis=-1), 1.0, atol=1e-5)
+
+    def test_idempotent(self):
+        u = _units(1, 128)
+        q1 = oct_quantize(u, bits=8)
+        q2 = oct_quantize(q1, bits=8)
+        assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-5)
+
+    def test_encode_range(self):
+        codes = np.asarray(oct_encode(_units(2, 256), bits=8))
+        assert codes.min() >= 0 and codes.max() <= 255
+
+    def test_poles_and_axes_near_exact(self):
+        # +-z, +-x, +-y land within half a grid cell (255 levels -> the
+        # square's centre is not exactly on-grid, so not exactly 1.0)
+        axes = jnp.asarray(
+            [[0, 0, 1.0], [0, 0, -1.0], [1.0, 0, 0], [0, 1.0, 0]], jnp.float32
+        )
+        q = np.asarray(oct_quantize(axes, bits=8))
+        dot = np.sum(q * np.asarray(axes), axis=-1)
+        assert np.min(dot) > 1 - 5e-5
+
+    def test_covering_radius_decreases_with_bits(self):
+        r4 = covering_radius_estimate(lambda u: oct_quantize(u, 4), 4000)
+        r6 = covering_radius_estimate(lambda u: oct_quantize(u, 6), 4000)
+        r8 = covering_radius_estimate(lambda u: oct_quantize(u, 8), 4000)
+        assert r4 > r6 > r8
+        assert r8 < 0.02  # ~0.0123 rad theoretical
+
+    def test_expected_error_well_below_covering(self):
+        mean = expected_angular_error(lambda u: oct_quantize(u, 8), 4000)
+        worst = covering_radius_estimate(lambda u: oct_quantize(u, 8), 4000)
+        assert mean < worst
+
+
+class TestFibonacci:
+    def test_unit_norm(self):
+        cb = fibonacci_sphere(512)
+        assert_allclose(np.linalg.norm(cb, axis=-1), 1.0, atol=1e-6)
+
+    @HSET
+    @given(n=st.sampled_from([16, 64, 256, 1024]))
+    def test_covering_radius_scales(self, n):
+        cb = jnp.asarray(fibonacci_sphere(n))
+        r = covering_radius_estimate(lambda u: fib_quantize(u, cb), 2000)
+        # covering radius ~ c / sqrt(n); generous envelope
+        assert r < 6.0 / np.sqrt(n), f"n={n}: r={r}"
+
+    def test_quantize_returns_codewords(self):
+        cb = jnp.asarray(fibonacci_sphere(64))
+        q = np.asarray(fib_quantize(_units(5, 100), cb))
+        cbn = np.asarray(cb)
+        # every output row is one of the codebook rows
+        d = np.min(np.linalg.norm(q[:, None, :] - cbn[None], axis=-1), axis=1)
+        assert np.max(d) < 1e-6
+
+
+class TestFactory:
+    def test_oct_factory(self):
+        fn, meta = make_direction_quantizer("oct", 8)
+        assert meta["index_bits"] == 16
+        q = np.asarray(fn(_units(0, 16)))
+        assert_allclose(np.linalg.norm(q, axis=-1), 1.0, atol=1e-5)
+
+    def test_fib_factory(self):
+        fn, meta = make_direction_quantizer("fib", fib_size=128)
+        assert meta["size"] == 128
+        q = np.asarray(fn(_units(1, 16)))
+        assert_allclose(np.linalg.norm(q, axis=-1), 1.0, atol=1e-5)
+
+    def test_unknown_kind_raises(self):
+        import pytest
+
+        with pytest.raises(ValueError):
+            make_direction_quantizer("cube")

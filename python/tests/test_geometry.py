@@ -1,0 +1,108 @@
+"""S1 geometry: rotations, spherical harmonics, Wigner-D consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.geometry import (
+    geodesic_angle,
+    random_rotation,
+    random_rotations,
+    real_sph_harm_l1,
+    real_sph_harm_l2,
+    rotation_from_axis_angle,
+    rotation_from_quaternion,
+    so3_geodesic_distance,
+    sph_harm_stack,
+    wigner_d1,
+)
+
+HSET = settings(max_examples=20, deadline=None)
+
+
+def _unit(seed, n=1):
+    v = np.random.default_rng(seed).normal(size=(n, 3))
+    return jnp.asarray((v / np.linalg.norm(v, axis=-1, keepdims=True)).astype(np.float32))
+
+
+class TestRotations:
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_random_rotation_is_orthogonal(self, seed):
+        r = random_rotation(jax.random.PRNGKey(seed))
+        assert_allclose(np.asarray(r @ r.T), np.eye(3), atol=1e-5)
+        assert_allclose(float(jnp.linalg.det(r)), 1.0, atol=1e-5)
+
+    @HSET
+    @given(angle=st.floats(-3.0, 3.0), seed=st.integers(0, 99))
+    def test_axis_angle(self, angle, seed):
+        axis = np.asarray(_unit(seed)[0])
+        r = rotation_from_axis_angle(jnp.asarray(axis), jnp.asarray(angle, jnp.float32))
+        # rotating the axis itself is identity
+        assert_allclose(np.asarray(r @ axis), axis, atol=1e-5)
+        # rotation angle recovered from trace
+        tr = float(jnp.trace(r))
+        assert_allclose(np.cos(angle), (tr - 1.0) / 2.0, atol=1e-5)
+
+    def test_quaternion_identity(self):
+        r = rotation_from_quaternion(jnp.asarray([1.0, 0.0, 0.0, 0.0]))
+        assert_allclose(np.asarray(r), np.eye(3), atol=1e-6)
+
+    def test_haar_mean_is_isotropic(self):
+        rots = random_rotations(jax.random.PRNGKey(0), 2000)
+        # E[R] ~ 0 for Haar measure
+        mean = np.asarray(jnp.mean(rots, axis=0))
+        assert np.abs(mean).max() < 0.06
+
+    def test_so3_distance(self):
+        r1 = rotation_from_axis_angle(jnp.asarray([0.0, 0, 1]), jnp.asarray(0.5))
+        r2 = rotation_from_axis_angle(jnp.asarray([0.0, 0, 1]), jnp.asarray(1.2))
+        assert_allclose(float(so3_geodesic_distance(r1, r2)), 0.7, atol=1e-5)
+
+
+class TestSphericalHarmonics:
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_l1_equivariance(self, seed):
+        """Y_1(R u) == R Y_1(u): the D-matrix for l=1 is R itself."""
+        key = jax.random.PRNGKey(seed)
+        r = random_rotation(key)
+        u = _unit(seed + 1, 5)
+        lhs = real_sph_harm_l1(u @ r.T)
+        rhs = real_sph_harm_l1(u) @ wigner_d1(r).T
+        assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-5)
+
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_l2_rotation_invariant_norm(self, seed):
+        """||Y_2(R u)|| == ||Y_2(u)|| (D-matrices are orthogonal)."""
+        key = jax.random.PRNGKey(seed)
+        r = random_rotation(key)
+        u = _unit(seed + 1, 8)
+        n1 = jnp.linalg.norm(real_sph_harm_l2(u @ r.T), axis=-1)
+        n2 = jnp.linalg.norm(real_sph_harm_l2(u), axis=-1)
+        assert_allclose(np.asarray(n1), np.asarray(n2), atol=1e-4)
+
+    def test_l2_component_normalisation(self):
+        # at u = z: only the m=0 component is nonzero, = sqrt(5)
+        u = jnp.asarray([[0.0, 0.0, 1.0]])
+        y = np.asarray(real_sph_harm_l2(u))[0]
+        assert_allclose(y, [0, 0, np.sqrt(5.0), 0, 0], atol=1e-6)
+
+    def test_stack_shapes(self):
+        u = _unit(0, 4)
+        assert sph_harm_stack(u, 0).shape == (4, 1)
+        assert sph_harm_stack(u, 1).shape == (4, 4)
+        assert sph_harm_stack(u, 2).shape == (4, 9)
+        with pytest.raises(NotImplementedError):
+            sph_harm_stack(u, 3)
+
+    def test_geodesic_angle_range(self):
+        u = _unit(1, 10)
+        v = _unit(2, 10)
+        a = np.asarray(geodesic_angle(u, v))
+        assert np.all(a >= 0) and np.all(a <= np.pi + 1e-6)
+        assert_allclose(np.asarray(geodesic_angle(u, u)), 0.0, atol=1e-3)

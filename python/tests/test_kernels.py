@@ -1,0 +1,176 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle (the CORE signal).
+
+hypothesis sweeps shapes/seeds; assert_allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import (
+    cosine_attention_pallas,
+    mddq_quantize_pallas,
+    qlinear_w4a8_pallas,
+)
+from compile.kernels.ref import (
+    cosine_attention_ref,
+    mddq_quantize_ref,
+    qlinear_w4a8_ref,
+)
+
+HSET = settings(max_examples=12, deadline=None)
+
+
+def _rand(shape, seed, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale
+    )
+
+
+# ---------------------------------------------------------------------------
+# MDDQ kernel
+# ---------------------------------------------------------------------------
+
+class TestMddqKernel:
+    @HSET
+    @given(
+        n=st.integers(1, 200),
+        c=st.integers(1, 8),
+        seed=st.integers(0, 2**16),
+        scale=st.sampled_from([0.01, 1.0, 50.0]),
+    )
+    def test_matches_ref(self, n, c, seed, scale):
+        v = _rand((n, c, 3), seed, scale)
+        got = mddq_quantize_pallas(v)
+        want = mddq_quantize_ref(v)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5 * scale)
+
+    @HSET
+    @given(mb=st.sampled_from([4, 6, 8]), db=st.sampled_from([4, 6, 8]), seed=st.integers(0, 99))
+    def test_bitwidth_sweep(self, mb, db, seed):
+        v = _rand((33, 2, 3), seed)
+        got = mddq_quantize_pallas(v, magnitude_bits=mb, direction_bits=db)
+        want = mddq_quantize_ref(v, magnitude_bits=mb, direction_bits=db)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_zero_vectors_quantize_to_zero(self):
+        v = jnp.zeros((5, 2, 3))
+        got = mddq_quantize_pallas(v)
+        assert_allclose(np.asarray(got), 0.0, atol=1e-7)
+
+    def test_magnitude_error_bounded(self):
+        v = _rand((128, 4, 3), 7, 2.0)
+        q = mddq_quantize_pallas(v)
+        m = np.linalg.norm(np.asarray(v), axis=-1)
+        qm = np.linalg.norm(np.asarray(q), axis=-1)
+        step = (m.max() - m.min()) / 255.0
+        assert np.max(np.abs(m - qm)) <= step * 0.51 + 1e-6
+
+    def test_direction_error_within_covering_radius(self):
+        v = _rand((256, 1, 3), 3)
+        q = np.asarray(mddq_quantize_pallas(v))
+        vv = np.asarray(v)
+        m = np.linalg.norm(vv, axis=-1, keepdims=True)
+        qm = np.linalg.norm(q, axis=-1, keepdims=True)
+        u = vv / m
+        qu = q / np.maximum(qm, 1e-12)
+        ang = np.arccos(np.clip(np.sum(u * qu, axis=-1), -1, 1))
+        # oct-8 covering radius ~0.0123 rad
+        assert np.max(ang) < 0.02, f"max angular error {np.max(ang)}"
+
+
+# ---------------------------------------------------------------------------
+# Cosine attention kernel
+# ---------------------------------------------------------------------------
+
+class TestAttentionKernel:
+    @HSET
+    @given(
+        n=st.integers(2, 48),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, n, h, d, seed):
+        rng = np.random.default_rng(seed)
+        q = _rand((n, h, d), seed)
+        k = _rand((n, h, d), seed + 1)
+        mask = rng.random((n, n)) < 0.5
+        np.fill_diagonal(mask, True)
+        mask = jnp.asarray(mask)
+        got = cosine_attention_pallas(q, k, mask)
+        want = cosine_attention_ref(q, k, mask)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    def test_rows_sum_to_one_on_mask(self):
+        q = _rand((16, 2, 8), 0)
+        k = _rand((16, 2, 8), 1)
+        mask = jnp.ones((16, 16), bool)
+        w = np.asarray(cosine_attention_pallas(q, k, mask))
+        assert_allclose(w.sum(-1), 1.0, rtol=1e-5)
+
+    def test_masked_entries_are_zero(self):
+        rng = np.random.default_rng(3)
+        mask = rng.random((12, 12)) < 0.4
+        np.fill_diagonal(mask, True)
+        w = np.asarray(
+            cosine_attention_pallas(_rand((12, 2, 4), 1), _rand((12, 2, 4), 2), jnp.asarray(mask))
+        )
+        assert np.all(w[:, :, :][~np.broadcast_to(mask[:, None, :], w.shape)] == 0.0)
+
+    def test_scale_invariance(self):
+        # cosine normalisation: scaling q/k must not change weights
+        q = _rand((10, 2, 8), 5)
+        k = _rand((10, 2, 8), 6)
+        mask = jnp.ones((10, 10), bool)
+        w1 = cosine_attention_pallas(q, k, mask)
+        w2 = cosine_attention_pallas(q * 1000.0, k * 0.001, mask)
+        assert_allclose(np.asarray(w1), np.asarray(w2), rtol=1e-4, atol=1e-6)
+
+    def test_temperature_sharpens(self):
+        q = _rand((8, 1, 8), 7)
+        k = _rand((8, 1, 8), 8)
+        mask = jnp.ones((8, 8), bool)
+        w_soft = np.asarray(cosine_attention_pallas(q, k, mask, tau=1.0))
+        w_sharp = np.asarray(cosine_attention_pallas(q, k, mask, tau=30.0))
+        assert w_sharp.max() > w_soft.max()
+
+
+# ---------------------------------------------------------------------------
+# W4A8 fused linear kernel
+# ---------------------------------------------------------------------------
+
+class TestQlinearKernel:
+    @HSET
+    @given(
+        m=st.integers(1, 80),
+        k=st.sampled_from([8, 16, 32]),
+        n=st.integers(1, 96),
+        seed=st.integers(0, 2**16),
+    )
+    def test_matches_ref(self, m, k, n, seed):
+        x = _rand((m, k), seed)
+        w = _rand((k, n), seed + 1)
+        got = qlinear_w4a8_pallas(x, w)
+        want = qlinear_w4a8_ref(x, w)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    @HSET
+    @given(wb=st.sampled_from([2, 4, 8]), ab=st.sampled_from([4, 8]), seed=st.integers(0, 99))
+    def test_bit_sweep(self, wb, ab, seed):
+        x = _rand((17, 16), seed)
+        w = _rand((16, 23), seed + 1)
+        got = qlinear_w4a8_pallas(x, w, w_bits=wb, a_bits=ab)
+        want = qlinear_w4a8_ref(x, w, w_bits=wb, a_bits=ab)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+    def test_quant_error_reasonable(self):
+        x = _rand((32, 32), 1)
+        w = _rand((32, 32), 2)
+        got = np.asarray(qlinear_w4a8_pallas(x, w))
+        exact = np.asarray(x) @ np.asarray(w)
+        rel = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+        assert rel < 0.15, f"W4A8 relative error {rel}"

@@ -1,0 +1,96 @@
+"""MDDQ for l=2 irreps (paper future work, Sec. V): bounded approximate
+equivariance under the Wigner-D(2) action."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.geometry import random_rotation, real_sph_harm_l2
+from compile.quant.linear import naive_quant
+from compile.quant.mddq import mddq_fake_quant_higher
+
+HSET = settings(max_examples=10, deadline=None)
+
+
+def wigner_d2(rot, dtype=jnp.float32):
+    """Numerical D^(2)(R): the unique matrix with Y2(Ru) = D2 Y2(u).
+
+    Solved by least squares from a well-spread direction sample (Y2 spans
+    its 5-dim space on generic directions).
+    """
+    rng = np.random.default_rng(0)
+    u = rng.normal(size=(64, 3))
+    u /= np.linalg.norm(u, axis=-1, keepdims=True)
+    u = jnp.asarray(u.astype(np.float32))
+    y = np.asarray(real_sph_harm_l2(u))  # (64, 5)
+    yr = np.asarray(real_sph_harm_l2(u @ rot.T))  # (64, 5)
+    d2, *_ = np.linalg.lstsq(y, yr, rcond=None)
+    return jnp.asarray(d2.T.astype(np.float32))  # yr^T = D2 @ y^T
+
+
+class TestWignerD2:
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_d2_is_orthogonal(self, seed):
+        r = random_rotation(jax.random.PRNGKey(seed))
+        d2 = wigner_d2(r)
+        assert_allclose(np.asarray(d2 @ d2.T), np.eye(5), atol=1e-4)
+
+    def test_d2_identity(self):
+        d2 = wigner_d2(jnp.eye(3))
+        assert_allclose(np.asarray(d2), np.eye(5), atol=1e-5)
+
+
+class TestMddqL2:
+    def _features(self, seed, n=64):
+        """l=2 features with varied magnitudes: m * Y2(u)/||Y2(u)||."""
+        rng = np.random.default_rng(seed)
+        u = rng.normal(size=(n, 3))
+        u /= np.linalg.norm(u, axis=-1, keepdims=True)
+        y = np.array(real_sph_harm_l2(jnp.asarray(u.astype(np.float32))))
+        y /= np.linalg.norm(y, axis=-1, keepdims=True)
+        m = rng.uniform(0.05, 2.0, size=(n, 1)).astype(np.float32)
+        return jnp.asarray(m * y), jnp.asarray(u.astype(np.float32))
+
+    def test_preserves_magnitude_within_step(self):
+        t, _ = self._features(1)
+        q = mddq_fake_quant_higher(t)
+        m = np.linalg.norm(np.asarray(t), axis=-1)
+        qm = np.linalg.norm(np.asarray(q), axis=-1)
+        step = (m.max() - m.min()) / 255.0
+        assert np.max(np.abs(m - qm)) <= step * 0.51 + 1e-5
+
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_equivariance_beats_naive_under_d2(self, seed):
+        """||Q(D2 t) - D2 Q(t)|| for MDDQ-l2 << naive int8 on components."""
+        t, u = self._features(seed + 1)
+        rot = random_rotation(jax.random.PRNGKey(seed))
+        d2 = wigner_d2(rot)
+
+        tr = t @ d2.T
+        e_mddq = float(
+            jnp.mean(jnp.linalg.norm(
+                mddq_fake_quant_higher(tr) - mddq_fake_quant_higher(t) @ d2.T, axis=-1
+            ))
+        )
+        e_naive = float(
+            jnp.mean(jnp.linalg.norm(naive_quant(tr, 8) - naive_quant(t, 8) @ d2.T, axis=-1))
+        )
+        assert e_mddq < e_naive, f"mddq {e_mddq} vs naive {e_naive}"
+
+    def test_geometric_ste_orthogonal_on_s4(self):
+        t, _ = self._features(3)
+        cot = jnp.asarray(np.random.default_rng(4).normal(size=t.shape).astype(np.float32))
+
+        def loss(t):
+            return jnp.sum(mddq_fake_quant_higher(t) * cot)
+
+        g = np.asarray(jax.grad(loss)(t))
+        assert np.all(np.isfinite(g))
+
+    def test_zero_features_stay_zero(self):
+        q = mddq_fake_quant_higher(jnp.zeros((4, 5)))
+        assert_allclose(np.asarray(q), 0.0, atol=1e-7)

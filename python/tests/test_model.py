@@ -1,0 +1,143 @@
+"""L2 model: equivariance (FP32), variant smoke, pallas parity, attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.datagen import azobenzene
+from compile.geometry import random_rotation
+from compile.model import (
+    ModelConfig,
+    QuantConfig,
+    VARIANTS,
+    energy,
+    energy_and_forces,
+    init_params,
+)
+
+HSET = settings(max_examples=6, deadline=None)
+
+CFG = ModelConfig()
+MOL = azobenzene()
+SPECIES = jnp.asarray(MOL.species)
+POS = jnp.asarray(MOL.positions)
+
+
+def _params(qname="fp32", seed=0):
+    return init_params(jax.random.PRNGKey(seed), CFG, VARIANTS[qname])
+
+
+class TestEquivariance:
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_fp32_energy_invariant(self, seed):
+        params = _params()
+        r = random_rotation(jax.random.PRNGKey(seed))
+        e0 = energy(params, SPECIES, POS, CFG, VARIANTS["fp32"])
+        e1 = energy(params, SPECIES, POS @ r.T, CFG, VARIANTS["fp32"])
+        assert_allclose(float(e0), float(e1), rtol=0, atol=5e-5)
+
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_fp32_forces_equivariant(self, seed):
+        params = _params()
+        r = random_rotation(jax.random.PRNGKey(seed))
+        _, f0 = energy_and_forces(params, SPECIES, POS, CFG, VARIANTS["fp32"])
+        _, fr = energy_and_forces(params, SPECIES, POS @ r.T, CFG, VARIANTS["fp32"])
+        assert_allclose(np.asarray(fr), np.asarray(f0 @ r.T), atol=2e-4)
+
+    def test_translation_invariance(self):
+        params = _params()
+        e0 = energy(params, SPECIES, POS, CFG, VARIANTS["fp32"])
+        e1 = energy(params, SPECIES, POS + jnp.asarray([10.0, -3.0, 7.0]), CFG, VARIANTS["fp32"])
+        assert_allclose(float(e0), float(e1), atol=1e-4)
+
+    def test_permutation_equivariance_of_identical_atoms(self):
+        """Swapping two hydrogens (identical species) leaves E unchanged."""
+        params = _params()
+        perm = list(range(MOL.n_atoms))
+        perm[14], perm[15] = perm[15], perm[14]  # two ring-A hydrogens
+        e0 = energy(params, SPECIES, POS, CFG, VARIANTS["fp32"])
+        e1 = energy(params, SPECIES[jnp.asarray(perm)], POS[jnp.asarray(perm)], CFG, VARIANTS["fp32"])
+        assert_allclose(float(e0), float(e1), atol=1e-5)
+
+
+class TestVariants:
+    @pytest.mark.parametrize("name", list(VARIANTS))
+    def test_forward_and_forces_finite(self, name):
+        params = _params(name)
+        e, f = energy_and_forces(
+            params, SPECIES, POS, CFG, VARIANTS[name], rng=jax.random.PRNGKey(0), train=True
+        )
+        assert np.isfinite(float(e))
+        assert np.all(np.isfinite(np.asarray(f)))
+
+    @pytest.mark.parametrize("name", ["fp32", "gaq_w4a8", "naive_int8", "degree_quant"])
+    def test_pallas_path_matches_jnp(self, name):
+        params = _params(name)
+        e1, f1 = energy_and_forces(params, SPECIES, POS, CFG, VARIANTS[name], use_pallas=False)
+        e2, f2 = energy_and_forces(params, SPECIES, POS, CFG, VARIANTS[name], use_pallas=True)
+        assert_allclose(float(e1), float(e2), rtol=1e-5, atol=1e-6)
+        assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-4, atol=1e-6)
+
+    def test_gaq_lee_much_lower_than_naive(self):
+        """The paper's core claim at init: MDDQ >> naive on equivariance."""
+        from compile.lee import mean_force_lee
+
+        key = jax.random.PRNGKey(3)
+        out = {}
+        for name in ["naive_int8", "gaq_w4a8"]:
+            params = _params(name)
+
+            def ffn(r, params=params, name=name):
+                return energy_and_forces(params, SPECIES, r, CFG, VARIANTS[name])[1]
+
+            out[name] = float(mean_force_lee(jax.jit(ffn), POS, key, n_rotations=6))
+        assert out["gaq_w4a8"] < out["naive_int8"], out
+
+    def test_quantization_actually_changes_output(self):
+        p = _params("gaq_w4a8")
+        e_q = energy(p, SPECIES, POS, CFG, VARIANTS["gaq_w4a8"])
+        e_f = energy(p, SPECIES, POS, CFG, VARIANTS["fp32"])
+        assert abs(float(e_q) - float(e_f)) > 1e-6
+
+
+class TestAttentionConfig:
+    def test_cosine_vs_dot_attention_differ(self):
+        cfg_dot = ModelConfig(cosine_attention=False)
+        p = init_params(jax.random.PRNGKey(0), CFG, VARIANTS["fp32"])
+        e_cos = energy(p, SPECIES, POS, CFG, VARIANTS["fp32"])
+        e_dot = energy(p, SPECIES, POS, cfg_dot, VARIANTS["fp32"])
+        assert abs(float(e_cos) - float(e_dot)) > 1e-7
+
+    def test_learnable_tau_gets_gradient(self):
+        p = _params()
+
+        def loss(p):
+            return energy(p, SPECIES, POS, CFG, VARIANTS["fp32"]) ** 2
+
+        g = jax.grad(loss)(p)
+        assert np.isfinite(float(g["tau"]))
+
+
+class TestStagedWarmup:
+    def test_equivariant_quant_can_be_disabled(self):
+        """The warm-up flag must switch the equivariant-branch quantiser:
+        forces (more sensitive than the pooled energy) differ when MDDQ is
+        active, across several geometries."""
+        p = _params("gaq_w4a8")
+        rng = np.random.default_rng(0)
+        diff = 0.0
+        for _ in range(3):
+            pos = POS + jnp.asarray(0.05 * rng.normal(size=POS.shape).astype(np.float32))
+            _, f_on = energy_and_forces(
+                p, SPECIES, pos, CFG, VARIANTS["gaq_w4a8"], equivariant_quant_enabled=True
+            )
+            _, f_off = energy_and_forces(
+                p, SPECIES, pos, CFG, VARIANTS["gaq_w4a8"], equivariant_quant_enabled=False
+            )
+            diff = max(diff, float(jnp.max(jnp.abs(f_on - f_off))))
+        assert diff > 1e-9, f"MDDQ toggle had no effect on forces (max diff {diff})"

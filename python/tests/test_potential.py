@@ -1,0 +1,103 @@
+"""S5 classical oracle: force consistency, invariance, topology, sampling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.datagen import azobenzene, ethanol, sample_dataset, MASSES
+from compile.geometry import random_rotation
+from compile.potential import energy_and_forces, potential_energy
+
+
+@pytest.fixture(scope="module")
+def azo():
+    return azobenzene()
+
+
+class TestTopology:
+    def test_azobenzene_composition(self, azo):
+        assert azo.n_atoms == 24
+        assert (azo.numbers == 6).sum() == 12
+        assert (azo.numbers == 7).sum() == 2
+        assert (azo.numbers == 1).sum() == 10
+        assert len(azo.ff.bonds) == 25  # 2x6 ring + 3 bridge + 10 C-H
+        assert len(azo.ff.torsions) == 1  # the azo dihedral
+
+    def test_bond_lengths_physical(self, azo):
+        for (i, j), r0 in zip(azo.ff.bonds, azo.ff.bond_r0):
+            assert 0.9 < r0 < 1.6, f"bond {i}-{j}: {r0} A"
+
+    def test_masses(self, azo):
+        assert_allclose(azo.masses[:12], MASSES[6])
+        assert_allclose(azo.masses[12:14], MASSES[7])
+        assert_allclose(azo.masses[14:], MASSES[1])
+
+    def test_ethanol(self):
+        m = ethanol()
+        assert m.n_atoms == 9
+        assert len(m.ff.bonds) == 8
+
+
+class TestPhysics:
+    def test_equilibrium_near_stationary(self, azo):
+        _, f = energy_and_forces(azo.ff, jnp.asarray(azo.positions))
+        assert float(jnp.max(jnp.abs(f))) < 0.5
+
+    def test_forces_are_exact_gradient(self, azo):
+        rng = np.random.default_rng(0)
+        r = jnp.asarray(azo.positions + 0.05 * rng.normal(size=azo.positions.shape).astype(np.float32))
+        e0, f = energy_and_forces(azo.ff, r)
+        # directional finite difference
+        d = rng.normal(size=r.shape).astype(np.float32)
+        d /= np.linalg.norm(d)
+        h = 1e-3
+        ep = potential_energy(azo.ff, r + h * d)
+        em = potential_energy(azo.ff, r - h * d)
+        fd = -(float(ep) - float(em)) / (2 * h)
+        analytic = float(jnp.sum(f * d))
+        assert_allclose(analytic, fd, rtol=2e-3, atol=2e-4)
+
+    def test_rotation_invariance(self, azo):
+        r = jnp.asarray(azo.positions)
+        e0 = potential_energy(azo.ff, r)
+        rot = random_rotation(jax.random.PRNGKey(1))
+        e1 = potential_energy(azo.ff, r @ rot.T)
+        assert_allclose(float(e0), float(e1), atol=1e-4)
+
+    def test_forces_equivariant(self, azo):
+        rng = np.random.default_rng(2)
+        r = jnp.asarray(azo.positions + 0.03 * rng.normal(size=azo.positions.shape).astype(np.float32))
+        rot = random_rotation(jax.random.PRNGKey(5))
+        _, f0 = energy_and_forces(azo.ff, r)
+        _, fr = energy_and_forces(azo.ff, r @ rot.T)
+        assert_allclose(np.asarray(fr), np.asarray(f0 @ rot.T), atol=2e-3)
+
+    def test_net_force_is_zero(self, azo):
+        """Translation invariance => forces sum to zero (Newton's third law)."""
+        rng = np.random.default_rng(3)
+        r = jnp.asarray(azo.positions + 0.05 * rng.normal(size=azo.positions.shape).astype(np.float32))
+        _, f = energy_and_forces(azo.ff, r)
+        assert_allclose(np.asarray(jnp.sum(f, axis=0)), 0.0, atol=1e-3)
+
+
+class TestSampling:
+    def test_dataset_deterministic(self, azo):
+        d1 = sample_dataset(azo, 8, stride=3, burnin=20, seed=11)
+        d2 = sample_dataset(azo, 8, stride=3, burnin=20, seed=11)
+        assert_allclose(d1["positions"], d2["positions"])
+
+    def test_dataset_stays_bound(self, azo):
+        d = sample_dataset(azo, 16, stride=5, burnin=100, seed=1)
+        # no atom strays more than a few Angstrom from the molecular span
+        span = np.abs(d["positions"] - azo.positions).max()
+        assert span < 5.0, f"molecule flew apart: {span} A drift"
+        assert np.all(np.isfinite(d["energy"]))
+        assert np.all(np.isfinite(d["forces"]))
+
+    def test_energy_distribution_thermal(self, azo):
+        d = sample_dataset(azo, 32, stride=5, burnin=200, temperature=300.0, seed=2)
+        # potential energy fluctuates but does not run away
+        assert d["energy"].std() > 1e-4
+        assert d["energy"].max() - d["energy"].min() < 5.0

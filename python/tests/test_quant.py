@@ -1,0 +1,214 @@
+"""S3 quantizer library: STE gradients, LSQ, QDrop, Degree-Quant, SVQ, MDDQ."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.codebook import make_direction_quantizer
+from compile.quant import degree as dq
+from compile.quant import linear as lq
+from compile.quant import lsq as lsq_q
+from compile.quant import mddq as mddq_q
+from compile.quant import qdrop as qdrop_q
+from compile.quant import svq as svq_q
+from compile.quant.ste import geometric_ste_quantize, ste_round
+
+HSET = settings(max_examples=15, deadline=None)
+
+
+def _rand(shape, seed, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape).astype(np.float32) * scale
+    )
+
+
+class TestSTE:
+    def test_ste_round_forward(self):
+        x = jnp.asarray([0.2, 0.7, -1.4])
+        assert_allclose(np.asarray(ste_round(x)), [0.0, 1.0, -1.0])
+
+    def test_ste_round_gradient_is_identity(self):
+        g = jax.grad(lambda x: jnp.sum(ste_round(x) ** 2))(jnp.asarray([0.3, 1.6]))
+        # d/dx (round(x)^2) via STE = 2*round(x)
+        assert_allclose(np.asarray(g), [0.0, 4.0])
+
+    @HSET
+    @given(seed=st.integers(0, 2**16))
+    def test_geometric_ste_orthogonality(self, seed):
+        """Prop III.1: <u, dL/du> = 0 for any cotangent."""
+        rng = np.random.default_rng(seed)
+        u = rng.normal(size=(6, 3))
+        u = jnp.asarray((u / np.linalg.norm(u, axis=-1, keepdims=True)).astype(np.float32))
+        qfn, _ = make_direction_quantizer("oct", 8)
+        cot = jnp.asarray(rng.normal(size=(6, 3)).astype(np.float32))
+
+        def loss(u):
+            return jnp.sum(geometric_ste_quantize(u, qfn) * cot)
+
+        g = jax.grad(loss)(u)
+        radial = np.sum(np.asarray(g) * np.asarray(u), axis=-1)
+        assert_allclose(radial, 0.0, atol=1e-6)
+
+
+class TestLinear:
+    @HSET
+    @given(bits=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**16))
+    def test_symmetric_error_bound(self, bits, seed):
+        x = _rand((200,), seed, 3.0)
+        q = lq.symmetric_fake_quant(x, bits)
+        qmax = 2 ** (bits - 1) - 1
+        step = float(jnp.max(jnp.abs(x))) / qmax
+        assert float(jnp.max(jnp.abs(q - x))) <= step * 0.51 + 1e-6
+
+    def test_asymmetric_hits_minmax(self):
+        x = jnp.asarray([-1.0, 0.0, 3.0])
+        q = lq.asymmetric_fake_quant(x, 8)
+        assert_allclose(np.asarray(q), np.asarray(x), atol=0.02)
+
+    def test_per_channel_scales_independent(self):
+        w = jnp.stack([jnp.ones(4) * 0.01, jnp.ones(4) * 100.0], axis=1)  # (4, 2)
+        q = lq.per_channel_symmetric_fake_quant(w, 4, axis=-1)
+        # small channel must not be flattened to zero by the large one
+        assert float(jnp.max(jnp.abs(q[:, 0] - 0.01))) < 0.005
+
+    def test_gradient_flows(self):
+        g = jax.grad(lambda x: jnp.sum(lq.symmetric_fake_quant(x, 8)))(_rand((16,), 0))
+        assert np.all(np.isfinite(np.asarray(g)))
+
+
+class TestLSQ:
+    def test_forward_quantizes(self):
+        x = _rand((64,), 1)
+        s = lsq_q.init_step(x, 8)
+        q = lsq_q.lsq_fake_quant(x, s, 8)
+        ratio = np.asarray(q / s)
+        assert_allclose(ratio, np.round(ratio), atol=1e-4)
+
+    def test_step_gradient_nonzero(self):
+        x = _rand((64,), 2)
+        s = jnp.asarray(0.05)
+        g = jax.grad(lambda s: jnp.sum(lsq_q.lsq_fake_quant(x, s, 8) ** 2))(s)
+        assert np.isfinite(float(g)) and abs(float(g)) > 0
+
+    def test_clip_region_gradients(self):
+        # far outside the clip range, dq/dx must be 0
+        x = jnp.asarray([1000.0, 0.01])
+        s = jnp.asarray(0.05)
+        g = jax.grad(lambda x: jnp.sum(lsq_q.lsq_fake_quant(x, s, 8)))(x)
+        assert float(g[0]) == 0.0 and float(g[1]) == 1.0
+
+
+class TestQDrop:
+    def test_eval_mode_fully_quantized(self):
+        x = _rand((128,), 3)
+        q1 = qdrop_q.qdrop_fake_quant(x, 8, None, deterministic=True)
+        q2 = lq.symmetric_fake_quant(x, 8)
+        assert_allclose(np.asarray(q1), np.asarray(q2))
+
+    def test_train_mode_mixes(self):
+        x = _rand((4096,), 4)
+        q = qdrop_q.qdrop_fake_quant(x, 4, jax.random.PRNGKey(0), p=0.5)
+        full = lq.symmetric_fake_quant(x, 4)
+        n_fp = int(jnp.sum(jnp.abs(q - x) < 1e-9))
+        n_q = int(jnp.sum(jnp.abs(q - full) < 1e-9))
+        # roughly half each (some coincide)
+        assert n_fp > 1000 and n_q > 1000
+
+
+class TestDegreeQuant:
+    def test_high_degree_gets_wider_range(self):
+        x = jnp.ones((4, 8)) * 2.0
+        degrees = jnp.asarray([1.0, 1.0, 1.0, 16.0])
+        q = dq.degree_quant_fake_quant(x, degrees, 8)
+        assert np.all(np.isfinite(np.asarray(q)))
+
+    def test_protective_mask_scales_with_degree(self):
+        degrees = jnp.asarray([1.0] * 500 + [100.0] * 500)
+        mask = dq.protective_mask(jax.random.PRNGKey(0), degrees, 0.0, 0.5)
+        m = np.asarray(mask)
+        assert m[500:].mean() > m[:500].mean()
+
+
+class TestSVQ:
+    def test_kmeans_centroids_unit(self):
+        rng = np.random.default_rng(0)
+        d = rng.normal(size=(2000, 3))
+        d /= np.linalg.norm(d, axis=-1, keepdims=True)
+        c = svq_q.spherical_kmeans(d, 16, iters=10)
+        assert_allclose(np.linalg.norm(c, axis=-1), 1.0, atol=1e-5)
+
+    def test_hard_quant_zero_gradient(self):
+        """The gradient-fracture failure mode: d(svq)/d(direction) == 0."""
+        c = jnp.asarray(svq_q.spherical_kmeans(np.random.default_rng(1).normal(size=(500, 3)), 8))
+        v = _rand((10, 3), 2)
+
+        def loss(v):
+            return jnp.sum(svq_q.svq_hard_quant(v, c) ** 2)
+
+        g = np.asarray(jax.grad(loss)(v))
+        # gradient exists only through the magnitude (radial direction)
+        vn = np.asarray(v) / np.linalg.norm(np.asarray(v), axis=-1, keepdims=True)
+        tangential = g - np.sum(g * vn, axis=-1, keepdims=True) * vn
+        assert np.abs(tangential).max() < 1e-5
+
+
+class TestMDDQ:
+    @HSET
+    @given(seed=st.integers(0, 2**16), scale=st.sampled_from([0.1, 1.0, 10.0]))
+    def test_equivariance_error_bounded_by_codebook(self, seed, scale):
+        """||Q(Rv) - R Q(v)|| <= 2 sin(delta) * (max magnitude + step)."""
+        qfn, _ = make_direction_quantizer("oct", 8)
+        v = _rand((64, 3), seed, scale)
+        key = jax.random.PRNGKey(seed)
+        from compile.geometry import random_rotation
+
+        r = random_rotation(key)
+        q1 = mddq_q.mddq_fake_quant(v @ r.T, qfn)
+        q2 = mddq_q.mddq_fake_quant(v, qfn) @ r.T
+        err = float(jnp.max(jnp.linalg.norm(q1 - q2, axis=-1)))
+        delta = 0.0125  # oct-8 covering radius
+        mags = np.linalg.norm(np.asarray(v), axis=-1)
+        bound = 2 * np.sin(delta) * mags.max() + (mags.max() - mags.min()) / 255.0 * 1.05 + 1e-5
+        assert err <= bound * 2.0, f"err {err} >> bound {bound}"
+
+    def test_much_better_than_naive(self):
+        qfn, _ = make_direction_quantizer("oct", 8)
+        from compile.geometry import random_rotations
+
+        v = _rand((128, 3), 0, 1.0)
+        rots = random_rotations(jax.random.PRNGKey(1), 16)
+        mddq_err = 0.0
+        naive_err = 0.0
+        for r in rots:
+            mddq_err += float(
+                jnp.mean(
+                    jnp.linalg.norm(
+                        mddq_q.mddq_fake_quant(v @ r.T, qfn) - mddq_q.mddq_fake_quant(v, qfn) @ r.T,
+                        axis=-1,
+                    )
+                )
+            )
+            naive_err += float(
+                jnp.mean(
+                    jnp.linalg.norm(
+                        lq.naive_quant(v @ r.T, 8) - lq.naive_quant(v, 8) @ r.T, axis=-1
+                    )
+                )
+            )
+        assert mddq_err < naive_err, f"mddq {mddq_err} vs naive {naive_err}"
+
+    def test_gradients_finite_at_zero(self):
+        qfn, _ = make_direction_quantizer("oct", 8)
+        v = jnp.zeros((4, 3))
+        g = jax.grad(lambda v: jnp.sum(mddq_q.mddq_fake_quant(v, qfn)))(v)
+        assert np.all(np.isfinite(np.asarray(g)))
+
+    def test_pallas_variant_matches_jnp(self):
+        qfn, _ = make_direction_quantizer("oct", 8)
+        v = _rand((40, 3), 5)
+        a = mddq_q.mddq_fake_quant(v, qfn)
+        b = mddq_q.mddq_fake_quant_pallas(v, qfn)
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)

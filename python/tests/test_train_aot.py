@@ -1,0 +1,163 @@
+"""S6/S7: trainer smoke (loss decreases), LEE metric, checkpoint + HLO export."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.checkpoint import load_params, save_params, flatten_tree, unflatten_tree
+from compile.datagen import azobenzene, sample_dataset
+from compile.lee import force_lee, lee_regularizer, mean_force_lee
+from compile.model import ModelConfig, VARIANTS, energy_and_forces, init_params
+from compile.train import Dataset, TrainConfig, train_variant
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    mol = azobenzene()
+    raw = sample_dataset(mol, 48, stride=3, burnin=60, seed=3)
+    ds = Dataset(raw["positions"], raw["energy"], raw["forces"])
+    tr, te = ds.split(16)
+    return mol, tr, te
+
+
+class TestTrainer:
+    def test_fp32_loss_decreases(self, tiny_setup):
+        mol, tr, te = tiny_setup
+        cfg = ModelConfig()
+        params, m = train_variant(
+            mol, tr, te, cfg, VARIANTS["fp32"], TrainConfig(epochs=5, batch=8, lr=5e-3),
+            log=lambda *a: None,
+        )
+        assert m["final_loss"] < m["initial_loss"]
+        assert not m["diverged"]
+        assert np.isfinite(m["e_mae_mev"]) and np.isfinite(m["f_mae_mev_a"])
+
+    def test_gaq_finetune_runs_with_warmup(self, tiny_setup):
+        mol, tr, te = tiny_setup
+        cfg = ModelConfig()
+        fp32, _ = train_variant(
+            mol, tr, te, cfg, VARIANTS["fp32"], TrainConfig(epochs=2, batch=8),
+            log=lambda *a: None,
+        )
+        params, m = train_variant(
+            mol, tr, te, cfg, VARIANTS["gaq_w4a8"],
+            TrainConfig(epochs=3, batch=8, warmup_epochs=1), init_from=fp32,
+            log=lambda *a: None,
+        )
+        assert not m["diverged"]
+        assert m["epochs"] == 3
+
+    def test_svq_fits_centroids(self, tiny_setup):
+        mol, tr, te = tiny_setup
+        cfg = ModelConfig()
+        params, m = train_variant(
+            mol, tr, te, cfg, VARIANTS["svq_kmeans"], TrainConfig(epochs=2, batch=8),
+            log=lambda *a: None,
+        )
+        c = np.asarray(params["svq_centroids"])
+        assert_allclose(np.linalg.norm(c, axis=-1), 1.0, atol=1e-4)
+
+
+class TestLEE:
+    def test_lee_zero_for_equivariant_fn(self):
+        """A manifestly equivariant function has LEE == 0."""
+        def ffn(r):
+            c = jnp.mean(r, axis=0, keepdims=True)
+            return -(r - c)  # central restoring force: exactly equivariant
+
+        from compile.geometry import random_rotation
+
+        rot = random_rotation(jax.random.PRNGKey(0))
+        pos = jnp.asarray(np.random.default_rng(0).normal(size=(10, 3)).astype(np.float32))
+        assert float(force_lee(ffn, pos, rot)) < 1e-6
+
+    def test_lee_positive_for_anisotropic_fn(self):
+        def ffn(r):
+            return jnp.stack([r[:, 0], 0 * r[:, 1], 0 * r[:, 2]], axis=-1)  # x-only: breaks SO(3)
+
+        pos = jnp.asarray(np.random.default_rng(1).normal(size=(10, 3)).astype(np.float32))
+        v = float(mean_force_lee(ffn, pos, jax.random.PRNGKey(1), 8))
+        assert v > 0.1
+
+    def test_regularizer_differentiable(self):
+        cfg = ModelConfig()
+        mol = azobenzene()
+        params = init_params(jax.random.PRNGKey(0), cfg, VARIANTS["gaq_w4a8"])
+        pos = jnp.asarray(mol.positions)
+        spec = jnp.asarray(mol.species)
+
+        def loss(params):
+            def ffn(r):
+                return energy_and_forces(params, spec, r, cfg, VARIANTS["gaq_w4a8"])[1]
+
+            return lee_regularizer(ffn, pos, jax.random.PRNGKey(2))
+
+        g = jax.grad(loss)(params)
+        leaves = jax.tree_util.tree_leaves(g)
+        assert all(np.all(np.isfinite(np.asarray(l))) for l in leaves)
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        cfg = ModelConfig()
+        p = init_params(jax.random.PRNGKey(0), cfg, VARIANTS["gaq_w4a8"])
+        path = os.path.join(tmp_path, "ck.npz")
+        save_params(path, p)
+        q = load_params(path)
+        fa, fb = flatten_tree(p), flatten_tree(q)
+        assert set(fa) == set(fb)
+        for k in fa:
+            assert_allclose(np.asarray(fa[k]), np.asarray(fb[k]), err_msg=k)
+
+    def test_unflatten_rebuilds_lists(self):
+        flat = {"layers/0/w": np.ones(2), "layers/1/w": np.zeros(2), "top": np.asarray(3.0)}
+        t = unflatten_tree(flat)
+        assert isinstance(t["layers"], list) and len(t["layers"]) == 2
+
+
+class TestHloExport:
+    def test_export_contains_full_constants(self, tmp_path):
+        """Regression: the HLO printer must NOT elide tensor constants as
+        `constant({...})` — xla_extension 0.5.1 reads those as zeros."""
+        from compile.aot import export_forcefield_hlo
+
+        mol = azobenzene()
+        cfg = ModelConfig()
+        params = init_params(jax.random.PRNGKey(0), cfg, VARIANTS["fp32"])
+        path = os.path.join(tmp_path, "m.hlo.txt")
+        export_forcefield_hlo(params, mol, cfg, VARIANTS["fp32"], path)
+        text = open(path).read()
+        assert "constant({...})" not in text, "large constants were elided!"
+        assert "ENTRY" in text
+        assert "f32[24,3]" in text  # input signature
+
+    def test_batched_export_signature(self, tmp_path):
+        from compile.aot import export_forcefield_hlo
+
+        mol = azobenzene()
+        cfg = ModelConfig()
+        params = init_params(jax.random.PRNGKey(1), cfg, VARIANTS["fp32"])
+        path = os.path.join(tmp_path, "mb.hlo.txt")
+        export_forcefield_hlo(params, mol, cfg, VARIANTS["fp32"], path, batch=4)
+        text = open(path).read()
+        assert "f32[4,24,3]" in text
+
+    def test_weight_image_layout(self, tmp_path):
+        from compile.aot import dump_weight_image
+
+        cfg = ModelConfig()
+        params = init_params(jax.random.PRNGKey(2), cfg, VARIANTS["fp32"])
+        path = os.path.join(tmp_path, "w.bin")
+        layout, nbytes = dump_weight_image(params, path)
+        assert os.path.getsize(path) == nbytes
+        total = sum(int(np.prod(e["shape"]) if e["shape"] else 1) * 4 for e in layout)
+        assert total == nbytes
+        # offsets strictly increasing and contiguous
+        off = 0
+        for e in layout:
+            assert e["offset"] == off
+            off += int(np.prod(e["shape"]) if e["shape"] else 1) * 4

@@ -1,0 +1,171 @@
+//! Dynamic batcher (S9): groups per-variant requests under a latency bound.
+//!
+//! Policy (vLLM-style continuous batching, simplified to the stateless
+//! force-field case): a batch closes when it reaches `max_batch` or when
+//! the oldest queued request has waited `max_wait`. Pure data structure —
+//! the server thread drives it; that keeps it unit/property-testable
+//! without threads.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// Per-variant FIFO with deadline-aware batch extraction.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<InferenceRequest>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher { policy, queue: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, req: InferenceRequest) {
+        self.queue.push_back(req);
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Age of the oldest queued request.
+    pub fn oldest_wait(&self, now: Instant) -> Option<Duration> {
+        self.queue.front().map(|r| now.duration_since(r.enqueued))
+    }
+
+    /// Should a batch be closed now?
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.oldest_wait(now) {
+            Some(w) => w >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the oldest request hits its deadline (for poll sleeps).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.oldest_wait(now).map(|w| self.policy.max_wait.saturating_sub(w))
+    }
+
+    /// Pop up to `max_batch` requests in FIFO order (no reordering: replies
+    /// must match request order for fairness and testability).
+    pub fn take_batch(&mut self) -> Vec<InferenceRequest> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        self.queue.drain(..n).collect()
+    }
+
+    pub fn policy(&self) -> &BatchPolicy {
+        &self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::proptest::check;
+    use std::sync::mpsc;
+
+    fn req(id: u64, enq: Instant) -> InferenceRequest {
+        let (tx, _rx) = mpsc::channel();
+        // keep rx alive? not needed for batcher-only tests
+        std::mem::forget(_rx);
+        InferenceRequest {
+            id,
+            variant: "fp32".into(),
+            positions: vec![0.0; 6],
+            reply: tx,
+            enqueued: enq,
+        }
+    }
+
+    #[test]
+    fn closes_on_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let now = Instant::now();
+        for i in 0..4 {
+            b.push(req(i, now));
+        }
+        assert!(b.ready(now));
+        let batch = b.take_batch();
+        assert_eq!(batch.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let past = Instant::now() - Duration::from_millis(5);
+        b.push(req(0, past));
+        assert!(b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn not_ready_when_fresh_and_small() {
+        let mut b = Batcher::new(BatchPolicy::default());
+        b.push(req(0, Instant::now()));
+        assert!(!b.ready(Instant::now()));
+    }
+
+    #[test]
+    fn prop_never_exceeds_max_batch_and_preserves_fifo() {
+        check(
+            "batcher invariants",
+            42,
+            200,
+            |r: &mut Rng| {
+                let max_batch = 1 + r.below(16);
+                let pushes = r.below(64);
+                (max_batch, pushes)
+            },
+            |&(max_batch, pushes)| {
+                let mut b = Batcher::new(BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_secs(1),
+                });
+                let now = Instant::now();
+                for i in 0..pushes {
+                    b.push(req(i as u64, now));
+                }
+                let mut seen = Vec::new();
+                while !b.is_empty() {
+                    let batch = b.take_batch();
+                    if batch.len() > max_batch {
+                        return Err(format!("batch {} > max {}", batch.len(), max_batch));
+                    }
+                    if batch.is_empty() {
+                        return Err("empty batch from non-empty queue".into());
+                    }
+                    seen.extend(batch.iter().map(|r| r.id));
+                }
+                let want: Vec<u64> = (0..pushes as u64).collect();
+                if seen != want {
+                    return Err(format!("order violated: {seen:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

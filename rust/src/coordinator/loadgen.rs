@@ -1,0 +1,121 @@
+//! Workload generation (S9): Poisson/deterministic arrival processes +
+//! perturbed-geometry request payloads for the serving benchmarks.
+//!
+//! The paper's Table IV simulates "online inference" (batch 1); real
+//! deployments see bursty arrivals, which is what makes the dynamic
+//! batcher earn its keep. This module generates reproducible open-loop
+//! arrival schedules.
+
+use crate::util::prng::Rng;
+
+/// Arrival process for an open-loop load test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// fixed inter-arrival gap (req/s)
+    Uniform { rate: f64 },
+    /// Poisson process (exponential gaps, req/s mean)
+    Poisson { rate: f64 },
+    /// everything at t=0 (closed burst)
+    Burst,
+}
+
+/// Generate `n` arrival offsets (seconds from start), non-decreasing.
+pub fn arrival_times(arrival: Arrival, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        match arrival {
+            Arrival::Uniform { rate } => {
+                out.push(t);
+                t += 1.0 / rate.max(1e-9);
+            }
+            Arrival::Poisson { rate } => {
+                out.push(t);
+                // exponential inter-arrival: -ln(U)/rate
+                let u = rng.f64().max(1e-15);
+                t += -u.ln() / rate.max(1e-9);
+            }
+            Arrival::Burst => out.push(0.0),
+        }
+    }
+    out
+}
+
+/// Request payload generator: thermally perturbed reference geometries.
+pub struct GeometryGen {
+    base: Vec<f32>,
+    sigma: f64,
+    rng: Rng,
+}
+
+impl GeometryGen {
+    pub fn new(base: Vec<f32>, sigma: f64, seed: u64) -> Self {
+        GeometryGen { base, sigma, rng: Rng::new(seed) }
+    }
+
+    pub fn next(&mut self) -> Vec<f32> {
+        self.base
+            .iter()
+            .map(|&x| x + (self.sigma * self.rng.gaussian()) as f32)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn uniform_rate_is_exact() {
+        let t = arrival_times(Arrival::Uniform { rate: 100.0 }, 11, 0);
+        assert!((t[10] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn poisson_mean_rate_close() {
+        let n = 20_000;
+        let t = arrival_times(Arrival::Poisson { rate: 500.0 }, n, 1);
+        let measured = (n - 1) as f64 / t[n - 1];
+        assert!((measured - 500.0).abs() < 25.0, "rate = {measured}");
+    }
+
+    #[test]
+    fn prop_arrivals_nondecreasing() {
+        check(
+            "arrivals sorted",
+            3,
+            50,
+            |r| {
+                let kind = match r.below(3) {
+                    0 => Arrival::Uniform { rate: 1.0 + r.f64() * 1000.0 },
+                    1 => Arrival::Poisson { rate: 1.0 + r.f64() * 1000.0 },
+                    _ => Arrival::Burst,
+                };
+                (kind, 1 + r.below(200), r.next_u64())
+            },
+            |&(kind, n, seed)| {
+                let t = arrival_times(kind, n, seed);
+                if t.len() != n {
+                    return Err("wrong count".into());
+                }
+                if t.windows(2).any(|w| w[1] < w[0]) {
+                    return Err("decreasing arrival times".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn geometry_gen_perturbs_around_base() {
+        let base = vec![1.0f32; 30];
+        let mut g = GeometryGen::new(base.clone(), 0.05, 7);
+        let a = g.next();
+        let b = g.next();
+        assert_ne!(a, b);
+        let mean: f32 = a.iter().sum::<f32>() / 30.0;
+        assert!((mean - 1.0).abs() < 0.1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Serving metrics (S9): latency percentiles + throughput counters.
+//!
+//! Lock-free-ish: workers push latencies through a channel into the
+//! collector owned by whoever wants the report; percentiles computed on
+//! demand from a bounded reservoir.
+
+use std::time::Duration;
+
+/// Bounded latency reservoir + counters.
+#[derive(Debug, Clone)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    cap: usize,
+    pub completed: u64,
+    pub errors: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    started: std::time::Instant,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new(65536)
+    }
+}
+
+impl Metrics {
+    pub fn new(cap: usize) -> Self {
+        Metrics {
+            latencies_us: Vec::with_capacity(cap.min(4096)),
+            cap,
+            completed: 0,
+            errors: 0,
+            batches: 0,
+            batched_requests: 0,
+            started: std::time::Instant::now(),
+        }
+    }
+
+    pub fn record(&mut self, latency_us: u64, ok: bool) {
+        if ok {
+            self.completed += 1;
+        } else {
+            self.errors += 1;
+        }
+        if self.latencies_us.len() < self.cap {
+            self.latencies_us.push(latency_us);
+        } else {
+            // reservoir replacement keyed on the counter (deterministic)
+            let idx = (self.completed as usize * 2654435761) % self.cap;
+            self.latencies_us[idx] = latency_us;
+        }
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batched_requests += size as u64;
+    }
+
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let mut v = self.latencies_us.clone();
+        v.sort_unstable();
+        let idx = ((v.len() as f64 * p).floor() as usize).min(v.len() - 1);
+        Some(Duration::from_micros(v[idx]))
+    }
+
+    pub fn mean_latency(&self) -> Option<Duration> {
+        if self.latencies_us.is_empty() {
+            return None;
+        }
+        let sum: u64 = self.latencies_us.iter().sum();
+        Some(Duration::from_micros(sum / self.latencies_us.len() as u64))
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let el = self.started.elapsed().as_secs_f64();
+        if el > 0.0 {
+            self.completed as f64 / el
+        } else {
+            0.0
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} errors={} mean={:?} p50={:?} p95={:?} p99={:?} mean_batch={:.2} thrpt={:.1}/s",
+            self.completed,
+            self.errors,
+            self.mean_latency().unwrap_or_default(),
+            self.percentile(0.50).unwrap_or_default(),
+            self.percentile(0.95).unwrap_or_default(),
+            self.percentile(0.99).unwrap_or_default(),
+            self.mean_batch_size(),
+            self.throughput_rps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::new(1024);
+        for i in 0..1000u64 {
+            m.record(i, true);
+        }
+        let p50 = m.percentile(0.5).unwrap();
+        let p95 = m.percentile(0.95).unwrap();
+        let p99 = m.percentile(0.99).unwrap();
+        assert!(p50 <= p95 && p95 <= p99);
+        assert_eq!(m.completed, 1000);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::default();
+        m.record_batch(8);
+        m.record_batch(4);
+        assert_eq!(m.mean_batch_size(), 6.0);
+    }
+
+    #[test]
+    fn reservoir_caps_memory() {
+        let mut m = Metrics::new(128);
+        for i in 0..10_000u64 {
+            m.record(i, true);
+        }
+        assert!(m.percentile(0.5).is_some());
+        assert_eq!(m.completed, 10_000);
+    }
+}

@@ -1,0 +1,21 @@
+//! Serving coordinator (S9) — the L3 system layer.
+//!
+//! vLLM-router-shaped: `Server::submit` -> dispatcher thread with
+//! per-variant [`batcher::Batcher`]s -> [`router::Pool`] least-loaded
+//! dispatch -> worker threads owning thread-confined PJRT executables.
+//! Metrics (p50/p95/p99, throughput, mean batch size) via
+//! [`metrics::Metrics`]. The MD engine reuses the same worker path at
+//! batch=1 for online simulation.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{InferenceRequest, InferenceResponse, PendingRequest};
+pub use router::{Backend, Pool};
+pub use server::{Server, ServerConfig};

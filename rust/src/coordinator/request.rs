@@ -1,0 +1,62 @@
+//! Request/response types flowing through the serving coordinator (S9).
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// A single inference request: one molecule's positions, one variant.
+#[derive(Debug)]
+pub struct InferenceRequest {
+    pub id: u64,
+    /// model variant name (e.g. "gaq_w4a8"); routing key
+    pub variant: String,
+    /// flat [n*3] f32 positions, Angstrom
+    pub positions: Vec<f32>,
+    /// reply channel (oneshot-style: exactly one send)
+    pub reply: mpsc::Sender<InferenceResponse>,
+    pub enqueued: Instant,
+}
+
+/// The result delivered back to the caller.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub energy_ev: f32,
+    pub forces: Vec<f32>,
+    /// end-to-end latency observed inside the server, microseconds
+    pub latency_us: u64,
+    /// how many requests shared the executed batch
+    pub batch_size: usize,
+    pub error: Option<String>,
+}
+
+impl InferenceResponse {
+    pub fn error(id: u64, msg: impl Into<String>) -> Self {
+        InferenceResponse {
+            id,
+            energy_ev: f32::NAN,
+            forces: Vec::new(),
+            latency_us: 0,
+            batch_size: 0,
+            error: Some(msg.into()),
+        }
+    }
+}
+
+/// Client-side handle: submit + blocking wait.
+pub struct PendingRequest {
+    pub id: u64,
+    pub rx: mpsc::Receiver<InferenceResponse>,
+}
+
+impl PendingRequest {
+    pub fn wait(self) -> Result<InferenceResponse, mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn wait_timeout(
+        self,
+        dur: std::time::Duration,
+    ) -> Result<InferenceResponse, mpsc::RecvTimeoutError> {
+        self.rx.recv_timeout(dur)
+    }
+}

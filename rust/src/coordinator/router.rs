@@ -1,0 +1,282 @@
+//! Router (S9): per-variant worker pools with least-loaded dispatch.
+//!
+//! PJRT handles are thread-confined (!Send raw pointers), so each worker
+//! thread *creates its own* engine + compiled executable and owns it for
+//! life; only plain-data requests cross channels. The router tracks
+//! per-worker in-flight counts (atomics) and picks the least-loaded
+//! worker, breaking ties round-robin.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse};
+
+/// How a worker evaluates batches.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Compile `variant` from `artifacts_dir` inside the worker thread.
+    Pjrt { artifacts_dir: String, variant: String },
+    /// Deterministic stub (tests / load-gen): energy = sum(positions),
+    /// forces = -positions. n_atoms validated like the real model.
+    Mock { n_atoms: usize },
+}
+
+/// One worker: a thread consuming batches from its private channel.
+pub struct Worker {
+    pub tx: mpsc::Sender<Vec<InferenceRequest>>,
+    pub inflight: Arc<AtomicUsize>,
+    pub handle: JoinHandle<()>,
+}
+
+/// Spawn a worker; the backend is constructed inside the thread.
+pub fn spawn_worker(
+    backend: Backend,
+    metrics: Arc<Mutex<Metrics>>,
+) -> Result<Worker> {
+    let (tx, rx) = mpsc::channel::<Vec<InferenceRequest>>();
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let inflight2 = inflight.clone();
+
+    let handle = std::thread::Builder::new()
+        .name("gaq-worker".into())
+        .spawn(move || worker_loop(backend, rx, inflight2, metrics))?;
+
+    Ok(Worker { tx, inflight, handle })
+}
+
+fn worker_loop(
+    backend: Backend,
+    rx: mpsc::Receiver<Vec<InferenceRequest>>,
+    inflight: Arc<AtomicUsize>,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    // Build the evaluator inside the thread (PJRT handles never migrate).
+    enum Eval {
+        Pjrt(crate::runtime::CompiledForceField),
+        Mock { n_atoms: usize },
+    }
+
+    let eval = match &backend {
+        Backend::Pjrt { artifacts_dir, variant } => {
+            match crate::runtime::load_variant(artifacts_dir, variant) {
+                Ok((_, _engine, ff)) => {
+                    // unwrap sole Arc owner back out; keep engine alive via ff's
+                    // internal references — the xla crate keeps the client in
+                    // the executable, so dropping Engine here is fine.
+                    match Arc::try_unwrap(ff) {
+                        Ok(f) => Eval::Pjrt(f),
+                        Err(_) => {
+                            eprintln!("worker: Arc unexpectedly shared");
+                            return;
+                        }
+                    }
+                }
+                Err(e) => {
+                    eprintln!("worker failed to load {variant:?}: {e:#}");
+                    // drain requests with errors so clients don't hang
+                    for batch in rx.iter() {
+                        for req in batch {
+                            let _ = req
+                                .reply
+                                .send(InferenceResponse::error(req.id, format!("load failed: {e}")));
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+        Backend::Mock { n_atoms } => Eval::Mock { n_atoms: *n_atoms },
+    };
+
+    for batch in rx.iter() {
+        let bsize = batch.len();
+        let results: Vec<Result<(f32, Vec<f32>), String>> = match &eval {
+            Eval::Pjrt(ff) => {
+                let positions: Vec<Vec<f32>> =
+                    batch.iter().map(|r| r.positions.clone()).collect();
+                match ff.energy_forces_batch(&positions) {
+                    Ok(outs) => outs.into_iter().map(Ok).collect(),
+                    Err(e) => batch.iter().map(|_| Err(format!("{e}"))).collect(),
+                }
+            }
+            Eval::Mock { n_atoms } => batch
+                .iter()
+                .map(|r| {
+                    if r.positions.len() != n_atoms * 3 {
+                        Err(format!(
+                            "bad positions len {} != {}",
+                            r.positions.len(),
+                            n_atoms * 3
+                        ))
+                    } else {
+                        let e: f32 = r.positions.iter().sum();
+                        let f: Vec<f32> = r.positions.iter().map(|&x| -x).collect();
+                        Ok((e, f))
+                    }
+                })
+                .collect(),
+        };
+
+        let now = Instant::now();
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(bsize);
+        }
+        for (req, res) in batch.into_iter().zip(results) {
+            let latency_us = now.duration_since(req.enqueued).as_micros() as u64;
+            let resp = match res {
+                Ok((e, f)) => InferenceResponse {
+                    id: req.id,
+                    energy_ev: e,
+                    forces: f,
+                    latency_us,
+                    batch_size: bsize,
+                    error: None,
+                },
+                Err(msg) => InferenceResponse::error(req.id, msg),
+            };
+            let ok = resp.error.is_none();
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record(latency_us, ok);
+            }
+            let _ = req.reply.send(resp);
+            inflight.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A pool of workers for one variant.
+pub struct Pool {
+    pub variant: String,
+    workers: Vec<Worker>,
+    rr: AtomicUsize,
+}
+
+impl Pool {
+    pub fn new(variant: String, workers: Vec<Worker>) -> Self {
+        Pool { variant, workers, rr: AtomicUsize::new(0) }
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Least-loaded dispatch (ties broken round-robin).
+    pub fn dispatch(&self, batch: Vec<InferenceRequest>) -> Result<()> {
+        let n = self.workers.len();
+        anyhow::ensure!(n > 0, "pool {} has no workers", self.variant);
+        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let mut best = start;
+        let mut best_load = usize::MAX;
+        for k in 0..n {
+            let i = (start + k) % n;
+            let load = self.workers[i].inflight.load(Ordering::Relaxed);
+            if load < best_load {
+                best_load = load;
+                best = i;
+            }
+        }
+        self.workers[best].inflight.fetch_add(batch.len(), Ordering::Relaxed);
+        self.workers[best]
+            .tx
+            .send(batch)
+            .map_err(|_| anyhow::anyhow!("worker channel closed"))
+    }
+
+    /// Close channels and join all workers.
+    pub fn shutdown(self) {
+        let Pool { workers, .. } = self;
+        let mut handles = Vec::new();
+        for w in workers {
+            drop(w.tx);
+            handles.push(w.handle);
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn mock_pool(n_workers: usize, n_atoms: usize) -> (Pool, Arc<Mutex<Metrics>>) {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let workers = (0..n_workers)
+            .map(|_| spawn_worker(Backend::Mock { n_atoms }, metrics.clone()).unwrap())
+            .collect();
+        (Pool::new("mock".into(), workers), metrics)
+    }
+
+    #[test]
+    fn mock_roundtrip() {
+        let (pool, metrics) = mock_pool(2, 2);
+        let (tx, rx) = mpsc::channel();
+        let req = InferenceRequest {
+            id: 7,
+            variant: "mock".into(),
+            positions: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        pool.dispatch(vec![req]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(resp.id, 7);
+        assert!(resp.error.is_none());
+        assert_eq!(resp.energy_ev, 21.0);
+        assert_eq!(resp.forces[0], -1.0);
+        pool.shutdown();
+        assert_eq!(metrics.lock().unwrap().completed, 1);
+    }
+
+    #[test]
+    fn bad_shape_is_error_not_hang() {
+        let (pool, _m) = mock_pool(1, 4);
+        let (tx, rx) = mpsc::channel();
+        let req = InferenceRequest {
+            id: 1,
+            variant: "mock".into(),
+            positions: vec![0.0; 5],
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        pool.dispatch(vec![req]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.error.is_some());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn many_requests_all_answered() {
+        let (pool, metrics) = mock_pool(3, 1);
+        let mut rxs = Vec::new();
+        for id in 0..200u64 {
+            let (tx, rx) = mpsc::channel();
+            rxs.push((id, rx));
+            let req = InferenceRequest {
+                id,
+                variant: "mock".into(),
+                positions: vec![id as f32, 0.0, 0.0],
+                reply: tx,
+                enqueued: Instant::now(),
+            };
+            pool.dispatch(vec![req]).unwrap();
+        }
+        for (id, rx) in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(resp.id, id);
+            assert_eq!(resp.energy_ev, id as f32);
+        }
+        pool.shutdown();
+        assert_eq!(metrics.lock().unwrap().completed, 200);
+    }
+}

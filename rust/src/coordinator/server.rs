@@ -1,0 +1,251 @@
+//! Serving front-end (S9): submit -> dispatcher (batcher) -> router -> workers.
+//!
+//! The dispatcher thread owns one [`Batcher`] per variant and drains them
+//! under the batch policy; workers own thread-confined PJRT executables.
+//! `submit` is non-blocking; callers hold a [`PendingRequest`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, InferenceResponse, PendingRequest};
+use super::router::{spawn_worker, Backend, Pool};
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// variant name -> (backend, workers)
+    pub variants: Vec<(String, Backend, usize)>,
+}
+
+enum Control {
+    Request(InferenceRequest),
+    Shutdown,
+}
+
+/// The serving coordinator.
+pub struct Server {
+    tx: mpsc::Sender<Control>,
+    dispatcher: Option<std::thread::JoinHandle<Vec<Pool>>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Spawn workers + dispatcher.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let mut pools: BTreeMap<String, Pool> = BTreeMap::new();
+        for (name, backend, n) in &cfg.variants {
+            let workers = (0..*n)
+                .map(|_| spawn_worker(backend.clone(), metrics.clone()))
+                .collect::<Result<Vec<_>>>()?;
+            pools.insert(name.clone(), Pool::new(name.clone(), workers));
+        }
+
+        let (tx, rx) = mpsc::channel::<Control>();
+        let policy = cfg.policy.clone();
+        let dispatcher = std::thread::Builder::new()
+            .name("gaq-dispatcher".into())
+            .spawn(move || dispatcher_loop(rx, pools, policy))?;
+
+        Ok(Server {
+            tx,
+            dispatcher: Some(dispatcher),
+            metrics,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// Non-blocking submit; returns a handle to await the response.
+    pub fn submit(&self, variant: &str, positions: Vec<f32>) -> Result<PendingRequest> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let req = InferenceRequest {
+            id,
+            variant: variant.to_string(),
+            positions,
+            reply,
+            enqueued: Instant::now(),
+        };
+        self.tx
+            .send(Control::Request(req))
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(PendingRequest { id, rx })
+    }
+
+    /// Blocking convenience call.
+    pub fn infer(&self, variant: &str, positions: Vec<f32>) -> Result<InferenceResponse> {
+        let pending = self.submit(variant, positions)?;
+        pending
+            .wait_timeout(Duration::from_secs(120))
+            .map_err(|e| anyhow::anyhow!("inference timed out/disconnected: {e}"))
+    }
+
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown: flush queues, join workers.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            if let Ok(pools) = h.join() {
+                for p in pools {
+                    p.shutdown();
+                }
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Control::Shutdown);
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: mpsc::Receiver<Control>,
+    pools: BTreeMap<String, Pool>,
+    policy: BatchPolicy,
+) -> Vec<Pool> {
+    let mut batchers: BTreeMap<String, Batcher> = pools
+        .keys()
+        .map(|k| (k.clone(), Batcher::new(policy.clone())))
+        .collect();
+
+    let flush_ready = |batchers: &mut BTreeMap<String, Batcher>, force: bool| {
+        let now = Instant::now();
+        for (name, b) in batchers.iter_mut() {
+            while !b.is_empty() && (force || b.ready(now)) {
+                let batch = b.take_batch();
+                if let Some(pool) = pools.get(name) {
+                    if pool.dispatch(batch).is_err() {
+                        break;
+                    }
+                } else {
+                    for req in batch {
+                        let _ = req.reply.send(InferenceResponse::error(
+                            req.id,
+                            format!("unknown variant {name:?}"),
+                        ));
+                    }
+                }
+            }
+        }
+    };
+
+    'outer: loop {
+        // sleep until the nearest deadline (or block if queues are empty)
+        let now = Instant::now();
+        let next_deadline = batchers
+            .values()
+            .filter_map(|b| b.time_to_deadline(now))
+            .min();
+
+        let ctrl = match next_deadline {
+            None => rx.recv().ok(),
+            Some(d) => match rx.recv_timeout(d.max(Duration::from_micros(10))) {
+                Ok(c) => Some(c),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break 'outer,
+            },
+        };
+
+        match ctrl {
+            Some(Control::Request(req)) => {
+                match batchers.get_mut(&req.variant) {
+                    Some(b) => b.push(req),
+                    None => {
+                        let _ = req.reply.send(InferenceResponse::error(
+                            req.id,
+                            format!("unknown variant {:?}", req.variant),
+                        ));
+                    }
+                }
+            }
+            Some(Control::Shutdown) => {
+                flush_ready(&mut batchers, true);
+                break 'outer;
+            }
+            None => {} // deadline tick
+        }
+        flush_ready(&mut batchers, false);
+    }
+
+    pools.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_server(max_batch: usize, n_workers: usize) -> Server {
+        Server::start(ServerConfig {
+            policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+            variants: vec![(
+                "mock".to_string(),
+                Backend::Mock { n_atoms: 2 },
+                n_workers,
+            )],
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request() {
+        let s = mock_server(8, 1);
+        let r = s.infer("mock", vec![1.0; 6]).unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.energy_ev, 6.0);
+        s.shutdown();
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let s = mock_server(8, 1);
+        let r = s.infer("nope", vec![1.0; 6]).unwrap();
+        assert!(r.error.is_some());
+        s.shutdown();
+    }
+
+    #[test]
+    fn burst_gets_batched() {
+        let s = mock_server(8, 2);
+        let pendings: Vec<_> = (0..64)
+            .map(|i| s.submit("mock", vec![i as f32; 6]).unwrap())
+            .collect();
+        let mut max_batch_seen = 0;
+        for p in pendings {
+            let r = p.wait_timeout(Duration::from_secs(10)).unwrap();
+            assert!(r.error.is_none());
+            max_batch_seen = max_batch_seen.max(r.batch_size);
+        }
+        assert!(max_batch_seen > 1, "burst should have produced batches > 1");
+        assert!(max_batch_seen <= 8);
+        let m = s.metrics();
+        assert_eq!(m.completed, 64);
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let s = mock_server(1000, 1); // huge batch so nothing flushes by size
+        let p = s.submit("mock", vec![2.0; 6]).unwrap();
+        // don't wait for the deadline; shutdown must flush
+        s.shutdown();
+        let r = p.wait_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.energy_ev, 12.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Complexity cost model (S13): Table I — per-layer asymptotic cost with
+//! and without quantisation.
+//!
+//! C_full is the per-layer op/byte count in FP32; C_quant = rho_k * C_full
+//! with rho_k = k/32 (Eq. 11). Quantisation changes constant factors only,
+//! never the scaling in n, <N>, F or l_max — the bench sweeps model sizes
+//! and verifies the measured byte traffic follows these curves.
+
+/// Architectures compared in Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    PaiNN,
+    SpookyNet,
+    NequIP,
+    So3krates,
+}
+
+impl Arch {
+    pub const ALL: [Arch; 4] = [Arch::PaiNN, Arch::SpookyNet, Arch::NequIP, Arch::So3krates];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arch::PaiNN => "PaiNN",
+            Arch::SpookyNet => "SpookyNet",
+            Arch::NequIP => "NequIP",
+            Arch::So3krates => "So3krates",
+        }
+    }
+
+    /// l_max used in the paper's Table I row.
+    pub fn lmax(&self) -> u32 {
+        match self {
+            Arch::PaiNN => 1,
+            Arch::SpookyNet => 2,
+            Arch::NequIP => 3,
+            Arch::So3krates => 1,
+        }
+    }
+
+    /// Per-layer FP32 cost (arbitrary op units), matching the Table I
+    /// asymptotic forms evaluated at concrete (n, <N>, F, l_max).
+    pub fn cost_full(&self, n: u64, avg_neighbors: u64, f: u64) -> u64 {
+        let l = self.lmax() as u64;
+        let nn = n * avg_neighbors;
+        match self {
+            // O(n <N> 4F)
+            Arch::PaiNN => nn * 4 * f,
+            // O(n <N> (l+1)^2 F)
+            Arch::SpookyNet => nn * (l + 1).pow(2) * f,
+            // O(n <N> (l+1)^6 F)
+            Arch::NequIP => nn * (l + 1).pow(6) * f,
+            // O(n <N> ((l+1)^2 + F))
+            Arch::So3krates => nn * ((l + 1).pow(2) + f),
+        }
+    }
+
+    /// k-bit cost: the constant-factor bandwidth model C_quant = rho_k C_full.
+    pub fn cost_quant(&self, n: u64, avg_neighbors: u64, f: u64, k_bits: u32) -> f64 {
+        self.cost_full(n, avg_neighbors, f) as f64 * rho(k_bits)
+    }
+}
+
+/// rho_k = k / 32 (Eq. 11).
+pub fn rho(k_bits: u32) -> f64 {
+    k_bits as f64 / 32.0
+}
+
+/// Theoretical speedup S_k = 32 / k (Eq. 11).
+pub fn speedup(k_bits: u32) -> f64 {
+    32.0 / k_bits as f64
+}
+
+/// One Table I row, formatted.
+pub fn table1_row(arch: Arch, n: u64, avg_n: u64, f: u64, k_bits: u32) -> String {
+    let cf = arch.cost_full(n, avg_n, f);
+    let cq = arch.cost_quant(n, avg_n, f, k_bits);
+    format!(
+        "{:<10} lmax={} C_full={:>12} C_quant(k={})={:>14.0} gain={:.3}",
+        arch.name(),
+        arch.lmax(),
+        cf,
+        k_bits,
+        cq,
+        cq / cf as f64
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rho_and_speedup() {
+        assert_eq!(rho(32), 1.0);
+        assert_eq!(rho(8), 0.25);
+        assert_eq!(speedup(8), 4.0);
+        assert_eq!(speedup(4), 8.0);
+    }
+
+    #[test]
+    fn nequip_dominates_at_high_lmax() {
+        // (l+1)^6 with l=3 => 4096x multiplier vs So3krates' (4 + F)
+        let (n, nb, f) = (24, 12, 32);
+        let c_so3 = Arch::So3krates.cost_full(n, nb, f);
+        let c_neq = Arch::NequIP.cost_full(n, nb, f);
+        assert!(c_neq > 50 * c_so3, "NequIP {c_neq} vs So3krates {c_so3}");
+    }
+
+    #[test]
+    fn quant_preserves_scaling() {
+        // doubling n doubles both C_full and C_quant (constant-factor claim)
+        for arch in Arch::ALL {
+            let c1 = arch.cost_full(10, 8, 32);
+            let c2 = arch.cost_full(20, 8, 32);
+            assert_eq!(c2, 2 * c1);
+            let q1 = arch.cost_quant(10, 8, 32, 8);
+            let q2 = arch.cost_quant(20, 8, 32, 8);
+            assert!((q2 / q1 - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn quant_gain_is_rho() {
+        for arch in Arch::ALL {
+            let cf = arch.cost_full(24, 12, 32) as f64;
+            let cq = arch.cost_quant(24, 12, 32, 8);
+            assert!((cq / cf - 0.25).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! SO(3) geometry substrate (S1, Rust side).
+//!
+//! 3-vectors, 3x3 matrices, rotations and the spherical helpers the MD
+//! engine, LEE harness and quantized codebooks share. f64 throughout —
+//! the integrator needs the headroom; PJRT boundaries convert to f32.
+
+/// 3-vector of f64.
+pub type Vec3 = [f64; 3];
+/// Row-major 3x3 matrix.
+pub type Mat3 = [[f64; 3]; 3];
+
+pub fn add(a: Vec3, b: Vec3) -> Vec3 {
+    [a[0] + b[0], a[1] + b[1], a[2] + b[2]]
+}
+
+pub fn sub(a: Vec3, b: Vec3) -> Vec3 {
+    [a[0] - b[0], a[1] - b[1], a[2] - b[2]]
+}
+
+pub fn scale(a: Vec3, s: f64) -> Vec3 {
+    [a[0] * s, a[1] * s, a[2] * s]
+}
+
+pub fn dot(a: Vec3, b: Vec3) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2]
+}
+
+pub fn cross(a: Vec3, b: Vec3) -> Vec3 {
+    [
+        a[1] * b[2] - a[2] * b[1],
+        a[2] * b[0] - a[0] * b[2],
+        a[0] * b[1] - a[1] * b[0],
+    ]
+}
+
+pub fn norm(a: Vec3) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn normalize(a: Vec3) -> Vec3 {
+    let n = norm(a).max(1e-300);
+    scale(a, 1.0 / n)
+}
+
+/// Matrix-vector product `m @ v`.
+pub fn matvec(m: &Mat3, v: Vec3) -> Vec3 {
+    [
+        m[0][0] * v[0] + m[0][1] * v[1] + m[0][2] * v[2],
+        m[1][0] * v[0] + m[1][1] * v[1] + m[1][2] * v[2],
+        m[2][0] * v[0] + m[2][1] * v[1] + m[2][2] * v[2],
+    ]
+}
+
+/// Transpose.
+pub fn transpose(m: &Mat3) -> Mat3 {
+    let mut t = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            t[i][j] = m[j][i];
+        }
+    }
+    t
+}
+
+/// Matrix product `a @ b`.
+pub fn matmul(a: &Mat3, b: &Mat3) -> Mat3 {
+    let mut c = [[0.0; 3]; 3];
+    for i in 0..3 {
+        for j in 0..3 {
+            for k in 0..3 {
+                c[i][j] += a[i][k] * b[k][j];
+            }
+        }
+    }
+    c
+}
+
+/// Rodrigues rotation about `axis` (need not be unit) by `angle` radians.
+pub fn rotation_axis_angle(axis: Vec3, angle: f64) -> Mat3 {
+    let u = normalize(axis);
+    let (s, c) = angle.sin_cos();
+    let omc = 1.0 - c;
+    let (x, y, z) = (u[0], u[1], u[2]);
+    [
+        [c + x * x * omc, x * y * omc - z * s, x * z * omc + y * s],
+        [y * x * omc + z * s, c + y * y * omc, y * z * omc - x * s],
+        [z * x * omc - y * s, z * y * omc + x * s, c + z * z * omc],
+    ]
+}
+
+/// Geodesic angle between two unit vectors.
+pub fn geodesic_angle(u: Vec3, v: Vec3) -> f64 {
+    dot(u, v).clamp(-1.0, 1.0).acos()
+}
+
+/// Is `m` within `tol` of being a proper rotation (orthogonal, det +1)?
+pub fn is_rotation(m: &Mat3, tol: f64) -> bool {
+    let t = transpose(m);
+    let p = matmul(m, &t);
+    for i in 0..3 {
+        for j in 0..3 {
+            let want = if i == j { 1.0 } else { 0.0 };
+            if (p[i][j] - want).abs() > tol {
+                return false;
+            }
+        }
+    }
+    (det(m) - 1.0).abs() < tol
+}
+
+pub fn det(m: &Mat3) -> f64 {
+    m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+        - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+        + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0])
+}
+
+/// Rotate a flat [n*3] f32 position buffer in place by `rot` (f64 math).
+pub fn rotate_positions_f32(positions: &mut [f32], rot: &Mat3) {
+    for chunk in positions.chunks_exact_mut(3) {
+        let v = [chunk[0] as f64, chunk[1] as f64, chunk[2] as f64];
+        let r = matvec(rot, v);
+        chunk[0] = r[0] as f32;
+        chunk[1] = r[1] as f32;
+        chunk[2] = r[2] as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn axis_angle_basics() {
+        // 90 deg about z maps x->y
+        let r = rotation_axis_angle([0.0, 0.0, 1.0], std::f64::consts::FRAC_PI_2);
+        let v = matvec(&r, [1.0, 0.0, 0.0]);
+        assert!((v[0]).abs() < 1e-12 && (v[1] - 1.0).abs() < 1e-12);
+        assert!(is_rotation(&r, 1e-12));
+    }
+
+    #[test]
+    fn random_rotations_are_rotations() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let r = rng.rotation();
+            assert!(is_rotation(&r, 1e-9));
+        }
+    }
+
+    #[test]
+    fn cross_is_orthogonal() {
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let a = rng.unit_vec();
+            let b = rng.unit_vec();
+            let c = cross(a, b);
+            assert!(dot(a, c).abs() < 1e-12);
+            assert!(dot(b, c).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_lengths_f32() {
+        let mut rng = Rng::new(1);
+        let rot = rng.rotation();
+        let mut pos: Vec<f32> = (0..30).map(|i| (i as f32) * 0.37 - 4.0).collect();
+        let before: Vec<f64> = pos
+            .chunks_exact(3)
+            .map(|c| (c[0] as f64).hypot(c[1] as f64).hypot(c[2] as f64))
+            .collect();
+        rotate_positions_f32(&mut pos, &rot);
+        let after: Vec<f64> = pos
+            .chunks_exact(3)
+            .map(|c| (c[0] as f64).hypot(c[1] as f64).hypot(c[2] as f64))
+            .collect();
+        for (b, a) in before.iter().zip(&after) {
+            assert!((b - a).abs() < 1e-4);
+        }
+    }
+}

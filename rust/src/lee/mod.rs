@@ -1,0 +1,142 @@
+//! LEE harness (S12): Local Equivariance Error over compiled models (Eq. 1).
+//!
+//! Measures E_R[ LEE(f; G, R) ] with Haar-uniform rotations against any
+//! [`ForceProvider`] — this is the Rust-side Table III generator, run on
+//! the *deployed* PJRT artifacts rather than the python training graph.
+
+use anyhow::Result;
+
+use crate::geometry::{matvec, Mat3};
+use crate::md::ForceProvider;
+use crate::util::prng::Rng;
+
+/// Per-rotation LEE on forces: mean_i || f(R r)_i - R f(r)_i ||, eV/A.
+pub fn force_lee_once(
+    provider: &mut dyn ForceProvider,
+    positions: &[f64],
+    rot: &Mat3,
+) -> Result<f64> {
+    let (_, f0) = provider.energy_forces(positions)?;
+    let mut rp = positions.to_vec();
+    for c in rp.chunks_exact_mut(3) {
+        let v = matvec(rot, [c[0], c[1], c[2]]);
+        c.copy_from_slice(&v);
+    }
+    let (_, fr) = provider.energy_forces(&rp)?;
+    let n = positions.len() / 3;
+    let mut total = 0.0;
+    for i in 0..n {
+        let want = matvec(rot, [f0[3 * i], f0[3 * i + 1], f0[3 * i + 2]]);
+        let dx = fr[3 * i] - want[0];
+        let dy = fr[3 * i + 1] - want[1];
+        let dz = fr[3 * i + 2] - want[2];
+        total += (dx * dx + dy * dy + dz * dz).sqrt();
+    }
+    Ok(total / n as f64)
+}
+
+/// Energy-invariance error |E(R r) - E(r)| (the scalar-output LEE term).
+pub fn energy_invariance_once(
+    provider: &mut dyn ForceProvider,
+    positions: &[f64],
+    rot: &Mat3,
+) -> Result<f64> {
+    let (e0, _) = provider.energy_forces(positions)?;
+    let mut rp = positions.to_vec();
+    for c in rp.chunks_exact_mut(3) {
+        let v = matvec(rot, [c[0], c[1], c[2]]);
+        c.copy_from_slice(&v);
+    }
+    let (er, _) = provider.energy_forces(&rp)?;
+    Ok((er - e0).abs())
+}
+
+/// Aggregated LEE statistics over rotations (and optionally configurations).
+#[derive(Debug, Clone)]
+pub struct LeeReport {
+    /// mean force LEE, meV/A (the Table III number)
+    pub force_lee_mev_a: f64,
+    pub force_lee_max_mev_a: f64,
+    /// mean |E(Rr)-E(r)|, meV
+    pub energy_inv_mev: f64,
+    pub n_rotations: usize,
+}
+
+/// E_R[LEE] over `n_rotations` Haar rotations at fixed configuration.
+pub fn measure_lee(
+    provider: &mut dyn ForceProvider,
+    positions: &[f64],
+    n_rotations: usize,
+    seed: u64,
+) -> Result<LeeReport> {
+    let mut rng = Rng::new(seed);
+    let mut sum = 0.0;
+    let mut max: f64 = 0.0;
+    let mut esum = 0.0;
+    for _ in 0..n_rotations {
+        let rot = rng.rotation();
+        let lee = force_lee_once(provider, positions, &rot)?;
+        sum += lee;
+        max = max.max(lee);
+        esum += energy_invariance_once(provider, positions, &rot)?;
+    }
+    Ok(LeeReport {
+        force_lee_mev_a: sum / n_rotations as f64 * 1000.0,
+        force_lee_max_mev_a: max * 1000.0,
+        energy_inv_mev: esum / n_rotations as f64 * 1000.0,
+        n_rotations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::{ClassicalProvider, ForceProvider};
+    use crate::molecule::Molecule;
+
+    #[test]
+    fn classical_oracle_has_zero_lee() {
+        let m = Molecule::azobenzene_builtin();
+        let mut p = ClassicalProvider { ff: m.ff.clone() };
+        let rep = measure_lee(&mut p, &m.positions, 8, 1).unwrap();
+        assert!(rep.force_lee_mev_a < 1e-6, "oracle LEE = {}", rep.force_lee_mev_a);
+        assert!(rep.energy_inv_mev < 1e-6);
+    }
+
+    /// A deliberately equivariance-breaking provider: quantises forces on a
+    /// fixed Cartesian grid (the naive-INT8 failure mode in miniature).
+    struct GridQuantProvider {
+        inner: ClassicalProvider,
+        step: f64,
+    }
+
+    impl ForceProvider for GridQuantProvider {
+        fn energy_forces(&mut self, positions: &[f64]) -> anyhow::Result<(f64, Vec<f64>)> {
+            let (e, mut f) = self.inner.energy_forces(positions)?;
+            for v in f.iter_mut() {
+                *v = (*v / self.step).round() * self.step;
+            }
+            Ok((e, f))
+        }
+    }
+
+    #[test]
+    fn grid_quantisation_shows_nonzero_lee() {
+        let m = Molecule::azobenzene_builtin();
+        let mut p = GridQuantProvider {
+            inner: ClassicalProvider { ff: m.ff.clone() },
+            step: 0.05,
+        };
+        // perturb so forces land off-grid
+        let mut r = m.positions.clone();
+        for (i, x) in r.iter_mut().enumerate() {
+            *x += 0.01 * ((i * 2654435761) % 97) as f64 / 97.0;
+        }
+        let rep = measure_lee(&mut p, &r, 8, 2).unwrap();
+        assert!(
+            rep.force_lee_mev_a > 1.0,
+            "grid quantisation should break equivariance, got {}",
+            rep.force_lee_mev_a
+        );
+    }
+}

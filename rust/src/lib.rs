@@ -1,0 +1,47 @@
+//! # gaq-md — Geometric-Aware Quantization for SO(3)-Equivariant GNNs
+//!
+//! Rust L3 of the three-layer reproduction of *"Preserving Continuous
+//! Symmetry in Discrete Spaces: Geometric-Aware Quantization for
+//! SO(3)-Equivariant GNNs"*: a serving coordinator + molecular-dynamics
+//! engine that executes AOT-compiled JAX/Pallas force fields through the
+//! PJRT C API. Python runs only at build time (`make artifacts`); this
+//! crate is self-contained afterwards.
+//!
+//! Layer map (see DESIGN.md):
+//! * [`runtime`] — PJRT engine, artifact manifest, compiled force fields
+//! * [`coordinator`] — request router, dynamic batcher, serving metrics
+//! * [`md`] — NVE/NVT integrators, classical oracle, drift tracking (Fig. 3)
+//! * [`quant`] — packed INT4/INT8 images, integer GEMMs, S² codebooks (Table IV)
+//! * [`lee`] — Local Equivariance Error harness (Table III)
+//! * [`costmodel`] — Table I complexity model
+//! * [`geometry`], [`molecule`], [`util`] — shared substrates
+
+pub mod coordinator;
+pub mod costmodel;
+pub mod geometry;
+pub mod lee;
+pub mod md;
+pub mod molecule;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Default artifacts directory (relative to the repo root).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";
+
+/// Resolve the artifacts directory: explicit flag > GAQ_ARTIFACTS env >
+/// ./artifacts > ./artifacts_smoke (CI fallback).
+pub fn resolve_artifacts_dir(explicit: Option<&str>) -> String {
+    if let Some(d) = explicit {
+        return d.to_string();
+    }
+    if let Ok(d) = std::env::var("GAQ_ARTIFACTS") {
+        return d;
+    }
+    for cand in [DEFAULT_ARTIFACTS, "artifacts_smoke"] {
+        if std::path::Path::new(cand).join("manifest.json").exists() {
+            return cand.to_string();
+        }
+    }
+    DEFAULT_ARTIFACTS.to_string()
+}

@@ -1,0 +1,328 @@
+//! gaq-md CLI — leader entrypoint for the serving/MD system.
+//!
+//! ```text
+//! gaq-md info     [--artifacts DIR]
+//! gaq-md predict  [--artifacts DIR] [--variant V] [--perturb SIGMA] [--seed S]
+//! gaq-md md       [--artifacts DIR] [--variant V] [--steps N] [--dt FS]
+//!                 [--temperature K] [--equil N] [--report-every N]
+//! gaq-md serve    [--artifacts DIR] [--variants a,b] [--workers N]
+//!                 [--requests N] [--max-batch B] [--max-wait-us U]
+//! gaq-md lee      [--artifacts DIR] [--variants a,b] [--rotations N]
+//! ```
+//!
+//! All experiment tables/figures have dedicated binaries under examples/
+//! and benches/; this CLI is the operational front-end.
+
+use anyhow::{bail, Context, Result};
+use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use gaq_md::md::integrator::MdState;
+use gaq_md::md::{integrator, ForceProvider};
+use gaq_md::runtime::{self, Manifest};
+use gaq_md::util::cli::Args;
+use gaq_md::util::prng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match run(cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "info" => cmd_info(args),
+        "predict" => cmd_predict(args),
+        "md" => cmd_md(args),
+        "serve" => cmd_serve(args),
+        "lee" => cmd_lee(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?}; see `gaq-md help`"),
+    }
+}
+
+const HELP: &str = "\
+gaq-md — Geometric-Aware Quantization for SO(3)-equivariant GNNs (L3 runtime)
+
+USAGE:
+  gaq-md <info|predict|md|serve|lee|help> [--options]
+
+SUBCOMMANDS:
+  info      show manifest: molecule, variants, training metrics
+  predict   single energy/force inference on the reference geometry
+  md        NVE molecular dynamics with a compiled quantized force field
+  serve     run the batching server against a synthetic request load
+  lee       measure Local Equivariance Error of deployed variants
+
+COMMON OPTIONS:
+  --artifacts DIR    artifact directory (default: ./artifacts, env GAQ_ARTIFACTS)
+  --variant NAME     model variant (default: gaq_w4a8)
+";
+
+fn artifacts_dir(args: &Args) -> String {
+    gaq_md::resolve_artifacts_dir(args.get("artifacts"))
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)
+        .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts` first)"))?;
+    println!("artifacts: {dir}");
+    println!(
+        "molecule: {} ({} atoms), cutoff {:.1} A, model F={} layers={}",
+        m.molecule.name,
+        m.molecule.n_atoms(),
+        m.cutoff,
+        m.model_f,
+        m.model_layers
+    );
+    println!(
+        "\n{:<14} {:>5} {:>9} {:>10} {:>9}  {}",
+        "variant", "W/A", "E-MAE", "F-MAE", "LEE", "stable"
+    );
+    for (name, v) in &m.variants {
+        println!(
+            "{:<14} {:>2}/{:<2} {:>9.2} {:>10.2} {:>9.3}  {}",
+            name,
+            v.w_bits,
+            v.a_bits,
+            v.metrics.e_mae_mev,
+            v.metrics.f_mae_mev_a,
+            v.metrics.lee_mev_a,
+            if v.metrics.stable {
+                "yes"
+            } else if v.metrics.diverged {
+                "DIVERGED"
+            } else {
+                "no"
+            },
+        );
+    }
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.get_or("variant", "gaq_w4a8");
+    let (manifest, _engine, ff) = runtime::load_variant(&dir, variant)?;
+
+    let mut pos: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
+    let sigma = args.get_f64("perturb", 0.0);
+    if sigma > 0.0 {
+        let mut rng = Rng::new(args.get_u64("seed", 0));
+        for p in pos.iter_mut() {
+            *p += (sigma * rng.gaussian()) as f32;
+        }
+    }
+
+    let t = std::time::Instant::now();
+    let (e, forces) = ff.energy_forces_f32(&pos)?;
+    let dt = t.elapsed();
+    println!("variant={variant} E = {e:.6} eV   ({dt:?})");
+    let n = manifest.molecule.n_atoms();
+    for i in 0..n.min(8) {
+        println!(
+            "  atom {:2} (Z={:2}): F = [{:+9.4}, {:+9.4}, {:+9.4}] eV/A",
+            i,
+            manifest.molecule.numbers[i],
+            forces[3 * i],
+            forces[3 * i + 1],
+            forces[3 * i + 2]
+        );
+    }
+    if n > 8 {
+        println!("  ... {} more atoms", n - 8);
+    }
+    Ok(())
+}
+
+fn cmd_md(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.get_or("variant", "gaq_w4a8").to_string();
+    let steps = args.get_usize("steps", 2000);
+    let dt = args.get_f64("dt", 0.5);
+    let temp = args.get_f64("temperature", 300.0);
+    let equil = args.get_usize("equil", 200);
+    let report_every = args.get_usize("report-every", 500);
+    let seed = args.get_u64("seed", 0);
+
+    let (manifest, _engine, ff) = runtime::load_variant(&dir, &variant)?;
+    let mol = &manifest.molecule;
+    let mut provider = runtime::ModelForceProvider::new(ff);
+
+    let mut state = MdState::new(mol.positions.clone(), mol.masses.clone());
+    let mut rng = Rng::new(seed);
+    state.thermalize(temp, &mut rng);
+
+    println!(
+        "NVE MD: {} | {} atoms | dt={dt} fs | {steps} steps ({} ps) | T0={temp} K",
+        provider.label(),
+        mol.n_atoms(),
+        steps as f64 * dt / 1000.0
+    );
+
+    // Langevin equilibration
+    let (_, mut forces) = provider.energy_forces(&state.positions)?;
+    for _ in 0..equil {
+        let (_, f) =
+            integrator::langevin_step(&mut state, &forces, dt, 0.02, temp, &mut rng, &mut provider)?;
+        forces = f;
+    }
+    state.remove_com_velocity();
+
+    // NVE production
+    let mut tracker = gaq_md::md::drift::DriftTracker::new(mol.n_atoms());
+    let (pe0, f0) = provider.energy_forces(&state.positions)?;
+    forces = f0;
+    tracker.record(0.0, pe0 + state.kinetic_energy(), state.temperature());
+
+    let t_start = std::time::Instant::now();
+    for step in 1..=steps {
+        let (pe, f) = integrator::verlet_step(&mut state, &forces, dt, &mut provider)?;
+        forces = f;
+        let etot = pe + state.kinetic_energy();
+        tracker.record(state.time_fs, etot, state.temperature());
+        if tracker.exploded() {
+            println!(
+                "  step {step}: EXPLODED (E={etot:.3} eV, T={:.0} K)",
+                state.temperature()
+            );
+            break;
+        }
+        if step % report_every == 0 {
+            println!(
+                "  step {step:6} t={:8.1} fs  E_tot={etot:+10.5} eV  T={:6.1} K",
+                state.time_fs,
+                state.temperature()
+            );
+        }
+    }
+    let wall = t_start.elapsed();
+
+    let rep = tracker.report();
+    println!(
+        "\ndrift = {:+.4} meV/atom/ps | max excursion {:.3} meV/atom | rms fluct {:.3} meV/atom | exploded: {}",
+        rep.drift_mev_atom_ps, rep.max_excursion_mev_atom, rep.rms_fluct_mev_atom, rep.exploded
+    );
+    println!(
+        "performance: {:.1} steps/s ({:.2} ms/step)",
+        rep.steps as f64 / wall.as_secs_f64(),
+        wall.as_secs_f64() * 1000.0 / rep.steps.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variants: Vec<String> = args
+        .get_or("variants", "fp32,gaq_w4a8")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let workers = args.get_usize("workers", 2);
+    let n_requests = args.get_usize("requests", 256);
+    let max_batch = args.get_usize("max-batch", 8);
+    let max_wait_us = args.get_u64("max-wait-us", 500);
+
+    let manifest = Manifest::load(&dir)?;
+    for v in &variants {
+        manifest.variant(v)?;
+    }
+
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_micros(max_wait_us),
+        },
+        variants: variants
+            .iter()
+            .map(|v| {
+                (
+                    v.clone(),
+                    Backend::Pjrt { artifacts_dir: dir.clone(), variant: v.clone() },
+                    workers,
+                )
+            })
+            .collect(),
+    })?;
+
+    println!("server up: variants={variants:?} workers/variant={workers} max_batch={max_batch}");
+
+    // synthetic online load: perturbed reference geometries
+    let base: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
+    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let mut pos = base.clone();
+        for p in pos.iter_mut() {
+            *p += (0.02 * rng.gaussian()) as f32;
+        }
+        let v = &variants[i % variants.len()];
+        pending.push(server.submit(v, pos)?);
+    }
+    let mut errors = 0;
+    for p in pending {
+        let r = p.wait_timeout(std::time::Duration::from_secs(300))?;
+        if r.error.is_some() {
+            errors += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = server.metrics();
+    println!("completed {n_requests} requests in {wall:?} ({errors} errors)");
+    println!("{}", m.report());
+    println!("end-to-end throughput: {:.1} req/s", n_requests as f64 / wall.as_secs_f64());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_lee(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variants: Vec<String> = args
+        .get_or("variants", "fp32,naive_int8,degree_quant,gaq_w4a8")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let n_rot = args.get_usize("rotations", 16);
+
+    let manifest = Manifest::load(&dir)?;
+    println!("{:<14} {:>12} {:>12} {:>12}", "variant", "LEE meV/A", "max meV/A", "E-inv meV");
+    for vname in &variants {
+        let v = match manifest.variant(vname) {
+            Ok(v) => v,
+            Err(_) => {
+                println!("{vname:<14} (not in manifest, skipped)");
+                continue;
+            }
+        };
+        let engine = runtime::Engine::cpu()?;
+        let ff = std::sync::Arc::new(runtime::CompiledForceField::load(
+            &engine,
+            v,
+            manifest.molecule.n_atoms(),
+        )?);
+        let mut provider = runtime::ModelForceProvider::new(ff);
+        let rep = gaq_md::lee::measure_lee(
+            &mut provider,
+            &manifest.molecule.positions,
+            n_rot,
+            args.get_u64("seed", 0),
+        )?;
+        println!(
+            "{:<14} {:>12.4} {:>12.4} {:>12.4}",
+            vname, rep.force_lee_mev_a, rep.force_lee_max_mev_a, rep.energy_inv_mev
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,295 @@
+//! Rust port of the classical oracle potential (S10), with analytic forces.
+//!
+//! Mirrors python/compile/potential.py term-for-term: harmonic bonds,
+//! harmonic angles, cosine torsions, LJ non-bonded. Used to validate the
+//! integrator independently of PJRT (tests assert NVE conservation on the
+//! analytic FF) and as an in-process baseline `ForceProvider`.
+
+use crate::geometry::{cross, dot, norm, scale, sub, Vec3};
+use crate::molecule::ForceField;
+
+fn get(r: &[f64], i: usize) -> Vec3 {
+    [r[3 * i], r[3 * i + 1], r[3 * i + 2]]
+}
+
+fn add_force(f: &mut [f64], i: usize, v: Vec3) {
+    f[3 * i] += v[0];
+    f[3 * i + 1] += v[1];
+    f[3 * i + 2] += v[2];
+}
+
+/// Energy and forces of the classical FF; positions flat [n*3] Angstrom,
+/// output (energy eV, forces eV/A flat [n*3]).
+pub fn energy_forces(ff: &ForceField, r: &[f64]) -> (f64, Vec<f64>) {
+    let mut e = 0.0;
+    let mut f = vec![0.0; r.len()];
+
+    // --- bonds: k (d - r0)^2 ------------------------------------------------
+    for (b, (&r0, &k)) in ff.bonds.iter().zip(ff.bond_r0.iter().zip(&ff.bond_k)) {
+        let (i, j) = (b[0], b[1]);
+        let d = sub(get(r, i), get(r, j));
+        let len = norm(d).max(1e-12);
+        e += k * (len - r0) * (len - r0);
+        // dE/d(len) = 2k(len - r0); force on i = -dE/dri
+        let coef = -2.0 * k * (len - r0) / len;
+        add_force(&mut f, i, scale(d, coef));
+        add_force(&mut f, j, scale(d, -coef));
+    }
+
+    // --- angles: k (theta - t0)^2 -------------------------------------------
+    for (a, (&t0, &k)) in ff.angles.iter().zip(ff.angle_t0.iter().zip(&ff.angle_k)) {
+        let (i, j, kk) = (a[0], a[1], a[2]);
+        let u = sub(get(r, i), get(r, j));
+        let v = sub(get(r, kk), get(r, j));
+        let nu = norm(u).max(1e-12);
+        let nv = norm(v).max(1e-12);
+        let cos = (dot(u, v) / (nu * nv)).clamp(-1.0 + 1e-10, 1.0 - 1e-10);
+        let theta = cos.acos();
+        e += k * (theta - t0) * (theta - t0);
+        // dtheta/dcos = -1/sin(theta)
+        let sin = (1.0 - cos * cos).sqrt().max(1e-10);
+        let pref = 2.0 * k * (theta - t0) / sin; // = -dE/dcos
+        // dcos/du = v/(nu nv) - cos * u / nu^2, similarly for v
+        let dcdu = sub(scale(v, 1.0 / (nu * nv)), scale(u, cos / (nu * nu)));
+        let dcdv = sub(scale(u, 1.0 / (nu * nv)), scale(v, cos / (nv * nv)));
+        let fi = scale(dcdu, pref);
+        let fk = scale(dcdv, pref);
+        add_force(&mut f, i, fi);
+        add_force(&mut f, kk, fk);
+        add_force(&mut f, j, scale(crate::geometry::add(fi, fk), -1.0));
+    }
+
+    // --- torsions: k (1 - cos(phi - phi0)) -----------------------------------
+    // forces via central differences on the 12 coordinates (the term count
+    // is tiny — azobenzene has exactly one — and FD keeps the code simple
+    // and exactly matches the energy term).
+    for (t, (&p0, &k)) in ff.torsions.iter().zip(ff.torsion_phi0.iter().zip(&ff.torsion_k)) {
+        let phi = dihedral(r, t[0], t[1], t[2], t[3]);
+        e += k * (1.0 - (phi - p0).cos());
+        let h = 1e-6;
+        let mut rr = r.to_vec();
+        for &atom in t {
+            for ax in 0..3 {
+                let idx = 3 * atom + ax;
+                let orig = rr[idx];
+                rr[idx] = orig + h;
+                let ep = k * (1.0 - (dihedral(&rr, t[0], t[1], t[2], t[3]) - p0).cos());
+                rr[idx] = orig - h;
+                let em = k * (1.0 - (dihedral(&rr, t[0], t[1], t[2], t[3]) - p0).cos());
+                rr[idx] = orig;
+                f[idx] -= (ep - em) / (2.0 * h);
+            }
+        }
+    }
+
+    // --- non-bonded LJ --------------------------------------------------------
+    for (p, (&eps, &sig)) in ff.nb_pairs.iter().zip(ff.nb_eps.iter().zip(&ff.nb_sigma)) {
+        let (i, j) = (p[0], p[1]);
+        let d = sub(get(r, i), get(r, j));
+        let len = norm(d).max(1e-9);
+        let sr6 = (sig / len).powi(6);
+        e += 4.0 * eps * (sr6 * sr6 - sr6);
+        // dE/dlen = 4 eps (-12 sr12 + 6 sr6)/len
+        let coef = -4.0 * eps * (-12.0 * sr6 * sr6 + 6.0 * sr6) / (len * len);
+        add_force(&mut f, i, scale(d, coef));
+        add_force(&mut f, j, scale(d, -coef));
+    }
+
+    (e, f)
+}
+
+/// Signed dihedral angle i-j-k-l (radians), matching python `_dihedral`.
+pub fn dihedral(r: &[f64], i: usize, j: usize, k: usize, l: usize) -> f64 {
+    let b1 = sub(get(r, j), get(r, i));
+    let b2 = sub(get(r, k), get(r, j));
+    let b3 = sub(get(r, l), get(r, k));
+    let n1 = cross(b1, b2);
+    let n2 = cross(b2, b3);
+    let m1 = cross(n1, scale(b2, 1.0 / norm(b2).max(1e-12)));
+    let x = dot(n1, n2);
+    let y = dot(m1, n2);
+    y.atan2(x + 1e-12)
+}
+
+/// Build FF parameters from a reference geometry (mirror of python
+/// `build_force_field`): equilibrium values measured on the input.
+pub fn parameterize(
+    positions: &[f64],
+    bonds: &[[usize; 2]],
+    torsions: &[[usize; 4]],
+    bond_k: f64,
+    angle_k: f64,
+    torsion_k: f64,
+    nb_eps: f64,
+) -> ForceField {
+    let n = positions.len() / 3;
+    let mut bset: Vec<[usize; 2]> = bonds
+        .iter()
+        .map(|b| if b[0] < b[1] { [b[0], b[1]] } else { [b[1], b[0]] })
+        .collect();
+    bset.sort();
+    bset.dedup();
+
+    let mut adj = vec![Vec::new(); n];
+    for b in &bset {
+        adj[b[0]].push(b[1]);
+        adj[b[1]].push(b[0]);
+    }
+
+    let mut angles = Vec::new();
+    for j in 0..n {
+        let mut nb = adj[j].clone();
+        nb.sort();
+        for a in 0..nb.len() {
+            for b in a + 1..nb.len() {
+                angles.push([nb[a], j, nb[b]]);
+            }
+        }
+    }
+
+    // BFS graph distance capped at 3
+    let mut dist = vec![vec![99usize; n]; n];
+    for s in 0..n {
+        dist[s][s] = 0;
+        let mut queue = std::collections::VecDeque::from([s]);
+        while let Some(u) = queue.pop_front() {
+            if dist[s][u] >= 3 {
+                continue;
+            }
+            for &w in &adj[u] {
+                if dist[s][w] > dist[s][u] + 1 {
+                    dist[s][w] = dist[s][u] + 1;
+                    queue.push_back(w);
+                }
+            }
+        }
+    }
+    let mut nb_pairs = Vec::new();
+    for i in 0..n {
+        for j in i + 1..n {
+            if dist[i][j] > 2 {
+                nb_pairs.push([i, j]);
+            }
+        }
+    }
+
+    let blen = |i: usize, j: usize| norm(sub(get(positions, i), get(positions, j)));
+    let bang = |a: &[usize; 3]| {
+        let u = sub(get(positions, a[0]), get(positions, a[1]));
+        let v = sub(get(positions, a[2]), get(positions, a[1]));
+        (dot(u, v) / (norm(u) * norm(v)).max(1e-12)).clamp(-1.0, 1.0).acos()
+    };
+
+    let bond_r0: Vec<f64> = bset.iter().map(|b| blen(b[0], b[1])).collect();
+    let angle_t0: Vec<f64> = angles.iter().map(bang).collect();
+    let phi0: Vec<f64> = torsions
+        .iter()
+        .map(|t| dihedral(positions, t[0], t[1], t[2], t[3]))
+        .collect();
+    let sigma: Vec<f64> = nb_pairs
+        .iter()
+        .map(|p| blen(p[0], p[1]) * 0.95 / 2f64.powf(1.0 / 6.0))
+        .collect();
+
+    let nb_len = bset.len();
+    let ang_len = angles.len();
+    let tor_len = torsions.len();
+    let nbp_len = nb_pairs.len();
+    ForceField {
+        bonds: bset,
+        bond_r0,
+        bond_k: vec![bond_k; nb_len],
+        angles,
+        angle_t0,
+        angle_k: vec![angle_k; ang_len],
+        torsions: torsions.to_vec(),
+        torsion_phi0: phi0,
+        torsion_k: vec![torsion_k; tor_len],
+        nb_pairs,
+        nb_eps: vec![nb_eps; nbp_len],
+        nb_sigma: sigma,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::molecule::Molecule;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn forces_match_finite_difference() {
+        let m = Molecule::azobenzene_builtin();
+        let mut rng = Rng::new(1);
+        // perturb away from equilibrium so forces are non-zero
+        let mut r = m.positions.clone();
+        for x in r.iter_mut() {
+            *x += (rng.f64() - 0.5) * 0.08;
+        }
+        let (_, f) = energy_forces(&m.ff, &r);
+        let h = 1e-6;
+        for idx in (0..r.len()).step_by(7) {
+            let mut rp = r.clone();
+            rp[idx] += h;
+            let (ep, _) = energy_forces(&m.ff, &rp);
+            rp[idx] -= 2.0 * h;
+            let (em, _) = energy_forces(&m.ff, &rp);
+            let fd = -(ep - em) / (2.0 * h);
+            assert!(
+                (fd - f[idx]).abs() < 1e-4 * (1.0 + fd.abs()),
+                "coord {idx}: analytic {} vs fd {fd}",
+                f[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn equilibrium_is_near_force_free() {
+        let m = Molecule::azobenzene_builtin();
+        let (e, f) = energy_forces(&m.ff, &m.positions);
+        let fmax = f.iter().fold(0f64, |a, &v| a.max(v.abs()));
+        // LJ terms make the measured geometry only approximately stationary
+        assert!(fmax < 0.5, "fmax={fmax} e={e}");
+    }
+
+    #[test]
+    fn energy_is_rotation_invariant() {
+        let m = Molecule::azobenzene_builtin();
+        let mut rng = Rng::new(2);
+        let (e0, _) = energy_forces(&m.ff, &m.positions);
+        for _ in 0..5 {
+            let rot = rng.rotation();
+            let mut r = m.positions.clone();
+            for c in r.chunks_exact_mut(3) {
+                let v = crate::geometry::matvec(&rot, [c[0], c[1], c[2]]);
+                c.copy_from_slice(&v);
+            }
+            let (e1, _) = energy_forces(&m.ff, &r);
+            assert!((e0 - e1).abs() < 1e-9, "rotation changed energy: {e0} vs {e1}");
+        }
+    }
+
+    #[test]
+    fn forces_are_equivariant() {
+        let m = Molecule::azobenzene_builtin();
+        let mut rng = Rng::new(3);
+        let mut r = m.positions.clone();
+        for x in r.iter_mut() {
+            *x += (rng.f64() - 0.5) * 0.05;
+        }
+        let (_, f0) = energy_forces(&m.ff, &r);
+        let rot = rng.rotation();
+        let mut rr = r.clone();
+        for c in rr.chunks_exact_mut(3) {
+            let v = crate::geometry::matvec(&rot, [c[0], c[1], c[2]]);
+            c.copy_from_slice(&v);
+        }
+        let (_, fr) = energy_forces(&m.ff, &rr);
+        for i in 0..f0.len() / 3 {
+            let want = crate::geometry::matvec(&rot, [f0[3 * i], f0[3 * i + 1], f0[3 * i + 2]]);
+            for ax in 0..3 {
+                assert!((fr[3 * i + ax] - want[ax]).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! Energy-drift tracking (Fig. 3): total-energy trace + drift-rate fit.
+//!
+//! Reports the paper's stability metric — drift in meV/atom/ps from a
+//! least-squares line through the total-energy trace — plus an explosion
+//! detector (energy or coordinates diverging).
+
+/// Accumulates (t, E_total) samples during an NVE run.
+#[derive(Debug, Default, Clone)]
+pub struct DriftTracker {
+    pub times_fs: Vec<f64>,
+    pub e_total: Vec<f64>,
+    pub temperature: Vec<f64>,
+    n_atoms: usize,
+}
+
+/// Summary of an NVE trajectory's energy behaviour.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// least-squares slope, meV/atom/ps
+    pub drift_mev_atom_ps: f64,
+    /// max |E(t) - E(0)| over the run, meV/atom
+    pub max_excursion_mev_atom: f64,
+    /// RMS fluctuation about the fit line, meV/atom
+    pub rms_fluct_mev_atom: f64,
+    pub exploded: bool,
+    pub steps: usize,
+}
+
+impl DriftTracker {
+    pub fn new(n_atoms: usize) -> Self {
+        DriftTracker { n_atoms, ..Default::default() }
+    }
+
+    pub fn record(&mut self, t_fs: f64, e_total_ev: f64, temperature_k: f64) {
+        self.times_fs.push(t_fs);
+        self.e_total.push(e_total_ev);
+        self.temperature.push(temperature_k);
+    }
+
+    /// True once the trajectory has blown up (NaN or absurd energy/T).
+    pub fn exploded(&self) -> bool {
+        match (self.e_total.last(), self.temperature.last()) {
+            (Some(&e), Some(&t)) => {
+                !e.is_finite() || !t.is_finite() || e.abs() > 1e6 || t > 1e5
+            }
+            _ => false,
+        }
+    }
+
+    /// Fit drift rate and fluctuation stats.
+    pub fn report(&self) -> DriftReport {
+        let n = self.e_total.len();
+        if n < 2 {
+            return DriftReport {
+                drift_mev_atom_ps: 0.0,
+                max_excursion_mev_atom: 0.0,
+                rms_fluct_mev_atom: 0.0,
+                exploded: self.exploded(),
+                steps: n,
+            };
+        }
+        let na = self.n_atoms.max(1) as f64;
+        // filter non-finite samples (post-explosion tail)
+        let pts: Vec<(f64, f64)> = self
+            .times_fs
+            .iter()
+            .zip(&self.e_total)
+            .filter(|(_, e)| e.is_finite())
+            .map(|(&t, &e)| (t, e))
+            .collect();
+        if pts.len() < 2 {
+            return DriftReport {
+                drift_mev_atom_ps: f64::INFINITY,
+                max_excursion_mev_atom: f64::INFINITY,
+                rms_fluct_mev_atom: f64::INFINITY,
+                exploded: true,
+                steps: n,
+            };
+        }
+        let m = pts.len() as f64;
+        let tmean = pts.iter().map(|p| p.0).sum::<f64>() / m;
+        let emean = pts.iter().map(|p| p.1).sum::<f64>() / m;
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for &(t, e) in &pts {
+            num += (t - tmean) * (e - emean);
+            den += (t - tmean) * (t - tmean);
+        }
+        let slope_ev_fs = if den > 0.0 { num / den } else { 0.0 };
+        // eV/fs -> meV/ps: *1000 mev * 1000 fs/ps
+        let drift = slope_ev_fs * 1e6 / na;
+
+        let e0 = pts[0].1;
+        let max_exc = pts
+            .iter()
+            .map(|&(_, e)| (e - e0).abs())
+            .fold(0.0f64, f64::max)
+            * 1000.0
+            / na;
+
+        let mut rss = 0.0;
+        for &(t, e) in &pts {
+            let fit = emean + slope_ev_fs * (t - tmean);
+            rss += (e - fit) * (e - fit);
+        }
+        let rms = (rss / m).sqrt() * 1000.0 / na;
+
+        DriftReport {
+            drift_mev_atom_ps: drift,
+            max_excursion_mev_atom: max_exc,
+            rms_fluct_mev_atom: rms,
+            exploded: self.exploded(),
+            steps: n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_trace_has_no_drift() {
+        let mut d = DriftTracker::new(10);
+        for i in 0..100 {
+            d.record(i as f64, 5.0, 300.0);
+        }
+        let r = d.report();
+        assert!(r.drift_mev_atom_ps.abs() < 1e-9);
+        assert!(!r.exploded);
+    }
+
+    #[test]
+    fn linear_trace_recovers_slope() {
+        let mut d = DriftTracker::new(1);
+        // 1 eV per 1000 fs = 1 meV/fs... slope in meV/atom/ps = 1e-3 eV/fs * 1e6 = 1000
+        for i in 0..500 {
+            let t = i as f64;
+            d.record(t, 1e-3 * t, 300.0);
+        }
+        let r = d.report();
+        assert!((r.drift_mev_atom_ps - 1000.0).abs() < 1.0, "{}", r.drift_mev_atom_ps);
+    }
+
+    #[test]
+    fn detects_explosion() {
+        let mut d = DriftTracker::new(5);
+        d.record(0.0, 1.0, 300.0);
+        d.record(1.0, f64::NAN, 300.0);
+        assert!(d.exploded());
+        assert!(d.report().exploded);
+    }
+}

@@ -1,0 +1,47 @@
+//! MD engine (S10): the paper's end-to-end physics validation layer.
+//!
+//! Velocity-Verlet NVE and Langevin NVT integrators driving any
+//! [`ForceProvider`] — the PJRT-compiled quantized force fields
+//! (runtime::ModelForceProvider), the classical oracle, or test stubs.
+//! Includes the energy-drift tracker behind Fig. 3.
+
+pub mod classical;
+pub mod drift;
+pub mod integrator;
+pub mod observables;
+pub mod thermostat;
+pub mod trajectory;
+
+use crate::molecule::ForceField;
+
+/// Unit conversion: (eV/Angstrom)/amu -> Angstrom/fs^2.
+pub const ACC_UNIT: f64 = 9.64853329e-3;
+/// Boltzmann constant, eV/K.
+pub const KB_EV: f64 = 8.617333262e-5;
+
+/// Anything that can evaluate a force field: the PJRT runtime, the
+/// classical oracle, or a mock. Positions/forces are flat [n*3] f64.
+pub trait ForceProvider {
+    /// (potential energy eV, forces eV/A).
+    fn energy_forces(&mut self, positions: &[f64]) -> anyhow::Result<(f64, Vec<f64>)>;
+
+    /// Human-readable tag for reports.
+    fn label(&self) -> String {
+        "force-provider".into()
+    }
+}
+
+/// The classical oracle as a ForceProvider (integrator validation).
+pub struct ClassicalProvider {
+    pub ff: ForceField,
+}
+
+impl ForceProvider for ClassicalProvider {
+    fn energy_forces(&mut self, positions: &[f64]) -> anyhow::Result<(f64, Vec<f64>)> {
+        Ok(classical::energy_forces(&self.ff, positions))
+    }
+
+    fn label(&self) -> String {
+        "classical-oracle".into()
+    }
+}

@@ -1,0 +1,182 @@
+//! Trajectory observables (S10): the physical diagnostics used alongside
+//! Fig. 3 — radial distribution function g(r), velocity autocorrelation
+//! (VACF), mean-squared displacement, and bond-length statistics.
+//!
+//! These are the quantities a practitioner checks to confirm a quantized
+//! force field produces *correct dynamics*, not merely bounded energy:
+//! symmetry breaking shows up as distorted g(r) peaks and decohered VACF
+//! long before outright explosion.
+
+/// Accumulates histogrammed pair distances into g(r).
+#[derive(Debug, Clone)]
+pub struct Rdf {
+    pub r_max: f64,
+    pub bins: Vec<f64>,
+    frames: usize,
+    n_atoms: usize,
+}
+
+impl Rdf {
+    pub fn new(r_max: f64, n_bins: usize, n_atoms: usize) -> Self {
+        Rdf { r_max, bins: vec![0.0; n_bins], frames: 0, n_atoms }
+    }
+
+    pub fn accumulate(&mut self, positions: &[f64]) {
+        let n = self.n_atoms;
+        let nb = self.bins.len();
+        let dr = self.r_max / nb as f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = positions[3 * i] - positions[3 * j];
+                let dy = positions[3 * i + 1] - positions[3 * j + 1];
+                let dz = positions[3 * i + 2] - positions[3 * j + 2];
+                let r = (dx * dx + dy * dy + dz * dz).sqrt();
+                if r < self.r_max {
+                    self.bins[(r / dr) as usize] += 2.0; // both (i,j) and (j,i)
+                }
+            }
+        }
+        self.frames += 1;
+    }
+
+    /// Normalised g(r) (gas-phase normalisation: shell volume only).
+    pub fn normalized(&self) -> Vec<(f64, f64)> {
+        let nb = self.bins.len();
+        let dr = self.r_max / nb as f64;
+        let norm = self.frames.max(1) as f64 * self.n_atoms as f64;
+        self.bins
+            .iter()
+            .enumerate()
+            .map(|(k, &c)| {
+                let r = (k as f64 + 0.5) * dr;
+                let shell = 4.0 * std::f64::consts::PI * r * r * dr;
+                (r, c / (norm * shell))
+            })
+            .collect()
+    }
+
+    /// Position of the strongest peak (A) — the first-shell bond length.
+    pub fn peak_r(&self) -> f64 {
+        self.normalized()
+            .into_iter()
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(r, _)| r)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Velocity autocorrelation function over a sliding window.
+#[derive(Debug, Clone)]
+pub struct Vacf {
+    window: usize,
+    history: Vec<Vec<f64>>,
+    acf: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl Vacf {
+    pub fn new(window: usize) -> Self {
+        Vacf { window, history: Vec::new(), acf: vec![0.0; window], counts: vec![0; window] }
+    }
+
+    pub fn accumulate(&mut self, velocities: &[f64]) {
+        self.history.push(velocities.to_vec());
+        if self.history.len() > self.window {
+            self.history.remove(0);
+        }
+        let latest = self.history.len() - 1;
+        for lag in 0..self.history.len() {
+            let v0 = &self.history[latest - lag];
+            let vt = &self.history[latest];
+            let dot: f64 = v0.iter().zip(vt).map(|(a, b)| a * b).sum();
+            self.acf[lag] += dot;
+            self.counts[lag] += 1;
+        }
+    }
+
+    /// Normalised C(t)/C(0).
+    pub fn normalized(&self) -> Vec<f64> {
+        let c0 = if self.counts[0] > 0 { self.acf[0] / self.counts[0] as f64 } else { 1.0 };
+        self.acf
+            .iter()
+            .zip(&self.counts)
+            .map(|(&a, &c)| if c > 0 && c0.abs() > 1e-30 { a / c as f64 / c0 } else { 0.0 })
+            .collect()
+    }
+}
+
+/// Mean-squared displacement from a reference frame.
+pub fn msd(reference: &[f64], positions: &[f64]) -> f64 {
+    let n = reference.len() / 3;
+    let mut s = 0.0;
+    for i in 0..reference.len() {
+        let d = positions[i] - reference[i];
+        s += d * d;
+    }
+    s / n as f64
+}
+
+/// Per-bond length statistics against the force-field equilibrium values.
+pub fn bond_deviation(
+    bonds: &[[usize; 2]],
+    r0: &[f64],
+    positions: &[f64],
+) -> (f64, f64) {
+    let mut mean = 0.0;
+    let mut max: f64 = 0.0;
+    for (b, &ref0) in bonds.iter().zip(r0) {
+        let dx = positions[3 * b[0]] - positions[3 * b[1]];
+        let dy = positions[3 * b[0] + 1] - positions[3 * b[1] + 1];
+        let dz = positions[3 * b[0] + 2] - positions[3 * b[1] + 2];
+        let d = ((dx * dx + dy * dy + dz * dz).sqrt() - ref0).abs();
+        mean += d;
+        max = max.max(d);
+    }
+    (mean / bonds.len().max(1) as f64, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rdf_finds_dimer_distance() {
+        let mut rdf = Rdf::new(5.0, 100, 2);
+        let pos = [0.0, 0.0, 0.0, 1.5, 0.0, 0.0];
+        for _ in 0..10 {
+            rdf.accumulate(&pos);
+        }
+        assert!((rdf.peak_r() - 1.5).abs() < 0.06, "peak at {}", rdf.peak_r());
+    }
+
+    #[test]
+    fn vacf_starts_at_one_and_is_bounded() {
+        let mut v = Vacf::new(8);
+        let mut vel = vec![0.0; 9];
+        for t in 0..32 {
+            for (i, x) in vel.iter_mut().enumerate() {
+                *x = ((t as f64) * 0.3 + i as f64).sin();
+            }
+            v.accumulate(&vel);
+        }
+        let c = v.normalized();
+        assert!((c[0] - 1.0).abs() < 1e-12);
+        assert!(c.iter().all(|x| x.abs() <= 1.5));
+    }
+
+    #[test]
+    fn msd_zero_at_reference() {
+        let r = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(msd(&r, &r), 0.0);
+        let mut moved = r.clone();
+        moved[0] += 3.0;
+        assert!((msd(&r, &moved) - 4.5).abs() < 1e-12); // 9/2 atoms
+    }
+
+    #[test]
+    fn bond_deviation_on_builtin() {
+        let m = crate::molecule::Molecule::azobenzene_builtin();
+        let (mean, max) = bond_deviation(&m.ff.bonds, &m.ff.bond_r0, &m.positions);
+        assert!(mean < 1e-9 && max < 1e-9, "reference geometry is the equilibrium");
+    }
+}

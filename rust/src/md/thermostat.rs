@@ -1,0 +1,111 @@
+//! Thermostats (S10): Berendsen weak coupling and stochastic velocity
+//! rescaling (Bussi–Donadio–Parrinello), complementing the Langevin
+//! integrator in `integrator.rs`. Used for gentler NVT equilibration
+//! before NVE production (Fig. 3 protocol) — Langevin's strong noise can
+//! mask model force errors that then appear abruptly in NVE.
+
+use super::integrator::MdState;
+use super::KB_EV;
+use crate::util::prng::Rng;
+
+/// Berendsen weak-coupling rescale: lambda = sqrt(1 + dt/tau (T0/T - 1)).
+pub fn berendsen_rescale(state: &mut MdState, t_target: f64, dt_fs: f64, tau_fs: f64) {
+    let t = state.temperature();
+    if t < 1e-12 {
+        return;
+    }
+    let lambda2 = 1.0 + dt_fs / tau_fs * (t_target / t - 1.0);
+    let lambda = lambda2.max(0.64).min(1.5625).sqrt(); // clamp +-25% per step
+    for v in state.velocities.iter_mut() {
+        *v *= lambda;
+    }
+}
+
+/// Bussi stochastic velocity rescaling: canonical sampling with a single
+/// global rescale. Returns the applied scale factor.
+pub fn bussi_rescale(
+    state: &mut MdState,
+    t_target: f64,
+    dt_fs: f64,
+    tau_fs: f64,
+    rng: &mut Rng,
+) -> f64 {
+    let ndof = (3 * state.n_atoms()) as f64;
+    let ke = state.kinetic_energy();
+    if ke < 1e-30 {
+        return 1.0;
+    }
+    let ke_target = 0.5 * ndof * KB_EV * t_target;
+    let c = (-dt_fs / tau_fs).exp();
+    let r1 = rng.gaussian();
+    // sum of (ndof-1) squared gaussians ~ chi^2; use gaussian approx for
+    // large ndof (72 here): mean ndof-1, var 2(ndof-1)
+    let chi = (ndof - 1.0) + (2.0 * (ndof - 1.0)).sqrt() * rng.gaussian();
+    let ratio = ke_target / (ndof * ke);
+    let alpha2 = c
+        + (1.0 - c) * ratio * (chi + r1 * r1)
+        + 2.0 * r1 * (c * (1.0 - c) * ratio).sqrt();
+    let alpha = alpha2.max(0.0).sqrt();
+    for v in state.velocities.iter_mut() {
+        *v *= alpha;
+    }
+    alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::integrator::verlet_step;
+    use crate::md::{ClassicalProvider, ForceProvider};
+    use crate::molecule::Molecule;
+
+    fn equilibrated_temp(
+        rescale: impl Fn(&mut MdState, &mut Rng),
+        steps: usize,
+    ) -> f64 {
+        let m = Molecule::azobenzene_builtin();
+        let mut provider = ClassicalProvider { ff: m.ff.clone() };
+        let mut state = MdState::new(m.positions.clone(), m.masses.clone());
+        let mut rng = Rng::new(11);
+        state.thermalize(100.0, &mut rng); // start cold, target 300
+        let (_, mut forces) = provider.energy_forces(&state.positions).unwrap();
+        let mut tacc = 0.0;
+        let mut count = 0;
+        for s in 0..steps {
+            let (_, f) = verlet_step(&mut state, &forces, 0.25, &mut provider).unwrap();
+            forces = f;
+            rescale(&mut state, &mut rng);
+            if s > steps / 2 {
+                tacc += state.temperature();
+                count += 1;
+            }
+        }
+        tacc / count as f64
+    }
+
+    #[test]
+    fn berendsen_reaches_target() {
+        let t = equilibrated_temp(|s, _| berendsen_rescale(s, 300.0, 0.25, 50.0), 4000);
+        assert!((t - 300.0).abs() < 60.0, "T = {t}");
+    }
+
+    #[test]
+    fn bussi_reaches_target() {
+        let t = equilibrated_temp(|s, r| {
+            bussi_rescale(s, 300.0, 0.25, 50.0, r);
+        }, 4000);
+        assert!((t - 300.0).abs() < 60.0, "T = {t}");
+    }
+
+    #[test]
+    fn berendsen_clamps_extreme_rescale() {
+        let m = Molecule::azobenzene_builtin();
+        let mut state = MdState::new(m.positions.clone(), m.masses.clone());
+        let mut rng = Rng::new(1);
+        state.thermalize(1.0, &mut rng); // nearly frozen, target hot
+        let ke0 = state.kinetic_energy();
+        berendsen_rescale(&mut state, 10_000.0, 0.5, 1.0);
+        let ke1 = state.kinetic_energy();
+        assert!(ke1 / ke0 < 1.6, "clamp violated: {}", ke1 / ke0);
+    }
+}

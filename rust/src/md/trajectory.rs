@@ -1,0 +1,154 @@
+//! Trajectory I/O (S10): extended-XYZ writer + reader.
+//!
+//! The MD drivers dump frames in the de-facto standard extended-XYZ
+//! format so trajectories are inspectable with standard tooling (ASE,
+//! OVITO, VMD). The reader exists for round-trip tests and for replaying
+//! recorded trajectories through the LEE harness.
+
+use std::io::{BufRead, Write};
+
+/// One trajectory frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub numbers: Vec<u32>,
+    /// flat [n*3] Angstrom
+    pub positions: Vec<f64>,
+    /// free-form key=value pairs on the comment line
+    pub comment: String,
+}
+
+fn symbol(z: u32) -> &'static str {
+    match z {
+        1 => "H",
+        6 => "C",
+        7 => "N",
+        8 => "O",
+        _ => "X",
+    }
+}
+
+fn number_of(sym: &str) -> u32 {
+    match sym {
+        "H" => 1,
+        "C" => 6,
+        "N" => 7,
+        "O" => 8,
+        _ => 0,
+    }
+}
+
+/// Streaming writer: one molecule per `write_frame` call.
+pub struct XyzWriter<W: Write> {
+    out: W,
+    pub frames: usize,
+}
+
+impl<W: Write> XyzWriter<W> {
+    pub fn new(out: W) -> Self {
+        XyzWriter { out, frames: 0 }
+    }
+
+    pub fn write_frame(
+        &mut self,
+        numbers: &[u32],
+        positions: &[f64],
+        comment: &str,
+    ) -> std::io::Result<()> {
+        assert_eq!(positions.len(), numbers.len() * 3);
+        writeln!(self.out, "{}", numbers.len())?;
+        writeln!(self.out, "{}", comment.replace('\n', " "))?;
+        for (i, &z) in numbers.iter().enumerate() {
+            writeln!(
+                self.out,
+                "{} {:.8} {:.8} {:.8}",
+                symbol(z),
+                positions[3 * i],
+                positions[3 * i + 1],
+                positions[3 * i + 2]
+            )?;
+        }
+        self.frames += 1;
+        Ok(())
+    }
+}
+
+/// Read all frames from an XYZ stream.
+pub fn read_xyz<R: BufRead>(input: R) -> std::io::Result<Vec<Frame>> {
+    let mut lines = input.lines();
+    let mut frames = Vec::new();
+    loop {
+        let Some(count_line) = lines.next() else { break };
+        let count_line = count_line?;
+        if count_line.trim().is_empty() {
+            continue;
+        }
+        let n: usize = count_line.trim().parse().map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad atom count: {e}"))
+        })?;
+        let comment = lines.next().transpose()?.unwrap_or_default();
+        let mut numbers = Vec::with_capacity(n);
+        let mut positions = Vec::with_capacity(3 * n);
+        for _ in 0..n {
+            let line = lines.next().transpose()?.ok_or_else(|| {
+                std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "truncated frame")
+            })?;
+            let mut it = line.split_whitespace();
+            let sym = it.next().unwrap_or("X");
+            numbers.push(number_of(sym));
+            for _ in 0..3 {
+                let v: f64 = it
+                    .next()
+                    .ok_or_else(|| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, "missing coord")
+                    })?
+                    .parse()
+                    .map_err(|e| {
+                        std::io::Error::new(std::io::ErrorKind::InvalidData, format!("{e}"))
+                    })?;
+                positions.push(v);
+            }
+        }
+        frames.push(Frame { numbers, positions, comment });
+    }
+    Ok(frames)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let m = crate::molecule::Molecule::azobenzene_builtin();
+        let mut buf = Vec::new();
+        {
+            let mut w = XyzWriter::new(&mut buf);
+            w.write_frame(&m.numbers, &m.positions, "t=0 e=-1.5").unwrap();
+            let mut shifted = m.positions.clone();
+            for x in shifted.iter_mut() {
+                *x += 1.0;
+            }
+            w.write_frame(&m.numbers, &shifted, "t=1").unwrap();
+            assert_eq!(w.frames, 2);
+        }
+        let frames = read_xyz(std::io::BufReader::new(&buf[..])).unwrap();
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0].numbers, m.numbers);
+        for (a, b) in frames[0].positions.iter().zip(&m.positions) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(frames[0].comment, "t=0 e=-1.5");
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let text = "3\ncomment\nC 0 0 0\n";
+        assert!(read_xyz(std::io::BufReader::new(text.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn empty_input_is_empty() {
+        let frames = read_xyz(std::io::BufReader::new(&b""[..])).unwrap();
+        assert!(frames.is_empty());
+    }
+}

@@ -1,0 +1,271 @@
+//! Molecule representation + classical force field parameters (S5/S10).
+//!
+//! Loaded from `artifacts/manifest.json` (written by python/compile/aot.py)
+//! so the Rust runtime and the Python build path agree on the exact
+//! topology, masses and oracle parameters.
+
+use crate::util::json::Json;
+
+/// Classical force-field parameters (the rMD17-substitute oracle).
+#[derive(Debug, Clone, Default)]
+pub struct ForceField {
+    pub bonds: Vec<[usize; 2]>,
+    pub bond_r0: Vec<f64>,
+    pub bond_k: Vec<f64>,
+    pub angles: Vec<[usize; 3]>,
+    pub angle_t0: Vec<f64>,
+    pub angle_k: Vec<f64>,
+    pub torsions: Vec<[usize; 4]>,
+    pub torsion_phi0: Vec<f64>,
+    pub torsion_k: Vec<f64>,
+    pub nb_pairs: Vec<[usize; 2]>,
+    pub nb_eps: Vec<f64>,
+    pub nb_sigma: Vec<f64>,
+}
+
+/// A molecule: species, masses, reference geometry, oracle parameters.
+#[derive(Debug, Clone)]
+pub struct Molecule {
+    pub name: String,
+    /// atomic numbers
+    pub numbers: Vec<u32>,
+    /// embedding indices used by the model (== atomic numbers here)
+    pub species: Vec<u32>,
+    /// amu
+    pub masses: Vec<f64>,
+    /// reference geometry, Angstrom, flat [n*3]
+    pub positions: Vec<f64>,
+    pub ff: ForceField,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("manifest molecule parse error: {0}")]
+pub struct MoleculeError(pub String);
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, MoleculeError> {
+    j.get(key).ok_or_else(|| MoleculeError(format!("missing key {key:?}")))
+}
+
+fn f64_vec(j: &Json, key: &str) -> Result<Vec<f64>, MoleculeError> {
+    req(j, key)?
+        .as_arr()
+        .ok_or_else(|| MoleculeError(format!("{key} not an array")))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| MoleculeError(format!("{key}: non-number"))))
+        .collect()
+}
+
+fn index_rows<const K: usize>(j: &Json, key: &str) -> Result<Vec<[usize; K]>, MoleculeError> {
+    let rows = req(j, key)?
+        .as_index_rows()
+        .ok_or_else(|| MoleculeError(format!("{key} not an index matrix")))?;
+    rows.into_iter()
+        .map(|r| {
+            if r.len() == K {
+                let mut a = [0usize; K];
+                a.copy_from_slice(&r);
+                Ok(a)
+            } else {
+                Err(MoleculeError(format!("{key}: row arity {} != {K}", r.len())))
+            }
+        })
+        .collect()
+}
+
+impl Molecule {
+    pub fn n_atoms(&self) -> usize {
+        self.numbers.len()
+    }
+
+    /// Parse from the manifest's `molecule` object.
+    pub fn from_json(j: &Json) -> Result<Molecule, MoleculeError> {
+        let name = req(j, "name")?.as_str().unwrap_or("unknown").to_string();
+        let numbers: Vec<u32> = f64_vec(j, "numbers")?.iter().map(|v| *v as u32).collect();
+        let species: Vec<u32> = f64_vec(j, "species")?.iter().map(|v| *v as u32).collect();
+        let masses = f64_vec(j, "masses")?;
+        let pos_rows = req(j, "positions")?
+            .as_vec3_rows()
+            .ok_or_else(|| MoleculeError("positions not (n,3)".into()))?;
+        let mut positions = Vec::with_capacity(pos_rows.len() * 3);
+        for r in &pos_rows {
+            positions.extend_from_slice(&[r[0] as f64, r[1] as f64, r[2] as f64]);
+        }
+
+        let ffj = req(j, "force_field")?;
+        let ff = ForceField {
+            bonds: index_rows::<2>(ffj, "bonds")?,
+            bond_r0: f64_vec(ffj, "bond_r0")?,
+            bond_k: f64_vec(ffj, "bond_k")?,
+            angles: index_rows::<3>(ffj, "angles")?,
+            angle_t0: f64_vec(ffj, "angle_t0")?,
+            angle_k: f64_vec(ffj, "angle_k")?,
+            torsions: index_rows::<4>(ffj, "torsions")?,
+            torsion_phi0: f64_vec(ffj, "torsion_phi0")?,
+            torsion_k: f64_vec(ffj, "torsion_k")?,
+            nb_pairs: index_rows::<2>(ffj, "nb_pairs")?,
+            nb_eps: f64_vec(ffj, "nb_eps")?,
+            nb_sigma: f64_vec(ffj, "nb_sigma")?,
+        };
+
+        let n = numbers.len();
+        if masses.len() != n || positions.len() != 3 * n || species.len() != n {
+            return Err(MoleculeError(format!(
+                "inconsistent sizes: n={n} masses={} pos={} species={}",
+                masses.len(),
+                positions.len(),
+                species.len()
+            )));
+        }
+        for b in &ff.bonds {
+            if b[0] >= n || b[1] >= n {
+                return Err(MoleculeError(format!("bond index out of range: {b:?}")));
+            }
+        }
+        Ok(Molecule { name, numbers, species, masses, positions, ff })
+    }
+
+    /// Built-in trans-azobenzene fallback (mirrors python datagen) so unit
+    /// tests and the classical-MD path run without artifacts. Parameters
+    /// are *measured from the constructed geometry* like the python side.
+    pub fn azobenzene_builtin() -> Molecule {
+        let (cc, cn, nn, ch) = (1.394f64, 1.42, 1.25, 1.09);
+        let mut ring_a = Vec::new();
+        for i in 0..6 {
+            let a = i as f64 * std::f64::consts::PI / 3.0;
+            ring_a.push([cc * a.cos(), cc * a.sin(), 0.0]);
+        }
+        let o = ring_a[0];
+        for p in ring_a.iter_mut() {
+            p[0] -= o[0];
+            p[1] -= o[1];
+        }
+        let n1 = [ring_a[0][0] + cn, ring_a[0][1], 0.0];
+        let th = std::f64::consts::PI / 3.0;
+        let n2 = [n1[0] + nn * th.cos(), n1[1] + nn * th.sin(), 0.0];
+        let c6 = [n2[0] + cn, n2[1], 0.0];
+        let mut ring_b = Vec::new();
+        for i in 0..6 {
+            let a = i as f64 * std::f64::consts::PI / 3.0;
+            ring_b.push([cc * a.cos() - cc + c6[0] + cc, cc * a.sin() + c6[1], 0.0]);
+        }
+        // match python: ring - ring[0] + c6
+        let ob = ring_b[0];
+        for p in ring_b.iter_mut() {
+            p[0] = p[0] - ob[0] + c6[0];
+            p[1] = p[1] - ob[1] + c6[1];
+        }
+
+        let mut pos: Vec<[f64; 3]> = Vec::new();
+        pos.extend_from_slice(&ring_a);
+        pos.extend_from_slice(&ring_b);
+        pos.push(n1);
+        pos.push(n2);
+        for ring in [&ring_a, &ring_b] {
+            let cx = ring.iter().map(|p| p[0]).sum::<f64>() / 6.0;
+            let cy = ring.iter().map(|p| p[1]).sum::<f64>() / 6.0;
+            for (idx, p) in ring.iter().enumerate() {
+                if idx == 0 {
+                    continue;
+                }
+                let dx = p[0] - cx;
+                let dy = p[1] - cy;
+                let n = (dx * dx + dy * dy).sqrt();
+                pos.push([p[0] + ch * dx / n, p[1] + ch * dy / n, 0.0]);
+            }
+        }
+
+        let mut bonds: Vec<[usize; 2]> = Vec::new();
+        for base in [0usize, 6] {
+            for i in 0..6 {
+                bonds.push([base + i, base + (i + 1) % 6]);
+            }
+        }
+        bonds.push([0, 12]);
+        bonds.push([12, 13]);
+        bonds.push([13, 6]);
+        let mut h = 14;
+        for base in [0usize, 6] {
+            for i in 1..6 {
+                bonds.push([base + i, h]);
+                h += 1;
+            }
+        }
+
+        let numbers: Vec<u32> =
+            std::iter::repeat(6).take(12).chain([7, 7]).chain(std::iter::repeat(1).take(10)).collect();
+        let masses: Vec<f64> = numbers
+            .iter()
+            .map(|z| match z {
+                1 => 1.008,
+                6 => 12.011,
+                7 => 14.007,
+                _ => 15.999,
+            })
+            .collect();
+
+        let flat: Vec<f64> = pos.iter().flat_map(|p| p.iter().copied()).collect();
+        let ff = crate::md::classical::parameterize(&flat, &bonds, &[[0, 12, 13, 6]], 30.0, 3.0, 1.5, 0.004);
+        Molecule {
+            name: "azobenzene".into(),
+            species: numbers.clone(),
+            numbers,
+            masses,
+            positions: flat,
+            ff,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_azobenzene_is_consistent() {
+        let m = Molecule::azobenzene_builtin();
+        assert_eq!(m.n_atoms(), 24);
+        assert_eq!(m.positions.len(), 72);
+        assert_eq!(m.ff.bonds.len(), 25);
+        assert!(m.ff.angles.len() > 30);
+        assert!(m.ff.nb_pairs.len() > 100);
+        // bonds reference valid atoms
+        for b in &m.ff.bonds {
+            assert!(b[0] < 24 && b[1] < 24);
+        }
+    }
+
+    #[test]
+    fn from_json_roundtrip_small() {
+        let src = r#"{
+            "name": "h2", "numbers": [1, 1], "species": [1, 1],
+            "masses": [1.008, 1.008],
+            "positions": [[0,0,0],[0.74,0,0]],
+            "force_field": {
+                "bonds": [[0,1]], "bond_r0": [0.74], "bond_k": [30.0],
+                "angles": [], "angle_t0": [], "angle_k": [],
+                "torsions": [], "torsion_phi0": [], "torsion_k": [],
+                "nb_pairs": [], "nb_eps": [], "nb_sigma": []
+            }
+        }"#;
+        let j = crate::util::json::parse(src).unwrap();
+        let m = Molecule::from_json(&j).unwrap();
+        assert_eq!(m.n_atoms(), 2);
+        assert_eq!(m.ff.bonds, vec![[0, 1]]);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_bond() {
+        let src = r#"{
+            "name": "x", "numbers": [1], "species": [1], "masses": [1.0],
+            "positions": [[0,0,0]],
+            "force_field": {
+                "bonds": [[0,5]], "bond_r0": [1.0], "bond_k": [1.0],
+                "angles": [], "angle_t0": [], "angle_k": [],
+                "torsions": [], "torsion_phi0": [], "torsion_k": [],
+                "nb_pairs": [], "nb_eps": [], "nb_sigma": []
+            }
+        }"#;
+        let j = crate::util::json::parse(src).unwrap();
+        assert!(Molecule::from_json(&j).is_err());
+    }
+}

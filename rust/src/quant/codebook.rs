@@ -1,0 +1,154 @@
+//! Spherical codebooks on S^2 (S2, Rust mirror of python/compile/codebook.py).
+//!
+//! The octahedral encoder/decoder must agree with the Python/Pallas
+//! implementation bit-for-bit-ish (same grid, same wrap rule) — the LEE
+//! harness and server-side MDDQ of client payloads depend on it; a pytest
+//! <-> cargo cross-check fixture guards the agreement (tests/).
+
+use crate::geometry::{geodesic_angle, normalize, Vec3};
+
+/// Octahedral wrap for the lower hemisphere.
+fn oct_wrap(x: f64, y: f64) -> (f64, f64) {
+    let wx = (1.0 - y.abs()) * if x >= 0.0 { 1.0 } else { -1.0 };
+    let wy = (1.0 - x.abs()) * if y >= 0.0 { 1.0 } else { -1.0 };
+    (wx, wy)
+}
+
+/// Project a unit vector to octahedral square coords in [-1, 1]^2.
+pub fn oct_project(u: Vec3) -> (f64, f64) {
+    let n = u[0].abs() + u[1].abs() + u[2].abs();
+    let p = [u[0] / (n + 1e-12), u[1] / (n + 1e-12), u[2] / (n + 1e-12)];
+    if p[2] < 0.0 {
+        oct_wrap(p[0], p[1])
+    } else {
+        (p[0], p[1])
+    }
+}
+
+/// Lift octahedral square coords back to a unit vector.
+pub fn oct_unproject(ex: f64, ey: f64) -> Vec3 {
+    let ez = 1.0 - ex.abs() - ey.abs();
+    let (ux, uy) = if ez < 0.0 { oct_wrap(ex, ey) } else { (ex, ey) };
+    normalize([ux, uy, ez])
+}
+
+/// Encode a unit vector to an integer grid code (gx, gy), `bits` per axis.
+pub fn oct_encode(u: Vec3, bits: u32) -> (u32, u32) {
+    let levels = ((1u32 << bits) - 1) as f64;
+    let (ex, ey) = oct_project(u);
+    let gx = ((ex * 0.5 + 0.5) * levels).round().clamp(0.0, levels) as u32;
+    let gy = ((ey * 0.5 + 0.5) * levels).round().clamp(0.0, levels) as u32;
+    (gx, gy)
+}
+
+/// Decode a grid code back to the codebook unit vector.
+pub fn oct_decode(gx: u32, gy: u32, bits: u32) -> Vec3 {
+    let levels = ((1u32 << bits) - 1) as f64;
+    let ex = gx as f64 / levels * 2.0 - 1.0;
+    let ey = gy as f64 / levels * 2.0 - 1.0;
+    oct_unproject(ex, ey)
+}
+
+/// `decode(encode(u))` — the direction quantiser Q_d.
+pub fn oct_quantize(u: Vec3, bits: u32) -> Vec3 {
+    let (gx, gy) = oct_encode(u, bits);
+    oct_decode(gx, gy, bits)
+}
+
+/// Fibonacci-lattice codebook of `n` quasi-uniform points.
+pub fn fibonacci_sphere(n: usize) -> Vec<Vec3> {
+    let golden = std::f64::consts::PI * (3.0 - 5f64.sqrt());
+    (0..n)
+        .map(|i| {
+            let fi = i as f64 + 0.5;
+            let phi = golden * fi;
+            let z = 1.0 - 2.0 * fi / n as f64;
+            let r = (1.0 - z * z).max(0.0).sqrt();
+            [r * phi.cos(), r * phi.sin(), z]
+        })
+        .collect()
+}
+
+/// Nearest-codeword quantiser over an explicit codebook (max dot).
+pub fn nearest_codeword(u: Vec3, codebook: &[Vec3]) -> usize {
+    let mut best = 0;
+    let mut best_dot = f64::NEG_INFINITY;
+    for (i, c) in codebook.iter().enumerate() {
+        let d = u[0] * c[0] + u[1] * c[1] + u[2] * c[2];
+        if d > best_dot {
+            best_dot = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Monte-Carlo covering-radius estimate (Eq. 6) in radians.
+pub fn covering_radius_oct(bits: u32, samples: usize, seed: u64) -> f64 {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut worst = 0f64;
+    for _ in 0..samples {
+        let u = rng.unit_vec();
+        let q = oct_quantize(u, bits);
+        worst = worst.max(geodesic_angle(u, q));
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn decode_encode_is_near_identity() {
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            let u = rng.unit_vec();
+            let q = oct_quantize(u, 8);
+            let ang = geodesic_angle(u, q);
+            // oct-8 covering radius is ~= 0.0123 rad; allow slack
+            assert!(ang < 0.02, "angular error {ang} too large");
+        }
+    }
+
+    #[test]
+    fn codebook_points_are_fixed_points() {
+        // quantising a decoded codeword returns exactly that codeword
+        for (gx, gy) in [(0u32, 0u32), (255, 255), (128, 7), (17, 230)] {
+            let c = oct_decode(gx, gy, 8);
+            let (gx2, gy2) = oct_encode(c, 8);
+            let c2 = oct_decode(gx2, gy2, 8);
+            assert!(geodesic_angle(c, c2) < 1e-9);
+        }
+    }
+
+    #[test]
+    fn covering_radius_shrinks_with_bits() {
+        let r4 = covering_radius_oct(4, 4000, 2);
+        let r6 = covering_radius_oct(6, 4000, 2);
+        let r8 = covering_radius_oct(8, 4000, 2);
+        assert!(r4 > r6 && r6 > r8, "{r4} {r6} {r8}");
+        assert!(r8 < 0.02);
+    }
+
+    #[test]
+    fn fibonacci_is_unit_and_spread() {
+        let cb = fibonacci_sphere(256);
+        assert_eq!(cb.len(), 256);
+        for c in &cb {
+            let n = (c[0] * c[0] + c[1] * c[1] + c[2] * c[2]).sqrt();
+            assert!((n - 1.0).abs() < 1e-9);
+        }
+        // mean angular error of NN assignment should beat a random codebook
+        let mut rng = Rng::new(3);
+        let mut total = 0.0;
+        for _ in 0..1000 {
+            let u = rng.unit_vec();
+            let c = cb[nearest_codeword(u, &cb)];
+            total += geodesic_angle(u, c);
+        }
+        let mean = total / 1000.0;
+        assert!(mean < 0.12, "mean angular error {mean}");
+    }
+}

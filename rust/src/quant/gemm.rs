@@ -1,0 +1,222 @@
+//! Quantized GEMM (S11): the Table IV "Compute (GEMM)" row.
+//!
+//! Row-major `C[M,N] = A[M,K] @ B[K,N]` in three precisions:
+//! * `gemm_f32`   — blocked f32 reference
+//! * `gemm_i8`    — INT8 x INT8 -> i32 accumulate, dequantised epilogue
+//! * `gemm_w4a8`  — nibble-packed INT4 weights x INT8 activations
+//!
+//! The integer kernels move 1/4 (resp. ~1/8) of the weight bytes and let
+//! the compiler autovectorise the i8 x i8 inner loop; on memory-bound
+//! shapes (small M, large K*N — the batch-1 inference regime) they land
+//! close to the bandwidth multiplier, matching the paper's 1.8x GEMM row.
+
+use super::pack::{nibble_to_i8, QuantizedI4, QuantizedI8};
+
+const BLOCK: usize = 64;
+
+/// Blocked f32 GEMM (reference / FP32 baseline).
+pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    c.fill(0.0);
+    for i0 in (0..m).step_by(BLOCK) {
+        for k0 in (0..k).step_by(BLOCK) {
+            for j0 in (0..n).step_by(BLOCK) {
+                for i in i0..(i0 + BLOCK).min(m) {
+                    for kk in k0..(k0 + BLOCK).min(k) {
+                        let av = a[i * k + kk];
+                        let brow = &b[kk * n..kk * n + n];
+                        let crow = &mut c[i * n..i * n + n];
+                        for j in j0..(j0 + BLOCK).min(n) {
+                            crow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// INT8 GEMM with i32 accumulation; `c = (a_q @ b_q) * a_scale * b_scale`.
+pub fn gemm_i8(
+    a: &QuantizedI8,
+    b: &QuantizedI8,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.data.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let scale = a.scale * b.scale;
+    let mut acc = vec![0i32; n];
+    for i in 0..m {
+        acc.fill(0);
+        let arow = &a.data[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b.data[kk * n..kk * n + n];
+            // iterator zip: no bounds checks -> LLVM vectorises the
+            // widen-multiply-accumulate (EXPERIMENTS.md §Perf)
+            for (a, &bv) in acc.iter_mut().zip(brow) {
+                *a += av * bv as i32;
+            }
+        }
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (cv, &av) in crow.iter_mut().zip(acc.iter()) {
+            *cv = av as f32 * scale;
+        }
+    }
+}
+
+/// W4A8 GEMM: INT4 weights (packed per *column-major blocks of K*) times
+/// INT8 activations. Weights are stored row-major [K, N] nibble-packed
+/// along N; we unpack per row into a small i8 scratch to keep the inner
+/// loop dense.
+pub fn gemm_w4a8(
+    a: &QuantizedI8,        // [M, K] activations
+    b: &QuantizedI4,        // [K, N] weights, nibble-packed row-major
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.len, k * n);
+    assert_eq!(c.len(), m * n);
+    let scale = a.scale * b.scale;
+    // k-outer loop: each packed weight row is unpacked exactly ONCE (not
+    // once per output row), then broadcast-accumulated into all m output
+    // rows. acc is m*n i32 (32 KiB at the serving shapes — L1/L2 resident).
+    // The unpack walks bytes (two outputs per byte, branch only at row
+    // edges) instead of branching per element. EXPERIMENTS.md §Perf.
+    let mut acc = vec![0i32; m * n];
+    let mut wrow = vec![0i8; n];
+    for kk in 0..k {
+        unpack_row(&b.data, kk * n, n, &mut wrow);
+        for i in 0..m {
+            let av = a.data[i * k + kk];
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let arow = &mut acc[i * n..(i + 1) * n];
+            for (a, &wv) in arow.iter_mut().zip(wrow.iter()) {
+                *a += av * wv as i32;
+            }
+        }
+    }
+    for (cv, &av) in c.iter_mut().zip(acc.iter()) {
+        *cv = av as f32 * scale;
+    }
+}
+
+/// Unpack `n` nibbles starting at global nibble index `base` into `out`.
+#[inline]
+fn unpack_row(data: &[u8], base: usize, n: usize, out: &mut [i8]) {
+    let mut j = 0usize;
+    let mut idx = base;
+    // leading unaligned nibble
+    if idx % 2 == 1 {
+        out[0] = nibble_to_i8(data[idx / 2] >> 4);
+        j = 1;
+        idx += 1;
+    }
+    // aligned body: one byte -> two outputs, branch-free
+    let bytes = &data[idx / 2..];
+    let pairs = (n - j) / 2;
+    for (p, &byte) in bytes.iter().take(pairs).enumerate() {
+        out[j + 2 * p] = nibble_to_i8(byte & 0x0F);
+        out[j + 2 * p + 1] = nibble_to_i8(byte >> 4);
+    }
+    j += 2 * pairs;
+    // trailing nibble
+    if j < n {
+        out[j] = nibble_to_i8(bytes[pairs] & 0x0F);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::pack::{quantize_i4, quantize_i8};
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn f32_matches_naive() {
+        let (m, k, n) = (17, 33, 29);
+        let a = random_vec(m * k, 1);
+        let b = random_vec(k * n, 2);
+        let mut c = vec![0f32; m * n];
+        gemm_f32(&a, &b, &mut c, m, k, n);
+        let want = naive(&a, &b, m, k, n);
+        for (x, y) in c.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn i8_close_to_f32() {
+        let (m, k, n) = (8, 64, 32);
+        let a = random_vec(m * k, 3);
+        let b = random_vec(k * n, 4);
+        let qa = quantize_i8(&a);
+        let qb = quantize_i8(&b);
+        let mut c = vec![0f32; m * n];
+        gemm_i8(&qa, &qb, &mut c, m, k, n);
+        let want = naive(&a, &b, m, k, n);
+        let rms_ref = (want.iter().map(|v| (v * v) as f64).sum::<f64>() / want.len() as f64).sqrt();
+        let rms_err = (c
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| ((x - y) * (x - y)) as f64)
+            .sum::<f64>()
+            / c.len() as f64)
+            .sqrt();
+        assert!(rms_err < 0.05 * rms_ref + 1e-3, "rms_err={rms_err} rms_ref={rms_ref}");
+    }
+
+    #[test]
+    fn w4a8_close_to_f32() {
+        let (m, k, n) = (4, 64, 48);
+        let a = random_vec(m * k, 5);
+        let b = random_vec(k * n, 6);
+        let qa = quantize_i8(&a);
+        let qb = quantize_i4(&b);
+        let mut c = vec![0f32; m * n];
+        gemm_w4a8(&qa, &qb, &mut c, m, k, n);
+        let want = naive(&a, &b, m, k, n);
+        let rms_ref = (want.iter().map(|v| (v * v) as f64).sum::<f64>() / want.len() as f64).sqrt();
+        let rms_err = (c
+            .iter()
+            .zip(&want)
+            .map(|(x, y)| ((x - y) * (x - y)) as f64)
+            .sum::<f64>()
+            / c.len() as f64)
+            .sqrt();
+        // int4 weights: ~4% relative RMS is expected at these sizes
+        assert!(rms_err < 0.12 * rms_ref + 1e-3, "rms_err={rms_err} rms_ref={rms_ref}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Quantized-memory substrate (S11) + spherical codebooks (S2).
+//!
+//! The Python layer trains with *fake* quantisation (f32 values pinned to
+//! the integer grid). This module is where the integers become real:
+//! packed INT4/INT8 weight images, integer GEMMs and the oct codebook —
+//! the pieces whose byte counts produce Table IV's bandwidth multipliers.
+
+pub mod codebook;
+pub mod gemm;
+pub mod mddq;
+pub mod pack;

@@ -1,0 +1,191 @@
+//! Packed integer weight images (S11): INT8 and nibble-packed INT4.
+//!
+//! These are the *true* low-bit memory paths behind Table IV: the Python
+//! side trains with fake-quant (f32 values on the integer grid); here the
+//! same tensors are stored as packed integers and streamed/dequantised,
+//! which is what actually multiplies effective memory bandwidth by 32/k.
+
+/// Symmetric per-tensor quantisation of f32 -> i8 with scale.
+#[derive(Debug, Clone)]
+pub struct QuantizedI8 {
+    pub data: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Symmetric per-tensor quantisation of f32 -> packed int4 (two per byte).
+#[derive(Debug, Clone)]
+pub struct QuantizedI4 {
+    /// nibble-packed: element 2i in low nibble, 2i+1 in high nibble
+    pub data: Vec<u8>,
+    pub scale: f32,
+    pub len: usize,
+}
+
+/// Quantise to INT8 (symmetric, per-tensor max-abs calibration).
+pub fn quantize_i8(x: &[f32]) -> QuantizedI8 {
+    let maxabs = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    let data = x
+        .iter()
+        .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    QuantizedI8 { data, scale }
+}
+
+/// Dequantise INT8 back to f32.
+pub fn dequantize_i8(q: &QuantizedI8, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), q.data.len());
+    for (o, &v) in out.iter_mut().zip(&q.data) {
+        *o = v as f32 * q.scale;
+    }
+}
+
+/// Quantise to packed INT4 (levels -7..7, symmetric).
+pub fn quantize_i4(x: &[f32]) -> QuantizedI4 {
+    let maxabs = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 7.0 } else { 1.0 };
+    let inv = 1.0 / scale;
+    let mut data = vec![0u8; x.len().div_ceil(2)];
+    for (i, &v) in x.iter().enumerate() {
+        let q = (v * inv).round().clamp(-7.0, 7.0) as i8;
+        let nib = (q as u8) & 0x0F;
+        if i % 2 == 0 {
+            data[i / 2] |= nib;
+        } else {
+            data[i / 2] |= nib << 4;
+        }
+    }
+    QuantizedI4 { data, scale, len: x.len() }
+}
+
+/// Sign-extend a nibble to i8.
+#[inline]
+pub fn nibble_to_i8(nib: u8) -> i8 {
+    ((nib << 4) as i8) >> 4
+}
+
+/// Dequantise packed INT4 back to f32.
+pub fn dequantize_i4(q: &QuantizedI4, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), q.len);
+    for i in 0..q.len {
+        let byte = q.data[i / 2];
+        let nib = if i % 2 == 0 { byte & 0x0F } else { byte >> 4 };
+        out[i] = nibble_to_i8(nib) as f32 * q.scale;
+    }
+}
+
+/// Streaming checksum over an f32 image — models the weight-loading phase
+/// of inference (every byte must cross the memory bus). Returns a value
+/// dependent on all data so the optimiser cannot elide the loads.
+pub fn stream_f32(x: &[f32]) -> f64 {
+    let mut acc = 0f64;
+    for chunk in x.chunks(8) {
+        let mut s = 0f32;
+        for &v in chunk {
+            s += v;
+        }
+        acc += s as f64;
+    }
+    acc
+}
+
+/// Streaming dequantise-accumulate over an INT8 image (k=8 weight load).
+pub fn stream_i8(q: &QuantizedI8) -> f64 {
+    let mut acc = 0i64;
+    for chunk in q.data.chunks(16) {
+        let mut s = 0i32;
+        for &v in chunk {
+            s += v as i32;
+        }
+        acc += s as i64;
+    }
+    acc as f64 * q.scale as f64
+}
+
+/// byte -> sum of its two signed nibbles (perf: replaces the branchy
+/// per-nibble decode in the streaming hot loop; see EXPERIMENTS.md §Perf)
+const NIBBLE_SUM: [i16; 256] = {
+    let mut t = [0i16; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let lo = (((i as u8 & 0x0F) as i8) << 4) >> 4;
+        let hi = ((((i as u8 >> 4) & 0x0F) as i8) << 4) >> 4;
+        t[i] = lo as i16 + hi as i16;
+        i += 1;
+    }
+    t
+};
+
+/// Streaming dequantise-accumulate over a packed INT4 image (k=4 load).
+pub fn stream_i4(q: &QuantizedI4) -> f64 {
+    let mut acc = 0i64;
+    for chunk in q.data.chunks(4096) {
+        let mut s = 0i32;
+        for &byte in chunk {
+            s += NIBBLE_SUM[byte as usize] as i32;
+        }
+        acc += s as i64;
+    }
+    acc as f64 * q.scale as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.f64() * 4.0 - 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn i8_roundtrip_error_bounded() {
+        let x = random_vec(1000, 1);
+        let q = quantize_i8(&x);
+        let mut y = vec![0f32; x.len()];
+        dequantize_i8(&q, &mut y);
+        let max = x.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= q.scale * 0.5 + 1e-6, "{a} vs {b} (max {max})");
+        }
+    }
+
+    #[test]
+    fn i4_roundtrip_error_bounded() {
+        let x = random_vec(1001, 2); // odd length exercises the tail nibble
+        let q = quantize_i4(&x);
+        let mut y = vec![0f32; x.len()];
+        dequantize_i4(&q, &mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= q.scale * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn i4_packs_two_per_byte() {
+        let x = random_vec(64, 3);
+        let q = quantize_i4(&x);
+        assert_eq!(q.data.len(), 32);
+    }
+
+    #[test]
+    fn nibble_sign_extension() {
+        assert_eq!(nibble_to_i8(0x0F), -1);
+        assert_eq!(nibble_to_i8(0x07), 7);
+        assert_eq!(nibble_to_i8(0x09), -7);
+        assert_eq!(nibble_to_i8(0x00), 0);
+    }
+
+    #[test]
+    fn streams_agree_on_sums() {
+        // the three streaming kernels compute the same logical reduction
+        let x = random_vec(4096, 4);
+        let s_f = stream_f32(&x);
+        let q8 = quantize_i8(&x);
+        let s_8 = stream_i8(&q8);
+        // INT8 sum should approximate the f32 sum within quant error
+        assert!((s_f - s_8).abs() < 4096.0 * q8.scale as f64);
+    }
+}

@@ -1,0 +1,181 @@
+//! Artifact manifest (S7/S8): typed view over artifacts/manifest.json.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::molecule::Molecule;
+use crate::util::json::{self, Json};
+
+/// Per-variant training metrics (Table II rows).
+#[derive(Debug, Clone, Default)]
+pub struct VariantMetrics {
+    pub e_mae_mev: f64,
+    pub f_mae_mev_a: f64,
+    pub lee_mev_a: f64,
+    pub stable: bool,
+    pub diverged: bool,
+    pub stagnated: bool,
+}
+
+/// One exported model variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub scheme: String,
+    pub w_bits: u32,
+    pub a_bits: u32,
+    pub e_shift: f64,
+    pub hlo: PathBuf,
+    /// batch size -> path
+    pub hlo_batched: BTreeMap<usize, PathBuf>,
+    pub weights_bin: PathBuf,
+    pub weights_bytes: usize,
+    pub metrics: VariantMetrics,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub molecule: Molecule,
+    pub variants: BTreeMap<String, Variant>,
+    pub batch_sizes: Vec<usize>,
+    pub model_f: usize,
+    pub model_layers: usize,
+    pub cutoff: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("cannot read {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("manifest json: {0}")]
+    Json(#[from] crate::util::json::JsonError),
+    #[error("manifest molecule: {0}")]
+    Molecule(#[from] crate::molecule::MoleculeError),
+    #[error("manifest structure: {0}")]
+    Structure(String),
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| ManifestError::Io {
+            path: path.display().to_string(),
+            source: e,
+        })?;
+        let j = json::parse(&text)?;
+
+        let molecule = Molecule::from_json(
+            j.get("molecule")
+                .ok_or_else(|| ManifestError::Structure("missing molecule".into()))?,
+        )?;
+
+        let batch_sizes: Vec<usize> = j
+            .get("batch_sizes")
+            .and_then(|b| b.as_usize_vec())
+            .unwrap_or_else(|| vec![1, 8]);
+
+        let model = j.get("model");
+        let model_f = model.and_then(|m| m.get("f")).and_then(|v| v.as_usize()).unwrap_or(32);
+        let model_layers =
+            model.and_then(|m| m.get("layers")).and_then(|v| v.as_usize()).unwrap_or(2);
+        let cutoff = model.and_then(|m| m.get("cutoff")).and_then(|v| v.as_f64()).unwrap_or(5.0);
+
+        let mut variants = BTreeMap::new();
+        let vobj = j
+            .get("variants")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| ManifestError::Structure("missing variants".into()))?;
+        for (name, vj) in vobj {
+            variants.insert(name.clone(), parse_variant(&dir, name, vj)?);
+        }
+
+        Ok(Manifest { dir, molecule, variants, batch_sizes, model_f, model_layers, cutoff })
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&Variant, ManifestError> {
+        self.variants.get(name).ok_or_else(|| {
+            ManifestError::Structure(format!(
+                "unknown variant {name:?}; available: {:?}",
+                self.variants.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+}
+
+fn parse_variant(dir: &Path, name: &str, v: &Json) -> Result<Variant, ManifestError> {
+    let s = |key: &str| v.get(key).and_then(|x| x.as_str()).map(|x| x.to_string());
+    let f = |key: &str| v.get(key).and_then(|x| x.as_f64());
+
+    let m = v.get("metrics");
+    let mf = |key: &str| m.and_then(|mm| mm.get(key)).and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+    let mb = |key: &str| {
+        m.and_then(|mm| mm.get(key)).and_then(|x| x.as_bool()).unwrap_or(false)
+    };
+
+    let mut hlo_batched = BTreeMap::new();
+    if let Some(hb) = v.get("hlo_batched").and_then(|x| x.as_obj()) {
+        for (b, p) in hb {
+            if let (Ok(bs), Some(ps)) = (b.parse::<usize>(), p.as_str()) {
+                hlo_batched.insert(bs, dir.join(ps));
+            }
+        }
+    }
+
+    Ok(Variant {
+        name: name.to_string(),
+        scheme: s("scheme").unwrap_or_else(|| name.to_string()),
+        w_bits: f("w_bits").unwrap_or(32.0) as u32,
+        a_bits: f("a_bits").unwrap_or(32.0) as u32,
+        e_shift: f("e_shift").unwrap_or(0.0),
+        hlo: dir.join(
+            s("hlo").ok_or_else(|| ManifestError::Structure(format!("{name}: missing hlo")))?,
+        ),
+        hlo_batched,
+        weights_bin: dir.join(s("weights_bin").unwrap_or_default()),
+        weights_bytes: f("weights_bytes").unwrap_or(0.0) as usize,
+        metrics: VariantMetrics {
+            e_mae_mev: mf("e_mae_mev"),
+            f_mae_mev_a: mf("f_mae_mev_a"),
+            lee_mev_a: mf("lee_mev_a"),
+            stable: mb("stable"),
+            diverged: mb("diverged"),
+            stagnated: mb("stagnated"),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // integration-style: only runs when artifacts exist
+        for dir in ["artifacts", "artifacts_smoke"] {
+            if std::path::Path::new(dir).join("manifest.json").exists() {
+                let m = Manifest::load(dir).expect("manifest should parse");
+                assert!(m.molecule.n_atoms() > 0);
+                assert!(!m.variants.is_empty());
+                for v in m.variants.values() {
+                    assert!(v.hlo.exists(), "missing {}", v.hlo.display());
+                }
+                return;
+            }
+        }
+        eprintln!("skipped: no artifacts directory present");
+    }
+
+    #[test]
+    fn missing_dir_is_io_error() {
+        let e = Manifest::load("/nonexistent/nowhere").unwrap_err();
+        assert!(matches!(e, ManifestError::Io { .. }));
+    }
+}

@@ -1,0 +1,27 @@
+//! Runtime (S8): PJRT engine + artifact manifest.
+//!
+//! `Engine` owns the PJRT CPU client; `Manifest` describes what
+//! python/compile/aot.py exported; `CompiledForceField` is one compiled
+//! variant with single + batched entry points. See DESIGN.md §5 for the
+//! artifact contract.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{CompiledForceField, Engine, ModelForceProvider};
+pub use manifest::{Manifest, ManifestError, Variant, VariantMetrics};
+
+use anyhow::Result;
+use std::sync::Arc;
+
+/// Convenience: load manifest + compile one variant in a single call.
+pub fn load_variant(
+    artifacts_dir: &str,
+    variant: &str,
+) -> Result<(Manifest, Engine, Arc<CompiledForceField>)> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let engine = Engine::cpu()?;
+    let v = manifest.variant(variant)?;
+    let ff = Arc::new(CompiledForceField::load(&engine, v, manifest.molecule.n_atoms())?);
+    Ok((manifest, engine, ff))
+}

