@@ -1,0 +1,46 @@
+# gaq-md build/verify entry points. The default (offline) feature set has no
+# external dependencies; `make verify` is what CI runs and what tier-1
+# verification requires.
+
+CARGO ?= cargo
+PYTEST ?= python3 -m pytest
+
+.PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+fmt-fix:
+	$(CARGO) fmt
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# tier-1 verification plus lint gates, all on the default (offline) features
+verify: build test fmt clippy
+
+# python-side tests (codebook fixture cross-check runs wherever jax exists;
+# it skips cleanly on jax-less machines)
+pytest:
+	$(PYTEST) python/tests -q
+
+# regenerate the python<->rust codebook cross-check fixture
+fixture:
+	python3 fixtures/gen_oct_codebook_fixture.py
+
+# build-time python: train + AOT-export the PJRT artifacts (requires jax;
+# the Rust side runs fine without them on the reference backend)
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+smoke:
+	cd python && python3 -m compile.aot --out ../artifacts_smoke --quick
+
+clean:
+	$(CARGO) clean

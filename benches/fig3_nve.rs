@@ -15,7 +15,8 @@ use gaq_md::md::drift::DriftTracker;
 use gaq_md::md::integrator::{langevin_step, verlet_step, MdState};
 use gaq_md::md::{ClassicalProvider, ForceProvider};
 use gaq_md::molecule::Molecule;
-use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::runtime::{self, Manifest, ModelForceProvider};
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 
 fn run_nve(
@@ -26,7 +27,7 @@ fn run_nve(
     dt: f64,
     temp: f64,
     seed: u64,
-) -> anyhow::Result<gaq_md::md::drift::DriftReport> {
+) -> Result<gaq_md::md::drift::DriftReport> {
     let n_atoms = masses.len();
     let mut state = MdState::new(positions, masses);
     let mut rng = Rng::new(seed);
@@ -80,21 +81,23 @@ fn main() {
         if rep.exploded { "EXPLODED" } else { "stable" }
     );
 
-    // compiled model rows
+    // compiled model rows (AOT artifacts when built, reference backend else)
     let dir = gaq_md::resolve_artifacts_dir(None);
-    let manifest = match Manifest::load(&dir) {
+    let manifest = match Manifest::load_or_reference(&dir) {
         Ok(m) => m,
         Err(e) => {
-            println!("(model rows skipped: {e} — run `make artifacts`)");
+            println!("(model rows skipped: corrupt manifest: {e})");
             return;
         }
     };
+    if manifest.builtin {
+        println!("(no artifacts found — model rows run on the reference backend)");
+    }
     for name in ["fp32", "gaq_w4a8", "degree_quant", "naive_int8"] {
-        let Ok(v) = manifest.variant(name) else { continue };
-        let engine = Engine::cpu().expect("pjrt");
-        let ff = std::sync::Arc::new(
-            CompiledForceField::load(&engine, v, manifest.molecule.n_atoms()).expect("compile"),
-        );
+        if manifest.variant(name).is_err() {
+            continue;
+        }
+        let (_, _engine, ff) = runtime::load_variant(&dir, name).expect("load variant");
         let mut provider = ModelForceProvider::new(ff);
         match run_nve(
             &mut provider,

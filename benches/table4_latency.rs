@@ -25,8 +25,9 @@ fn random_vec(n: usize, seed: u64) -> Vec<f32> {
 /// Load the real exported weight image if artifacts exist, else synthesise
 /// one with the same footprint as the trained model.
 fn weight_image() -> (Vec<f32>, &'static str) {
+    let root = gaq_md::workspace_root();
     for dir in ["artifacts", "artifacts_smoke"] {
-        let p = std::path::Path::new(dir).join("weights_gaq_w4a8.bin");
+        let p = root.join(dir).join("weights_gaq_w4a8.bin");
         if let Ok(bytes) = std::fs::read(&p) {
             let mut v = Vec::with_capacity(bytes.len() / 4);
             for c in bytes.chunks_exact(4) {

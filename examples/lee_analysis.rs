@@ -12,18 +12,22 @@
 
 use gaq_md::quant::codebook::covering_radius_oct;
 use gaq_md::quant::mddq::{commutation_error, mddq_quantize, naive_quantize};
-use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::runtime::{self, Manifest, ModelForceProvider};
 use gaq_md::util::cli::Args;
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let n_rot = args.get_usize("rotations", 32);
     let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
 
     // ---- part 1: deployed models ---------------------------------------------
-    match Manifest::load(&dir) {
+    match Manifest::load_or_reference(&dir) {
         Ok(manifest) => {
+            if manifest.builtin {
+                println!("(no artifacts found — deployed-model rows use the reference backend)");
+            }
             println!("=== deployed-model LEE ({n_rot} rotations, 3 configurations) ===");
             println!(
                 "{:<14} {:>12} {:>12} {:>12}",
@@ -40,13 +44,10 @@ fn main() -> anyhow::Result<()> {
                 *x += 0.08 * rng.gaussian();
             }
             for name in ["fp32", "naive_int8", "degree_quant", "svq_kmeans", "lsq_w4a8", "qdrop_w4a8", "gaq_w4a8"] {
-                let Ok(v) = manifest.variant(name) else { continue };
-                let engine = Engine::cpu()?;
-                let ff = std::sync::Arc::new(CompiledForceField::load(
-                    &engine,
-                    v,
-                    manifest.molecule.n_atoms(),
-                )?);
+                if manifest.variant(name).is_err() {
+                    continue;
+                }
+                let (_, _engine, ff) = runtime::load_variant(&dir, name)?;
                 let mut provider = ModelForceProvider::new(ff);
                 let a = gaq_md::lee::measure_lee(&mut provider, &base, n_rot, 3)?;
                 let b = gaq_md::lee::measure_lee(&mut provider, &pert, n_rot, 4)?;

@@ -17,8 +17,9 @@ use std::io::Write;
 use gaq_md::md::drift::DriftTracker;
 use gaq_md::md::integrator::{langevin_step, verlet_step, MdState};
 use gaq_md::md::{ClassicalProvider, ForceProvider};
-use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::runtime::{self, Manifest, ModelForceProvider};
 use gaq_md::util::cli::Args;
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 
 struct Trace {
@@ -40,7 +41,7 @@ fn run_variant(
     equil: usize,
     seed: u64,
     sample_every: usize,
-) -> anyhow::Result<Trace> {
+) -> Result<Trace> {
     let n_atoms = masses.len();
     let mut state = MdState::new(positions, masses);
     let mut rng = Rng::new(seed);
@@ -86,7 +87,7 @@ fn run_variant(
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
     let steps = args.get_usize("steps", 20_000);
@@ -97,7 +98,10 @@ fn main() -> anyhow::Result<()> {
     let csv_path = args.get_or("csv", "fig3_nve.csv").to_string();
     let sample_every = (steps / 400).max(1);
 
-    let manifest = Manifest::load(&dir)?;
+    let manifest = Manifest::load_or_reference(&dir)?;
+    if manifest.builtin {
+        println!("(no artifacts found — model variants run on the reference backend)");
+    }
     let mol = &manifest.molecule;
     println!(
         "Fig. 3 — NVE, {} atoms, dt={dt} fs, {steps} steps = {:.2} ps, T0={temp} K",
@@ -130,12 +134,11 @@ fn main() -> anyhow::Result<()> {
     )?);
 
     for name in &variant_names {
-        let Ok(v) = manifest.variant(name) else {
+        if manifest.variant(name).is_err() {
             eprintln!("  ({name}: not in manifest, skipped)");
             continue;
-        };
-        let engine = Engine::cpu()?;
-        let ff = std::sync::Arc::new(CompiledForceField::load(&engine, v, mol.n_atoms())?);
+        }
+        let (_, _engine, ff) = runtime::load_variant(&dir, name)?;
         let mut provider = ModelForceProvider::new(ff);
         traces.push(run_variant(
             name,

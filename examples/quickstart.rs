@@ -1,16 +1,18 @@
-//! Quickstart: load a compiled W4A8 force field and run one inference.
+//! Quickstart: load a W4A8 force field and run one inference.
 //!
 //! ```bash
-//! make artifacts                      # once (build-time python)
-//! cargo run --release --example quickstart
+//! cargo run --release --example quickstart     # reference backend, no setup
+//! make artifacts                               # optional: AOT/PJRT builds
 //! ```
 
 use gaq_md::runtime;
+use gaq_md::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let dir = gaq_md::resolve_artifacts_dir(None);
     println!("loading artifacts from {dir}/ ...");
-    let (manifest, _engine, ff) = runtime::load_variant(&dir, "gaq_w4a8")?;
+    let (manifest, engine, ff) = runtime::load_variant(&dir, "gaq_w4a8")?;
+    println!("backend: {} ({})", ff.backend_kind(), engine.platform());
 
     let mol = &manifest.molecule;
     println!(

@@ -17,9 +17,10 @@ use std::time::{Duration, Instant};
 use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
 use gaq_md::runtime::Manifest;
 use gaq_md::util::cli::Args;
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
     let n_requests = args.get_usize("requests", 512);
@@ -34,7 +35,10 @@ fn main() -> anyhow::Result<()> {
         .filter(|s| !s.is_empty())
         .collect();
 
-    let manifest = Manifest::load(&dir)?;
+    let manifest = Manifest::load_or_reference(&dir)?;
+    if manifest.builtin {
+        println!("(no artifacts found — serving via the pure-Rust reference backend)");
+    }
     for v in &variants {
         manifest.variant(v)?;
     }
@@ -52,11 +56,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch,
                 max_wait: Duration::from_micros(max_wait_us),
             },
-            variants: vec![(
-                vname.clone(),
-                Backend::Pjrt { artifacts_dir: dir.clone(), variant: vname.clone() },
-                workers,
-            )],
+            variants: vec![(vname.clone(), Backend::auto(&dir, vname), workers)],
         })?;
 
         // warm up the compiled executable path

@@ -14,12 +14,13 @@
 use gaq_md::costmodel::{rho, speedup, Arch};
 use gaq_md::quant::gemm::{gemm_f32, gemm_w4a8};
 use gaq_md::quant::pack::{quantize_i4, quantize_i8, stream_f32, stream_i4, stream_i8};
-use gaq_md::runtime::{CompiledForceField, Engine, Manifest, ModelForceProvider};
+use gaq_md::runtime::{self, Manifest, ModelForceProvider};
 use gaq_md::util::benchkit::{black_box, fmt_ns, Bench};
 use gaq_md::util::cli::Args;
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
     let dir = gaq_md::resolve_artifacts_dir(args.get("artifacts"));
@@ -65,8 +66,8 @@ fn table1() {
     println!("S_8 = {:.0}x, S_4 = {:.0}x theoretical (Eq. 11)", speedup(8), speedup(4));
 }
 
-fn table2(dir: &str) -> anyhow::Result<()> {
-    let m = Manifest::load(dir)?;
+fn table2(dir: &str) -> Result<()> {
+    let m = Manifest::load_or_reference(dir)?;
     println!("\n================ Table II: performance on azobenzene (synthetic rMD17) ================");
     println!(
         "{:<14} {:>9} {:>10} {:>10}   stability",
@@ -112,17 +113,18 @@ fn pretty(name: &str) -> &str {
     }
 }
 
-fn table3(dir: &str, args: &Args) -> anyhow::Result<()> {
-    let m = Manifest::load(dir)?;
+fn table3(dir: &str, args: &Args) -> Result<()> {
+    let m = Manifest::load_or_reference(dir)?;
     let n_rot = args.get_usize("rotations", 12);
     println!("\n================ Table III: symmetry analysis (LEE, deployed artifacts) ================");
     println!("{:<14} {:>14}   remark", "Method", "LEE (meV/A)");
     let order = ["fp32", "naive_int8", "degree_quant", "gaq_w4a8"];
     let mut results = std::collections::BTreeMap::new();
     for name in order {
-        let Ok(v) = m.variant(name) else { continue };
-        let engine = Engine::cpu()?;
-        let ff = std::sync::Arc::new(CompiledForceField::load(&engine, v, m.molecule.n_atoms())?);
+        if m.variant(name).is_err() {
+            continue;
+        }
+        let (_, _engine, ff) = runtime::load_variant(dir, name)?;
         let mut provider = ModelForceProvider::new(ff);
         let rep = gaq_md::lee::measure_lee(&mut provider, &m.molecule.positions, n_rot, 3)?;
         results.insert(name, rep.force_lee_mev_a);
@@ -173,8 +175,8 @@ fn table4() {
     println!("paper: weights 4.0x | GEMM 1.8x | total 2.39x");
 }
 
-fn summary(dir: &str) -> anyhow::Result<()> {
-    let m = Manifest::load(dir)?;
+fn summary(dir: &str) -> Result<()> {
+    let m = Manifest::load_or_reference(dir)?;
     println!("\n================ Fig. 1(d) summary ================");
     let fp32 = m.variant("fp32").ok();
     let gaq = m.variant("gaq_w4a8").ok();
@@ -200,8 +202,8 @@ fn summary(dir: &str) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn ablations(dir: &str) -> anyhow::Result<()> {
-    let m = Manifest::load(dir)?;
+fn ablations(dir: &str) -> Result<()> {
+    let m = Manifest::load_or_reference(dir)?;
     println!("\n================ Ablations: geometry-agnostic QAT on the equivariant branch ================");
     println!("{:<14} {:>9} {:>10} {:>10} {:>10}", "Method", "Bits(W/A)", "E-MAE", "F-MAE", "LEE");
     for name in ["lsq_w4a8", "qdrop_w4a8", "gaq_w4a8"] {

@@ -1,0 +1,119 @@
+#!/usr/bin/env python3
+"""Regenerate fixtures/oct_codebook.json — the octahedral-codebook
+cross-check consumed by BOTH rust/tests/codebook_fixture.rs (cargo) and
+python/tests/test_codebook_fixture.py (pytest).
+
+The reference arithmetic here mirrors rust/src/quant/codebook.rs op-for-op in
+float64 (round half-away-from-zero, same normalisation order), so the Rust
+side must agree to ~1e-12. The Python/JAX implementation computes in float32
+with round-half-to-even; sampled cases are REJECTED unless they sit far from
+every rounding/wrap boundary, so both implementations land on identical grid
+codes and the decoded vectors agree to float32 precision.
+
+Usage: python3 fixtures/gen_oct_codebook_fixture.py  (writes in place)
+"""
+
+import json
+import math
+import os
+import random
+
+BITS = 8
+LEVELS = (1 << BITS) - 1
+N_CASES = 64
+BOUNDARY_MARGIN = 1e-3  # distance from .5 rounding boundaries, grid units
+
+
+def oct_wrap(x, y):
+    wx = (1.0 - abs(y)) * (1.0 if x >= 0.0 else -1.0)
+    wy = (1.0 - abs(x)) * (1.0 if y >= 0.0 else -1.0)
+    return wx, wy
+
+
+def oct_project(u):
+    n = abs(u[0]) + abs(u[1]) + abs(u[2])
+    p = [u[0] / (n + 1e-12), u[1] / (n + 1e-12), u[2] / (n + 1e-12)]
+    if p[2] < 0.0:
+        return oct_wrap(p[0], p[1])
+    return p[0], p[1]
+
+
+def oct_unproject(ex, ey):
+    ez = 1.0 - abs(ex) - abs(ey)
+    if ez < 0.0:
+        ux, uy = oct_wrap(ex, ey)
+    else:
+        ux, uy = ex, ey
+    n = math.sqrt(ux * ux + uy * uy + ez * ez)
+    return [ux / n, uy / n, ez / n]
+
+
+def grid_coord(e):
+    return (e * 0.5 + 0.5) * LEVELS
+
+
+def round_half_away(x):  # == f64::round for x >= 0
+    return math.floor(x + 0.5)
+
+
+def encode(u):
+    ex, ey = oct_project(u)
+    gx = min(max(round_half_away(grid_coord(ex)), 0), LEVELS)
+    gy = min(max(round_half_away(grid_coord(ey)), 0), LEVELS)
+    return int(gx), int(gy)
+
+
+def decode(gx, gy):
+    ex = gx / LEVELS * 2.0 - 1.0
+    ey = gy / LEVELS * 2.0 - 1.0
+    return oct_unproject(ex, ey)
+
+
+def safe_case(u):
+    """True when u is far from every rounding/hemisphere boundary."""
+    n = abs(u[0]) + abs(u[1]) + abs(u[2])
+    pz = u[2] / (n + 1e-12)
+    if abs(pz) < BOUNDARY_MARGIN:  # hemisphere wrap boundary
+        return False
+    for e in oct_project(u):
+        frac = grid_coord(e) % 1.0
+        if abs(frac - 0.5) < BOUNDARY_MARGIN:
+            return False
+    gx, gy = encode(u)
+    ez = (gx / LEVELS * 2.0 - 1.0, gy / LEVELS * 2.0 - 1.0)
+    if abs(1.0 - abs(ez[0]) - abs(ez[1])) < BOUNDARY_MARGIN:  # decode wrap
+        return False
+    return True
+
+
+def main():
+    rng = random.Random(20260729)
+    cases = []
+    while len(cases) < N_CASES:
+        v = [rng.gauss(0.0, 1.0) for _ in range(3)]
+        n = math.sqrt(sum(x * x for x in v))
+        if n < 1e-6:
+            continue
+        u = [x / n for x in v]
+        if not safe_case(u):
+            continue
+        gx, gy = encode(u)
+        cases.append({"u": u, "gx": gx, "gy": gy, "q": decode(gx, gy)})
+
+    out = {
+        "description": "octahedral S^2 codebook cross-check: unit vector u -> "
+        "grid codes (gx, gy) -> decoded codeword q. Consumed by "
+        "rust/tests/codebook_fixture.rs and python/tests/test_codebook_fixture.py.",
+        "generator": "fixtures/gen_oct_codebook_fixture.py",
+        "bits": BITS,
+        "cases": cases,
+    }
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "oct_codebook.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+        f.write("\n")
+    print(f"wrote {len(cases)} cases -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::ensure;
+use crate::util::error::{Error, Result};
 
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
@@ -19,11 +20,38 @@ use super::request::{InferenceRequest, InferenceResponse};
 /// How a worker evaluates batches.
 #[derive(Debug, Clone)]
 pub enum Backend {
-    /// Compile `variant` from `artifacts_dir` inside the worker thread.
+    /// Compile `variant` from `artifacts_dir` inside the worker thread via
+    /// PJRT. In builds without the `pjrt` feature (or when no artifacts
+    /// exist) the worker degrades to the reference backend so requests are
+    /// still served rather than dropped.
     Pjrt { artifacts_dir: String, variant: String },
+    /// Evaluate `variant` with the pure-Rust reference backend
+    /// (runtime/reference.rs); `artifacts_dir` supplies the manifest when
+    /// present, else the builtin reference manifest is used.
+    Reference { artifacts_dir: String, variant: String },
     /// Deterministic stub (tests / load-gen): energy = sum(positions),
     /// forces = -positions. n_atoms validated like the real model.
     Mock { n_atoms: usize },
+}
+
+impl Backend {
+    /// Pick the strongest backend this build can serve for `variant`: PJRT
+    /// when compiled in and artifacts exist, the reference backend otherwise.
+    pub fn auto(artifacts_dir: &str, variant: &str) -> Backend {
+        let has_artifacts =
+            std::path::Path::new(artifacts_dir).join("manifest.json").exists();
+        if cfg!(feature = "pjrt") && has_artifacts {
+            Backend::Pjrt {
+                artifacts_dir: artifacts_dir.to_string(),
+                variant: variant.to_string(),
+            }
+        } else {
+            Backend::Reference {
+                artifacts_dir: artifacts_dir.to_string(),
+                variant: variant.to_string(),
+            }
+        }
+    }
 }
 
 /// One worker: a thread consuming batches from its private channel.
@@ -55,27 +83,23 @@ fn worker_loop(
     inflight: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
 ) {
-    // Build the evaluator inside the thread (PJRT handles never migrate).
+    // Build the evaluator inside the thread (PJRT handles are thread-confined
+    // and never migrate; the reference backend is plain data and is simply
+    // constructed where it is used).
     enum Eval {
-        Pjrt(crate::runtime::CompiledForceField),
+        Model(Arc<crate::runtime::CompiledForceField>),
         Mock { n_atoms: usize },
     }
 
+    let load = |dir: &str, variant: &str, force_reference: bool| {
+        crate::runtime::load_variant_with(dir, variant, force_reference).map(|(_, _, ff)| ff)
+    };
     let eval = match &backend {
-        Backend::Pjrt { artifacts_dir, variant } => {
-            match crate::runtime::load_variant(artifacts_dir, variant) {
-                Ok((_, _engine, ff)) => {
-                    // unwrap sole Arc owner back out; keep engine alive via ff's
-                    // internal references — the xla crate keeps the client in
-                    // the executable, so dropping Engine here is fine.
-                    match Arc::try_unwrap(ff) {
-                        Ok(f) => Eval::Pjrt(f),
-                        Err(_) => {
-                            eprintln!("worker: Arc unexpectedly shared");
-                            return;
-                        }
-                    }
-                }
+        Backend::Pjrt { artifacts_dir, variant }
+        | Backend::Reference { artifacts_dir, variant } => {
+            let force_reference = matches!(backend, Backend::Reference { .. });
+            match load(artifacts_dir, variant, force_reference) {
+                Ok(ff) => Eval::Model(ff),
                 Err(e) => {
                     eprintln!("worker failed to load {variant:?}: {e:#}");
                     // drain requests with errors so clients don't hang
@@ -96,7 +120,7 @@ fn worker_loop(
     for batch in rx.iter() {
         let bsize = batch.len();
         let results: Vec<Result<(f32, Vec<f32>), String>> = match &eval {
-            Eval::Pjrt(ff) => {
+            Eval::Model(ff) => {
                 let positions: Vec<Vec<f32>> =
                     batch.iter().map(|r| r.positions.clone()).collect();
                 match ff.energy_forces_batch(&positions) {
@@ -170,7 +194,7 @@ impl Pool {
     /// Least-loaded dispatch (ties broken round-robin).
     pub fn dispatch(&self, batch: Vec<InferenceRequest>) -> Result<()> {
         let n = self.workers.len();
-        anyhow::ensure!(n > 0, "pool {} has no workers", self.variant);
+        ensure!(n > 0, "pool {} has no workers", self.variant);
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         let mut best = start;
         let mut best_load = usize::MAX;
@@ -186,7 +210,7 @@ impl Pool {
         self.workers[best]
             .tx
             .send(batch)
-            .map_err(|_| anyhow::anyhow!("worker channel closed"))
+            .map_err(|_| Error::msg("worker channel closed"))
     }
 
     /// Close channels and join all workers.
@@ -252,6 +276,39 @@ mod tests {
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(resp.error.is_some());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn auto_backend_without_artifacts_is_reference() {
+        let b = Backend::auto("/nonexistent/nowhere", "fp32");
+        assert!(matches!(b, Backend::Reference { .. }));
+    }
+
+    #[test]
+    fn reference_worker_serves_builtin_variant() {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let backend = Backend::Reference {
+            artifacts_dir: "/nonexistent/nowhere".into(),
+            variant: "gaq_w4a8".into(),
+        };
+        let worker = spawn_worker(backend, metrics.clone()).unwrap();
+        let pool = Pool::new("gaq_w4a8".into(), vec![worker]);
+        let m = crate::runtime::Manifest::reference();
+        let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+        let (tx, rx) = mpsc::channel();
+        let req = InferenceRequest {
+            id: 1,
+            variant: "gaq_w4a8".into(),
+            positions: pos,
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        pool.dispatch(vec![req]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.energy_ev.is_finite());
+        assert_eq!(resp.forces.len(), 72);
         pool.shutdown();
     }
 

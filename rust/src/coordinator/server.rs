@@ -9,7 +9,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use crate::util::error::{Error, Result};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
@@ -76,7 +76,7 @@ impl Server {
         };
         self.tx
             .send(Control::Request(req))
-            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+            .map_err(|_| Error::msg("server is shut down"))?;
         Ok(PendingRequest { id, rx })
     }
 
@@ -85,7 +85,7 @@ impl Server {
         let pending = self.submit(variant, positions)?;
         pending
             .wait_timeout(Duration::from_secs(120))
-            .map_err(|e| anyhow::anyhow!("inference timed out/disconnected: {e}"))
+            .map_err(|e| Error::msg(format!("inference timed out/disconnected: {e}")))
     }
 
     pub fn metrics(&self) -> Metrics {
@@ -235,6 +235,31 @@ mod tests {
         assert!(max_batch_seen <= 8);
         let m = s.metrics();
         assert_eq!(m.completed, 64);
+        s.shutdown();
+    }
+
+    #[test]
+    fn serves_reference_backend_variants() {
+        let m = crate::runtime::Manifest::reference();
+        let base: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+        let mk = |v: &str| Backend::Reference {
+            artifacts_dir: "/nonexistent/nowhere".into(),
+            variant: v.into(),
+        };
+        let s = Server::start(ServerConfig {
+            policy: BatchPolicy::default(),
+            variants: vec![
+                ("fp32".into(), mk("fp32"), 1),
+                ("gaq_w4a8".into(), mk("gaq_w4a8"), 2),
+            ],
+        })
+        .unwrap();
+        for v in ["fp32", "gaq_w4a8"] {
+            let r = s.infer(v, base.clone()).unwrap();
+            assert!(r.error.is_none(), "{v}: {:?}", r.error);
+            assert!(r.energy_ev.is_finite());
+            assert_eq!(r.forces.len(), base.len());
+        }
         s.shutdown();
     }
 

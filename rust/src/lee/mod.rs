@@ -4,9 +4,8 @@
 //! [`ForceProvider`] — this is the Rust-side Table III generator, run on
 //! the *deployed* PJRT artifacts rather than the python training graph.
 
-use anyhow::Result;
-
 use crate::geometry::{matvec, Mat3};
+use crate::util::error::Result;
 use crate::md::ForceProvider;
 use crate::util::prng::Rng;
 
@@ -111,7 +110,7 @@ mod tests {
     }
 
     impl ForceProvider for GridQuantProvider {
-        fn energy_forces(&mut self, positions: &[f64]) -> anyhow::Result<(f64, Vec<f64>)> {
+        fn energy_forces(&mut self, positions: &[f64]) -> Result<(f64, Vec<f64>)> {
             let (e, mut f) = self.inner.energy_forces(positions)?;
             for v in f.iter_mut() {
                 *v = (*v / self.step).round() * self.step;

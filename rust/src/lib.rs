@@ -3,12 +3,14 @@
 //! Rust L3 of the three-layer reproduction of *"Preserving Continuous
 //! Symmetry in Discrete Spaces: Geometric-Aware Quantization for
 //! SO(3)-Equivariant GNNs"*: a serving coordinator + molecular-dynamics
-//! engine that executes AOT-compiled JAX/Pallas force fields through the
-//! PJRT C API. Python runs only at build time (`make artifacts`); this
-//! crate is self-contained afterwards.
+//! engine. Force-field evaluation goes through the pluggable
+//! [`runtime::ExecBackend`] seam — the always-on pure-Rust reference backend
+//! by default, or AOT-compiled JAX/Pallas artifacts through the PJRT C API
+//! behind the `pjrt` feature. Python runs only at build time
+//! (`make artifacts`); this crate is self-contained afterwards.
 //!
 //! Layer map (see DESIGN.md):
-//! * [`runtime`] — PJRT engine, artifact manifest, compiled force fields
+//! * [`runtime`] — execution backends, artifact manifest, compiled force fields
 //! * [`coordinator`] — request router, dynamic batcher, serving metrics
 //! * [`md`] — NVE/NVT integrators, classical oracle, drift tracking (Fig. 3)
 //! * [`quant`] — packed INT4/INT8 images, integer GEMMs, S² codebooks (Table IV)
@@ -26,11 +28,27 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
-/// Default artifacts directory (relative to the repo root).
+/// Default artifacts directory (relative to the workspace root).
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";
 
+/// The workspace root this crate was compiled from: the parent of
+/// CARGO_MANIFEST_DIR (the crate lives in `<root>/rust/`). Falls back to the
+/// current directory when the build tree no longer exists at runtime
+/// (installed binaries).
+pub fn workspace_root() -> std::path::PathBuf {
+    let crate_dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    match crate_dir.parent() {
+        Some(root) if root.join("Cargo.toml").exists() => root.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    }
+}
+
 /// Resolve the artifacts directory: explicit flag > GAQ_ARTIFACTS env >
-/// ./artifacts > ./artifacts_smoke (CI fallback).
+/// ./artifacts{,_smoke} (CWD) > workspace-root artifacts{,_smoke}. The
+/// workspace-root anchoring makes `cargo test` agree between repo root and
+/// crate root (the two differ in CWD). When nothing exists, returns the
+/// root-anchored default — `Manifest::load_or_reference` then serves the
+/// builtin reference manifest.
 pub fn resolve_artifacts_dir(explicit: Option<&str>) -> String {
     if let Some(d) = explicit {
         return d.to_string();
@@ -38,10 +56,41 @@ pub fn resolve_artifacts_dir(explicit: Option<&str>) -> String {
     if let Ok(d) = std::env::var("GAQ_ARTIFACTS") {
         return d;
     }
+    let root = workspace_root();
     for cand in [DEFAULT_ARTIFACTS, "artifacts_smoke"] {
         if std::path::Path::new(cand).join("manifest.json").exists() {
             return cand.to_string();
         }
+        let anchored = root.join(cand);
+        if anchored.join("manifest.json").exists() {
+            return anchored.to_string_lossy().into_owned();
+        }
     }
-    DEFAULT_ARTIFACTS.to_string()
+    root.join(DEFAULT_ARTIFACTS).to_string_lossy().into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn workspace_root_holds_the_workspace_manifest() {
+        let root = crate::workspace_root();
+        assert!(root.join("Cargo.toml").exists(), "{}", root.display());
+        assert!(root.join("rust").join("Cargo.toml").exists());
+    }
+
+    #[test]
+    fn resolve_artifacts_dir_is_stable_under_cwd_changes() {
+        // explicit and env override win; otherwise the result is either an
+        // existing manifest dir or the root-anchored default — never a bare
+        // CWD-relative path that silently misses the artifacts.
+        assert_eq!(crate::resolve_artifacts_dir(Some("/tmp/x")), "/tmp/x");
+        let d = crate::resolve_artifacts_dir(None);
+        let p = std::path::Path::new(&d);
+        if !p.join("manifest.json").exists() {
+            assert!(
+                p.is_absolute() || d.starts_with('.') || d == crate::DEFAULT_ARTIFACTS,
+                "unexpected fallback {d}"
+            );
+        }
+    }
 }

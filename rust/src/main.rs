@@ -13,12 +13,13 @@
 //! All experiment tables/figures have dedicated binaries under examples/
 //! and benches/; this CLI is the operational front-end.
 
-use anyhow::{bail, Context, Result};
+use gaq_md::bail;
 use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
 use gaq_md::md::integrator::MdState;
 use gaq_md::md::{integrator, ForceProvider};
 use gaq_md::runtime::{self, Manifest};
 use gaq_md::util::cli::Args;
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 
 fn main() {
@@ -71,11 +72,31 @@ fn artifacts_dir(args: &Args) -> String {
     gaq_md::resolve_artifacts_dir(args.get("artifacts"))
 }
 
+/// Load the manifest for a command, guarding the two silent-surprise paths:
+/// an explicitly named `--artifacts` dir with no manifest is an error (the
+/// user asked for *that* model, not an emulation), and the builtin fallback
+/// announces itself.
+fn load_manifest(args: &Args, dir: &str) -> Result<Manifest> {
+    if args.get("artifacts").is_some()
+        && !std::path::Path::new(dir).join("manifest.json").exists()
+    {
+        bail!("--artifacts {dir:?} has no manifest.json (run `make artifacts`, or drop the flag to use the builtin reference model)");
+    }
+    let m = Manifest::load_or_reference(dir)?;
+    if m.builtin {
+        eprintln!("(no artifacts in {dir:?} — using the builtin reference model, pure-Rust backend)");
+    }
+    Ok(m)
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
-    let m = Manifest::load(&dir)
-        .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts` first)"))?;
-    println!("artifacts: {dir}");
+    let m = load_manifest(args, &dir)?;
+    if m.builtin {
+        println!("artifacts: builtin reference manifest (run `make artifacts` for PJRT builds)");
+    } else {
+        println!("artifacts: {dir}");
+    }
     println!(
         "molecule: {} ({} atoms), cutoff {:.1} A, model F={} layers={}",
         m.molecule.name,
@@ -112,6 +133,7 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_predict(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let variant = args.get_or("variant", "gaq_w4a8");
+    load_manifest(args, &dir)?;
     let (manifest, _engine, ff) = runtime::load_variant(&dir, variant)?;
 
     let mut pos: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
@@ -154,6 +176,7 @@ fn cmd_md(args: &Args) -> Result<()> {
     let report_every = args.get_usize("report-every", 500);
     let seed = args.get_u64("seed", 0);
 
+    load_manifest(args, &dir)?;
     let (manifest, _engine, ff) = runtime::load_variant(&dir, &variant)?;
     let mol = &manifest.molecule;
     let mut provider = runtime::ModelForceProvider::new(ff);
@@ -233,7 +256,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_batch = args.get_usize("max-batch", 8);
     let max_wait_us = args.get_u64("max-wait-us", 500);
 
-    let manifest = Manifest::load(&dir)?;
+    let manifest = load_manifest(args, &dir)?;
     for v in &variants {
         manifest.variant(v)?;
     }
@@ -245,13 +268,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         variants: variants
             .iter()
-            .map(|v| {
-                (
-                    v.clone(),
-                    Backend::Pjrt { artifacts_dir: dir.clone(), variant: v.clone() },
-                    workers,
-                )
-            })
+            .map(|v| (v.clone(), Backend::auto(&dir, v), workers))
             .collect(),
     })?;
 
@@ -296,22 +313,14 @@ fn cmd_lee(args: &Args) -> Result<()> {
         .collect();
     let n_rot = args.get_usize("rotations", 16);
 
-    let manifest = Manifest::load(&dir)?;
+    let manifest = load_manifest(args, &dir)?;
     println!("{:<14} {:>12} {:>12} {:>12}", "variant", "LEE meV/A", "max meV/A", "E-inv meV");
     for vname in &variants {
-        let v = match manifest.variant(vname) {
-            Ok(v) => v,
-            Err(_) => {
-                println!("{vname:<14} (not in manifest, skipped)");
-                continue;
-            }
-        };
-        let engine = runtime::Engine::cpu()?;
-        let ff = std::sync::Arc::new(runtime::CompiledForceField::load(
-            &engine,
-            v,
-            manifest.molecule.n_atoms(),
-        )?);
+        if manifest.variant(vname).is_err() {
+            println!("{vname:<14} (not in manifest, skipped)");
+            continue;
+        }
+        let (_, _engine, ff) = runtime::load_variant(&dir, vname)?;
         let mut provider = runtime::ModelForceProvider::new(ff);
         let rep = gaq_md::lee::measure_lee(
             &mut provider,

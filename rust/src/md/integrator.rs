@@ -4,6 +4,7 @@
 //! energies eV. Kinetic energy = 1/2 m v^2 / ACC_UNIT (so KE is in eV).
 
 use super::{ForceProvider, ACC_UNIT, KB_EV};
+use crate::util::error::Result;
 use crate::util::prng::Rng;
 
 /// Mutable MD state.
@@ -79,7 +80,7 @@ pub fn verlet_step(
     forces: &[f64],
     dt_fs: f64,
     provider: &mut dyn ForceProvider,
-) -> anyhow::Result<(f64, Vec<f64>)> {
+) -> Result<(f64, Vec<f64>)> {
     let n = state.n_atoms();
     // half-kick + drift
     for i in 0..n {
@@ -114,7 +115,7 @@ pub fn langevin_step(
     t_kelvin: f64,
     rng: &mut Rng,
     provider: &mut dyn ForceProvider,
-) -> anyhow::Result<(f64, Vec<f64>)> {
+) -> Result<(f64, Vec<f64>)> {
     let n = state.n_atoms();
     let c1 = (-gamma * dt_fs).exp();
     for i in 0..n {

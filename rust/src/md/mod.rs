@@ -13,6 +13,7 @@ pub mod thermostat;
 pub mod trajectory;
 
 use crate::molecule::ForceField;
+use crate::util::error::Result;
 
 /// Unit conversion: (eV/Angstrom)/amu -> Angstrom/fs^2.
 pub const ACC_UNIT: f64 = 9.64853329e-3;
@@ -23,7 +24,7 @@ pub const KB_EV: f64 = 8.617333262e-5;
 /// classical oracle, or a mock. Positions/forces are flat [n*3] f64.
 pub trait ForceProvider {
     /// (potential energy eV, forces eV/A).
-    fn energy_forces(&mut self, positions: &[f64]) -> anyhow::Result<(f64, Vec<f64>)>;
+    fn energy_forces(&mut self, positions: &[f64]) -> Result<(f64, Vec<f64>)>;
 
     /// Human-readable tag for reports.
     fn label(&self) -> String {
@@ -37,7 +38,7 @@ pub struct ClassicalProvider {
 }
 
 impl ForceProvider for ClassicalProvider {
-    fn energy_forces(&mut self, positions: &[f64]) -> anyhow::Result<(f64, Vec<f64>)> {
+    fn energy_forces(&mut self, positions: &[f64]) -> Result<(f64, Vec<f64>)> {
         Ok(classical::energy_forces(&self.ff, positions))
     }
 

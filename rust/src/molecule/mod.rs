@@ -38,9 +38,16 @@ pub struct Molecule {
     pub ff: ForceField,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("manifest molecule parse error: {0}")]
+#[derive(Debug)]
 pub struct MoleculeError(pub String);
+
+impl std::fmt::Display for MoleculeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "manifest molecule parse error: {}", self.0)
+    }
+}
+
+impl std::error::Error for MoleculeError {}
 
 fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json, MoleculeError> {
     j.get(key).ok_or_else(|| MoleculeError(format!("missing key {key:?}")))

@@ -2,8 +2,10 @@
 //!
 //! The octahedral encoder/decoder must agree with the Python/Pallas
 //! implementation bit-for-bit-ish (same grid, same wrap rule) — the LEE
-//! harness and server-side MDDQ of client payloads depend on it; a pytest
-//! <-> cargo cross-check fixture guards the agreement (tests/).
+//! harness and server-side MDDQ of client payloads depend on it. The checked
+//! in fixture fixtures/oct_codebook.json guards the agreement from both
+//! sides: rust/tests/codebook_fixture.rs (cargo) and
+//! python/tests/test_codebook_fixture.py (pytest).
 
 use crate::geometry::{geodesic_angle, normalize, Vec3};
 

@@ -1,0 +1,45 @@
+//! The execution-backend abstraction (DESIGN.md §4).
+//!
+//! [`ExecBackend`] is the seam between the serving/MD layers and whatever
+//! actually evaluates a force-field variant. Two implementations:
+//!
+//! * [`crate::runtime::ReferenceForceField`] — always available, pure Rust:
+//!   classical oracle forces post-processed through the *real* packed-integer
+//!   pipeline (`quant::pack` / `quant::gemm` / `quant::codebook`) so each
+//!   variant exhibits its paper-shaped equivariance behaviour.
+//! * `PjrtForceField` (feature `pjrt`) — compiled HLO artifacts executed
+//!   through the PJRT C API; requires vendoring the `xla` crate.
+//!
+//! The contract mirrors the AOT signature from python/compile/aot.py:
+//!   single : f32[n*3] -> (energy eV, forces f32[n*3])
+//!   batched: [B][n*3] -> [B](energy, forces), item order preserved.
+
+use crate::util::error::Result;
+
+/// One loaded force-field variant, ready to evaluate.
+pub trait ExecBackend {
+    /// Variant name this backend was loaded for (e.g. "gaq_w4a8").
+    fn variant_name(&self) -> &str;
+
+    /// Short backend kind tag for labels/metrics ("reference", "pjrt").
+    fn kind(&self) -> &'static str;
+
+    fn n_atoms(&self) -> usize;
+
+    /// Batch sizes with dedicated compiled entry points (empty when the
+    /// backend evaluates batches item-by-item).
+    fn batch_sizes(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Single-molecule inference: positions flat [n*3] f32, Angstrom.
+    /// Implementations validate the length themselves and return an error
+    /// (not a panic) on mismatch — callers pass user input through directly.
+    fn energy_forces_f32(&self, positions: &[f32]) -> Result<(f32, Vec<f32>)>;
+
+    /// Batched inference; default maps singles so results match the single
+    /// entry point exactly.
+    fn energy_forces_batch(&self, positions_batch: &[Vec<f32>]) -> Result<Vec<(f32, Vec<f32>)>> {
+        positions_batch.iter().map(|p| self.energy_forces_f32(p)).collect()
+    }
+}

@@ -1,176 +1,136 @@
-//! PJRT execution engine (S8): load HLO text, compile once, execute many.
+//! Execution engine front-end (DESIGN.md §4): one process-wide [`Engine`]
+//! chooses the execution backend; [`CompiledForceField`] is one loaded
+//! variant behind the [`ExecBackend`] seam.
 //!
-//! Wraps the `xla` crate (PJRT C API, CPU plugin). One
-//! [`CompiledForceField`] per model variant; the MD loop and the serving
-//! coordinator call `energy_forces` / `energy_forces_batch` on the hot
-//! path — no Python anywhere.
+//! Default build: the pure-Rust [`super::ReferenceForceField`] — classical
+//! oracle + real packed-integer quantisation, no artifacts required. With the
+//! `pjrt` feature (requires vendoring the `xla` crate): AOT-compiled HLO
+//! executed through the PJRT C API, artifacts required.
 
-use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use crate::md::ForceProvider;
+use crate::molecule::Molecule;
+use crate::util::error::Result;
 
+use super::backend::ExecBackend;
 use super::manifest::Variant;
+use super::reference::ReferenceForceField;
 
-/// Shared PJRT client (one per process).
+enum EngineKind {
+    Reference,
+    #[cfg(feature = "pjrt")]
+    Pjrt(super::pjrt::PjrtEngine),
+}
+
+/// Chooses and owns the execution backend (one per process is typical).
 pub struct Engine {
-    client: xla::PjRtClient,
+    kind: EngineKind,
 }
 
 impl Engine {
+    /// The default CPU engine: PJRT when compiled in, else the reference
+    /// backend. Always succeeds on the default feature set.
     pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Engine { client })
+        Engine::default_cpu()
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn default_cpu() -> Result<Engine> {
+        Ok(Engine { kind: EngineKind::Reference })
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn default_cpu() -> Result<Engine> {
+        let eng = super::pjrt::PjrtEngine::cpu()?;
+        Ok(Engine { kind: EngineKind::Pjrt(eng) })
+    }
+
+    /// The pure-Rust reference engine, regardless of compiled features.
+    pub fn reference() -> Engine {
+        Engine { kind: EngineKind::Reference }
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.kind {
+            EngineKind::Reference => "reference-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt(e) => e.platform(),
+        }
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        match &self.kind {
+            EngineKind::Reference => 1,
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt(e) => e.device_count(),
+        }
     }
 
-    /// Compile an HLO-text file into an executable.
-    pub fn compile_file(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
-        let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
+    pub fn is_pjrt(&self) -> bool {
+        match &self.kind {
+            EngineKind::Reference => false,
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt(_) => true,
+        }
     }
 }
 
-/// A compiled force-field variant: single-molecule and batched entry points.
-///
-/// Signature contract (python/compile/aot.py):
-///   single : (f32[n,3]) -> (f32[1], f32[n,3])
-///   batched: (f32[B,n,3]) -> (f32[B], f32[B,n,3])
+/// A loaded force-field variant with single + batched entry points, served
+/// by whichever [`ExecBackend`] the engine selected. Energy calibration
+/// (`Variant::e_shift`) is owned and applied by the backend that needs it
+/// (PJRT recentres trained-model outputs; the reference oracle is absolute).
 pub struct CompiledForceField {
     pub variant_name: String,
     pub n_atoms: usize,
-    /// additive energy calibration (training label mean), eV
-    pub e_shift: f64,
-    single: xla::PjRtLoadedExecutable,
-    /// (batch, executable) pairs, ascending batch
-    batched: Vec<(usize, xla::PjRtLoadedExecutable)>,
+    backend: Box<dyn ExecBackend>,
 }
 
 impl CompiledForceField {
-    /// Compile the variant's single + batched HLO artifacts.
-    pub fn load(engine: &Engine, variant: &Variant, n_atoms: usize) -> Result<Self> {
-        let single = engine.compile_file(&variant.hlo)?;
-        let mut batched = Vec::new();
-        for (&b, path) in &variant.hlo_batched {
-            if path.exists() {
-                batched.push((b, engine.compile_file(path)?));
+    /// Load one variant. The reference backend needs only the molecule's
+    /// oracle parameters; the PJRT backend compiles the variant's HLO files.
+    pub fn load(engine: &Engine, variant: &Variant, molecule: &Molecule) -> Result<Self> {
+        let backend: Box<dyn ExecBackend> = match &engine.kind {
+            EngineKind::Reference => Box::new(ReferenceForceField::new(variant, molecule)),
+            #[cfg(feature = "pjrt")]
+            EngineKind::Pjrt(e) => {
+                Box::new(super::pjrt::PjrtForceField::load(e, variant, molecule.n_atoms())?)
             }
-        }
-        batched.sort_by_key(|(b, _)| *b);
+        };
         Ok(CompiledForceField {
             variant_name: variant.name.clone(),
-            n_atoms,
-            e_shift: variant.e_shift,
-            single,
-            batched,
+            n_atoms: molecule.n_atoms(),
+            backend,
         })
     }
 
-    /// Available batched entry points.
+    /// Which backend kind serves this variant ("reference" / "pjrt").
+    pub fn backend_kind(&self) -> &'static str {
+        self.backend.kind()
+    }
+
+    /// Available batched entry points (empty: batches map to singles).
     pub fn batch_sizes(&self) -> Vec<usize> {
-        self.batched.iter().map(|(b, _)| *b).collect()
+        self.backend.batch_sizes()
     }
 
-    /// Single-molecule inference: positions [n*3] f32 -> (energy eV, forces [n*3]).
+    /// Single-molecule inference: positions [n*3] f32 -> (energy eV, forces).
+    /// Shape validation is the backend's responsibility (ExecBackend
+    /// contract) — bad lengths come back as errors, never panics.
     pub fn energy_forces_f32(&self, positions: &[f32]) -> Result<(f32, Vec<f32>)> {
-        if positions.len() != self.n_atoms * 3 {
-            bail!(
-                "positions length {} != 3*n_atoms ({})",
-                positions.len(),
-                3 * self.n_atoms
-            );
-        }
-        let lit = xla::Literal::vec1(positions).reshape(&[self.n_atoms as i64, 3])?;
-        let result = self.single.execute::<xla::Literal>(&[lit])?;
-        let out = result[0][0].to_literal_sync()?;
-        let (e_lit, f_lit) = out.to_tuple2()?;
-        let e = e_lit.to_vec::<f32>()?[0] + self.e_shift as f32;
-        let f = f_lit.to_vec::<f32>()?;
-        Ok((e, f))
+        self.backend.energy_forces_f32(positions)
     }
 
-    /// Batched inference using the largest compiled batch <= requests;
-    /// pads the final partial batch with copies of the last item.
-    /// Input: `positions_batch` of shape [B][n*3]; output per item.
+    /// Batched inference; item order preserved.
     pub fn energy_forces_batch(
         &self,
         positions_batch: &[Vec<f32>],
     ) -> Result<Vec<(f32, Vec<f32>)>> {
-        let total = positions_batch.len();
-        if total == 0 {
-            return Ok(Vec::new());
-        }
-        for p in positions_batch {
-            if p.len() != self.n_atoms * 3 {
-                bail!("bad positions length {} in batch", p.len());
-            }
-        }
-        let mut out = Vec::with_capacity(total);
-        let mut idx = 0;
-        while idx < total {
-            let remaining = total - idx;
-            // largest batch exec that's <= remaining, else smallest (pad up)
-            let (bsize, exe) = self
-                .batched
-                .iter()
-                .rev()
-                .find(|(b, _)| *b <= remaining)
-                .or_else(|| self.batched.first().map(|x| x))
-                .map(|(b, e)| (*b, e))
-                .unwrap_or((0, &self.single));
-
-            if bsize == 0 {
-                // no batched artifacts: fall back to singles
-                let (e, f) = self.energy_forces_f32(&positions_batch[idx])?;
-                out.push((e, f));
-                idx += 1;
-                continue;
-            }
-
-            let take = remaining.min(bsize);
-            let mut flat = Vec::with_capacity(bsize * self.n_atoms * 3);
-            for k in 0..bsize {
-                let src = &positions_batch[idx + k.min(take - 1)];
-                flat.extend_from_slice(src);
-            }
-            let lit = xla::Literal::vec1(&flat).reshape(&[
-                bsize as i64,
-                self.n_atoms as i64,
-                3,
-            ])?;
-            let result = exe.execute::<xla::Literal>(&[lit])?;
-            let outlit = result[0][0].to_literal_sync()?;
-            let (e_lit, f_lit) = outlit.to_tuple2()?;
-            let es = e_lit.to_vec::<f32>()?;
-            let fs = f_lit.to_vec::<f32>()?;
-            let stride = self.n_atoms * 3;
-            for k in 0..take {
-                out.push((
-                    es[k] + self.e_shift as f32,
-                    fs[k * stride..(k + 1) * stride].to_vec(),
-                ));
-            }
-            idx += take;
-        }
-        Ok(out)
+        self.backend.energy_forces_batch(positions_batch)
     }
 }
 
-/// Adapter: compiled PJRT model as an MD [`ForceProvider`] (f64 boundary).
+/// Adapter: a loaded variant as an MD [`ForceProvider`] (f64 boundary).
 pub struct ModelForceProvider {
     pub ff: Arc<CompiledForceField>,
     /// scratch to avoid re-allocating the f32 view each step
@@ -194,6 +154,6 @@ impl ForceProvider for ModelForceProvider {
     }
 
     fn label(&self) -> String {
-        format!("pjrt:{}", self.ff.variant_name)
+        format!("{}:{}", self.ff.backend_kind(), self.ff.variant_name)
     }
 }

@@ -43,22 +43,51 @@ pub struct Manifest {
     pub model_f: usize,
     pub model_layers: usize,
     pub cutoff: f64,
+    /// true when this manifest was synthesised in-process (no artifact files
+    /// on disk; only the reference backend can serve it)
+    pub builtin: bool,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ManifestError {
-    #[error("cannot read {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
-    #[error("manifest json: {0}")]
-    Json(#[from] crate::util::json::JsonError),
-    #[error("manifest molecule: {0}")]
-    Molecule(#[from] crate::molecule::MoleculeError),
-    #[error("manifest structure: {0}")]
+    Io { path: String, source: std::io::Error },
+    Json(crate::util::json::JsonError),
+    Molecule(crate::molecule::MoleculeError),
     Structure(String),
+}
+
+impl std::fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ManifestError::Io { path, source } => write!(f, "cannot read {path}: {source}"),
+            ManifestError::Json(e) => write!(f, "manifest json: {e}"),
+            ManifestError::Molecule(e) => write!(f, "manifest molecule: {e}"),
+            ManifestError::Structure(msg) => write!(f, "manifest structure: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ManifestError::Io { source, .. } => Some(source),
+            ManifestError::Json(e) => Some(e),
+            ManifestError::Molecule(e) => Some(e),
+            ManifestError::Structure(_) => None,
+        }
+    }
+}
+
+impl From<crate::util::json::JsonError> for ManifestError {
+    fn from(e: crate::util::json::JsonError) -> Self {
+        ManifestError::Json(e)
+    }
+}
+
+impl From<crate::molecule::MoleculeError> for ManifestError {
+    fn from(e: crate::molecule::MoleculeError) -> Self {
+        ManifestError::Molecule(e)
+    }
 }
 
 impl Manifest {
@@ -97,7 +126,91 @@ impl Manifest {
             variants.insert(name.clone(), parse_variant(&dir, name, vj)?);
         }
 
-        Ok(Manifest { dir, molecule, variants, batch_sizes, model_f, model_layers, cutoff })
+        Ok(Manifest {
+            dir,
+            molecule,
+            variants,
+            batch_sizes,
+            model_f,
+            model_layers,
+            cutoff,
+            builtin: false,
+        })
+    }
+
+    /// `dir/manifest.json` when present, else the builtin reference manifest
+    /// (served by the pure-Rust backend — no artifact files required). Only a
+    /// *corrupt* on-disk manifest is an error; absence is not.
+    pub fn load_or_reference(dir: impl AsRef<Path>) -> Result<Manifest, ManifestError> {
+        let dir = dir.as_ref();
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::reference())
+        }
+    }
+
+    /// The builtin reference manifest: the azobenzene oracle molecule plus
+    /// the paper's variant roster with Table II/III metrics as the recorded
+    /// training metadata. Artifact paths are empty — this manifest can only
+    /// be served by the reference backend.
+    pub fn reference() -> Manifest {
+        let molecule = Molecule::azobenzene_builtin();
+        let model_f = 32usize;
+        let model_layers = 2usize;
+        // parameter count of the So3krates-lite model at (F, layers); the
+        // byte figure feeds the Fig. 1(d) memory row
+        let params = model_layers * 6 * model_f * model_f;
+
+        // (name, scheme, w_bits, a_bits, e_mae, f_mae, lee, stable, diverged, stagnated)
+        type Row = (&'static str, &'static str, u32, u32, f64, f64, f64, bool, bool, bool);
+        const ROWS: [Row; 7] = [
+            ("fp32", "fp32", 32, 32, 23.2, 21.2, 0.0, true, false, false),
+            ("naive_int8", "naive", 8, 8, 118.2, 102.4, 5.23, false, true, false),
+            ("svq_kmeans", "svq_kmeans", 4, 8, f64::NAN, f64::NAN, f64::NAN, false, false, true),
+            ("degree_quant", "degree", 8, 8, 63.2, 58.9, 2.10, false, false, false),
+            ("gaq_w4a8", "gaq", 4, 8, 9.3, 22.6, 0.15, true, false, false),
+            ("lsq_w4a8", "lsq", 4, 8, 9.8, 23.0, 2.80, true, false, false),
+            ("qdrop_w4a8", "qdrop", 4, 8, 9.6, 22.9, 2.60, true, false, false),
+        ];
+
+        let mut variants = BTreeMap::new();
+        for (name, scheme, w_bits, a_bits, e_mae, f_mae, lee, stable, diverged, stagnated) in ROWS
+        {
+            variants.insert(
+                name.to_string(),
+                Variant {
+                    name: name.to_string(),
+                    scheme: scheme.to_string(),
+                    w_bits,
+                    a_bits,
+                    e_shift: 0.0,
+                    hlo: PathBuf::new(),
+                    hlo_batched: BTreeMap::new(),
+                    weights_bin: PathBuf::new(),
+                    weights_bytes: params * w_bits as usize / 8,
+                    metrics: VariantMetrics {
+                        e_mae_mev: e_mae,
+                        f_mae_mev_a: f_mae,
+                        lee_mev_a: lee,
+                        stable,
+                        diverged,
+                        stagnated,
+                    },
+                },
+            );
+        }
+
+        Manifest {
+            dir: PathBuf::from("<builtin-reference>"),
+            molecule,
+            variants,
+            batch_sizes: vec![1, 8],
+            model_f,
+            model_layers,
+            cutoff: 5.0,
+            builtin: true,
+        }
     }
 
     pub fn variant(&self, name: &str) -> Result<&Variant, ManifestError> {
@@ -177,5 +290,25 @@ mod tests {
     fn missing_dir_is_io_error() {
         let e = Manifest::load("/nonexistent/nowhere").unwrap_err();
         assert!(matches!(e, ManifestError::Io { .. }));
+    }
+
+    #[test]
+    fn reference_manifest_is_complete() {
+        let m = Manifest::reference();
+        assert!(m.builtin);
+        assert_eq!(m.molecule.n_atoms(), 24);
+        for name in ["fp32", "naive_int8", "degree_quant", "gaq_w4a8"] {
+            let v = m.variant(name).expect("builtin variant");
+            assert!(v.weights_bytes > 0, "{name}");
+        }
+        assert!(m.variant("fp32").unwrap().metrics.stable);
+        assert!(m.variant("naive_int8").unwrap().metrics.diverged);
+    }
+
+    #[test]
+    fn load_or_reference_falls_back_to_builtin() {
+        let m = Manifest::load_or_reference("/nonexistent/nowhere").expect("builtin fallback");
+        assert!(m.builtin);
+        assert!(m.variants.contains_key("gaq_w4a8"));
     }
 }

@@ -1,27 +1,52 @@
-//! Runtime (S8): PJRT engine + artifact manifest.
+//! Runtime (S8): execution backends + artifact manifest.
 //!
-//! `Engine` owns the PJRT CPU client; `Manifest` describes what
-//! python/compile/aot.py exported; `CompiledForceField` is one compiled
-//! variant with single + batched entry points. See DESIGN.md §5 for the
-//! artifact contract.
+//! [`ExecBackend`] abstracts how a force-field variant is evaluated
+//! (DESIGN.md §4): the always-on pure-Rust [`ReferenceForceField`], or the
+//! PJRT engine behind the off-by-default `pjrt` feature. [`Manifest`]
+//! describes what python/compile/aot.py exported — or synthesises the
+//! builtin reference roster when no artifacts exist — and
+//! [`CompiledForceField`] is one loaded variant with single + batched entry
+//! points.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
 
+pub use backend::ExecBackend;
 pub use engine::{CompiledForceField, Engine, ModelForceProvider};
 pub use manifest::{Manifest, ManifestError, Variant, VariantMetrics};
+pub use reference::ReferenceForceField;
 
-use anyhow::Result;
+use crate::util::error::Result;
 use std::sync::Arc;
 
-/// Convenience: load manifest + compile one variant in a single call.
+/// Convenience: load manifest + one variant on the default engine in a
+/// single call. Falls back to the builtin reference manifest (and forces the
+/// reference engine) when `artifacts_dir` holds no manifest.json.
 pub fn load_variant(
     artifacts_dir: &str,
     variant: &str,
 ) -> Result<(Manifest, Engine, Arc<CompiledForceField>)> {
-    let manifest = Manifest::load(artifacts_dir)?;
-    let engine = Engine::cpu()?;
+    load_variant_with(artifacts_dir, variant, false)
+}
+
+/// As [`load_variant`], but `force_reference` pins the pure-Rust backend even
+/// when PJRT is compiled in and artifacts exist.
+pub fn load_variant_with(
+    artifacts_dir: &str,
+    variant: &str,
+    force_reference: bool,
+) -> Result<(Manifest, Engine, Arc<CompiledForceField>)> {
+    let manifest = Manifest::load_or_reference(artifacts_dir)?;
+    let engine = if force_reference || manifest.builtin {
+        Engine::reference()
+    } else {
+        Engine::cpu()?
+    };
     let v = manifest.variant(variant)?;
-    let ff = Arc::new(CompiledForceField::load(&engine, v, manifest.molecule.n_atoms())?);
+    let ff = Arc::new(CompiledForceField::load(&engine, v, &manifest.molecule)?);
     Ok((manifest, engine, ff))
 }

@@ -1,0 +1,177 @@
+//! PJRT execution backend (feature `pjrt`): load HLO text, compile once,
+//! execute many — through the `xla` crate's PJRT C API bindings.
+//!
+//! This module is compiled only with `--features pjrt`, which additionally
+//! requires vendoring the `xla` crate and re-adding it to rust/Cargo.toml as
+//! an optional dependency of this feature; the offline default build never
+//! touches it (DESIGN.md §3). The wire-level behaviour (padding of partial
+//! batches, e_shift application) is part of the [`ExecBackend`] contract and
+//! is mirrored by the reference backend's tests.
+
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+
+use super::backend::ExecBackend;
+use super::manifest::Variant;
+
+/// Shared PJRT client (one per process).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    pub fn cpu() -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+/// A compiled force-field variant: single + batched PJRT entry points.
+///
+/// Signature contract (python/compile/aot.py):
+///   single : (f32[n,3]) -> (f32[1], f32[n,3])
+///   batched: (f32[B,n,3]) -> (f32[B], f32[B,n,3])
+pub struct PjrtForceField {
+    variant_name: String,
+    n_atoms: usize,
+    e_shift: f64,
+    single: xla::PjRtLoadedExecutable,
+    /// (batch, executable) pairs, ascending batch
+    batched: Vec<(usize, xla::PjRtLoadedExecutable)>,
+}
+
+impl PjrtForceField {
+    /// Compile the variant's single + batched HLO artifacts.
+    pub fn load(engine: &PjrtEngine, variant: &Variant, n_atoms: usize) -> Result<Self> {
+        let single = engine.compile_file(&variant.hlo)?;
+        let mut batched = Vec::new();
+        for (&b, path) in &variant.hlo_batched {
+            if path.exists() {
+                batched.push((b, engine.compile_file(path)?));
+            }
+        }
+        batched.sort_by_key(|(b, _)| *b);
+        Ok(PjrtForceField {
+            variant_name: variant.name.clone(),
+            n_atoms,
+            e_shift: variant.e_shift,
+            single,
+            batched,
+        })
+    }
+}
+
+impl ExecBackend for PjrtForceField {
+    fn variant_name(&self) -> &str {
+        &self.variant_name
+    }
+
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn n_atoms(&self) -> usize {
+        self.n_atoms
+    }
+
+    fn batch_sizes(&self) -> Vec<usize> {
+        self.batched.iter().map(|(b, _)| *b).collect()
+    }
+
+    fn energy_forces_f32(&self, positions: &[f32]) -> Result<(f32, Vec<f32>)> {
+        if positions.len() != self.n_atoms * 3 {
+            crate::bail!(
+                "positions length {} != 3*n_atoms ({})",
+                positions.len(),
+                3 * self.n_atoms
+            );
+        }
+        let lit = xla::Literal::vec1(positions)
+            .reshape(&[self.n_atoms as i64, 3])
+            .context("reshape positions")?;
+        let result = self.single.execute::<xla::Literal>(&[lit]).context("execute")?;
+        let out = result[0][0].to_literal_sync().context("fetch result")?;
+        let (e_lit, f_lit) = out.to_tuple2().context("untuple result")?;
+        let e = e_lit.to_vec::<f32>().context("energy to_vec")?[0] + self.e_shift as f32;
+        let f = f_lit.to_vec::<f32>().context("forces to_vec")?;
+        Ok((e, f))
+    }
+
+    /// Batched inference using the largest compiled batch <= requests;
+    /// pads the final partial batch with copies of the last item.
+    fn energy_forces_batch(&self, positions_batch: &[Vec<f32>]) -> Result<Vec<(f32, Vec<f32>)>> {
+        let total = positions_batch.len();
+        if total == 0 {
+            return Ok(Vec::new());
+        }
+        for p in positions_batch {
+            if p.len() != self.n_atoms * 3 {
+                crate::bail!("bad positions length {} in batch", p.len());
+            }
+        }
+        let mut out = Vec::with_capacity(total);
+        let mut idx = 0;
+        while idx < total {
+            let remaining = total - idx;
+            // largest batch exec that's <= remaining, else smallest (pad up)
+            let best = self
+                .batched
+                .iter()
+                .rev()
+                .find(|(b, _)| *b <= remaining)
+                .or_else(|| self.batched.first());
+
+            let Some((bsize, exe)) = best.map(|(b, e)| (*b, e)) else {
+                // no batched artifacts: fall back to singles
+                let (e, f) = self.energy_forces_f32(&positions_batch[idx])?;
+                out.push((e, f));
+                idx += 1;
+                continue;
+            };
+
+            let take = remaining.min(bsize);
+            let mut flat = Vec::with_capacity(bsize * self.n_atoms * 3);
+            for k in 0..bsize {
+                let src = &positions_batch[idx + k.min(take - 1)];
+                flat.extend_from_slice(src);
+            }
+            let lit = xla::Literal::vec1(&flat)
+                .reshape(&[bsize as i64, self.n_atoms as i64, 3])
+                .context("reshape batch")?;
+            let result = exe.execute::<xla::Literal>(&[lit]).context("execute batch")?;
+            let outlit = result[0][0].to_literal_sync().context("fetch batch result")?;
+            let (e_lit, f_lit) = outlit.to_tuple2().context("untuple batch result")?;
+            let es = e_lit.to_vec::<f32>().context("energies to_vec")?;
+            let fs = f_lit.to_vec::<f32>().context("forces to_vec")?;
+            let stride = self.n_atoms * 3;
+            for k in 0..take {
+                out.push((
+                    es[k] + self.e_shift as f32,
+                    fs[k * stride..(k + 1) * stride].to_vec(),
+                ));
+            }
+            idx += take;
+        }
+        Ok(out)
+    }
+}

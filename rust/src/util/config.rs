@@ -25,12 +25,19 @@ pub struct Config {
     values: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ConfigError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl Config {
     pub fn parse(text: &str) -> Result<Config, ConfigError> {
@@ -61,7 +68,7 @@ impl Config {
         Ok(cfg)
     }
 
-    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Config> {
+    pub fn load(path: impl AsRef<std::path::Path>) -> crate::util::error::Result<Config> {
         let text = std::fs::read_to_string(path.as_ref())?;
         Ok(Config::parse(&text)?)
     }

@@ -1,0 +1,173 @@
+//! Minimal error substrate (the `anyhow`/`thiserror` crates are unavailable
+//! offline — see DESIGN.md §3).
+//!
+//! [`Error`] is a head message plus the flattened source chain; [`Result`]
+//! defaults its error type to it. A blanket `From<E: std::error::Error>`
+//! makes `?` work on any typed error (io, channel errors, the module errors
+//! like `JsonError`/`ManifestError`), which is why — exactly like
+//! `anyhow::Error` — [`Error`] deliberately does *not* implement
+//! `std::error::Error` itself: the blanket impl would otherwise conflict
+//! with the reflexive `From<T> for T`. The [`Context`] extension trait
+//! mirrors `anyhow::Context` (`.context("...")` / `.with_context(|| ...)`),
+//! and the crate-root `bail!` / `ensure!` macros mirror the control-flow
+//! helpers. `{e}` prints the head message, `{e:#}` the full cause chain.
+
+use std::fmt;
+
+/// A dynamic application error: head message + source-message chain.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+    /// source messages, outermost first
+    chain: Vec<String>,
+}
+
+/// Crate-wide result type (error defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into(), chain: Vec::new() }
+    }
+
+    /// Push a new head message, demoting the current one into the chain.
+    pub fn context(mut self, msg: impl Into<String>) -> Error {
+        let old = std::mem::replace(&mut self.msg, msg.into());
+        self.chain.insert(0, old);
+        self
+    }
+
+    /// The source-message chain, outermost first (for diagnostics).
+    pub fn chain(&self) -> &[String] {
+        &self.chain
+    }
+
+    fn from_std(e: &(dyn std::error::Error + 'static)) -> Error {
+        let msg = e.to_string();
+        let mut chain = Vec::new();
+        let mut cur = e.source();
+        while let Some(s) = cur {
+            chain.push(s.to_string());
+            cur = s.source();
+        }
+        Error { msg, chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        // `{:#}` prints the full cause chain, like anyhow's alternate mode.
+        if f.alternate() {
+            for link in &self.chain {
+                write!(f, ": {link}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+/// `anyhow::Context`-shaped extension for attaching messages to errors.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(msg))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing");
+        Err(e).context("loading config")
+    }
+
+    #[test]
+    fn context_chains_sources() {
+        let err = io_fail().unwrap_err();
+        assert_eq!(format!("{err}"), "loading config");
+        let full = format!("{err:#}");
+        assert!(full.contains("loading config"), "{full}");
+        assert!(full.contains("missing thing"), "{full}");
+        assert_eq!(err.chain().len(), 1);
+    }
+
+    #[test]
+    fn question_mark_converts_any_std_error() {
+        fn inner() -> Result<()> {
+            let _n: i32 = "not a number".parse()?;
+            Ok(())
+        }
+        let err = inner().unwrap_err();
+        assert!(format!("{err}").contains("invalid digit"), "{err}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("empty").unwrap_err();
+        assert_eq!(err.to_string(), "empty");
+    }
+
+    fn bails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        if !flag {
+            bail!("unreachable");
+        }
+        Ok(7)
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(bails(true).unwrap(), 7);
+        assert_eq!(bails(false).unwrap_err().to_string(), "flag was false");
+    }
+}

@@ -1,9 +1,10 @@
 //! In-tree substrates for the offline environment (DESIGN.md §3):
-//! JSON, CLI parsing, PRNG, micro-benchmarking and property testing.
+//! errors, JSON, CLI parsing, PRNG, micro-benchmarking and property testing.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
+pub mod error;
 pub mod json;
 pub mod prng;
 pub mod proptest;

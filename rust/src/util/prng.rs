@@ -54,10 +54,25 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
-    /// Uniform integer in [0, n).
+    /// Uniform integer in [0, n) via Lemire's multiply-shift reduction with
+    /// rejection of the biased low band — exactly uniform for every n, unlike
+    /// the naive `next_u64() % n` (which over-weights small residues whenever
+    /// n does not divide 2^64).
     pub fn below(&mut self, n: usize) -> usize {
-        debug_assert!(n > 0);
-        (self.next_u64() % n as u64) as usize
+        assert!(n > 0, "Rng::below(0)");
+        let n64 = n as u64;
+        let mut m = (self.next_u64() as u128) * (n64 as u128);
+        let mut lo = m as u64;
+        if lo < n64 {
+            // reject draws in the short first bucket: 2^64 mod n values map
+            // to it once more than to every other residue
+            let threshold = n64.wrapping_neg() % n64;
+            while lo < threshold {
+                m = (self.next_u64() as u128) * (n64 as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as usize
     }
 
     /// Standard normal via Box–Muller (caches the pair).
@@ -132,6 +147,36 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.03, "mean={mean}");
         assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn below_is_deterministic_and_in_range() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for n in [1usize, 2, 3, 7, 100, 1 << 20] {
+            for _ in 0..200 {
+                let x = a.below(n);
+                assert_eq!(x, b.below(n));
+                assert!(x < n);
+            }
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_on_small_range() {
+        // Lemire reduction: each residue equally likely (the old modulo
+        // reduction passes this too at n=3, but the determinism fixture above
+        // pins the new draw sequence).
+        let mut r = Rng::new(5);
+        let n = 30_000;
+        let mut counts = [0usize; 3];
+        for _ in 0..n {
+            counts[r.below(3)] += 1;
+        }
+        for &c in &counts {
+            let frac = c as f64 / n as f64;
+            assert!((frac - 1.0 / 3.0).abs() < 0.02, "counts {counts:?}");
+        }
     }
 
     #[test]

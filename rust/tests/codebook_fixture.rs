@@ -1,0 +1,64 @@
+//! Python <-> Rust octahedral-codebook agreement (the cross-check promised
+//! in rust/src/quant/codebook.rs): both implementations must map the same
+//! unit vectors to the same grid codes and codewords. The checked-in fixture
+//! (fixtures/oct_codebook.json, regenerate with
+//! fixtures/gen_oct_codebook_fixture.py) is consumed here and by
+//! python/tests/test_codebook_fixture.py.
+
+use gaq_md::quant::codebook::{oct_decode, oct_encode, oct_quantize};
+use gaq_md::util::json;
+
+fn fixture() -> json::Json {
+    let path = gaq_md::workspace_root().join("fixtures").join("oct_codebook.json");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+    json::parse(&text).expect("fixture is valid json")
+}
+
+fn vec3(j: &json::Json) -> [f64; 3] {
+    let a = j.as_arr().expect("vec3 array");
+    assert_eq!(a.len(), 3);
+    [
+        a[0].as_f64().unwrap(),
+        a[1].as_f64().unwrap(),
+        a[2].as_f64().unwrap(),
+    ]
+}
+
+#[test]
+fn oct_codebook_agrees_with_checked_in_fixture() {
+    let j = fixture();
+    let bits = j.get("bits").and_then(|b| b.as_usize()).expect("bits") as u32;
+    let cases = j.get("cases").and_then(|c| c.as_arr()).expect("cases");
+    assert!(cases.len() >= 32, "fixture unexpectedly small: {}", cases.len());
+
+    for (i, case) in cases.iter().enumerate() {
+        let u = vec3(case.get("u").expect("u"));
+        let gx = case.get("gx").and_then(|v| v.as_usize()).expect("gx") as u32;
+        let gy = case.get("gy").and_then(|v| v.as_usize()).expect("gy") as u32;
+        let q = vec3(case.get("q").expect("q"));
+
+        let (egx, egy) = oct_encode(u, bits);
+        assert_eq!(
+            (egx, egy),
+            (gx, gy),
+            "case {i}: encode({u:?}) = ({egx}, {egy}), fixture says ({gx}, {gy})"
+        );
+
+        let dec = oct_decode(gx, gy, bits);
+        for ax in 0..3 {
+            assert!(
+                (dec[ax] - q[ax]).abs() < 1e-9,
+                "case {i} axis {ax}: decoded {} vs fixture {}",
+                dec[ax],
+                q[ax]
+            );
+        }
+
+        // quantise(u) is the composition — must land exactly on the codeword
+        let qq = oct_quantize(u, bits);
+        for ax in 0..3 {
+            assert!((qq[ax] - q[ax]).abs() < 1e-9, "case {i}: quantize != decode∘encode");
+        }
+    }
+}
