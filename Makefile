@@ -5,7 +5,9 @@
 CARGO ?= cargo
 PYTEST ?= python3 -m pytest
 
-.PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke clean
+BENCHES = coordinator parallel_scaling fig3_nve table1_complexity table3_lee table4_latency
+
+.PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke clean
 
 build:
 	$(CARGO) build --release
@@ -41,6 +43,13 @@ artifacts:
 
 smoke:
 	cd python && python3 -m compile.aot --out ../artifacts_smoke --quick
+
+# one short iteration of every bench binary so they can't bit-rot
+bench-smoke:
+	@for b in $(BENCHES); do \
+		echo "== bench $$b (smoke) =="; \
+		GAQ_BENCH_FAST=1 $(CARGO) bench --bench $$b || exit 1; \
+	done
 
 clean:
 	$(CARGO) clean

@@ -79,5 +79,40 @@ fn main() {
         server.shutdown();
     }
 
+    // ---- multi-tenant replicas: C concurrent client threads, one server ------
+    for clients in [1usize, 4] {
+        let server = Server::start(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+            },
+            variants: vec![("mock".into(), Backend::Mock { n_atoms: 24 }, 2)],
+        })
+        .expect("server");
+
+        b.run(&format!("serve_mock/clients{clients}_x32each"), || {
+            let total: usize = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|_| {
+                        let sub = server.submitter();
+                        s.spawn(move || {
+                            let pend: Vec<_> = (0..32)
+                                .map(|_| sub.submit("mock", vec![0.5; 72]).unwrap())
+                                .collect();
+                            pend.into_iter()
+                                .map(|p| {
+                                    p.wait_timeout(Duration::from_secs(10)).unwrap().batch_size
+                                })
+                                .sum::<usize>()
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
+            black_box(total)
+        });
+        server.shutdown();
+    }
+
     b.report();
 }

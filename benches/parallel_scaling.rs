@@ -1,0 +1,180 @@
+//! Serial-vs-parallel scaling of the three sharded hot layers (DESIGN.md
+//! §8): quantized GEMMs, reference-backend batched inference and the
+//! classical nonbonded loop. Every case runs the *same* kernel twice — on a
+//! one-worker pool and on the configured pool (`GAQ_THREADS`, default all
+//! cores) — verifies the outputs are bit-identical, and reports the
+//! speedup. Results land in a JSON file (`GAQ_BENCH_JSON`, default
+//! `<workspace>/target/parallel_scaling.json`) so scaling regressions are
+//! diffable across runs.
+//!
+//! Run: `cargo bench --bench parallel_scaling` (GAQ_BENCH_FAST=1 to shrink).
+
+use std::collections::BTreeMap;
+
+use gaq_md::md::classical;
+use gaq_md::quant::gemm::{f32_bits_eq, gemm_f32_pool, gemm_i8_pool, gemm_w4a8_pool};
+use gaq_md::quant::pack::{quantize_i4, quantize_i8};
+use gaq_md::runtime::{Manifest, ReferenceForceField};
+use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::json::{to_string, Json};
+use gaq_md::util::prng::Rng;
+use gaq_md::util::threadpool::{configured_threads, ThreadPool};
+
+fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| (r.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    if let Err(e) = f32_bits_eq(a, b) {
+        panic!("{what}: parallel diverged from serial: {e}");
+    }
+}
+
+struct Case {
+    name: String,
+    serial_ns: f64,
+    parallel_ns: f64,
+}
+
+impl Case {
+    fn speedup(&self) -> f64 {
+        self.serial_ns / self.parallel_ns.max(1e-9)
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let threads = configured_threads();
+    let serial = ThreadPool::new(1);
+    let pool = ThreadPool::new(threads);
+    println!("parallel_scaling — {threads} worker(s) (GAQ_THREADS to override)\n");
+    let mut cases: Vec<Case> = Vec::new();
+
+    // ---- quantized GEMMs, inference-sized row shards ------------------------
+    let (m, k, n) = (48usize, 384usize, 384usize);
+    let a = random_vec(m * k, 1);
+    let w = random_vec(k * n, 2);
+    let qa = quantize_i8(&a);
+    let qw8 = quantize_i8(&w);
+    let qw4 = quantize_i4(&w);
+    let mut c_serial = vec![0f32; m * n];
+    let mut c_par = vec![0f32; m * n];
+
+    let s = b.run("gemm_f32/serial", || {
+        gemm_f32_pool(&serial, black_box(&a), &w, &mut c_serial, m, k, n)
+    });
+    let p = b.run("gemm_f32/parallel", || {
+        gemm_f32_pool(&pool, black_box(&a), &w, &mut c_par, m, k, n)
+    });
+    assert_bits_eq(&c_serial, &c_par, "gemm_f32");
+    cases.push(Case { name: "gemm_f32".into(), serial_ns: s.median_ns, parallel_ns: p.median_ns });
+
+    let s = b.run("gemm_i8/serial", || {
+        gemm_i8_pool(&serial, black_box(&qa), &qw8, &mut c_serial, m, k, n)
+    });
+    let p = b.run("gemm_i8/parallel", || {
+        gemm_i8_pool(&pool, black_box(&qa), &qw8, &mut c_par, m, k, n)
+    });
+    assert_bits_eq(&c_serial, &c_par, "gemm_i8");
+    cases.push(Case { name: "gemm_i8".into(), serial_ns: s.median_ns, parallel_ns: p.median_ns });
+
+    let s = b.run("gemm_w4a8/serial", || {
+        gemm_w4a8_pool(&serial, black_box(&qa), &qw4, &mut c_serial, m, k, n)
+    });
+    let p = b.run("gemm_w4a8/parallel", || {
+        gemm_w4a8_pool(&pool, black_box(&qa), &qw4, &mut c_par, m, k, n)
+    });
+    assert_bits_eq(&c_serial, &c_par, "gemm_w4a8");
+    cases.push(Case { name: "gemm_w4a8".into(), serial_ns: s.median_ns, parallel_ns: p.median_ns });
+
+    // ---- batched inference through the reference backend --------------------
+    let manifest = Manifest::reference();
+    let ff = ReferenceForceField::new(manifest.variant("gaq_w4a8").unwrap(), &manifest.molecule);
+    let base: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
+    let mut rng = Rng::new(3);
+    let batch: Vec<Vec<f32>> = (0..32)
+        .map(|_| base.iter().map(|&x| x + 0.02 * rng.gaussian() as f32).collect())
+        .collect();
+
+    let s = b.run("batch_infer_32/serial", || {
+        ff.energy_forces_batch_with(black_box(&batch), &serial).unwrap().len()
+    });
+    let p = b.run("batch_infer_32/parallel", || {
+        ff.energy_forces_batch_with(black_box(&batch), &pool).unwrap().len()
+    });
+    let out_s = ff.energy_forces_batch_with(&batch, &serial).unwrap();
+    let out_p = ff.energy_forces_batch_with(&batch, &pool).unwrap();
+    for ((es, fs), (ep, fp)) in out_s.iter().zip(&out_p) {
+        assert_eq!(es.to_bits(), ep.to_bits(), "batch_infer: energies diverged");
+        assert_bits_eq(fs, fp, "batch_infer forces");
+    }
+    cases.push(Case {
+        name: "batch_infer_32".into(),
+        serial_ns: s.median_ns,
+        parallel_ns: p.median_ns,
+    });
+
+    // ---- classical nonbonded shards -----------------------------------------
+    let (ljff, ljpos) = classical::synthetic_lj(7, 4); // 343 atoms, 58k pairs
+    let s = b.run("classical_nb/serial", || {
+        classical::energy_forces_with(black_box(&ljff), &ljpos, &serial).0
+    });
+    let p = b.run("classical_nb/parallel", || {
+        classical::energy_forces_with(black_box(&ljff), &ljpos, &pool).0
+    });
+    let (e_s, f_s) = classical::energy_forces_with(&ljff, &ljpos, &serial);
+    let (e_p, f_p) = classical::energy_forces_with(&ljff, &ljpos, &pool);
+    assert_eq!(e_s.to_bits(), e_p.to_bits(), "classical_nb: energy diverged");
+    for (x, y) in f_s.iter().zip(&f_p) {
+        assert_eq!(x.to_bits(), y.to_bits(), "classical_nb: forces diverged");
+    }
+    cases.push(Case {
+        name: "classical_nb".into(),
+        serial_ns: s.median_ns,
+        parallel_ns: p.median_ns,
+    });
+
+    b.report();
+
+    println!("\n=== serial -> parallel speedup ({threads} workers) ===");
+    for c in &cases {
+        println!("{:<18} {:>6.2}x", c.name, c.speedup());
+    }
+
+    // ---- bench JSON ----------------------------------------------------------
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("parallel_scaling".to_string())),
+        ("threads".to_string(), Json::Num(threads as f64)),
+        (
+            "cases".to_string(),
+            Json::Arr(
+                cases
+                    .iter()
+                    .map(|c| {
+                        Json::Obj(BTreeMap::from([
+                            ("name".to_string(), Json::Str(c.name.clone())),
+                            ("serial_ns".to_string(), Json::Num(c.serial_ns)),
+                            ("parallel_ns".to_string(), Json::Num(c.parallel_ns)),
+                            ("speedup".to_string(), Json::Num(c.speedup())),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let path = std::env::var("GAQ_BENCH_JSON").unwrap_or_else(|_| {
+        gaq_md::workspace_root()
+            .join("target")
+            .join("parallel_scaling.json")
+            .to_string_lossy()
+            .into_owned()
+    });
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    match std::fs::write(&path, to_string(&json)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

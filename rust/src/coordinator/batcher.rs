@@ -84,29 +84,37 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::request::InferenceResponse;
     use crate::util::prng::Rng;
     use crate::util::proptest::check;
     use std::sync::mpsc;
 
-    fn req(id: u64, enq: Instant) -> InferenceRequest {
-        let (tx, _rx) = mpsc::channel();
-        // keep rx alive? not needed for batcher-only tests
-        std::mem::forget(_rx);
-        InferenceRequest {
-            id,
-            variant: "fp32".into(),
-            positions: vec![0.0; 6],
-            reply: tx,
-            enqueued: enq,
-        }
+    /// Request plus its reply receiver: fixtures hold the receiver so the
+    /// reply channel stays open for the request's lifetime (no
+    /// `std::mem::forget` leak).
+    fn req(id: u64, enq: Instant) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            InferenceRequest {
+                id,
+                variant: "fp32".into(),
+                positions: vec![0.0; 6],
+                reply: tx,
+                enqueued: enq,
+            },
+            rx,
+        )
     }
 
     #[test]
     fn closes_on_max_batch() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
         let now = Instant::now();
+        let mut rxs = Vec::new();
         for i in 0..4 {
-            b.push(req(i, now));
+            let (r, rx) = req(i, now);
+            b.push(r);
+            rxs.push(rx);
         }
         assert!(b.ready(now));
         let batch = b.take_batch();
@@ -118,14 +126,16 @@ mod tests {
     fn closes_on_deadline() {
         let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
         let past = Instant::now() - Duration::from_millis(5);
-        b.push(req(0, past));
+        let (r, _rx) = req(0, past);
+        b.push(r);
         assert!(b.ready(Instant::now()));
     }
 
     #[test]
     fn not_ready_when_fresh_and_small() {
         let mut b = Batcher::new(BatchPolicy::default());
-        b.push(req(0, Instant::now()));
+        let (r, _rx) = req(0, Instant::now());
+        b.push(r);
         assert!(!b.ready(Instant::now()));
     }
 
@@ -146,8 +156,11 @@ mod tests {
                     max_wait: Duration::from_secs(1),
                 });
                 let now = Instant::now();
+                let mut rxs = Vec::new();
                 for i in 0..pushes {
-                    b.push(req(i as u64, now));
+                    let (r, rx) = req(i as u64, now);
+                    b.push(r);
+                    rxs.push(rx);
                 }
                 let mut seen = Vec::new();
                 while !b.is_empty() {

@@ -18,4 +18,4 @@ pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
 pub use request::{InferenceRequest, InferenceResponse, PendingRequest};
 pub use router::{Backend, Pool};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, Submitter};

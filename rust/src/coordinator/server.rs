@@ -34,7 +34,42 @@ pub struct Server {
     tx: mpsc::Sender<Control>,
     dispatcher: Option<std::thread::JoinHandle<Vec<Pool>>>,
     metrics: Arc<Mutex<Metrics>>,
-    next_id: AtomicU64,
+    next_id: Arc<AtomicU64>,
+}
+
+/// A cloneable, `Send` submission handle ([`Server::submitter`]): each
+/// client thread owns one while the [`Server`] itself stays with its owner
+/// thread. Submitting after shutdown returns an error (never blocks).
+#[derive(Clone)]
+pub struct Submitter {
+    tx: mpsc::Sender<Control>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl Submitter {
+    /// Non-blocking submit; returns a handle to await the response.
+    pub fn submit(&self, variant: &str, positions: Vec<f32>) -> Result<PendingRequest> {
+        submit_on(&self.tx, &self.next_id, variant, positions)
+    }
+}
+
+fn submit_on(
+    tx: &mpsc::Sender<Control>,
+    next_id: &AtomicU64,
+    variant: &str,
+    positions: Vec<f32>,
+) -> Result<PendingRequest> {
+    let id = next_id.fetch_add(1, Ordering::Relaxed);
+    let (reply, rx) = mpsc::channel();
+    let req = InferenceRequest {
+        id,
+        variant: variant.to_string(),
+        positions,
+        reply,
+        enqueued: Instant::now(),
+    };
+    tx.send(Control::Request(req)).map_err(|_| Error::msg("server is shut down"))?;
+    Ok(PendingRequest { id, rx })
 }
 
 impl Server {
@@ -59,25 +94,19 @@ impl Server {
             tx,
             dispatcher: Some(dispatcher),
             metrics,
-            next_id: AtomicU64::new(1),
+            next_id: Arc::new(AtomicU64::new(1)),
         })
     }
 
     /// Non-blocking submit; returns a handle to await the response.
     pub fn submit(&self, variant: &str, positions: Vec<f32>) -> Result<PendingRequest> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let (reply, rx) = mpsc::channel();
-        let req = InferenceRequest {
-            id,
-            variant: variant.to_string(),
-            positions,
-            reply,
-            enqueued: Instant::now(),
-        };
-        self.tx
-            .send(Control::Request(req))
-            .map_err(|_| Error::msg("server is shut down"))?;
-        Ok(PendingRequest { id, rx })
+        submit_on(&self.tx, &self.next_id, variant, positions)
+    }
+
+    /// A submission handle for concurrent client threads (request ids stay
+    /// unique across all handles and [`Server::submit`]).
+    pub fn submitter(&self) -> Submitter {
+        Submitter { tx: self.tx.clone(), next_id: self.next_id.clone() }
     }
 
     /// Blocking convenience call.

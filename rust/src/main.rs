@@ -5,10 +5,16 @@
 //! gaq-md predict  [--artifacts DIR] [--variant V] [--perturb SIGMA] [--seed S]
 //! gaq-md md       [--artifacts DIR] [--variant V] [--steps N] [--dt FS]
 //!                 [--temperature K] [--equil N] [--report-every N]
+//!                 [--replicas R]
 //! gaq-md serve    [--artifacts DIR] [--variants a,b] [--workers N]
 //!                 [--requests N] [--max-batch B] [--max-wait-us U]
+//!                 [--replicas C]
 //! gaq-md lee      [--artifacts DIR] [--variants a,b] [--rotations N]
 //! ```
+//!
+//! `--replicas` turns both commands into multi-tenant workloads: `md` runs R
+//! independent trajectories (distinct seeds) on concurrent threads; `serve`
+//! drives the synthetic load from C concurrent client threads.
 //!
 //! All experiment tables/figures have dedicated binaries under examples/
 //! and benches/; this CLI is the operational front-end.
@@ -66,6 +72,12 @@ SUBCOMMANDS:
 COMMON OPTIONS:
   --artifacts DIR    artifact directory (default: ./artifacts, env GAQ_ARTIFACTS)
   --variant NAME     model variant (default: gaq_w4a8)
+  --replicas N       md: N concurrent independent trajectories;
+                     serve: N concurrent client threads (default 1)
+
+ENVIRONMENT:
+  GAQ_THREADS        worker budget of the data-parallel pool
+                     (0/unset: all cores)
 ";
 
 fn artifacts_dir(args: &Args) -> String {
@@ -166,31 +178,38 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_md(args: &Args) -> Result<()> {
-    let dir = artifacts_dir(args);
-    let variant = args.get_or("variant", "gaq_w4a8").to_string();
-    let steps = args.get_usize("steps", 2000);
-    let dt = args.get_f64("dt", 0.5);
-    let temp = args.get_f64("temperature", 300.0);
-    let equil = args.get_usize("equil", 200);
-    let report_every = args.get_usize("report-every", 500);
-    let seed = args.get_u64("seed", 0);
+/// Outcome of one MD trajectory (one replica).
+struct MdRunStats {
+    label: String,
+    report: gaq_md::md::drift::DriftReport,
+    steps_per_s: f64,
+}
 
-    load_manifest(args, &dir)?;
-    let (manifest, _engine, ff) = runtime::load_variant(&dir, &variant)?;
+/// Parameters of one MD trajectory (shared by all replicas).
+#[derive(Clone)]
+struct MdJob {
+    dir: String,
+    variant: String,
+    steps: usize,
+    dt: f64,
+    temp: f64,
+    equil: usize,
+    /// 0 silences per-step prints (replica mode)
+    report_every: usize,
+    seed: u64,
+}
+
+/// One full trajectory: load variant, Langevin equilibration, NVE production.
+fn run_md_replica(job: &MdJob) -> Result<MdRunStats> {
+    let MdJob { steps, dt, temp, equil, report_every, seed, .. } = *job;
+    let (manifest, _engine, ff) = runtime::load_variant(&job.dir, &job.variant)?;
     let mol = &manifest.molecule;
     let mut provider = runtime::ModelForceProvider::new(ff);
+    let label = provider.label();
 
     let mut state = MdState::new(mol.positions.clone(), mol.masses.clone());
     let mut rng = Rng::new(seed);
     state.thermalize(temp, &mut rng);
-
-    println!(
-        "NVE MD: {} | {} atoms | dt={dt} fs | {steps} steps ({} ps) | T0={temp} K",
-        provider.label(),
-        mol.n_atoms(),
-        steps as f64 * dt / 1000.0
-    );
 
     // Langevin equilibration
     let (_, mut forces) = provider.energy_forces(&state.positions)?;
@@ -214,13 +233,15 @@ fn cmd_md(args: &Args) -> Result<()> {
         let etot = pe + state.kinetic_energy();
         tracker.record(state.time_fs, etot, state.temperature());
         if tracker.exploded() {
-            println!(
-                "  step {step}: EXPLODED (E={etot:.3} eV, T={:.0} K)",
-                state.temperature()
-            );
+            if report_every > 0 {
+                println!(
+                    "  step {step}: EXPLODED (E={etot:.3} eV, T={:.0} K)",
+                    state.temperature()
+                );
+            }
             break;
         }
-        if step % report_every == 0 {
+        if report_every > 0 && step % report_every == 0 {
             println!(
                 "  step {step:6} t={:8.1} fs  E_tot={etot:+10.5} eV  T={:6.1} K",
                 state.time_fs,
@@ -229,17 +250,94 @@ fn cmd_md(args: &Args) -> Result<()> {
         }
     }
     let wall = t_start.elapsed();
+    let report = tracker.report();
+    let steps_per_s = report.steps as f64 / wall.as_secs_f64().max(1e-9);
+    Ok(MdRunStats { label, report, steps_per_s })
+}
 
-    let rep = tracker.report();
+fn cmd_md(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let variant = args.get_or("variant", "gaq_w4a8").to_string();
+    let steps = args.get_usize("steps", 2000);
+    let dt = args.get_f64("dt", 0.5);
+    let temp = args.get_f64("temperature", 300.0);
+    let equil = args.get_usize("equil", 200);
+    let report_every = args.get_usize("report-every", 500);
+    let seed = args.get_u64("seed", 0);
+    let replicas = args.get_usize("replicas", 1).max(1);
+
+    let manifest = load_manifest(args, &dir)?;
+    manifest.variant(&variant)?;
     println!(
-        "\ndrift = {:+.4} meV/atom/ps | max excursion {:.3} meV/atom | rms fluct {:.3} meV/atom | exploded: {}",
-        rep.drift_mev_atom_ps, rep.max_excursion_mev_atom, rep.rms_fluct_mev_atom, rep.exploded
+        "NVE MD: variant={variant} | {} atoms | dt={dt} fs | {steps} steps ({} ps) | T0={temp} K | replicas={replicas}",
+        manifest.molecule.n_atoms(),
+        steps as f64 * dt / 1000.0
     );
+
+    let job = MdJob { dir, variant, steps, dt, temp, equil, report_every, seed };
+
+    if replicas == 1 {
+        let stats = run_md_replica(&job)?;
+        let rep = &stats.report;
+        println!(
+            "\n{}: drift = {:+.4} meV/atom/ps | max excursion {:.3} meV/atom | rms fluct {:.3} meV/atom | exploded: {}",
+            stats.label,
+            rep.drift_mev_atom_ps,
+            rep.max_excursion_mev_atom,
+            rep.rms_fluct_mev_atom,
+            rep.exploded
+        );
+        println!(
+            "performance: {:.1} steps/s ({:.2} ms/step)",
+            stats.steps_per_s,
+            1000.0 / stats.steps_per_s.max(1e-9)
+        );
+        return Ok(());
+    }
+
+    // multi-tenant mode: independent replicas (distinct seeds), one thread
+    // each, all sharing the machine — the aggregate-throughput workload
+    let t0 = std::time::Instant::now();
+    let results: Vec<Result<MdRunStats>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..replicas)
+            .map(|rep| {
+                let mut rep_job = job.clone();
+                rep_job.seed = seed.wrapping_add(rep as u64);
+                rep_job.report_every = 0;
+                s.spawn(move || run_md_replica(&rep_job))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica thread panicked"))
+            .collect()
+    });
+    let wall = t0.elapsed();
+
+    let mut total_steps = 0usize;
+    let mut failed = 0usize;
+    for (i, res) in results.iter().enumerate() {
+        match res {
+            Ok(st) => {
+                total_steps += st.report.steps;
+                println!(
+                    "  replica {i}: drift {:+9.4} meV/atom/ps | {:8.1} steps/s | exploded: {}",
+                    st.report.drift_mev_atom_ps, st.steps_per_s, st.report.exploded
+                );
+            }
+            Err(e) => {
+                failed += 1;
+                println!("  replica {i}: FAILED: {e:#}");
+            }
+        }
+    }
     println!(
-        "performance: {:.1} steps/s ({:.2} ms/step)",
-        rep.steps as f64 / wall.as_secs_f64(),
-        wall.as_secs_f64() * 1000.0 / rep.steps.max(1) as f64
+        "\n{replicas} replicas in {wall:?} | aggregate {:.1} steps/s",
+        total_steps as f64 / wall.as_secs_f64().max(1e-9)
     );
+    if failed > 0 {
+        bail!("{failed}/{replicas} replicas failed");
+    }
     Ok(())
 }
 
@@ -255,6 +353,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 256);
     let max_batch = args.get_usize("max-batch", 8);
     let max_wait_us = args.get_u64("max-wait-us", 500);
+    let clients = args.get_usize("replicas", 1).max(1);
+    let seed = args.get_u64("seed", 0);
 
     let manifest = load_manifest(args, &dir)?;
     for v in &variants {
@@ -272,34 +372,70 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .collect(),
     })?;
 
-    println!("server up: variants={variants:?} workers/variant={workers} max_batch={max_batch}");
+    println!(
+        "server up: variants={variants:?} workers/variant={workers} \
+         max_batch={max_batch} clients={clients}"
+    );
 
-    // synthetic online load: perturbed reference geometries
+    // synthetic online load: perturbed reference geometries, fanned out
+    // across `clients` concurrent submitter threads
     let base: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
-    let mut rng = Rng::new(args.get_u64("seed", 0));
+    let per_client = n_requests.div_ceil(clients);
     let t0 = std::time::Instant::now();
-    let mut pending = Vec::with_capacity(n_requests);
-    for i in 0..n_requests {
-        let mut pos = base.clone();
-        for p in pos.iter_mut() {
-            *p += (0.02 * rng.gaussian()) as f32;
+    let (submitted, errors) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let sub = server.submitter();
+                let base = base.clone();
+                let variants = variants.clone();
+                let client_seed = seed.wrapping_add(c as u64);
+                let count = per_client.min(n_requests.saturating_sub(c * per_client));
+                s.spawn(move || -> (usize, usize) {
+                    let mut rng = Rng::new(client_seed);
+                    let mut pending = Vec::with_capacity(count);
+                    for i in 0..count {
+                        let mut pos = base.clone();
+                        for p in pos.iter_mut() {
+                            *p += (0.02 * rng.gaussian()) as f32;
+                        }
+                        let v = &variants[(c + i) % variants.len()];
+                        match sub.submit(v, pos) {
+                            Ok(p) => pending.push(p),
+                            Err(_) => break, // server shut down under us
+                        }
+                    }
+                    let submitted = pending.len();
+                    let mut errs = 0usize;
+                    for p in pending {
+                        match p.wait_timeout(std::time::Duration::from_secs(300)) {
+                            Ok(r) if r.error.is_none() => {}
+                            _ => errs += 1,
+                        }
+                    }
+                    (submitted, errs)
+                })
+            })
+            .collect();
+        let mut submitted = 0usize;
+        let mut errors = 0usize;
+        for h in handles {
+            let (s_, e_) = h.join().expect("client thread panicked");
+            submitted += s_;
+            errors += e_;
         }
-        let v = &variants[i % variants.len()];
-        pending.push(server.submit(v, pos)?);
-    }
-    let mut errors = 0;
-    for p in pending {
-        let r = p.wait_timeout(std::time::Duration::from_secs(300))?;
-        if r.error.is_some() {
-            errors += 1;
-        }
-    }
+        (submitted, errors)
+    });
     let wall = t0.elapsed();
     let m = server.metrics();
-    println!("completed {n_requests} requests in {wall:?} ({errors} errors)");
+    println!("completed {submitted} requests in {wall:?} ({errors} errors, {clients} clients)");
     println!("{}", m.report());
-    println!("end-to-end throughput: {:.1} req/s", n_requests as f64 / wall.as_secs_f64());
+    println!("end-to-end throughput: {:.1} req/s", submitted as f64 / wall.as_secs_f64());
     server.shutdown();
+    if errors > 0 || submitted < n_requests {
+        bail!(
+            "serving failed: {errors} errored replies, {submitted}/{n_requests} requests submitted"
+        );
+    }
     Ok(())
 }
 

@@ -4,9 +4,35 @@
 //! harmonic angles, cosine torsions, LJ non-bonded. Used to validate the
 //! integrator independently of PJRT (tests assert NVE conservation on the
 //! analytic FF) and as an in-process baseline `ForceProvider`.
+//!
+//! The non-bonded loop — the only O(pairs) term — is sharded into fixed
+//! blocks of pairs (at least [`NB_BLOCK`], grown to one force-buffer's
+//! worth of pairs on large systems so the per-block zero/reduce
+//! bookkeeping stays a small fraction of the pair arithmetic). Each block
+//! accumulates energy and forces into a private buffer; block partials are
+//! reduced into the global accumulators in ascending block order, on the
+//! serial path and the pooled path alike. Because the block structure is a
+//! function of the pair list and atom count only (never of the thread
+//! count), results are bit-identical for every `GAQ_THREADS` setting — the
+//! determinism contract MD reproducibility rests on (DESIGN.md §8).
 
 use crate::geometry::{cross, dot, norm, scale, sub, Vec3};
 use crate::molecule::ForceField;
+use crate::util::threadpool::ThreadPool;
+
+/// Minimum pairs per non-bonded block (independent of the thread count).
+pub const NB_BLOCK: usize = 256;
+
+/// Pair count below which sharding isn't worth the fork-join overhead
+/// (azobenzene's ~190 pairs stay serial; big synthetic systems fan out).
+const NB_PAR_MIN_PAIRS: usize = 2048;
+
+/// Pairs per block for a system with `n_coords` flat coordinates: at least
+/// [`NB_BLOCK`], and at least one force buffer's worth of pairs. A
+/// function of the system only — never the thread count.
+fn nb_block_pairs(n_coords: usize) -> usize {
+    NB_BLOCK.max(n_coords)
+}
 
 fn get(r: &[f64], i: usize) -> Vec3 {
     [r[3 * i], r[3 * i + 1], r[3 * i + 2]]
@@ -19,8 +45,16 @@ fn add_force(f: &mut [f64], i: usize, v: Vec3) {
 }
 
 /// Energy and forces of the classical FF; positions flat [n*3] Angstrom,
-/// output (energy eV, forces eV/A flat [n*3]).
+/// output (energy eV, forces eV/A flat [n*3]). Non-bonded work is sharded
+/// across the global [`ThreadPool`] when the pair list is large enough;
+/// results are bit-identical to the serial path (see module docs).
 pub fn energy_forces(ff: &ForceField, r: &[f64]) -> (f64, Vec<f64>) {
+    energy_forces_with(ff, r, ThreadPool::global())
+}
+
+/// As [`energy_forces`], with an explicit pool (tests and benches pin
+/// serial-vs-parallel comparisons without touching `GAQ_THREADS`).
+pub fn energy_forces_with(ff: &ForceField, r: &[f64], pool: &ThreadPool) -> (f64, Vec<f64>) {
     let mut e = 0.0;
     let mut f = vec![0.0; r.len()];
 
@@ -82,8 +116,58 @@ pub fn energy_forces(ff: &ForceField, r: &[f64]) -> (f64, Vec<f64>) {
         }
     }
 
-    // --- non-bonded LJ --------------------------------------------------------
-    for (p, (&eps, &sig)) in ff.nb_pairs.iter().zip(ff.nb_eps.iter().zip(&ff.nb_sigma)) {
+    // --- non-bonded LJ: fixed-block sharding (see module docs) ---------------
+    let n_pairs = ff.nb_pairs.len();
+    if n_pairs > 0 {
+        let block_pairs = nb_block_pairs(r.len());
+        let n_blocks = n_pairs.div_ceil(block_pairs);
+        if pool.threads() > 1 && n_pairs >= NB_PAR_MIN_PAIRS {
+            // map a wave of several blocks per worker at a time: bounds the
+            // live partial buffers at O(threads * n_atoms) on huge pair
+            // lists while giving each scoped spawn enough blocks to
+            // amortise its fork-join cost. pool.map returns each wave's
+            // partials in block order and waves advance in order, so the
+            // reduction below is the same fixed-order sum the serial arm
+            // computes.
+            let wave = pool.threads() * 8;
+            let mut b0 = 0usize;
+            while b0 < n_blocks {
+                let len = wave.min(n_blocks - b0);
+                let partials = pool.map(len, |w| nonbonded_block(ff, r, b0 + w, block_pairs));
+                for (eb, fb) in partials {
+                    e += eb;
+                    for (fi, v) in f.iter_mut().zip(fb) {
+                        *fi += v;
+                    }
+                }
+                b0 += len;
+            }
+        } else {
+            for b in 0..n_blocks {
+                let (eb, fb) = nonbonded_block(ff, r, b, block_pairs);
+                e += eb;
+                for (fi, v) in f.iter_mut().zip(fb) {
+                    *fi += v;
+                }
+            }
+        }
+    }
+
+    (e, f)
+}
+
+/// One fixed block of the non-bonded pair list: pairs
+/// `[b*block_pairs, min((b+1)*block_pairs, len))` accumulated into a
+/// private energy/force buffer (reduced by the caller in ascending block
+/// order).
+fn nonbonded_block(ff: &ForceField, r: &[f64], b: usize, block_pairs: usize) -> (f64, Vec<f64>) {
+    let lo = b * block_pairs;
+    let hi = ((b + 1) * block_pairs).min(ff.nb_pairs.len());
+    let mut e = 0.0;
+    let mut f = vec![0.0; r.len()];
+    for idx in lo..hi {
+        let p = ff.nb_pairs[idx];
+        let (eps, sig) = (ff.nb_eps[idx], ff.nb_sigma[idx]);
         let (i, j) = (p[0], p[1]);
         let d = sub(get(r, i), get(r, j));
         let len = norm(d).max(1e-9);
@@ -94,8 +178,50 @@ pub fn energy_forces(ff: &ForceField, r: &[f64]) -> (f64, Vec<f64>) {
         add_force(&mut f, i, scale(d, coef));
         add_force(&mut f, j, scale(d, -coef));
     }
-
     (e, f)
+}
+
+/// All-pairs LJ lattice fixture: `n_side^3` atoms on a perturbed cubic
+/// grid with every i<j pair non-bonded (n_side >= 5 crosses the parallel
+/// shard threshold). Shared by the parity/scaling guards in
+/// `rust/tests/parallel_parity.rs` and `benches/parallel_scaling.rs` —
+/// not part of the public API.
+#[doc(hidden)]
+pub fn synthetic_lj(n_side: usize, seed: u64) -> (ForceField, Vec<f64>) {
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut pos = Vec::new();
+    for x in 0..n_side {
+        for y in 0..n_side {
+            for z in 0..n_side {
+                pos.push(x as f64 * 2.0 + 0.05 * rng.gaussian());
+                pos.push(y as f64 * 2.0 + 0.05 * rng.gaussian());
+                pos.push(z as f64 * 2.0 + 0.05 * rng.gaussian());
+            }
+        }
+    }
+    let n = n_side * n_side * n_side;
+    let mut nb_pairs = Vec::new();
+    for i in 0..n {
+        for j in i + 1..n {
+            nb_pairs.push([i, j]);
+        }
+    }
+    let np = nb_pairs.len();
+    let ff = ForceField {
+        bonds: Vec::new(),
+        bond_r0: Vec::new(),
+        bond_k: Vec::new(),
+        angles: Vec::new(),
+        angle_t0: Vec::new(),
+        angle_k: Vec::new(),
+        torsions: Vec::new(),
+        torsion_phi0: Vec::new(),
+        torsion_k: Vec::new(),
+        nb_pairs,
+        nb_eps: vec![0.01; np],
+        nb_sigma: vec![1.8; np],
+    };
+    (ff, pos)
 }
 
 /// Signed dihedral angle i-j-k-l (radians), matching python `_dihedral`.
@@ -266,6 +392,25 @@ mod tests {
             }
             let (e1, _) = energy_forces(&m.ff, &r);
             assert!((e0 - e1).abs() < 1e-9, "rotation changed energy: {e0} vs {e1}");
+        }
+    }
+
+    #[test]
+    fn sharded_nonbonded_is_bit_identical_across_pool_sizes() {
+        use crate::util::threadpool::ThreadPool;
+        let (ff, r) = synthetic_lj(5, 1);
+        assert!(ff.nb_pairs.len() > 2048, "test system must cross the shard threshold");
+        let (e1, f1) = energy_forces_with(&ff, &r, &ThreadPool::new(1));
+        for threads in [2usize, 3, 8] {
+            let (e2, f2) = energy_forces_with(&ff, &r, &ThreadPool::new(threads));
+            assert_eq!(e1.to_bits(), e2.to_bits(), "energy differs at threads={threads}");
+            for (i, (a, b)) in f1.iter().zip(&f2).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "force component {i} differs at threads={threads}: {a} vs {b}"
+                );
+            }
         }
     }
 

@@ -9,10 +9,26 @@
 //! the compiler autovectorise the i8 x i8 inner loop; on memory-bound
 //! shapes (small M, large K*N — the batch-1 inference regime) they land
 //! close to the bandwidth multiplier, matching the paper's 1.8x GEMM row.
+//!
+//! Each kernel also has a row-sharded data-parallel form (`*_pool`, and
+//! `*_auto` which engages the global [`ThreadPool`] above
+//! [`PAR_MIN_MACS`]). Sharding splits the *output rows* across workers and
+//! runs the identical serial core on each block, so every output row's
+//! accumulation order — f32 adds included — is unchanged: parallel results
+//! are **bit-identical** to serial (guarded by `rust/tests/parallel_parity.rs`
+//! and the in-module tests below; DESIGN.md §8).
 
 use super::pack::{nibble_to_i8, QuantizedI4, QuantizedI8};
+use crate::util::threadpool::ThreadPool;
 
 const BLOCK: usize = 64;
+
+/// Work threshold (M*K*N multiply-accumulates) above which the `*_auto`
+/// entry points shard rows across the global pool. The pool spawns scoped
+/// workers per region (tens of microseconds of fork-join overhead), so the
+/// threshold sits high enough that the kernel body — roughly 200us+ of
+/// serial work at this size — clearly dominates the spawn cost.
+pub const PAR_MIN_MACS: usize = 1 << 19;
 
 /// Blocked f32 GEMM (reference / FP32 baseline).
 pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -38,29 +54,61 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     }
 }
 
-/// INT8 GEMM with i32 accumulation; `c = (a_q @ b_q) * a_scale * b_scale`.
-pub fn gemm_i8(
-    a: &QuantizedI8,
-    b: &QuantizedI8,
+/// Row-sharded f32 GEMM: output rows split across `pool`, serial core per
+/// block. Bit-identical to [`gemm_f32`] (per-row add order unchanged).
+pub fn gemm_f32_pool(
+    pool: &ThreadPool,
+    a: &[f32],
+    b: &[f32],
     c: &mut [f32],
     m: usize,
     k: usize,
     n: usize,
 ) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if pool.threads() <= 1 || m <= 1 || n == 0 {
+        gemm_f32(a, b, c, m, k, n);
+        return;
+    }
+    pool.for_each_row_block(c, n, |r0, cblock| {
+        let rows = cblock.len() / n;
+        gemm_f32(&a[r0 * k..(r0 + rows) * k], b, cblock, rows, k, n);
+    });
+}
+
+/// [`gemm_f32`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
+pub fn gemm_f32_auto(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    let pool = ThreadPool::global();
+    if pool.threads() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        gemm_f32_pool(pool, a, b, c, m, k, n);
+    } else {
+        gemm_f32(a, b, c, m, k, n);
+    }
+}
+
+/// INT8 GEMM with i32 accumulation; `c = (a_q @ b_q) * a_scale * b_scale`.
+pub fn gemm_i8(a: &QuantizedI8, b: &QuantizedI8, c: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.data.len(), m * k);
     assert_eq!(b.data.len(), k * n);
     assert_eq!(c.len(), m * n);
-    let scale = a.scale * b.scale;
+    gemm_i8_core(&a.data, &b.data, a.scale * b.scale, c, m, k, n);
+}
+
+/// Serial INT8 core on raw slices (shared by the full-matrix and row-block
+/// entry points — one code path, so sharded results cannot diverge).
+fn gemm_i8_core(a: &[i8], b: &[i8], scale: f32, c: &mut [f32], m: usize, k: usize, n: usize) {
     let mut acc = vec![0i32; n];
     for i in 0..m {
         acc.fill(0);
-        let arow = &a.data[i * k..(i + 1) * k];
+        let arow = &a[i * k..(i + 1) * k];
         for (kk, &av) in arow.iter().enumerate() {
             if av == 0 {
                 continue;
             }
             let av = av as i32;
-            let brow = &b.data[kk * n..kk * n + n];
+            let brow = &b[kk * n..kk * n + n];
             // iterator zip: no bounds checks -> LLVM vectorises the
             // widen-multiply-accumulate (EXPERIMENTS.md §Perf)
             for (a, &bv) in acc.iter_mut().zip(brow) {
@@ -74,13 +122,47 @@ pub fn gemm_i8(
     }
 }
 
+/// Row-sharded INT8 GEMM; bit-identical to [`gemm_i8`].
+pub fn gemm_i8_pool(
+    pool: &ThreadPool,
+    a: &QuantizedI8,
+    b: &QuantizedI8,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.data.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let scale = a.scale * b.scale;
+    if pool.threads() <= 1 || m <= 1 || n == 0 {
+        gemm_i8_core(&a.data, &b.data, scale, c, m, k, n);
+        return;
+    }
+    pool.for_each_row_block(c, n, |r0, cblock| {
+        let rows = cblock.len() / n;
+        gemm_i8_core(&a.data[r0 * k..(r0 + rows) * k], &b.data, scale, cblock, rows, k, n);
+    });
+}
+
+/// [`gemm_i8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
+pub fn gemm_i8_auto(a: &QuantizedI8, b: &QuantizedI8, c: &mut [f32], m: usize, k: usize, n: usize) {
+    let pool = ThreadPool::global();
+    if pool.threads() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        gemm_i8_pool(pool, a, b, c, m, k, n);
+    } else {
+        gemm_i8(a, b, c, m, k, n);
+    }
+}
+
 /// W4A8 GEMM: INT4 weights (packed per *column-major blocks of K*) times
 /// INT8 activations. Weights are stored row-major [K, N] nibble-packed
 /// along N; we unpack per row into a small i8 scratch to keep the inner
 /// loop dense.
 pub fn gemm_w4a8(
-    a: &QuantizedI8,        // [M, K] activations
-    b: &QuantizedI4,        // [K, N] weights, nibble-packed row-major
+    a: &QuantizedI8, // [M, K] activations
+    b: &QuantizedI4, // [K, N] weights, nibble-packed row-major
     c: &mut [f32],
     m: usize,
     k: usize,
@@ -89,7 +171,12 @@ pub fn gemm_w4a8(
     assert_eq!(a.data.len(), m * k);
     assert_eq!(b.len, k * n);
     assert_eq!(c.len(), m * n);
-    let scale = a.scale * b.scale;
+    gemm_w4a8_core(&a.data, &b.data, a.scale * b.scale, c, m, k, n);
+}
+
+/// Serial W4A8 core on raw slices. i32 accumulation is exact (wrapping
+/// adds commute), so any row sharding of the same core is bit-identical.
+fn gemm_w4a8_core(a: &[i8], bdata: &[u8], scale: f32, c: &mut [f32], m: usize, k: usize, n: usize) {
     // k-outer loop: each packed weight row is unpacked exactly ONCE (not
     // once per output row), then broadcast-accumulated into all m output
     // rows. acc is m*n i32 (32 KiB at the serving shapes — L1/L2 resident).
@@ -98,9 +185,9 @@ pub fn gemm_w4a8(
     let mut acc = vec![0i32; m * n];
     let mut wrow = vec![0i8; n];
     for kk in 0..k {
-        unpack_row(&b.data, kk * n, n, &mut wrow);
+        unpack_row(bdata, kk * n, n, &mut wrow);
         for i in 0..m {
-            let av = a.data[i * k + kk];
+            let av = a[i * k + kk];
             if av == 0 {
                 continue;
             }
@@ -114,6 +201,66 @@ pub fn gemm_w4a8(
     for (cv, &av) in c.iter_mut().zip(acc.iter()) {
         *cv = av as f32 * scale;
     }
+}
+
+/// Row-sharded W4A8 GEMM; bit-identical to [`gemm_w4a8`]. Each block
+/// re-unpacks the weight rows it touches (threads× total unpack work) in
+/// exchange for fully independent shards.
+pub fn gemm_w4a8_pool(
+    pool: &ThreadPool,
+    a: &QuantizedI8,
+    b: &QuantizedI4,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.len, k * n);
+    assert_eq!(c.len(), m * n);
+    let scale = a.scale * b.scale;
+    if pool.threads() <= 1 || m <= 1 || n == 0 {
+        gemm_w4a8_core(&a.data, &b.data, scale, c, m, k, n);
+        return;
+    }
+    pool.for_each_row_block(c, n, |r0, cblock| {
+        let rows = cblock.len() / n;
+        gemm_w4a8_core(&a.data[r0 * k..(r0 + rows) * k], &b.data, scale, cblock, rows, k, n);
+    });
+}
+
+/// [`gemm_w4a8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
+pub fn gemm_w4a8_auto(
+    a: &QuantizedI8,
+    b: &QuantizedI4,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let pool = ThreadPool::global();
+    if pool.threads() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        gemm_w4a8_pool(pool, a, b, c, m, k, n);
+    } else {
+        gemm_w4a8(a, b, c, m, k, n);
+    }
+}
+
+/// Bitwise comparison of two f32 slices; `Err` names the first divergent
+/// element. The single parity predicate shared by the kernel tests,
+/// `rust/tests/parallel_parity.rs` and `benches/parallel_scaling.rs` —
+/// not part of the public API.
+#[doc(hidden)]
+pub fn f32_bits_eq(a: &[f32], b: &[f32]) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        if x.to_bits() != y.to_bits() {
+            return Err(format!("element {i}: {x} vs {y}"));
+        }
+    }
+    Ok(())
 }
 
 /// Unpack `n` nibbles starting at global nibble index `base` into `out`.
@@ -218,5 +365,68 @@ mod tests {
             .sqrt();
         // int4 weights: ~4% relative RMS is expected at these sizes
         assert!(rms_err < 0.12 * rms_ref + 1e-3, "rms_err={rms_err} rms_ref={rms_ref}");
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        if let Err(e) = f32_bits_eq(a, b) {
+            panic!("{what}: {e}");
+        }
+    }
+
+    #[test]
+    fn pooled_kernels_are_bit_identical_to_serial() {
+        // odd n exercises the unaligned-nibble rows of unpack_row
+        for (m, k, n) in [(1usize, 5usize, 7usize), (7, 16, 9), (16, 33, 31), (5, 8, 1)] {
+            let a = random_vec(m * k, 7);
+            let b = random_vec(k * n, 8);
+            let qa = quantize_i8(&a);
+            let qb8 = quantize_i8(&b);
+            let qb4 = quantize_i4(&b);
+
+            let mut c_serial = vec![0f32; m * n];
+            let mut c_pool = vec![0f32; m * n];
+
+            for threads in [1usize, 2, 5] {
+                let pool = ThreadPool::new(threads);
+
+                gemm_f32(&a, &b, &mut c_serial, m, k, n);
+                gemm_f32_pool(&pool, &a, &b, &mut c_pool, m, k, n);
+                assert_bits_eq(&c_serial, &c_pool, "f32");
+
+                gemm_i8(&qa, &qb8, &mut c_serial, m, k, n);
+                gemm_i8_pool(&pool, &qa, &qb8, &mut c_pool, m, k, n);
+                assert_bits_eq(&c_serial, &c_pool, "i8");
+
+                gemm_w4a8(&qa, &qb4, &mut c_serial, m, k, n);
+                gemm_w4a8_pool(&pool, &qa, &qb4, &mut c_pool, m, k, n);
+                assert_bits_eq(&c_serial, &c_pool, "w4a8");
+            }
+        }
+    }
+
+    #[test]
+    fn auto_dispatch_matches_serial_above_and_below_threshold() {
+        // small (serial dispatch) and large (parallel dispatch when the
+        // global pool has >1 worker) shapes must both equal the serial kernel
+        for (m, k, n) in [(4usize, 8usize, 8usize), (96, 96, 96)] {
+            let a = random_vec(m * k, 9);
+            let b = random_vec(k * n, 10);
+            let mut c_serial = vec![0f32; m * n];
+            let mut c_auto = vec![0f32; m * n];
+            gemm_f32(&a, &b, &mut c_serial, m, k, n);
+            gemm_f32_auto(&a, &b, &mut c_auto, m, k, n);
+            assert_bits_eq(&c_serial, &c_auto, "f32 auto");
+
+            let qa = quantize_i8(&a);
+            let qb8 = quantize_i8(&b);
+            gemm_i8(&qa, &qb8, &mut c_serial, m, k, n);
+            gemm_i8_auto(&qa, &qb8, &mut c_auto, m, k, n);
+            assert_bits_eq(&c_serial, &c_auto, "i8 auto");
+
+            let qb4 = quantize_i4(&b);
+            gemm_w4a8(&qa, &qb4, &mut c_serial, m, k, n);
+            gemm_w4a8_auto(&qa, &qb4, &mut c_auto, m, k, n);
+            assert_bits_eq(&c_serial, &c_auto, "w4a8 auto");
+        }
     }
 }

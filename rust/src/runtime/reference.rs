@@ -25,9 +25,10 @@ use crate::geometry::{norm, scale, Vec3};
 use crate::md::classical;
 use crate::molecule::{ForceField, Molecule};
 use crate::quant::codebook::{fibonacci_sphere, nearest_codeword, oct_quantize};
-use crate::quant::gemm::{gemm_i8, gemm_w4a8};
+use crate::quant::gemm::{gemm_i8_auto, gemm_w4a8_auto};
 use crate::quant::pack::{dequantize_i8, quantize_i4, quantize_i8};
 use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
 
 use super::backend::ExecBackend;
 use super::manifest::Variant;
@@ -89,6 +90,23 @@ impl ReferenceForceField {
         }
     }
 
+    /// Batched evaluation fanned out across `pool`. Items are independent,
+    /// and [`ThreadPool::map`] returns results in item order, so the output
+    /// — bits included — equals mapping [`ExecBackend::energy_forces_f32`]
+    /// serially over the batch (guarded by `batch_matches_singles_exactly`).
+    pub fn energy_forces_batch_with(
+        &self,
+        positions_batch: &[Vec<f32>],
+        pool: &ThreadPool,
+    ) -> Result<Vec<(f32, Vec<f32>)>> {
+        if pool.threads() <= 1 || positions_batch.len() <= 1 {
+            return positions_batch.iter().map(|p| self.energy_forces_f32(p)).collect();
+        }
+        pool.map(positions_batch.len(), |i| self.energy_forces_f32(&positions_batch[i]))
+            .into_iter()
+            .collect()
+    }
+
     /// Apply the variant's quantisation emulation to a force tensor in place.
     fn quantize_forces(&self, forces: &mut [f32]) {
         let n = self.n_atoms;
@@ -102,7 +120,7 @@ impl ReferenceForceField {
                 let identity: [f32; 9] = [1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0];
                 let qw = quantize_i8(&identity);
                 let mut out = vec![0f32; forces.len()];
-                gemm_i8(&qa, &qw, &mut out, n, 3, 3);
+                gemm_i8_auto(&qa, &qw, &mut out, n, 3, 3);
                 forces.copy_from_slice(&out);
             }
             Scheme::PerDegreeInt8 => {
@@ -120,7 +138,7 @@ impl ReferenceForceField {
                 let qa = quantize_i8(&mags);
                 let qw = quantize_i4(&[1.0f32]);
                 let mut qmags = vec![0f32; n];
-                gemm_w4a8(&qa, &qw, &mut qmags, n, 1, 1);
+                gemm_w4a8_auto(&qa, &qw, &mut qmags, n, 1, 1);
                 for i in 0..n {
                     let v = atom_vec(forces, i);
                     let m = norm(v);
@@ -194,6 +212,10 @@ impl ExecBackend for ReferenceForceField {
         self.quantize_forces(&mut forces);
         Ok((e as f32, forces))
     }
+
+    fn energy_forces_batch(&self, positions_batch: &[Vec<f32>]) -> Result<Vec<(f32, Vec<f32>)>> {
+        self.energy_forces_batch_with(positions_batch, ThreadPool::global())
+    }
 }
 
 #[cfg(test)]
@@ -260,5 +282,34 @@ mod tests {
             assert_eq!(*eb, e);
             assert_eq!(*fb, f);
         }
+    }
+
+    #[test]
+    fn pooled_batch_matches_singles_for_every_pool_size() {
+        let ff = load("gaq_w4a8");
+        let base = ref_positions();
+        // distinct items so ordering mistakes would be visible
+        let batch: Vec<Vec<f32>> = (0..6)
+            .map(|i| base.iter().map(|&x| x + 0.01 * (i as f32 + 1.0)).collect())
+            .collect();
+        let singles: Vec<(f32, Vec<f32>)> =
+            batch.iter().map(|p| ff.energy_forces_f32(p).unwrap()).collect();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let outs = ff.energy_forces_batch_with(&batch, &pool).unwrap();
+            assert_eq!(outs.len(), singles.len());
+            for (i, ((eb, fb), (es, fs))) in outs.iter().zip(&singles).enumerate() {
+                assert_eq!(eb.to_bits(), es.to_bits(), "item {i} energy (threads={threads})");
+                assert_eq!(fb, fs, "item {i} forces (threads={threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_batch_propagates_bad_shape_errors() {
+        let ff = load("fp32");
+        let batch = vec![ref_positions(), vec![0.0; 5]];
+        let pool = ThreadPool::new(4);
+        assert!(ff.energy_forces_batch_with(&batch, &pool).is_err());
     }
 }

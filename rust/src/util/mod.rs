@@ -1,5 +1,6 @@
 //! In-tree substrates for the offline environment (DESIGN.md §3):
-//! errors, JSON, CLI parsing, PRNG, micro-benchmarking and property testing.
+//! errors, JSON, CLI parsing, PRNG, micro-benchmarking, property testing
+//! and the scoped data-parallel thread pool.
 
 pub mod benchkit;
 pub mod cli;
@@ -8,3 +9,4 @@ pub mod error;
 pub mod json;
 pub mod prng;
 pub mod proptest;
+pub mod threadpool;

@@ -1,0 +1,282 @@
+//! Scoped data-parallel executor (substrate — rayon is unavailable).
+//!
+//! A zero-dependency fork-join pool for the three hot layers (quant GEMMs,
+//! batched reference inference, the classical nonbonded loop). Design
+//! (DESIGN.md §8):
+//!
+//! * **Scoped**: every parallel region runs under [`std::thread::scope`], so
+//!   workers may borrow the caller's stack (no `'static` bounds, no unsafe
+//!   lifetime erasure) and are always joined before the region returns.
+//! * **Work-stealing-lite**: dynamic self-scheduling over a shared atomic
+//!   task cursor ([`ThreadPool::for_each`] / [`ThreadPool::map`]) gives the
+//!   load-balancing benefit of stealing without deques; statically
+//!   partitioned row blocks ([`ThreadPool::for_each_row_block`]) serve the
+//!   kernels whose output must be sharded into disjoint `&mut` slices.
+//! * **Sized once**: [`ThreadPool::global`] reads `GAQ_THREADS` (a positive
+//!   integer; `0`/unset/garbage falls back to
+//!   `std::thread::available_parallelism`). Explicit [`ThreadPool::new`]
+//!   pools let tests and benches pin serial-vs-parallel comparisons without
+//!   touching the environment.
+//!
+//! Determinism contract: [`ThreadPool::map`] returns results in task-index
+//! order regardless of which worker ran what, and a pool of one thread
+//! executes tasks inline in index order — callers that reduce partials in
+//! index order are therefore bit-identical for every pool size.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Fork-join executor with a fixed worker budget (see module docs).
+#[derive(Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+thread_local! {
+    /// Set on pool worker threads. Nested parallel regions run inline on
+    /// the worker instead of spawning again — otherwise a pooled batch
+    /// whose items each shard their own inner loop would spawn threads^2
+    /// OS threads. The fixed-order contracts make the serialised nested
+    /// region bit-identical, so this is purely a scheduling guard.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when called from inside a [`ThreadPool`] worker (nested parallel
+/// regions degrade to inline execution there).
+pub fn is_pool_worker() -> bool {
+    IN_POOL_WORKER.with(|flag| flag.get())
+}
+
+/// Thread budget from the environment: `GAQ_THREADS` if it parses to a
+/// positive integer, else `available_parallelism` (1 when unknown).
+pub fn configured_threads() -> usize {
+    let from_env = std::env::var("GAQ_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1);
+    from_env.unwrap_or_else(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+impl ThreadPool {
+    /// A pool with an explicit worker budget (clamped to >= 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        ThreadPool { threads: threads.max(1) }
+    }
+
+    /// The process-wide pool, sized from `GAQ_THREADS` /
+    /// `available_parallelism` on first use (the env var is read once).
+    pub fn global() -> &'static ThreadPool {
+        GLOBAL.get_or_init(|| ThreadPool::new(configured_threads()))
+    }
+
+    /// Worker budget of this pool.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(i)` for every `i in 0..n`, self-scheduled across the pool.
+    /// With one worker (or one task) everything runs inline, in order.
+    pub fn for_each<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        let workers = if is_pool_worker() { 1 } else { self.threads.min(n) };
+        if workers <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    IN_POOL_WORKER.with(|flag| flag.set(true));
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        f(i);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Run `f(i)` for every `i in 0..n` and collect the results **in task
+    /// order** — the returned vector is independent of scheduling.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let workers = if is_pool_worker() { 1 } else { self.threads.min(n) };
+        if workers <= 1 {
+            return (0..n).map(&f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        IN_POOL_WORKER.with(|flag| flag.set(true));
+                        let mut out = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            out.push((i, f(i)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        });
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for part in parts {
+            for (i, v) in part {
+                slots[i] = Some(v);
+            }
+        }
+        slots.into_iter().map(|o| o.expect("pool map slot unfilled")).collect()
+    }
+
+    /// Shard `data` (a row-major matrix with rows of `row_len` elements)
+    /// into one contiguous block of whole rows per worker and run
+    /// `f(first_row, block)` on each block concurrently. Blocks are
+    /// disjoint `&mut` slices, so kernels write their shard directly.
+    pub fn for_each_row_block<T, F>(&self, data: &mut [T], row_len: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        assert!(row_len > 0, "row_len must be positive");
+        assert_eq!(data.len() % row_len, 0, "data is not a whole number of rows");
+        let rows = data.len() / row_len;
+        let workers = if is_pool_worker() { 1 } else { self.threads.min(rows) };
+        if workers <= 1 {
+            if !data.is_empty() {
+                f(0, data);
+            }
+            return;
+        }
+        let rows_per = rows.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (b, block) in data.chunks_mut(rows_per * row_len).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    IN_POOL_WORKER.with(|flag| flag.set(true));
+                    f(b * rows_per, block);
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn new_clamps_to_one_worker() {
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        assert_eq!(ThreadPool::new(3).threads(), 3);
+    }
+
+    #[test]
+    fn global_pool_has_at_least_one_worker() {
+        assert!(ThreadPool::global().threads() >= 1);
+    }
+
+    #[test]
+    fn map_preserves_task_order_for_every_pool_size() {
+        let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for threads in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = pool.map(97, |i| i * i);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn for_each_runs_every_task_exactly_once() {
+        for threads in [1, 4] {
+            let pool = ThreadPool::new(threads);
+            let hits: Vec<AtomicUsize> = (0..211).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_each(hits.len(), |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {i} (threads={threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn row_blocks_cover_all_rows_disjointly() {
+        for threads in [1, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let (rows, row_len) = (13usize, 7usize);
+            let mut data = vec![0usize; rows * row_len];
+            let seen = Mutex::new(Vec::new());
+            pool.for_each_row_block(&mut data, row_len, |first_row, block| {
+                assert_eq!(block.len() % row_len, 0);
+                for x in block.iter_mut() {
+                    *x += 1;
+                }
+                seen.lock().unwrap().push((first_row, block.len() / row_len));
+            });
+            assert!(data.iter().all(|&x| x == 1), "threads={threads}");
+            let mut ranges = seen.into_inner().unwrap();
+            ranges.sort_unstable();
+            let covered: usize = ranges.iter().map(|&(_, n)| n).sum();
+            assert_eq!(covered, rows);
+        }
+    }
+
+    #[test]
+    fn nested_regions_run_inline_on_worker_threads() {
+        let outer = ThreadPool::new(4);
+        let results = outer.map(8, |i| {
+            // we are on an outer-region worker thread...
+            let on_worker = is_pool_worker();
+            // ...so the inner region must degrade to inline execution
+            // (still on this worker) instead of spawning again
+            let inner = ThreadPool::new(4);
+            let inner_flags = inner.map(4, |_| is_pool_worker());
+            (i, on_worker, inner_flags)
+        });
+        for (i, on_worker, inner_flags) in results {
+            assert!(on_worker, "task {i} did not run on a pool worker");
+            assert!(
+                inner_flags.iter().all(|&w| w),
+                "task {i}: nested tasks left the worker thread"
+            );
+        }
+        // back on the caller thread the flag must be clear
+        assert!(!is_pool_worker());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        pool.for_each(0, |_| panic!("no tasks expected"));
+        let mut empty: [f32; 0] = [];
+        pool.for_each_row_block(&mut empty, 3, |_, _| panic!("no rows expected"));
+        assert_eq!(pool.map(1, |i| i + 41), vec![41]);
+    }
+}

@@ -1,0 +1,150 @@
+//! Determinism and parity of the data-parallel layer (DESIGN.md §8):
+//! pooled kernels must be **bit-identical** to serial across randomized
+//! shapes (including the unaligned-nibble edge rows of `unpack_row`), and
+//! MD trajectories must be reproducible for a fixed seed regardless of the
+//! pool size (i.e. regardless of `GAQ_THREADS`).
+
+use gaq_md::md::classical;
+use gaq_md::md::integrator::{self, MdState};
+use gaq_md::md::ForceProvider;
+use gaq_md::molecule::ForceField;
+use gaq_md::quant::gemm::{
+    f32_bits_eq, gemm_f32, gemm_f32_pool, gemm_i8, gemm_i8_pool, gemm_w4a8, gemm_w4a8_pool,
+};
+use gaq_md::quant::pack::{quantize_i4, quantize_i8};
+use gaq_md::util::error::Result;
+use gaq_md::util::prng::Rng;
+use gaq_md::util::proptest::check;
+use gaq_md::util::threadpool::ThreadPool;
+
+fn random_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect()
+}
+
+#[test]
+fn prop_pooled_gemms_bit_identical_on_randomized_shapes() {
+    check(
+        "pooled gemm == serial gemm (bitwise)",
+        90,
+        60,
+        |r: &mut Rng| {
+            // odd n (and odd k*n products) exercise unpack_row's unaligned
+            // leading/trailing nibble branches
+            let m = 1 + r.below(24);
+            let k = 1 + r.below(48);
+            let n = 1 + r.below(33);
+            (m, k, n, r.next_u64())
+        },
+        |&(m, k, n, seed)| {
+            let mut rng = Rng::new(seed);
+            let a = random_vec(&mut rng, m * k);
+            let b = random_vec(&mut rng, k * n);
+            let qa = quantize_i8(&a);
+            let qb8 = quantize_i8(&b);
+            let qb4 = quantize_i4(&b);
+
+            let mut c_serial = vec![0f32; m * n];
+            let mut c_pool = vec![0f32; m * n];
+            for threads in [2usize, 5] {
+                let pool = ThreadPool::new(threads);
+
+                gemm_f32(&a, &b, &mut c_serial, m, k, n);
+                gemm_f32_pool(&pool, &a, &b, &mut c_pool, m, k, n);
+                if let Err(e) = f32_bits_eq(&c_serial, &c_pool) {
+                    return Err(format!("f32 diverged at ({m},{k},{n}) threads={threads}: {e}"));
+                }
+
+                gemm_i8(&qa, &qb8, &mut c_serial, m, k, n);
+                gemm_i8_pool(&pool, &qa, &qb8, &mut c_pool, m, k, n);
+                if let Err(e) = f32_bits_eq(&c_serial, &c_pool) {
+                    return Err(format!("i8 diverged at ({m},{k},{n}) threads={threads}: {e}"));
+                }
+
+                gemm_w4a8(&qa, &qb4, &mut c_serial, m, k, n);
+                gemm_w4a8_pool(&pool, &qa, &qb4, &mut c_pool, m, k, n);
+                if let Err(e) = f32_bits_eq(&c_serial, &c_pool) {
+                    return Err(format!("w4a8 diverged at ({m},{k},{n}) threads={threads}: {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn w4a8_odd_shapes_hit_unaligned_nibble_rows() {
+    // deterministic pin of the unpack_row edge cases: odd n makes every
+    // other packed weight row start on a high nibble (base = kk*n odd)
+    let mut rng = Rng::new(17);
+    for (m, k, n) in [(3usize, 7usize, 5usize), (4, 9, 1), (2, 5, 13), (6, 3, 31)] {
+        let a = random_vec(&mut rng, m * k);
+        let b = random_vec(&mut rng, k * n);
+        let qa = quantize_i8(&a);
+        let qb4 = quantize_i4(&b);
+        let mut c_serial = vec![0f32; m * n];
+        let mut c_pool = vec![0f32; m * n];
+        gemm_w4a8(&qa, &qb4, &mut c_serial, m, k, n);
+        for threads in [2usize, 3, 8] {
+            gemm_w4a8_pool(&ThreadPool::new(threads), &qa, &qb4, &mut c_pool, m, k, n);
+            if let Err(e) = f32_bits_eq(&c_serial, &c_pool) {
+                panic!("w4a8 diverged at ({m},{k},{n}) threads={threads}: {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn classical_forces_bit_identical_across_pool_sizes() {
+    // all-pairs LJ lattice: 125 atoms -> 7750 pairs, past the threshold
+    let (ff, r) = classical::synthetic_lj(5, 23);
+    assert!(ff.nb_pairs.len() >= 2048, "system must cross the shard threshold");
+    let (e1, f1) = classical::energy_forces_with(&ff, &r, &ThreadPool::new(1));
+    for threads in [2usize, 4, 7] {
+        let (e2, f2) = classical::energy_forces_with(&ff, &r, &ThreadPool::new(threads));
+        assert_eq!(e1.to_bits(), e2.to_bits(), "energy diverged at threads={threads}");
+        for (i, (a, b)) in f1.iter().zip(&f2).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "force[{i}] diverged at threads={threads}");
+        }
+    }
+}
+
+/// The classical oracle with an explicit pool — stands in for "the same
+/// binary run under a different GAQ_THREADS".
+struct PooledClassical {
+    ff: ForceField,
+    pool: ThreadPool,
+}
+
+impl ForceProvider for PooledClassical {
+    fn energy_forces(&mut self, positions: &[f64]) -> Result<(f64, Vec<f64>)> {
+        Ok(classical::energy_forces_with(&self.ff, positions, &self.pool))
+    }
+}
+
+#[test]
+fn md_trajectory_reproducible_for_any_pool_size() {
+    let run = |threads: usize| -> (Vec<f64>, Vec<f64>) {
+        let (ff, pos) = classical::synthetic_lj(5, 31);
+        let n = pos.len() / 3;
+        let mut provider = PooledClassical { ff, pool: ThreadPool::new(threads) };
+        let mut state = MdState::new(pos, vec![12.0; n]);
+        let mut rng = Rng::new(99);
+        state.thermalize(50.0, &mut rng);
+        let (_, mut forces) = provider.energy_forces(&state.positions).unwrap();
+        for _ in 0..40 {
+            let (_, f) = integrator::verlet_step(&mut state, &forces, 0.2, &mut provider).unwrap();
+            forces = f;
+        }
+        (state.positions.clone(), state.velocities.clone())
+    };
+    let (p1, v1) = run(1);
+    for threads in [2usize, 6] {
+        let (p2, v2) = run(threads);
+        for (i, (a, b)) in p1.iter().zip(&p2).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "position[{i}] diverged at threads={threads}");
+        }
+        for (i, (a, b)) in v1.iter().zip(&v2).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "velocity[{i}] diverged at threads={threads}");
+        }
+    }
+}

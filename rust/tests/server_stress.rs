@@ -1,0 +1,185 @@
+//! Server stress tests: concurrent client threads against a running
+//! [`Server`], per-client reply ordering, batch-size bounds, and clean
+//! shutdown under load (no deadlock, no hang).
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::Duration;
+
+use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use gaq_md::runtime::Manifest;
+use gaq_md::util::prng::Rng;
+
+#[test]
+fn concurrent_clients_across_all_builtin_variants() {
+    let m = Manifest::reference();
+    let names: Vec<String> = m.variants.keys().cloned().collect();
+    assert!(names.len() >= 7, "builtin roster shrank: {names:?}");
+    let max_batch = 4usize;
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+        variants: names
+            .iter()
+            .map(|v| {
+                (
+                    v.clone(),
+                    Backend::Reference {
+                        artifacts_dir: "/nonexistent/nowhere".into(),
+                        variant: v.clone(),
+                    },
+                    1,
+                )
+            })
+            .collect(),
+    })
+    .expect("server start");
+
+    let base: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+    let clients = 4usize;
+    let per_variant = 3usize;
+    let total = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let sub = server.submitter();
+                let names = names.clone();
+                let base = base.clone();
+                s.spawn(move || {
+                    let mut rng = Rng::new(c as u64);
+                    // submit a burst across every variant, then await in
+                    // submit order: each reply must carry its request's id
+                    // (per-client ordering) and respect the batch bound
+                    let mut pending = Vec::new();
+                    for round in 0..per_variant {
+                        for v in &names {
+                            let mut pos = base.clone();
+                            for p in pos.iter_mut() {
+                                *p += 0.02 * rng.gaussian() as f32;
+                            }
+                            let p = sub.submit(v, pos).expect("submit while live");
+                            pending.push((v.clone(), round, p));
+                        }
+                    }
+                    let mut done = 0usize;
+                    for (v, round, p) in pending {
+                        let id = p.id;
+                        let r = p
+                            .wait_timeout(Duration::from_secs(60))
+                            .unwrap_or_else(|e| panic!("client {c} {v} round {round}: {e}"));
+                        assert_eq!(r.id, id, "client {c}: reply for the wrong request");
+                        assert!(r.error.is_none(), "client {c} {v}: {:?}", r.error);
+                        assert!(r.energy_ev.is_finite());
+                        assert_eq!(r.forces.len(), 72);
+                        assert!(
+                            r.batch_size >= 1 && r.batch_size <= max_batch,
+                            "batch_size {} out of [1, {max_batch}]",
+                            r.batch_size
+                        );
+                        done += 1;
+                    }
+                    done
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).sum::<usize>()
+    });
+
+    assert_eq!(total, clients * per_variant * names.len());
+    let metrics = server.metrics();
+    assert_eq!(metrics.completed as usize, total);
+    assert_eq!(metrics.errors, 0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_mid_load_neither_deadlocks_nor_hangs_clients() {
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        variants: vec![("mock".into(), Backend::Mock { n_atoms: 2 }, 2)],
+    })
+    .expect("server start");
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4usize)
+            .map(|_| {
+                let sub = server.submitter();
+                s.spawn(move || {
+                    let mut accepted = 0usize;
+                    let mut answered = 0usize;
+                    let mut pending = Vec::new();
+                    for i in 0..2000usize {
+                        match sub.submit("mock", vec![i as f32; 6]) {
+                            Ok(p) => {
+                                accepted += 1;
+                                pending.push(p);
+                            }
+                            Err(_) => break, // server shut down mid-load: expected
+                        }
+                    }
+                    for p in pending {
+                        match p.wait_timeout(Duration::from_secs(20)) {
+                            // flushed before shutdown completed
+                            Ok(r) => {
+                                assert!(r.error.is_none(), "{:?}", r.error);
+                                answered += 1;
+                            }
+                            // raced the shutdown: dropped cleanly, not hung
+                            Err(RecvTimeoutError::Disconnected) => {}
+                            Err(RecvTimeoutError::Timeout) => {
+                                panic!("client hung waiting for a reply after shutdown")
+                            }
+                        }
+                    }
+                    (accepted, answered)
+                })
+            })
+            .collect();
+
+        // let the clients get some load in flight, then pull the plug
+        std::thread::sleep(Duration::from_millis(20));
+        server.shutdown();
+
+        for h in handles {
+            let (accepted, _answered) = h.join().expect("client panicked");
+            assert!(accepted > 0, "client never got a request in before shutdown");
+        }
+    });
+}
+
+#[test]
+fn burst_load_never_exceeds_max_batch() {
+    let max_batch = 5usize;
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+        variants: vec![("mock".into(), Backend::Mock { n_atoms: 2 }, 2)],
+    })
+    .expect("server start");
+
+    let total = 3 * 100usize;
+    let answered = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..3usize)
+            .map(|_| {
+                let sub = server.submitter();
+                s.spawn(move || {
+                    let pending: Vec<_> = (0..100usize)
+                        .map(|i| sub.submit("mock", vec![i as f32; 6]).expect("submit"))
+                        .collect();
+                    let mut n = 0usize;
+                    for p in pending {
+                        let r = p.wait_timeout(Duration::from_secs(30)).expect("reply");
+                        assert!(r.error.is_none());
+                        assert!(
+                            r.batch_size <= max_batch,
+                            "executed batch {} > max_batch {max_batch}",
+                            r.batch_size
+                        );
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client panicked")).sum::<usize>()
+    });
+    assert_eq!(answered, total);
+    assert_eq!(server.metrics().completed as usize, total);
+    server.shutdown();
+}
