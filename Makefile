@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTEST ?= python3 -m pytest
 
-BENCHES = coordinator parallel_scaling fig3_nve table1_complexity table3_lee table4_latency
+BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency
 
 .PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke clean
 

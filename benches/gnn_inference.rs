@@ -1,0 +1,133 @@
+//! GNN-backend inference latency per variant, serial vs pooled (DESIGN.md
+//! §9): the perf baseline of the real quantized network workload. Every
+//! variant runs single-molecule inference plus a 32-item batch on a
+//! one-worker pool and on the configured pool (`GAQ_THREADS`, default all
+//! cores), asserts the two batch paths are bit-identical, and reports the
+//! speedup + deployed weight-image bytes. Results land in a JSON file
+//! (`GAQ_BENCH_JSON`, default `<workspace>/target/gnn_inference.json`) so
+//! the inference-perf trajectory is diffable across runs.
+//!
+//! Run: `cargo bench --bench gnn_inference` (GAQ_BENCH_FAST=1 to shrink).
+
+use std::collections::BTreeMap;
+
+use gaq_md::quant::gemm::f32_bits_eq;
+use gaq_md::runtime::{ExecBackend, GnnForceField, Manifest};
+use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::json::{to_string, Json};
+use gaq_md::util::prng::Rng;
+use gaq_md::util::threadpool::{configured_threads, ThreadPool};
+
+struct Row {
+    variant: String,
+    single_ns: f64,
+    batch_serial_ns: f64,
+    batch_pooled_ns: f64,
+    weight_bytes: usize,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.batch_serial_ns / self.batch_pooled_ns.max(1e-9)
+    }
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let threads = configured_threads();
+    let serial = ThreadPool::new(1);
+    let pool = ThreadPool::new(threads);
+    println!("gnn_inference — {threads} worker(s) (GAQ_THREADS to override)\n");
+
+    let m = Manifest::reference();
+    let base: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+    let mut rng = Rng::new(1);
+    let batch: Vec<Vec<f32>> = (0..32)
+        .map(|_| base.iter().map(|&x| x + 0.02 * rng.gaussian() as f32).collect())
+        .collect();
+
+    let variants = ["fp32", "naive_int8", "degree_quant", "gaq_w4a8"];
+    let mut rows: Vec<Row> = Vec::new();
+    for v in variants {
+        let ff = GnnForceField::new(&m, m.variant(v).unwrap()).expect("gnn load");
+
+        let single = b.run(&format!("gnn/{v}/single"), || {
+            ff.energy_forces_f32(black_box(&base)).unwrap().0
+        });
+        let s = b.run(&format!("gnn/{v}/batch32/serial"), || {
+            ff.energy_forces_batch_with(black_box(&batch), &serial).unwrap().len()
+        });
+        let p = b.run(&format!("gnn/{v}/batch32/pooled"), || {
+            ff.energy_forces_batch_with(black_box(&batch), &pool).unwrap().len()
+        });
+
+        // pooled output must be bit-identical to serial
+        let out_s = ff.energy_forces_batch_with(&batch, &serial).unwrap();
+        let out_p = ff.energy_forces_batch_with(&batch, &pool).unwrap();
+        for ((es, fs), (ep, fp)) in out_s.iter().zip(&out_p) {
+            assert_eq!(es.to_bits(), ep.to_bits(), "{v}: pooled energy diverged");
+            if let Err(e) = f32_bits_eq(fs, fp) {
+                panic!("{v}: pooled forces diverged: {e}");
+            }
+        }
+
+        rows.push(Row {
+            variant: v.to_string(),
+            single_ns: single.median_ns,
+            batch_serial_ns: s.median_ns,
+            batch_pooled_ns: p.median_ns,
+            weight_bytes: ff.weight_bytes(),
+        });
+    }
+
+    b.report();
+
+    println!("\n=== batch32 serial -> pooled speedup ({threads} workers) ===");
+    println!("{:<14} {:>10} {:>10} {:>8}", "variant", "single", "weights", "speedup");
+    for r in &rows {
+        println!(
+            "{:<14} {:>8.2}us {:>8}B {:>7.2}x",
+            r.variant,
+            r.single_ns / 1e3,
+            r.weight_bytes,
+            r.speedup()
+        );
+    }
+
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("gnn_inference".to_string())),
+        ("threads".to_string(), Json::Num(threads as f64)),
+        ("batch".to_string(), Json::Num(batch.len() as f64)),
+        (
+            "cases".to_string(),
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::Obj(BTreeMap::from([
+                            ("variant".to_string(), Json::Str(r.variant.clone())),
+                            ("single_ns".to_string(), Json::Num(r.single_ns)),
+                            ("batch_serial_ns".to_string(), Json::Num(r.batch_serial_ns)),
+                            ("batch_pooled_ns".to_string(), Json::Num(r.batch_pooled_ns)),
+                            ("speedup".to_string(), Json::Num(r.speedup())),
+                            ("weight_bytes".to_string(), Json::Num(r.weight_bytes as f64)),
+                        ]))
+                    })
+                    .collect(),
+            ),
+        ),
+    ]));
+    let path = std::env::var("GAQ_BENCH_JSON").unwrap_or_else(|_| {
+        gaq_md::workspace_root()
+            .join("target")
+            .join("gnn_inference.json")
+            .to_string_lossy()
+            .into_owned()
+    });
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    match std::fs::write(&path, to_string(&json)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -29,6 +29,10 @@ pub enum Backend {
     /// (runtime/reference.rs); `artifacts_dir` supplies the manifest when
     /// present, else the builtin reference manifest is used.
     Reference { artifacts_dir: String, variant: String },
+    /// Evaluate `variant` with the in-tree quantized GNN (runtime/gnn.rs):
+    /// a genuine multi-layer network on the packed-integer kernels, no
+    /// artifacts required.
+    Gnn { artifacts_dir: String, variant: String },
     /// Deterministic stub (tests / load-gen): energy = sum(positions),
     /// forces = -positions. n_atoms validated like the real model.
     Mock { n_atoms: usize },
@@ -91,14 +95,21 @@ fn worker_loop(
         Mock { n_atoms: usize },
     }
 
-    let load = |dir: &str, variant: &str, force_reference: bool| {
-        crate::runtime::load_variant_with(dir, variant, force_reference).map(|(_, _, ff)| ff)
+    let load = |dir: &str, variant: &str, choice: crate::runtime::BackendChoice| {
+        crate::runtime::load_variant_choice(dir, variant, choice).map(|(_, _, ff)| ff)
     };
     let eval = match &backend {
         Backend::Pjrt { artifacts_dir, variant }
-        | Backend::Reference { artifacts_dir, variant } => {
-            let force_reference = matches!(backend, Backend::Reference { .. });
-            match load(artifacts_dir, variant, force_reference) {
+        | Backend::Reference { artifacts_dir, variant }
+        | Backend::Gnn { artifacts_dir, variant } => {
+            let choice = match &backend {
+                Backend::Reference { .. } => crate::runtime::BackendChoice::Reference,
+                Backend::Gnn { .. } => crate::runtime::BackendChoice::Gnn,
+                // Backend::Pjrt keeps its historical "strongest available"
+                // semantics: PJRT with artifacts, degrading to reference
+                _ => crate::runtime::BackendChoice::Auto,
+            };
+            match load(artifacts_dir, variant, choice) {
                 Ok(ff) => Eval::Model(ff),
                 Err(e) => {
                     eprintln!("worker failed to load {variant:?}: {e:#}");
@@ -299,6 +310,33 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let req = InferenceRequest {
             id: 1,
+            variant: "gaq_w4a8".into(),
+            positions: pos,
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        pool.dispatch(vec![req]).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert!(resp.energy_ev.is_finite());
+        assert_eq!(resp.forces.len(), 72);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn gnn_worker_serves_builtin_variant() {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let backend = Backend::Gnn {
+            artifacts_dir: "/nonexistent/nowhere".into(),
+            variant: "gaq_w4a8".into(),
+        };
+        let worker = spawn_worker(backend, metrics.clone()).unwrap();
+        let pool = Pool::new("gaq_w4a8".into(), vec![worker]);
+        let m = crate::runtime::Manifest::reference();
+        let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+        let (tx, rx) = mpsc::channel();
+        let req = InferenceRequest {
+            id: 5,
             variant: "gaq_w4a8".into(),
             positions: pos,
             reply: tx,

@@ -11,6 +11,8 @@
 //!
 //! Layer map (see DESIGN.md):
 //! * [`runtime`] — execution backends, artifact manifest, compiled force fields
+//! * [`model`] — the in-tree quantized SO(3)-equivariant GNN (graph, layers,
+//!   EGNN blocks, deterministic weights) behind `runtime::GnnForceField`
 //! * [`coordinator`] — request router, dynamic batcher, serving metrics
 //! * [`md`] — NVE/NVT integrators, classical oracle, drift tracking (Fig. 3)
 //! * [`quant`] — packed INT4/INT8 images, integer GEMMs, S² codebooks (Table IV)
@@ -23,6 +25,7 @@ pub mod costmodel;
 pub mod geometry;
 pub mod lee;
 pub mod md;
+pub mod model;
 pub mod molecule;
 pub mod quant;
 pub mod runtime;

@@ -2,15 +2,22 @@
 //!
 //! ```text
 //! gaq-md info     [--artifacts DIR]
-//! gaq-md predict  [--artifacts DIR] [--variant V] [--perturb SIGMA] [--seed S]
-//! gaq-md md       [--artifacts DIR] [--variant V] [--steps N] [--dt FS]
-//!                 [--temperature K] [--equil N] [--report-every N]
+//! gaq-md predict  [--artifacts DIR] [--variant V] [--backend B]
+//!                 [--perturb SIGMA] [--seed S]
+//! gaq-md md       [--artifacts DIR] [--variant V] [--backend B] [--steps N]
+//!                 [--dt FS] [--temperature K] [--equil N] [--report-every N]
 //!                 [--replicas R]
-//! gaq-md serve    [--artifacts DIR] [--variants a,b] [--workers N]
-//!                 [--requests N] [--max-batch B] [--max-wait-us U]
-//!                 [--replicas C]
-//! gaq-md lee      [--artifacts DIR] [--variants a,b] [--rotations N]
+//! gaq-md serve    [--artifacts DIR] [--variants a,b] [--backend B]
+//!                 [--workers N] [--requests N] [--max-batch B]
+//!                 [--max-wait-us U] [--replicas C]
+//! gaq-md lee      [--artifacts DIR] [--variants a,b] [--backend B]
+//!                 [--rotations N]
 //! ```
+//!
+//! `--backend` selects the execution backend per `runtime::BackendChoice`:
+//! `auto` (default), `reference` (classical oracle + quantization
+//! emulation), `gnn` (the in-tree quantized SO(3)-equivariant network), or
+//! `pjrt` (compiled artifacts; feature-gated).
 //!
 //! `--replicas` turns both commands into multi-tenant workloads: `md` runs R
 //! independent trajectories (distinct seeds) on concurrent threads; `serve`
@@ -23,7 +30,7 @@ use gaq_md::bail;
 use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
 use gaq_md::md::integrator::MdState;
 use gaq_md::md::{integrator, ForceProvider};
-use gaq_md::runtime::{self, Manifest};
+use gaq_md::runtime::{self, BackendChoice, Manifest};
 use gaq_md::util::cli::Args;
 use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
@@ -72,6 +79,9 @@ SUBCOMMANDS:
 COMMON OPTIONS:
   --artifacts DIR    artifact directory (default: ./artifacts, env GAQ_ARTIFACTS)
   --variant NAME     model variant (default: gaq_w4a8)
+  --backend NAME     execution backend: auto | reference | gnn | pjrt
+                     (default auto; `gnn` runs the in-tree quantized
+                     SO(3)-equivariant network, no artifacts required)
   --replicas N       md: N concurrent independent trajectories;
                      serve: N concurrent client threads (default 1)
 
@@ -82,6 +92,23 @@ ENVIRONMENT:
 
 fn artifacts_dir(args: &Args) -> String {
     gaq_md::resolve_artifacts_dir(args.get("artifacts"))
+}
+
+/// Parse `--backend` (default auto). Unknown names fail with the valid
+/// roster before any model loading starts.
+fn backend_choice(args: &Args) -> Result<BackendChoice> {
+    BackendChoice::parse(args.get_or("backend", "auto"))
+}
+
+/// Backends a variant can be served on in this build: reference and gnn are
+/// always available (pure Rust); pjrt needs the feature, real artifacts and
+/// the variant's compiled HLO on disk.
+fn supported_backends(manifest: &Manifest, variant: &runtime::Variant) -> String {
+    let mut names = vec!["reference", "gnn"];
+    if cfg!(feature = "pjrt") && !manifest.builtin && variant.hlo.exists() {
+        names.push("pjrt");
+    }
+    names.join(",")
 }
 
 /// Load the manifest for a command, guarding the two silent-surprise paths:
@@ -118,12 +145,12 @@ fn cmd_info(args: &Args) -> Result<()> {
         m.model_layers
     );
     println!(
-        "\n{:<14} {:>5} {:>9} {:>10} {:>9}  {}",
-        "variant", "W/A", "E-MAE", "F-MAE", "LEE", "stable"
+        "\n{:<14} {:>5} {:>9} {:>10} {:>9}  {:<8}  {}",
+        "variant", "W/A", "E-MAE", "F-MAE", "LEE", "stable", "backends"
     );
     for (name, v) in &m.variants {
         println!(
-            "{:<14} {:>2}/{:<2} {:>9.2} {:>10.2} {:>9.3}  {}",
+            "{:<14} {:>2}/{:<2} {:>9.2} {:>10.2} {:>9.3}  {:<8}  {}",
             name,
             v.w_bits,
             v.a_bits,
@@ -137,6 +164,7 @@ fn cmd_info(args: &Args) -> Result<()> {
             } else {
                 "no"
             },
+            supported_backends(&m, v),
         );
     }
     Ok(())
@@ -145,8 +173,9 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_predict(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let variant = args.get_or("variant", "gaq_w4a8");
+    let choice = backend_choice(args)?;
     load_manifest(args, &dir)?;
-    let (manifest, _engine, ff) = runtime::load_variant(&dir, variant)?;
+    let (manifest, _engine, ff) = runtime::load_variant_choice(&dir, variant, choice)?;
 
     let mut pos: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
     let sigma = args.get_f64("perturb", 0.0);
@@ -160,7 +189,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
     let t = std::time::Instant::now();
     let (e, forces) = ff.energy_forces_f32(&pos)?;
     let dt = t.elapsed();
-    println!("variant={variant} E = {e:.6} eV   ({dt:?})");
+    println!("variant={variant} backend={} E = {e:.6} eV   ({dt:?})", ff.backend_kind());
     let n = manifest.molecule.n_atoms();
     for i in 0..n.min(8) {
         println!(
@@ -190,6 +219,7 @@ struct MdRunStats {
 struct MdJob {
     dir: String,
     variant: String,
+    backend: BackendChoice,
     steps: usize,
     dt: f64,
     temp: f64,
@@ -201,8 +231,8 @@ struct MdJob {
 
 /// One full trajectory: load variant, Langevin equilibration, NVE production.
 fn run_md_replica(job: &MdJob) -> Result<MdRunStats> {
-    let MdJob { steps, dt, temp, equil, report_every, seed, .. } = *job;
-    let (manifest, _engine, ff) = runtime::load_variant(&job.dir, &job.variant)?;
+    let MdJob { backend, steps, dt, temp, equil, report_every, seed, .. } = *job;
+    let (manifest, _engine, ff) = runtime::load_variant_choice(&job.dir, &job.variant, backend)?;
     let mol = &manifest.molecule;
     let mut provider = runtime::ModelForceProvider::new(ff);
     let label = provider.label();
@@ -258,6 +288,7 @@ fn run_md_replica(job: &MdJob) -> Result<MdRunStats> {
 fn cmd_md(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let variant = args.get_or("variant", "gaq_w4a8").to_string();
+    let backend = backend_choice(args)?;
     let steps = args.get_usize("steps", 2000);
     let dt = args.get_f64("dt", 0.5);
     let temp = args.get_f64("temperature", 300.0);
@@ -269,12 +300,13 @@ fn cmd_md(args: &Args) -> Result<()> {
     let manifest = load_manifest(args, &dir)?;
     manifest.variant(&variant)?;
     println!(
-        "NVE MD: variant={variant} | {} atoms | dt={dt} fs | {steps} steps ({} ps) | T0={temp} K | replicas={replicas}",
+        "NVE MD: variant={variant} backend={} | {} atoms | dt={dt} fs | {steps} steps ({} ps) | T0={temp} K | replicas={replicas}",
+        backend.name(),
         manifest.molecule.n_atoms(),
         steps as f64 * dt / 1000.0
     );
 
-    let job = MdJob { dir, variant, steps, dt, temp, equil, report_every, seed };
+    let job = MdJob { dir, variant, backend, steps, dt, temp, equil, report_every, seed };
 
     if replicas == 1 {
         let stats = run_md_replica(&job)?;
@@ -355,26 +387,48 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_wait_us = args.get_u64("max-wait-us", 500);
     let clients = args.get_usize("replicas", 1).max(1);
     let seed = args.get_u64("seed", 0);
+    let choice = backend_choice(args)?;
 
     let manifest = load_manifest(args, &dir)?;
     for v in &variants {
         manifest.variant(v)?;
     }
+    if choice != BackendChoice::Auto {
+        // An explicitly requested backend must actually be loadable: fail
+        // fast with the helpful load error here, instead of starting a
+        // server whose workers degrade (Backend::Pjrt keeps auto semantics
+        // inside the router) or drain every request with load errors.
+        for v in &variants {
+            runtime::load_variant_choice(&dir, v, choice)?;
+        }
+    }
 
+    let worker_backend = |v: &str| -> Backend {
+        match choice {
+            BackendChoice::Auto => Backend::auto(&dir, v),
+            BackendChoice::Reference => {
+                Backend::Reference { artifacts_dir: dir.clone(), variant: v.to_string() }
+            }
+            BackendChoice::Gnn => {
+                Backend::Gnn { artifacts_dir: dir.clone(), variant: v.to_string() }
+            }
+            BackendChoice::Pjrt => {
+                Backend::Pjrt { artifacts_dir: dir.clone(), variant: v.to_string() }
+            }
+        }
+    };
     let server = Server::start(ServerConfig {
         policy: BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_micros(max_wait_us),
         },
-        variants: variants
-            .iter()
-            .map(|v| (v.clone(), Backend::auto(&dir, v), workers))
-            .collect(),
+        variants: variants.iter().map(|v| (v.clone(), worker_backend(v), workers)).collect(),
     })?;
 
     println!(
-        "server up: variants={variants:?} workers/variant={workers} \
-         max_batch={max_batch} clients={clients}"
+        "server up: variants={variants:?} backend={} workers/variant={workers} \
+         max_batch={max_batch} clients={clients}",
+        choice.name()
     );
 
     // synthetic online load: perturbed reference geometries, fanned out
@@ -448,6 +502,7 @@ fn cmd_lee(args: &Args) -> Result<()> {
         .filter(|s| !s.is_empty())
         .collect();
     let n_rot = args.get_usize("rotations", 16);
+    let choice = backend_choice(args)?;
 
     let manifest = load_manifest(args, &dir)?;
     println!("{:<14} {:>12} {:>12} {:>12}", "variant", "LEE meV/A", "max meV/A", "E-inv meV");
@@ -456,7 +511,7 @@ fn cmd_lee(args: &Args) -> Result<()> {
             println!("{vname:<14} (not in manifest, skipped)");
             continue;
         }
-        let (_, _engine, ff) = runtime::load_variant(&dir, vname)?;
+        let (_, _engine, ff) = runtime::load_variant_choice(&dir, vname, choice)?;
         let mut provider = runtime::ModelForceProvider::new(ff);
         let rep = gaq_md::lee::measure_lee(
             &mut provider,

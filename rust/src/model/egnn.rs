@@ -1,0 +1,609 @@
+//! The quantized SO(3)-equivariant message-passing network (model S13).
+//!
+//! An EGNN-style architecture (Satorras et al., *E(n) Equivariant Graph
+//! Neural Networks*) with attention-weighted messages (Le et al.,
+//! *Equivariant Graph Attention Networks*) over two feature streams:
+//!
+//! * **scalar stream** `h_i` — F invariant channels per atom, built from
+//!   species embeddings and radial edge features. Every linear map runs
+//!   through [`QuantLinear`], i.e. the *real* INT8/W4A8 kernels for
+//!   quantized variants. Quantizing invariants cannot break equivariance —
+//!   that is the MDDQ decomposition at the layer level.
+//! * **vector stream** `v_i` — one equivariant 3-vector per atom,
+//!   accumulated as invariant coefficients times edge *unit vectors*. The
+//!   only quantization this stream ever sees is the variant's geometric
+//!   vector quantizer ([`VecScheme`]): the oct-grid MDDQ path for `gaq`,
+//!   spherical VQ for `svq`, and the deliberately symmetry-breaking
+//!   Cartesian grids for the `naive`/`lsq`/`qdrop` baselines.
+//!
+//! Heads: an invariant energy readout over `h`, and a **direct equivariant
+//! force head** `F_i = s_f * v_i` plus a conservative pair prior. The prior
+//! is a Morse potential anchored at the reference-geometry pair distances
+//! (an elastic-network-style backbone, standard practice for ML force
+//! fields shipping with a physics prior): it is exactly equivariant,
+//! identical across variants, and keeps NVE trajectories bounded while the
+//! network term carries all variant-dependent behaviour.
+//!
+//! Determinism: edge reductions run in the graph's fixed receiver-major
+//! order and all GEMMs go through the `*_auto` kernels whose row sharding
+//! is bit-identical to serial — the whole forward pass is bit-identical for
+//! every `GAQ_THREADS` value (guarded by the GNN metamorphic suite).
+
+use crate::geometry::{add, norm, scale, Vec3};
+use crate::molecule::Molecule;
+use crate::quant::codebook::{fibonacci_sphere, nearest_codeword, oct_quantize};
+use crate::runtime::manifest::Variant;
+use crate::util::error::Result;
+
+use super::graph::{cosine_cutoff, radial_basis, NeighborGraph};
+use super::layers::{robust_attention_norm, silu_inplace, GemmKind, QuantLinear};
+use super::weights::{ModelWeights, N_SPECIES};
+
+/// Direction-grid bits of the MDDQ vector path (two 12-bit axis codes —
+/// the 3-byte direction payload of the deployed W4A8 transport format).
+const MDDQ_DIR_BITS: u32 = 12;
+/// Levels of the decoupled 8-bit magnitude grid.
+const MAG_LEVELS: f64 = 255.0;
+/// Morse prior well depth (eV) and stiffness (1/Angstrom).
+const MORSE_D: f64 = 0.2;
+const MORSE_A: f64 = 1.8;
+/// Calibration target for the RMS of the network force head at the
+/// reference geometry, eV/A (measured on the unquantized twin, so the
+/// scale is identical across variants).
+const TARGET_FORCE_RMS: f64 = 0.25;
+/// Fixed scale of the invariant energy readout, eV per readout unit.
+const ENERGY_SCALE: f64 = 0.05;
+
+/// How the equivariant vector stream is quantized between blocks.
+#[derive(Debug, Clone)]
+pub enum VecScheme {
+    /// pass-through (fp32 baseline)
+    Fp32,
+    /// per-tensor Cartesian INT8 grid — the symmetry-breaking baseline
+    NaiveInt8,
+    /// per-atom INT8 scales — partially preserved (degree_quant)
+    PerAtomInt8,
+    /// magnitude-direction decoupled: 8-bit magnitudes + oct direction grid
+    Mddq { dir_bits: u32 },
+    /// hard spherical VQ over an explicit codebook + 8-bit magnitudes
+    Svq { codebook: Vec<Vec3> },
+}
+
+impl VecScheme {
+    /// Same name/scheme matching as the reference backend, so a variant
+    /// shows one consistent symmetry story on either backend.
+    pub fn for_variant(name: &str, scheme: &str) -> VecScheme {
+        let key = if scheme.is_empty() { name } else { scheme };
+        let key = key.to_ascii_lowercase();
+        if key.contains("gaq") || key.contains("mddq") {
+            VecScheme::Mddq { dir_bits: MDDQ_DIR_BITS }
+        } else if key.contains("svq") {
+            VecScheme::Svq { codebook: fibonacci_sphere(256) }
+        } else if key.contains("degree") {
+            VecScheme::PerAtomInt8
+        } else if key.contains("naive") || key.contains("lsq") || key.contains("qdrop") {
+            VecScheme::NaiveInt8
+        } else {
+            VecScheme::Fp32
+        }
+    }
+}
+
+/// Architecture hyperparameters (the manifest's `model` section).
+#[derive(Debug, Clone)]
+pub struct EgnnConfig {
+    /// scalar channels per atom
+    pub f: usize,
+    /// message-passing blocks
+    pub layers: usize,
+    /// radial basis features per edge
+    pub n_rbf: usize,
+    /// neighbor cutoff, Angstrom
+    pub cutoff: f64,
+}
+
+/// One message-passing block's quantized linear maps.
+struct Block {
+    /// `[2F+R] -> F` edge message MLP
+    msg: QuantLinear,
+    /// `F -> 1` attention logit head
+    att: QuantLinear,
+    /// `[2F] -> F` scalar update
+    upd: QuantLinear,
+    /// `F -> 1` vector coefficient head
+    vec: QuantLinear,
+}
+
+/// One Morse anchor of the conservative pair prior.
+struct PriorPair {
+    i: usize,
+    j: usize,
+    r0: f64,
+}
+
+/// A loaded, calibrated EGNN for one variant over one molecule.
+pub struct EgnnModel {
+    cfg: EgnnConfig,
+    n_atoms: usize,
+    species: Vec<u32>,
+    embed: Vec<f32>,
+    blocks: Vec<Block>,
+    out: QuantLinear,
+    vec_scheme: VecScheme,
+    prior_pairs: Vec<PriorPair>,
+    /// direct force head scale (calibrated, variant-independent)
+    f_scale: f64,
+}
+
+impl EgnnModel {
+    /// Build the network for `variant` over `molecule`. The GEMM kind comes
+    /// from the variant's W/A bit widths, the vector quantizer from its
+    /// scheme; `weights` are the master f32 parameters (shared across
+    /// variants so comparisons isolate quantization).
+    pub fn new(
+        variant: &Variant,
+        molecule: &Molecule,
+        cfg: EgnnConfig,
+        weights: &ModelWeights,
+    ) -> Result<EgnnModel> {
+        crate::ensure!(cfg.f >= 1 && cfg.layers >= 1, "model config: degenerate F/layers");
+        crate::ensure!(cfg.n_rbf >= 2, "model config: need >= 2 radial features");
+        crate::ensure!(cfg.cutoff > 0.0, "model config: cutoff must be positive");
+        crate::ensure!(
+            weights.f == cfg.f && weights.layers() == cfg.layers && weights.n_rbf == cfg.n_rbf,
+            "weights shape (F={}, layers={}, R={}) != model config (F={}, layers={}, R={})",
+            weights.f,
+            weights.layers(),
+            weights.n_rbf,
+            cfg.f,
+            cfg.layers,
+            cfg.n_rbf
+        );
+        for &z in &molecule.species {
+            crate::ensure!((z as usize) < N_SPECIES, "species {z} outside embedding table");
+        }
+
+        let kind = GemmKind::from_bits(variant.w_bits, variant.a_bits);
+        let (f, r) = (cfg.f, cfg.n_rbf);
+        let blocks = weights
+            .blocks
+            .iter()
+            .map(|b| Block {
+                msg: QuantLinear::new(b.w_msg.clone(), 2 * f + r, f, kind),
+                att: QuantLinear::new(b.w_att.clone(), f, 1, kind),
+                upd: QuantLinear::new(b.w_upd.clone(), 2 * f, f, kind),
+                vec: QuantLinear::new(b.w_vec.clone(), f, 1, kind),
+            })
+            .collect();
+        let out = QuantLinear::new(weights.w_out.clone(), f, 1, kind);
+
+        // conservative prior anchored at the reference pair distances
+        let n = molecule.n_atoms();
+        let mut prior_pairs = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let mut d2 = 0.0;
+                for ax in 0..3 {
+                    let d = molecule.positions[3 * i + ax] - molecule.positions[3 * j + ax];
+                    d2 += d * d;
+                }
+                let r0 = d2.sqrt();
+                if r0 < cfg.cutoff && r0 > 1e-9 {
+                    prior_pairs.push(PriorPair { i, j, r0 });
+                }
+            }
+        }
+
+        let mut model = EgnnModel {
+            cfg,
+            n_atoms: n,
+            species: molecule.species.clone(),
+            embed: weights.embed.clone(),
+            blocks,
+            out,
+            vec_scheme: VecScheme::for_variant(&variant.name, &variant.scheme),
+            prior_pairs,
+            f_scale: 1.0,
+        };
+
+        // calibrate the force head on the unquantized twin at the reference
+        // geometry — deterministic and identical for every variant
+        let (_, v_raw) = model.network(&molecule.positions, false);
+        let rms = (v_raw.iter().map(|w| w[0] * w[0] + w[1] * w[1] + w[2] * w[2]).sum::<f64>()
+            / n.max(1) as f64)
+            .sqrt();
+        model.f_scale = TARGET_FORCE_RMS / rms.max(1e-9);
+        Ok(model)
+    }
+
+    pub fn n_atoms(&self) -> usize {
+        self.n_atoms
+    }
+
+    /// Total bytes of the stored weight images (all blocks + readout).
+    pub fn weight_bytes(&self) -> usize {
+        let per_block: usize = self
+            .blocks
+            .iter()
+            .map(|b| {
+                b.msg.weight_bytes()
+                    + b.att.weight_bytes()
+                    + b.upd.weight_bytes()
+                    + b.vec.weight_bytes()
+            })
+            .sum();
+        per_block + self.out.weight_bytes()
+    }
+
+    /// Full model evaluation: (energy eV, forces eV/A flat `[n*3]`).
+    /// Pure function of the positions — no interior mutability, so a shared
+    /// reference can be evaluated from many pool workers concurrently.
+    pub fn energy_forces(&self, positions: &[f64]) -> (f64, Vec<f64>) {
+        let (e_raw, v) = self.network(positions, true);
+        let (e_prior, mut forces) = self.prior_energy_forces(positions);
+        for (i, w) in v.iter().enumerate() {
+            for ax in 0..3 {
+                forces[3 * i + ax] += self.f_scale * w[ax];
+            }
+        }
+        (ENERGY_SCALE * e_raw + e_prior, forces)
+    }
+
+    /// The network pass: returns the raw invariant readout sum and the raw
+    /// (unscaled) per-atom vector stream. `quantized = false` runs the
+    /// unquantized twin (master f32 weights, no vector quantizer) used for
+    /// calibration.
+    fn network(&self, positions: &[f64], quantized: bool) -> (f64, Vec<Vec3>) {
+        let g = NeighborGraph::build(positions, self.cfg.cutoff);
+        let (f, r) = (self.cfg.f, self.cfg.n_rbf);
+        let (n, ne) = (g.n_atoms, g.n_edges());
+
+        // invariant edge features
+        let mut rbf = vec![0f32; ne * r];
+        let mut env = vec![0f32; ne];
+        for (e, edge) in g.edges.iter().enumerate() {
+            radial_basis(edge.dist, edge.env, self.cfg.cutoff, &mut rbf[e * r..(e + 1) * r]);
+            env[e] = edge.env as f32;
+        }
+
+        // scalar stream from species embeddings; vector stream from zero
+        let mut h = vec![0f32; n * f];
+        for i in 0..n {
+            let z = self.species[i] as usize;
+            h[i * f..(i + 1) * f].copy_from_slice(&self.embed[z * f..(z + 1) * f]);
+        }
+        let mut v: Vec<Vec3> = vec![[0.0; 3]; n];
+
+        let run = |lin: &QuantLinear, a: &[f32], m: usize, out: &mut [f32]| {
+            if quantized {
+                lin.forward(a, m, out);
+            } else {
+                lin.forward_f32(a, m, out);
+            }
+        };
+
+        let mut x = vec![0f32; ne * (2 * f + r)];
+        let mut msg = vec![0f32; ne * f];
+        let mut logits = vec![0f32; ne];
+        let mut att = vec![0f32; ne];
+        let mut coef = vec![0f32; ne];
+        let mut agg = vec![0f32; n * f];
+        let mut cat = vec![0f32; n * 2 * f];
+        let mut upd = vec![0f32; n * f];
+
+        for block in &self.blocks {
+            // edge inputs: [h_receiver, h_sender, rbf]
+            for (e, edge) in g.edges.iter().enumerate() {
+                let row = &mut x[e * (2 * f + r)..(e + 1) * (2 * f + r)];
+                row[..f].copy_from_slice(&h[edge.dst * f..(edge.dst + 1) * f]);
+                row[f..2 * f].copy_from_slice(&h[edge.src * f..(edge.src + 1) * f]);
+                row[2 * f..].copy_from_slice(&rbf[e * r..(e + 1) * r]);
+            }
+            run(&block.msg, &x, ne, &mut msg);
+            silu_inplace(&mut msg);
+
+            // robust attention over each receiver's neighborhood
+            run(&block.att, &msg, ne, &mut logits);
+            robust_attention_norm(&logits, &env, &g.recv, &mut att);
+
+            // attention-weighted scalar aggregation (receiver-major order)
+            agg.fill(0.0);
+            for (e, edge) in g.edges.iter().enumerate() {
+                let dst = &mut agg[edge.dst * f..(edge.dst + 1) * f];
+                for (d, &m_e) in dst.iter_mut().zip(&msg[e * f..(e + 1) * f]) {
+                    *d += att[e] * m_e;
+                }
+            }
+
+            // residual scalar update
+            for i in 0..n {
+                let row = &mut cat[i * 2 * f..(i + 1) * 2 * f];
+                row[..f].copy_from_slice(&h[i * f..(i + 1) * f]);
+                row[f..].copy_from_slice(&agg[i * f..(i + 1) * f]);
+            }
+            run(&block.upd, &cat, n, &mut upd);
+            silu_inplace(&mut upd);
+            for (hv, &u) in h.iter_mut().zip(&upd) {
+                *hv += u;
+            }
+
+            // equivariant vector update: invariant coefficients x unit vectors
+            run(&block.vec, &msg, ne, &mut coef);
+            for (e, edge) in g.edges.iter().enumerate() {
+                let c = coef[e] as f64 * att[e] as f64 * edge.env;
+                v[edge.dst] = add(v[edge.dst], scale(edge.unit, c));
+            }
+            if quantized {
+                quantize_vectors(&self.vec_scheme, &mut v);
+            }
+        }
+
+        // invariant energy readout
+        let mut eout = vec![0f32; n];
+        run(&self.out, &h, n, &mut eout);
+        let e_raw: f64 = eout.iter().map(|&e| e as f64).sum();
+        (e_raw, v)
+    }
+
+    /// The conservative Morse pair prior: energy + analytic forces. Smoothly
+    /// cut off, pairwise central — exactly equivariant and exactly the
+    /// gradient of its energy.
+    fn prior_energy_forces(&self, positions: &[f64]) -> (f64, Vec<f64>) {
+        let rc = self.cfg.cutoff;
+        let mut energy = 0.0;
+        let mut forces = vec![0.0; positions.len()];
+        for p in &self.prior_pairs {
+            let mut d = [0.0; 3];
+            for ax in 0..3 {
+                d[ax] = positions[3 * p.i + ax] - positions[3 * p.j + ax];
+            }
+            let r = norm(d);
+            if r >= rc || r < 1e-9 {
+                continue;
+            }
+            let x = (-MORSE_A * (r - p.r0)).exp();
+            let vm = MORSE_D * (1.0 - x) * (1.0 - x) - MORSE_D;
+            let dv = 2.0 * MORSE_D * MORSE_A * x * (1.0 - x);
+            let fc = cosine_cutoff(r, rc);
+            let dfc = -0.5 * std::f64::consts::PI / rc * (std::f64::consts::PI * r / rc).sin();
+            energy += vm * fc;
+            let mag = -(dv * fc + vm * dfc);
+            for ax in 0..3 {
+                let u = d[ax] / r;
+                forces[3 * p.i + ax] += mag * u;
+                forces[3 * p.j + ax] -= mag * u;
+            }
+        }
+        (energy, forces)
+    }
+}
+
+/// Apply the variant's geometric vector quantizer to the vector stream
+/// (per-tensor calibration over the current values — a deterministic,
+/// rotation-invariant function of the magnitudes).
+fn quantize_vectors(scheme: &VecScheme, v: &mut [Vec3]) {
+    match scheme {
+        VecScheme::Fp32 => {}
+        VecScheme::NaiveInt8 => {
+            let mut hi = 0f64;
+            for w in v.iter() {
+                for &c in w {
+                    hi = hi.max(c.abs());
+                }
+            }
+            if hi <= 0.0 {
+                return;
+            }
+            let step = hi / 127.0;
+            for w in v.iter_mut() {
+                for c in w.iter_mut() {
+                    *c = (*c / step).round().clamp(-127.0, 127.0) * step;
+                }
+            }
+        }
+        VecScheme::PerAtomInt8 => {
+            for w in v.iter_mut() {
+                let hi = w[0].abs().max(w[1].abs()).max(w[2].abs());
+                if hi <= 0.0 {
+                    continue;
+                }
+                let step = hi / 127.0;
+                for c in w.iter_mut() {
+                    *c = (*c / step).round().clamp(-127.0, 127.0) * step;
+                }
+            }
+        }
+        VecScheme::Mddq { dir_bits } => {
+            let hi = v.iter().map(|w| norm(*w)).fold(0f64, f64::max);
+            if hi <= 0.0 {
+                return;
+            }
+            let step = hi / MAG_LEVELS;
+            for w in v.iter_mut() {
+                let m = norm(*w);
+                *w = if m < 1e-12 {
+                    [0.0, 0.0, 0.0]
+                } else {
+                    let qm = (m / step).round().clamp(0.0, MAG_LEVELS) * step;
+                    scale(oct_quantize(scale(*w, 1.0 / m), *dir_bits), qm)
+                };
+            }
+        }
+        VecScheme::Svq { codebook } => {
+            let hi = v.iter().map(|w| norm(*w)).fold(0f64, f64::max);
+            if hi <= 0.0 {
+                return;
+            }
+            let step = hi / MAG_LEVELS;
+            for w in v.iter_mut() {
+                let m = norm(*w);
+                *w = if m < 1e-12 {
+                    [0.0, 0.0, 0.0]
+                } else {
+                    let qm = (m / step).round().clamp(0.0, MAG_LEVELS) * step;
+                    let u = scale(*w, 1.0 / m);
+                    scale(codebook[nearest_codeword(u, codebook)], qm)
+                };
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::matvec;
+    use crate::runtime::Manifest;
+    use crate::util::prng::Rng;
+
+    fn model(variant: &str) -> EgnnModel {
+        let m = Manifest::reference();
+        let cfg = EgnnConfig { f: m.model_f, layers: m.model_layers, n_rbf: 16, cutoff: m.cutoff };
+        let w = ModelWeights::seeded(
+            cfg.f,
+            cfg.layers,
+            cfg.n_rbf,
+            super::super::weights::DEFAULT_WEIGHT_SEED,
+        );
+        EgnnModel::new(m.variant(variant).unwrap(), &m.molecule, cfg, &w).unwrap()
+    }
+
+    fn rotate(positions: &[f64], rot: &[[f64; 3]; 3]) -> Vec<f64> {
+        let mut out = positions.to_vec();
+        for c in out.chunks_exact_mut(3) {
+            let v = matvec(rot, [c[0], c[1], c[2]]);
+            c.copy_from_slice(&v);
+        }
+        out
+    }
+
+    #[test]
+    fn fp32_model_is_equivariant_to_f32_noise() {
+        let m = Manifest::reference();
+        let model = model("fp32");
+        let mut rng = Rng::new(1);
+        let rot = rng.rotation();
+        let (e0, f0) = model.energy_forces(&m.molecule.positions);
+        let (er, fr) = model.energy_forces(&rotate(&m.molecule.positions, &rot));
+        assert!((er - e0).abs() < 1e-4, "energy not invariant: {} vs {}", er, e0);
+        let n = model.n_atoms();
+        for i in 0..n {
+            let want = matvec(&rot, [f0[3 * i], f0[3 * i + 1], f0[3 * i + 2]]);
+            for ax in 0..3 {
+                assert!(
+                    (fr[3 * i + ax] - want[ax]).abs() < 1e-4,
+                    "atom {i} axis {ax}: {} vs {}",
+                    fr[3 * i + ax],
+                    want[ax]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prior_forces_are_gradient_of_prior_energy() {
+        let model = model("fp32");
+        let m = Manifest::reference();
+        let mut pos = m.molecule.positions.clone();
+        // off-equilibrium so forces are non-trivial
+        let mut rng = Rng::new(2);
+        for p in pos.iter_mut() {
+            *p += 0.05 * rng.gaussian();
+        }
+        let (_, f) = model.prior_energy_forces(&pos);
+        let h = 1e-6;
+        for idx in [0usize, 7, 20, 41, 70] {
+            let mut pp = pos.clone();
+            pp[idx] += h;
+            let (ep, _) = model.prior_energy_forces(&pp);
+            pp[idx] -= 2.0 * h;
+            let (em, _) = model.prior_energy_forces(&pp);
+            let want = -(ep - em) / (2.0 * h);
+            assert!(
+                (f[idx] - want).abs() < 1e-5,
+                "coordinate {idx}: analytic {} vs numeric {}",
+                f[idx],
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn force_head_is_calibrated_at_reference() {
+        // for fp32 the quantized path == the calibration twin, so the network
+        // force contribution has exactly the target RMS at the reference
+        let m = Manifest::reference();
+        let model = model("fp32");
+        let (_, f_total) = model.energy_forces(&m.molecule.positions);
+        let (_, f_prior) = model.prior_energy_forces(&m.molecule.positions);
+        let n = model.n_atoms();
+        let mut acc = 0.0;
+        for i in 0..3 * n {
+            let d = f_total[i] - f_prior[i];
+            acc += d * d;
+        }
+        let rms = (acc / n as f64).sqrt();
+        assert!((rms - TARGET_FORCE_RMS).abs() < 1e-9, "network force rms {rms}");
+    }
+
+    #[test]
+    fn quantized_variants_stay_close_to_fp32_model() {
+        let m = Manifest::reference();
+        let (e0, f0) = model("fp32").energy_forces(&m.molecule.positions);
+        let fmax = f0.iter().fold(0f64, |a, &v| a.max(v.abs()));
+        for name in ["naive_int8", "degree_quant", "gaq_w4a8", "svq_kmeans"] {
+            let (e, f) = model(name).energy_forces(&m.molecule.positions);
+            assert!((e - e0).abs() < 0.5, "{name}: energy {e} vs {e0}");
+            for (a, b) in f.iter().zip(&f0) {
+                assert!((a - b).abs() < 0.2 * fmax + 0.05, "{name}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mddq_vector_quantizer_commutes_better_than_naive() {
+        let mut rng = Rng::new(5);
+        let mddq = VecScheme::Mddq { dir_bits: MDDQ_DIR_BITS };
+        let naive = VecScheme::NaiveInt8;
+        let mut err_mddq = 0.0;
+        let mut err_naive = 0.0;
+        let trials = 200;
+        for _ in 0..trials {
+            let rot = rng.rotation();
+            let v: Vec<Vec3> = (0..8)
+                .map(|_| scale(rng.unit_vec(), rng.range_f64(0.05, 2.0)))
+                .collect();
+            for (scheme, err) in [(&mddq, &mut err_mddq), (&naive, &mut err_naive)] {
+                let mut qv = v.clone();
+                quantize_vectors(scheme, &mut qv);
+                let mut rqv: Vec<Vec3> = v.iter().map(|w| matvec(&rot, *w)).collect();
+                quantize_vectors(scheme, &mut rqv);
+                for (a, b) in rqv.iter().zip(&qv) {
+                    let rb = matvec(&rot, *b);
+                    *err += norm([a[0] - rb[0], a[1] - rb[1], a[2] - rb[2]]);
+                }
+            }
+        }
+        assert!(
+            err_mddq * 10.0 < err_naive,
+            "mddq commutation {err_mddq} not 10x below naive {err_naive}"
+        );
+    }
+
+    #[test]
+    fn weight_bytes_track_the_variant_precision() {
+        let b32 = model("fp32").weight_bytes();
+        let b8 = model("naive_int8").weight_bytes();
+        let b4 = model("gaq_w4a8").weight_bytes();
+        assert!(b8 * 4 == b32, "int8 image should be 4x smaller: {b8} vs {b32}");
+        assert!(b4 * 2 <= b8 + 8, "int4 image should be ~8x smaller: {b4} vs {b32}");
+    }
+
+    #[test]
+    fn rejects_mismatched_weight_shapes() {
+        let m = Manifest::reference();
+        let cfg = EgnnConfig { f: 32, layers: 2, n_rbf: 16, cutoff: 5.0 };
+        let w = ModelWeights::seeded(16, 2, 16, 1); // wrong F
+        assert!(EgnnModel::new(m.variant("fp32").unwrap(), &m.molecule, cfg, &w).is_err());
+    }
+}

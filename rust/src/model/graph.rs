@@ -1,0 +1,192 @@
+//! Radial-cutoff neighbor graph + edge featurisation (model substrate).
+//!
+//! The graph is the SO(3)-invariant skeleton of the network: edge *lengths*
+//! and the smooth cutoff envelope feed the invariant (quantized) channels,
+//! while the edge *unit vectors* feed the equivariant path untouched.
+//! Directed edges are emitted receiver-major in ascending `(dst, src)`
+//! order and exposed CSR-style per receiver, so every per-edge reduction in
+//! the forward pass runs in one fixed, thread-independent order — the
+//! precondition for the pooled/serial bit-identity contract (DESIGN.md §8).
+//!
+//! Every edge-derived quantity is multiplied by the cosine cutoff envelope
+//! `f_c`, which vanishes smoothly at the cutoff radius: an edge entering or
+//! leaving the graph under an infinitesimal rotation of the positions
+//! cannot produce a finite jump in the output.
+
+use crate::geometry::Vec3;
+
+/// One directed edge `src -> dst` of the radial graph.
+#[derive(Debug, Clone)]
+pub struct Edge {
+    /// receiving atom
+    pub dst: usize,
+    /// sending atom
+    pub src: usize,
+    /// interatomic distance, Angstrom
+    pub dist: f64,
+    /// unit vector from `src` towards `dst` (equivariant)
+    pub unit: Vec3,
+    /// cosine cutoff envelope at `dist` (invariant, in [0, 1])
+    pub env: f64,
+}
+
+/// Radial-cutoff neighbor graph over one configuration.
+#[derive(Debug, Clone)]
+pub struct NeighborGraph {
+    pub n_atoms: usize,
+    pub cutoff: f64,
+    /// directed edges, receiver-major in ascending `(dst, src)` order
+    pub edges: Vec<Edge>,
+    /// CSR offsets: edges received by atom `i` are `edges[recv[i]..recv[i+1]]`
+    pub recv: Vec<usize>,
+}
+
+impl NeighborGraph {
+    /// Build the graph from flat `[n*3]` f64 positions. O(n^2) pair scan —
+    /// the serving molecules are tens of atoms, far below where cell lists
+    /// would pay for themselves.
+    pub fn build(positions: &[f64], cutoff: f64) -> NeighborGraph {
+        assert_eq!(positions.len() % 3, 0, "positions not [n*3]");
+        let n = positions.len() / 3;
+        let mut edges = Vec::new();
+        let mut recv = Vec::with_capacity(n + 1);
+        recv.push(0);
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let d = [
+                    positions[3 * i] - positions[3 * j],
+                    positions[3 * i + 1] - positions[3 * j + 1],
+                    positions[3 * i + 2] - positions[3 * j + 2],
+                ];
+                let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+                if r >= cutoff || r < 1e-9 {
+                    continue;
+                }
+                edges.push(Edge {
+                    dst: i,
+                    src: j,
+                    dist: r,
+                    unit: [d[0] / r, d[1] / r, d[2] / r],
+                    env: cosine_cutoff(r, cutoff),
+                });
+            }
+            recv.push(edges.len());
+        }
+        NeighborGraph { n_atoms: n, cutoff, edges, recv }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+}
+
+/// Smooth cosine cutoff envelope: `0.5 (1 + cos(pi r / rc))` for `r < rc`,
+/// zero beyond. C1-continuous at the cutoff.
+pub fn cosine_cutoff(r: f64, rc: f64) -> f64 {
+    if r >= rc {
+        0.0
+    } else {
+        0.5 * (1.0 + (std::f64::consts::PI * r / rc).cos())
+    }
+}
+
+/// Gaussian radial basis on `[0, rc]`, envelope-weighted: feature `k` is
+/// `exp(-((r - mu_k)/sigma)^2) * f_c(r)` with centers `mu_k = k rc/(K-1)`
+/// and width `sigma = rc/K`. All outputs are SO(3) invariants.
+pub fn radial_basis(dist: f64, env: f64, cutoff: f64, out: &mut [f32]) {
+    let k = out.len();
+    debug_assert!(k >= 2, "radial basis needs >= 2 features");
+    let sigma = cutoff / k as f64;
+    for (idx, o) in out.iter_mut().enumerate() {
+        let mu = cutoff * idx as f64 / (k - 1) as f64;
+        let t = (dist - mu) / sigma;
+        *o = ((-t * t).exp() * env) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::{matvec, norm};
+    use crate::molecule::Molecule;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn graph_is_symmetric_and_receiver_major() {
+        let m = Molecule::azobenzene_builtin();
+        let g = NeighborGraph::build(&m.positions, 5.0);
+        assert_eq!(g.n_atoms, 24);
+        assert_eq!(g.recv.len(), 25);
+        assert_eq!(*g.recv.last().unwrap(), g.n_edges());
+        // directed edges come in (i<-j, j<-i) pairs
+        let pairs: Vec<(usize, usize)> = g.edges.iter().map(|e| (e.dst, e.src)).collect();
+        for &(i, j) in &pairs {
+            assert!(pairs.contains(&(j, i)), "missing reverse of ({i},{j})");
+        }
+        // emitted already in receiver-major ascending order
+        let mut sorted = pairs.clone();
+        sorted.sort_unstable();
+        assert_eq!(pairs, sorted, "edges not in (dst, src) order");
+        // CSR ranges point at the right receivers
+        for i in 0..g.n_atoms {
+            for e in &g.edges[g.recv[i]..g.recv[i + 1]] {
+                assert_eq!(e.dst, i);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_geometry_is_consistent() {
+        let m = Molecule::azobenzene_builtin();
+        let g = NeighborGraph::build(&m.positions, 5.0);
+        for e in &g.edges {
+            assert!(e.dist > 0.0 && e.dist < 5.0);
+            assert!((norm(e.unit) - 1.0).abs() < 1e-12);
+            assert!(e.env > 0.0 && e.env <= 1.0);
+        }
+    }
+
+    #[test]
+    fn distances_and_envelopes_are_rotation_invariant() {
+        let m = Molecule::azobenzene_builtin();
+        let g0 = NeighborGraph::build(&m.positions, 5.0);
+        let rot = Rng::new(3).rotation();
+        let mut rp = m.positions.clone();
+        for c in rp.chunks_exact_mut(3) {
+            let v = matvec(&rot, [c[0], c[1], c[2]]);
+            c.copy_from_slice(&v);
+        }
+        let g1 = NeighborGraph::build(&rp, 5.0);
+        assert_eq!(g0.n_edges(), g1.n_edges());
+        for (a, b) in g0.edges.iter().zip(&g1.edges) {
+            assert_eq!((a.dst, a.src), (b.dst, b.src));
+            assert!((a.dist - b.dist).abs() < 1e-9);
+            // the unit vector itself rotates with the frame
+            let want = matvec(&rot, a.unit);
+            for ax in 0..3 {
+                assert!((want[ax] - b.unit[ax]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_envelope_vanishes_smoothly() {
+        assert!((cosine_cutoff(0.0, 5.0) - 1.0).abs() < 1e-12);
+        assert!(cosine_cutoff(5.0, 5.0) == 0.0);
+        assert!(cosine_cutoff(6.0, 5.0) == 0.0);
+        assert!(cosine_cutoff(4.999, 5.0) < 1e-6);
+    }
+
+    #[test]
+    fn radial_basis_peaks_at_centers() {
+        let mut f = [0f32; 16];
+        radial_basis(0.0, 1.0, 5.0, &mut f);
+        assert!((f[0] - 1.0).abs() < 1e-6, "first center at r=0");
+        radial_basis(5.0 * 7.0 / 15.0, 1.0, 5.0, &mut f);
+        let best = f.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert_eq!(best, 7);
+    }
+}

@@ -1,0 +1,309 @@
+//! Quantized linear layers + robust attention normalization (model S13).
+//!
+//! [`QuantLinear`] is the MDDQ seam at the layer level: *invariant* channels
+//! (scalar features, radial features, message logits) run through the real
+//! packed-integer kernels of `quant::gemm` according to the variant's
+//! scheme —
+//!
+//! * [`GemmKind::F32`]  — `gemm_f32_auto` on the raw weights
+//! * [`GemmKind::Int8`] — per-tensor INT8 activations x INT8 weights through
+//!   `gemm_i8_auto` (W8A8 roster rows)
+//! * [`GemmKind::W4A8`] — per-tensor INT8 activations x nibble-packed INT4
+//!   weights through `gemm_w4a8_auto` (the deployed W4A8 format)
+//!
+//! — while direction channels never pass through here (egnn.rs keeps them on
+//! the equivariant path). Weights are quantized once at construction; the
+//! integer images are what the GEMMs stream. Activation scales are
+//! per-tensor max-abs, recomputed per call — a deterministic function of the
+//! input, so the layer output is bit-identical for every pool size (the
+//! `*_auto` kernels shard rows without changing any accumulation order).
+
+use crate::quant::gemm::{gemm_f32_auto, gemm_i8_auto, gemm_w4a8_auto};
+use crate::quant::pack::{
+    dequantize_i4, dequantize_i8, quantize_i4, quantize_i8, QuantizedI4, QuantizedI8,
+};
+
+/// Which GEMM kernel a [`QuantLinear`] routes through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKind {
+    F32,
+    Int8,
+    W4A8,
+}
+
+impl GemmKind {
+    /// Kernel selection from a variant's weight/activation bit widths.
+    pub fn from_bits(w_bits: u32, a_bits: u32) -> GemmKind {
+        if a_bits >= 32 || w_bits >= 32 {
+            GemmKind::F32
+        } else if w_bits <= 4 {
+            GemmKind::W4A8
+        } else {
+            GemmKind::Int8
+        }
+    }
+}
+
+/// A bias-free linear layer `[m, in_dim] -> [m, out_dim]` with the weight
+/// image stored in the variant's deployed precision.
+#[derive(Debug, Clone)]
+pub struct QuantLinear {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    kind: GemmKind,
+    /// master f32 weights, row-major `[in_dim, out_dim]` (kept for the
+    /// calibration pass and the dequantized reference)
+    w_f32: Vec<f32>,
+    w_i8: Option<QuantizedI8>,
+    w_i4: Option<QuantizedI4>,
+}
+
+impl QuantLinear {
+    /// Wrap master weights, quantizing the image once per the kind.
+    pub fn new(w: Vec<f32>, in_dim: usize, out_dim: usize, kind: GemmKind) -> QuantLinear {
+        assert_eq!(w.len(), in_dim * out_dim, "weight shape mismatch");
+        let (w_i8, w_i4) = match kind {
+            GemmKind::F32 => (None, None),
+            GemmKind::Int8 => (Some(quantize_i8(&w)), None),
+            GemmKind::W4A8 => (None, Some(quantize_i4(&w))),
+        };
+        QuantLinear { in_dim, out_dim, kind, w_f32: w, w_i8, w_i4 }
+    }
+
+    pub fn kind(&self) -> GemmKind {
+        self.kind
+    }
+
+    /// Forward through the variant's kernel: `a` is `[m, in_dim]` row-major,
+    /// `out` is `[m, out_dim]`.
+    pub fn forward(&self, a: &[f32], m: usize, out: &mut [f32]) {
+        assert_eq!(a.len(), m * self.in_dim);
+        assert_eq!(out.len(), m * self.out_dim);
+        match self.kind {
+            GemmKind::F32 => {
+                gemm_f32_auto(a, &self.w_f32, out, m, self.in_dim, self.out_dim);
+            }
+            GemmKind::Int8 => {
+                let qa = quantize_i8(a);
+                let qw = self.w_i8.as_ref().expect("int8 image");
+                gemm_i8_auto(&qa, qw, out, m, self.in_dim, self.out_dim);
+            }
+            GemmKind::W4A8 => {
+                let qa = quantize_i8(a);
+                let qw = self.w_i4.as_ref().expect("int4 image");
+                gemm_w4a8_auto(&qa, qw, out, m, self.in_dim, self.out_dim);
+            }
+        }
+    }
+
+    /// Forward on the *master f32 weights* regardless of kind — the
+    /// unquantized twin used by the calibration pass.
+    pub fn forward_f32(&self, a: &[f32], m: usize, out: &mut [f32]) {
+        assert_eq!(a.len(), m * self.in_dim);
+        assert_eq!(out.len(), m * self.out_dim);
+        gemm_f32_auto(a, &self.w_f32, out, m, self.in_dim, self.out_dim);
+    }
+
+    /// The weight image dequantized back to f32 — the reference operand for
+    /// the quantized-vs-dequantized parity tests.
+    pub fn dequantized_weights(&self) -> Vec<f32> {
+        match self.kind {
+            GemmKind::F32 => self.w_f32.clone(),
+            GemmKind::Int8 => {
+                let q = self.w_i8.as_ref().expect("int8 image");
+                let mut w = vec![0f32; q.data.len()];
+                dequantize_i8(q, &mut w);
+                w
+            }
+            GemmKind::W4A8 => {
+                let q = self.w_i4.as_ref().expect("int4 image");
+                let mut w = vec![0f32; q.len];
+                dequantize_i4(q, &mut w);
+                w
+            }
+        }
+    }
+
+    /// Bytes of the stored weight image (the Table IV memory row, per layer).
+    pub fn weight_bytes(&self) -> usize {
+        match self.kind {
+            GemmKind::F32 => self.w_f32.len() * 4,
+            GemmKind::Int8 => self.w_i8.as_ref().map(|q| q.data.len()).unwrap_or(0),
+            GemmKind::W4A8 => self.w_i4.as_ref().map(|q| q.data.len()).unwrap_or(0),
+        }
+    }
+}
+
+/// SiLU (swish) activation, elementwise in place.
+pub fn silu_inplace(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        let v = *x as f64;
+        *x = (v / (1.0 + (-v).exp())) as f32;
+    }
+}
+
+/// Robust attention normalization (the paper's stabilizer for low-bit
+/// logits): per receiver, an envelope-weighted, max-subtracted softmax with
+/// an epsilon-floored denominator,
+///
+/// ```text
+/// a_e = f_c(r_e) exp(z_e - max_e z) / (sum_e f_c(r_e) exp(z_e - max_e z) + eps)
+/// ```
+///
+/// Max-subtraction keeps the exponentials in range however coarse the
+/// quantized logits are; the epsilon floor keeps the weights finite when a
+/// receiver's whole neighborhood sits at the cutoff (all envelopes -> 0);
+/// the envelope factor makes every weight vanish smoothly as its edge
+/// leaves the cutoff, so graph-membership changes cannot jump the output.
+///
+/// `recv` is the CSR offset table of [`super::graph::NeighborGraph`];
+/// logits/env/out are per-edge, receiver-major. Fixed evaluation order —
+/// deterministic for every pool size.
+pub fn robust_attention_norm(logits: &[f32], env: &[f32], recv: &[usize], out: &mut [f32]) {
+    assert_eq!(logits.len(), env.len());
+    assert_eq!(logits.len(), out.len());
+    const EPS: f32 = 1e-6;
+    for w in recv.windows(2) {
+        let (start, end) = (w[0], w[1]);
+        if start == end {
+            continue;
+        }
+        let mut zmax = f32::NEG_INFINITY;
+        for &z in &logits[start..end] {
+            zmax = zmax.max(z);
+        }
+        let mut denom = EPS;
+        for e in start..end {
+            let v = env[e] * (logits[e] - zmax).exp();
+            out[e] = v;
+            denom += v;
+        }
+        for o in out[start..end].iter_mut() {
+            *o /= denom;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_vec(n: usize, seed: u64) -> Vec<f32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| (r.f64() * 2.0 - 1.0) as f32).collect()
+    }
+
+    #[test]
+    fn kind_from_bits_matches_roster() {
+        assert_eq!(GemmKind::from_bits(32, 32), GemmKind::F32);
+        assert_eq!(GemmKind::from_bits(8, 8), GemmKind::Int8);
+        assert_eq!(GemmKind::from_bits(4, 8), GemmKind::W4A8);
+    }
+
+    #[test]
+    fn f32_kind_is_exact() {
+        let (m, k, n) = (5usize, 8usize, 4usize);
+        let w = random_vec(k * n, 1);
+        let a = random_vec(m * k, 2);
+        let lin = QuantLinear::new(w, k, n, GemmKind::F32);
+        let mut out = vec![0f32; m * n];
+        let mut ref_out = vec![0f32; m * n];
+        lin.forward(&a, m, &mut out);
+        lin.forward_f32(&a, m, &mut ref_out);
+        assert_eq!(out, ref_out);
+    }
+
+    #[test]
+    fn quantized_kinds_track_the_f32_layer() {
+        let (m, k, n) = (6usize, 48usize, 32usize);
+        let w = random_vec(k * n, 3);
+        let a = random_vec(m * k, 4);
+        let mut f32_out = vec![0f32; m * n];
+        QuantLinear::new(w.clone(), k, n, GemmKind::F32).forward(&a, m, &mut f32_out);
+        let rms_ref =
+            (f32_out.iter().map(|v| (v * v) as f64).sum::<f64>() / f32_out.len() as f64).sqrt();
+        for kind in [GemmKind::Int8, GemmKind::W4A8] {
+            let lin = QuantLinear::new(w.clone(), k, n, kind);
+            let mut out = vec![0f32; m * n];
+            lin.forward(&a, m, &mut out);
+            let rms_err = (out
+                .iter()
+                .zip(&f32_out)
+                .map(|(x, y)| ((x - y) * (x - y)) as f64)
+                .sum::<f64>()
+                / out.len() as f64)
+                .sqrt();
+            assert!(rms_err < 0.15 * rms_ref + 1e-3, "{kind:?}: rms_err={rms_err}");
+        }
+    }
+
+    #[test]
+    fn weight_bytes_shrink_with_precision() {
+        let w = random_vec(64 * 32, 5);
+        let b32 = QuantLinear::new(w.clone(), 64, 32, GemmKind::F32).weight_bytes();
+        let b8 = QuantLinear::new(w.clone(), 64, 32, GemmKind::Int8).weight_bytes();
+        let b4 = QuantLinear::new(w, 64, 32, GemmKind::W4A8).weight_bytes();
+        assert_eq!(b32, 64 * 32 * 4);
+        assert_eq!(b8, 64 * 32);
+        assert_eq!(b4, 64 * 32 / 2);
+    }
+
+    #[test]
+    fn attention_weights_sum_to_one_within_eps() {
+        let mut rng = Rng::new(7);
+        let logits: Vec<f32> = (0..10).map(|_| (rng.f64() * 8.0 - 4.0) as f32).collect();
+        let env = vec![1.0f32; 10];
+        let recv = [0usize, 4, 4, 10]; // middle receiver has no edges
+        let mut out = vec![0f32; 10];
+        robust_attention_norm(&logits, &env, &recv, &mut out);
+        let s1: f32 = out[0..4].iter().sum();
+        let s2: f32 = out[4..10].iter().sum();
+        assert!((s1 - 1.0).abs() < 1e-4, "sum {s1}");
+        assert!((s2 - 1.0).abs() < 1e-4, "sum {s2}");
+        assert!(out.iter().all(|&a| (0.0..=1.0).contains(&a)));
+    }
+
+    #[test]
+    fn attention_is_robust_to_huge_logits() {
+        // unnormalised softmax would overflow exp(200); max-subtraction must not
+        let logits = [200.0f32, 199.0, -300.0];
+        let env = [1.0f32, 1.0, 1.0];
+        let recv = [0usize, 3];
+        let mut out = [0f32; 3];
+        robust_attention_norm(&logits, &env, &recv, &mut out);
+        assert!(out.iter().all(|a| a.is_finite()));
+        assert!(out[0] > out[1] && out[1] > out[2]);
+    }
+
+    #[test]
+    fn attention_respects_the_envelope() {
+        // an edge at the cutoff (env -> 0) gets weight -> 0 smoothly
+        let logits = [1.0f32, 1.0];
+        let env = [1.0f32, 1e-7];
+        let recv = [0usize, 2];
+        let mut out = [0f32; 2];
+        robust_attention_norm(&logits, &env, &recv, &mut out);
+        assert!(out[1] < 1e-6, "cutoff edge kept weight {}", out[1]);
+        assert!((out[0] - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn all_envelopes_zero_is_finite() {
+        let logits = [3.0f32, 1.0];
+        let env = [0.0f32, 0.0];
+        let recv = [0usize, 2];
+        let mut out = [1f32; 2];
+        robust_attention_norm(&logits, &env, &recv, &mut out);
+        assert_eq!(out, [0.0, 0.0]);
+    }
+
+    #[test]
+    fn silu_basics() {
+        let mut xs = [0.0f32, 10.0, -10.0];
+        silu_inplace(&mut xs);
+        assert!(xs[0].abs() < 1e-9);
+        assert!((xs[1] - 10.0).abs() < 1e-2);
+        assert!(xs[2].abs() < 1e-2);
+    }
+}

@@ -1,0 +1,26 @@
+//! Model (S13): the in-tree quantized SO(3)-equivariant GNN.
+//!
+//! The paper's central object as a pure-Rust inference workload, served
+//! behind [`crate::runtime::ExecBackend`] as
+//! [`crate::runtime::GnnForceField`] (DESIGN.md §9):
+//!
+//! * [`graph`] — radial-cutoff neighbor graph, cosine cutoff envelope,
+//!   Gaussian radial basis (the invariant skeleton)
+//! * [`layers`] — [`layers::QuantLinear`] routing invariant channels through
+//!   the real `quant::gemm` INT8/W4A8 kernels per variant, plus the paper's
+//!   robust attention normalization
+//! * [`egnn`] — message-passing blocks over scalar + vector streams, an
+//!   invariant energy head, a direct equivariant force head, and the
+//!   conservative Morse pair prior
+//! * [`weights`] — deterministic seed-generated parameters (no checkpoint
+//!   files) with an optional JSON manifest-loading path
+
+pub mod egnn;
+pub mod graph;
+pub mod layers;
+pub mod weights;
+
+pub use egnn::{EgnnConfig, EgnnModel, VecScheme};
+pub use graph::NeighborGraph;
+pub use layers::{GemmKind, QuantLinear};
+pub use weights::{ModelWeights, DEFAULT_WEIGHT_SEED};

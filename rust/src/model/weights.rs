@@ -1,0 +1,243 @@
+//! Model weights: deterministic seed-generated parameters + JSON loading.
+//!
+//! Policy (DESIGN.md §9): the default build ships **no checkpoint files**.
+//! Weights are expanded from a fixed seed at load time — every process, every
+//! thread count and every variant sees byte-identical master f32 parameters,
+//! so cross-variant comparisons (LEE, Table III) isolate the *quantization
+//! scheme*, exactly like post-training quantization of one trained model.
+//! Per-variant behaviour comes from how [`super::layers::QuantLinear`]
+//! images those masters (INT8 / packed INT4 / f32), never from different
+//! random draws.
+//!
+//! The optional JSON path (`model.weights_json` in the artifact manifest)
+//! loads trained parameters exported by the python side instead; the format
+//! is the flat row-major dump produced by [`ModelWeights::to_json`].
+
+use std::path::Path;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
+
+/// Species-embedding rows (indexed by atomic number; 0..=99 covers the
+/// molecules this runtime serves).
+pub const N_SPECIES: usize = 100;
+
+/// Parameters of one message-passing block, flat row-major.
+#[derive(Debug, Clone)]
+pub struct BlockWeights {
+    /// `[2F + R, F]` — edge message MLP
+    pub w_msg: Vec<f32>,
+    /// `[F, 1]` — attention logit head
+    pub w_att: Vec<f32>,
+    /// `[2F, F]` — scalar-feature update
+    pub w_upd: Vec<f32>,
+    /// `[F, 1]` — vector-channel coefficient head
+    pub w_vec: Vec<f32>,
+}
+
+/// The full parameter set of the EGNN (master f32 precision).
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    /// scalar channels F
+    pub f: usize,
+    /// radial features R
+    pub n_rbf: usize,
+    /// `[N_SPECIES, F]`
+    pub embed: Vec<f32>,
+    pub blocks: Vec<BlockWeights>,
+    /// `[F, 1]` — invariant energy readout
+    pub w_out: Vec<f32>,
+}
+
+/// The fixed seed of the default (checkpoint-free) parameter set. Changing
+/// it invalidates every recorded GNN-backend number — treat like a format
+/// version.
+pub const DEFAULT_WEIGHT_SEED: u64 = 0x6a71_0001;
+
+/// Per-matrix sub-seed: FNV-1a over the matrix's stable name, mixed with
+/// the master seed — independent of generation order.
+fn sub_seed(seed: u64, tag: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64 ^ seed;
+    for &b in tag.as_bytes() {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ModelWeights {
+    /// Expand the full parameter set from `seed`. Each matrix is drawn
+    /// uniform in `±sqrt(3/fan_in)` (unit-variance-preserving), embeddings
+    /// uniform in `±1`, from per-matrix sub-seeds keyed by a stable name
+    /// (`"block2.w_upd"`) — adding or reordering matrices in this function
+    /// cannot shift the draws of the existing ones.
+    pub fn seeded(f: usize, layers: usize, n_rbf: usize, seed: u64) -> ModelWeights {
+        let draw = |tag: &str, rows: usize, cols: usize, lim: f64| -> Vec<f32> {
+            let mut rng = Rng::new(sub_seed(seed, tag));
+            (0..rows * cols).map(|_| (rng.range_f64(-lim, lim)) as f32).collect()
+        };
+        let lim = |fan_in: usize| (3.0 / fan_in as f64).sqrt();
+
+        let embed = draw("embed", N_SPECIES, f, 1.0);
+        let blocks = (0..layers)
+            .map(|l| BlockWeights {
+                w_msg: draw(&format!("block{l}.w_msg"), 2 * f + n_rbf, f, lim(2 * f + n_rbf)),
+                w_att: draw(&format!("block{l}.w_att"), f, 1, lim(f)),
+                w_upd: draw(&format!("block{l}.w_upd"), 2 * f, f, lim(2 * f)),
+                w_vec: draw(&format!("block{l}.w_vec"), f, 1, lim(f)),
+            })
+            .collect();
+        let w_out = draw("w_out", f, 1, lim(f));
+        ModelWeights { f, n_rbf, embed, blocks, w_out }
+    }
+
+    pub fn layers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Load from the JSON dump format of [`ModelWeights::to_json`],
+    /// validating every shape against the declared (f, layers, n_rbf).
+    pub fn from_json_file(path: impl AsRef<Path>) -> Result<ModelWeights> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("cannot read weights json {}", path.display()))?;
+        let j = json::parse(&text)
+            .with_context(|| format!("weights json {} is corrupt", path.display()))?;
+        ModelWeights::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelWeights> {
+        let usize_of = |key: &str| -> Result<usize> {
+            j.get(key).and_then(|v| v.as_usize()).with_context(|| format!("weights: missing {key}"))
+        };
+        let f = usize_of("f")?;
+        let layers = usize_of("layers")?;
+        let n_rbf = usize_of("n_rbf")?;
+        crate::ensure!(f >= 1 && layers >= 1 && n_rbf >= 2, "weights: degenerate shape");
+
+        let mat = |v: Option<&Json>, what: &str, want: usize| -> Result<Vec<f32>> {
+            let m = v
+                .and_then(|x| x.as_f32_vec())
+                .with_context(|| format!("weights: {what} missing or not a flat array"))?;
+            crate::ensure!(
+                m.len() == want,
+                "weights: {what} has {} elements, want {want}",
+                m.len()
+            );
+            Ok(m)
+        };
+
+        let embed = mat(j.get("embed"), "embed", N_SPECIES * f)?;
+        let bj =
+            j.get("blocks").and_then(|b| b.as_arr()).context("weights: missing blocks array")?;
+        crate::ensure!(bj.len() == layers, "weights: {} blocks, declared {layers}", bj.len());
+        let mut blocks = Vec::with_capacity(layers);
+        for (l, b) in bj.iter().enumerate() {
+            blocks.push(BlockWeights {
+                w_msg: mat(b.get("w_msg"), &format!("block {l} w_msg"), (2 * f + n_rbf) * f)?,
+                w_att: mat(b.get("w_att"), &format!("block {l} w_att"), f)?,
+                w_upd: mat(b.get("w_upd"), &format!("block {l} w_upd"), 2 * f * f)?,
+                w_vec: mat(b.get("w_vec"), &format!("block {l} w_vec"), f)?,
+            });
+        }
+        let w_out = mat(j.get("w_out"), "w_out", f)?;
+        Ok(ModelWeights { f, n_rbf, embed, blocks, w_out })
+    }
+
+    /// Serialise to the JSON interchange format (flat row-major arrays).
+    /// f32 -> f64 -> decimal -> f64 -> f32 round-trips exactly, so
+    /// `from_json(to_json(w)) == w` bit-for-bit.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let arr = |v: &[f32]| Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect());
+        let blocks = self
+            .blocks
+            .iter()
+            .map(|b| {
+                Json::Obj(BTreeMap::from([
+                    ("w_msg".to_string(), arr(&b.w_msg)),
+                    ("w_att".to_string(), arr(&b.w_att)),
+                    ("w_upd".to_string(), arr(&b.w_upd)),
+                    ("w_vec".to_string(), arr(&b.w_vec)),
+                ]))
+            })
+            .collect();
+        Json::Obj(BTreeMap::from([
+            ("f".to_string(), Json::Num(self.f as f64)),
+            ("layers".to_string(), Json::Num(self.layers() as f64)),
+            ("n_rbf".to_string(), Json::Num(self.n_rbf as f64)),
+            ("embed".to_string(), arr(&self.embed)),
+            ("blocks".to_string(), Json::Arr(blocks)),
+            ("w_out".to_string(), arr(&self.w_out)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_is_deterministic_and_shaped() {
+        let a = ModelWeights::seeded(32, 2, 16, DEFAULT_WEIGHT_SEED);
+        let b = ModelWeights::seeded(32, 2, 16, DEFAULT_WEIGHT_SEED);
+        assert_eq!(a.embed, b.embed);
+        assert_eq!(a.w_out, b.w_out);
+        assert_eq!(a.layers(), 2);
+        assert_eq!(a.embed.len(), N_SPECIES * 32);
+        assert_eq!(a.blocks[0].w_msg.len(), (2 * 32 + 16) * 32);
+        assert_eq!(a.blocks[1].w_upd.len(), 2 * 32 * 32);
+        assert_eq!(a.blocks[0].w_att.len(), 32);
+        // different seeds give different parameters
+        let c = ModelWeights::seeded(32, 2, 16, DEFAULT_WEIGHT_SEED + 1);
+        assert_ne!(a.embed, c.embed);
+        // distinct per-matrix tags give distinct draws (same shape, same seed)
+        assert_ne!(a.blocks[0].w_att, a.blocks[1].w_att);
+        assert_ne!(a.blocks[0].w_att, a.w_out);
+    }
+
+    #[test]
+    fn weight_magnitudes_follow_fan_in() {
+        let w = ModelWeights::seeded(32, 2, 16, 1);
+        let lim = (3.0f64 / 80.0).sqrt() as f32;
+        assert!(w.blocks[0].w_msg.iter().all(|v| v.abs() <= lim));
+        let rms = (w.blocks[0].w_msg.iter().map(|v| (v * v) as f64).sum::<f64>()
+            / w.blocks[0].w_msg.len() as f64)
+            .sqrt();
+        // uniform(-lim, lim) has rms lim/sqrt(3)
+        assert!((rms - lim as f64 / 3f64.sqrt()).abs() < 0.1 * lim as f64, "rms {rms}");
+    }
+
+    #[test]
+    fn json_roundtrip_is_exact() {
+        let w = ModelWeights::seeded(8, 2, 4, 7);
+        let j = w.to_json();
+        let text = crate::util::json::to_string(&j);
+        let back = ModelWeights::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(w.f, back.f);
+        assert_eq!(w.n_rbf, back.n_rbf);
+        assert_eq!(w.embed, back.embed);
+        assert_eq!(w.w_out, back.w_out);
+        for (a, b) in w.blocks.iter().zip(&back.blocks) {
+            assert_eq!(a.w_msg, b.w_msg);
+            assert_eq!(a.w_att, b.w_att);
+            assert_eq!(a.w_upd, b.w_upd);
+            assert_eq!(a.w_vec, b.w_vec);
+        }
+    }
+
+    #[test]
+    fn from_json_rejects_bad_shapes() {
+        let mut w = ModelWeights::seeded(8, 1, 4, 7);
+        w.w_out.pop();
+        let text = crate::util::json::to_string(&w.to_json());
+        let j = crate::util::json::parse(&text).unwrap();
+        assert!(ModelWeights::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_file_reports_missing_path() {
+        let e = ModelWeights::from_json_file("/nonexistent/weights.json").unwrap_err();
+        assert!(format!("{e:#}").contains("weights json"));
+    }
+}

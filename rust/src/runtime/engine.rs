@@ -104,7 +104,19 @@ impl CompiledForceField {
         })
     }
 
-    /// Which backend kind serves this variant ("reference" / "pjrt").
+    /// Wrap an already-constructed backend (e.g. [`super::GnnForceField`],
+    /// whose construction needs the manifest's model section rather than an
+    /// engine). Name and shape come from the backend itself.
+    pub fn from_backend(backend: Box<dyn ExecBackend>) -> Self {
+        CompiledForceField {
+            variant_name: backend.variant_name().to_string(),
+            n_atoms: backend.n_atoms(),
+            backend,
+        }
+    }
+
+    /// Which backend kind serves this variant ("reference" / "gnn" /
+    /// "pjrt").
     pub fn backend_kind(&self) -> &'static str {
         self.backend.kind()
     }

@@ -1,0 +1,237 @@
+//! GNN backend (DESIGN.md §9): the in-tree quantized SO(3)-equivariant
+//! network served behind [`super::ExecBackend`].
+//!
+//! Unlike [`super::ReferenceForceField`] — which evaluates the *classical
+//! oracle* and only post-processes forces through the quantization
+//! emulation — this backend drives a genuine multi-layer neural force
+//! field: every invariant linear map executes on the packed INT8/W4A8
+//! kernels of `quant::gemm` per the variant's scheme, and the equivariant
+//! vector stream passes through the variant's geometric quantizer
+//! (`model::egnn::VecScheme`). Architecture hyperparameters come from the
+//! manifest's `model` section; parameters are seed-generated
+//! (`model::weights`, no checkpoint files) unless the manifest names a
+//! `model.weights_json` dump.
+//!
+//! This is also where [`super::manifest::Variant::e_shift`] finally lands:
+//! it recentres a *trained model's* mean-subtracted energies, which is
+//! exactly what the network head emits. (The reference backend deliberately
+//! skips it — the classical oracle is already absolute.)
+
+use crate::model::{EgnnConfig, EgnnModel, ModelWeights, DEFAULT_WEIGHT_SEED};
+use crate::util::error::Result;
+use crate::util::threadpool::ThreadPool;
+
+use super::backend::ExecBackend;
+use super::manifest::{Manifest, Variant};
+
+/// One loaded GNN variant, ready to evaluate.
+pub struct GnnForceField {
+    variant_name: String,
+    e_shift: f64,
+    n_atoms: usize,
+    model: EgnnModel,
+}
+
+impl GnnForceField {
+    /// Load `variant` with the manifest's model section (F, layers, n_rbf,
+    /// cutoff) over the manifest molecule. Weights come from
+    /// `model.weights_json` when the manifest names one, else from the
+    /// fixed default seed.
+    pub fn new(manifest: &Manifest, variant: &Variant) -> Result<GnnForceField> {
+        let cfg = EgnnConfig {
+            f: manifest.model_f,
+            layers: manifest.model_layers,
+            n_rbf: manifest.model_rbf,
+            cutoff: manifest.cutoff,
+        };
+        let weights = match &manifest.weights_json {
+            Some(path) => ModelWeights::from_json_file(path)?,
+            None => ModelWeights::seeded(cfg.f, cfg.layers, cfg.n_rbf, DEFAULT_WEIGHT_SEED),
+        };
+        let model = EgnnModel::new(variant, &manifest.molecule, cfg, &weights)?;
+        Ok(GnnForceField {
+            variant_name: variant.name.clone(),
+            e_shift: variant.e_shift,
+            n_atoms: manifest.molecule.n_atoms(),
+            model,
+        })
+    }
+
+    /// Bytes of the deployed weight images (the Table IV memory row).
+    pub fn weight_bytes(&self) -> usize {
+        self.model.weight_bytes()
+    }
+
+    /// Batched evaluation fanned out across `pool`. Items are independent
+    /// and [`ThreadPool::map`] returns results in item order, so the output
+    /// — bits included — equals mapping [`ExecBackend::energy_forces_f32`]
+    /// serially over the batch (guarded by the GNN metamorphic suite).
+    pub fn energy_forces_batch_with(
+        &self,
+        positions_batch: &[Vec<f32>],
+        pool: &ThreadPool,
+    ) -> Result<Vec<(f32, Vec<f32>)>> {
+        if pool.threads() <= 1 || positions_batch.len() <= 1 {
+            return positions_batch.iter().map(|p| self.energy_forces_f32(p)).collect();
+        }
+        pool.map(positions_batch.len(), |i| self.energy_forces_f32(&positions_batch[i]))
+            .into_iter()
+            .collect()
+    }
+}
+
+impl ExecBackend for GnnForceField {
+    fn variant_name(&self) -> &str {
+        &self.variant_name
+    }
+
+    fn kind(&self) -> &'static str {
+        "gnn"
+    }
+
+    fn n_atoms(&self) -> usize {
+        self.n_atoms
+    }
+
+    fn energy_forces_f32(&self, positions: &[f32]) -> Result<(f32, Vec<f32>)> {
+        if positions.len() != self.n_atoms * 3 {
+            crate::bail!(
+                "positions length {} != 3*n_atoms ({})",
+                positions.len(),
+                3 * self.n_atoms
+            );
+        }
+        let pos: Vec<f64> = positions.iter().map(|&x| x as f64).collect();
+        let (e, f) = self.model.energy_forces(&pos);
+        let forces: Vec<f32> = f.iter().map(|&x| x as f32).collect();
+        Ok(((e + self.e_shift) as f32, forces))
+    }
+
+    fn energy_forces_batch(&self, positions_batch: &[Vec<f32>]) -> Result<Vec<(f32, Vec<f32>)>> {
+        self.energy_forces_batch_with(positions_batch, ThreadPool::global())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::integrator::{verlet_step, MdState};
+    use crate::md::ForceProvider;
+    use crate::runtime::{CompiledForceField, ModelForceProvider};
+    use crate::util::prng::Rng;
+    use std::sync::Arc;
+
+    fn load(variant: &str) -> GnnForceField {
+        let m = Manifest::reference();
+        GnnForceField::new(&m, m.variant(variant).unwrap()).unwrap()
+    }
+
+    fn ref_positions() -> Vec<f32> {
+        Manifest::reference().molecule.positions.iter().map(|&x| x as f32).collect()
+    }
+
+    #[test]
+    fn every_builtin_variant_loads_and_evaluates() {
+        let m = Manifest::reference();
+        let pos = ref_positions();
+        for (name, variant) in &m.variants {
+            let ff = GnnForceField::new(&m, variant).unwrap();
+            assert_eq!(ff.kind(), "gnn");
+            assert_eq!(ff.variant_name(), name);
+            let (e, f) = ff.energy_forces_f32(&pos).unwrap();
+            assert!(e.is_finite(), "{name}");
+            assert_eq!(f.len(), pos.len());
+            assert!(f.iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn applies_variant_e_shift() {
+        // regression: e_shift is parsed by the manifest but was applied
+        // nowhere; the GNN energy path must add it (and only it)
+        let m = Manifest::reference();
+        let pos = ref_positions();
+        let base = m.variant("gaq_w4a8").unwrap().clone();
+        let mut shifted = base.clone();
+        shifted.e_shift = 1.25;
+        let (e0, f0) = GnnForceField::new(&m, &base).unwrap().energy_forces_f32(&pos).unwrap();
+        let (e1, f1) = GnnForceField::new(&m, &shifted).unwrap().energy_forces_f32(&pos).unwrap();
+        assert!(
+            ((e1 - e0) as f64 - 1.25).abs() < 1e-4,
+            "e_shift not applied: {e0} -> {e1}"
+        );
+        assert_eq!(f0, f1, "e_shift must not touch forces");
+    }
+
+    #[test]
+    fn weight_json_path_matches_seeded_weights() {
+        let m = Manifest::reference();
+        let w = ModelWeights::seeded(m.model_f, m.model_layers, m.model_rbf, DEFAULT_WEIGHT_SEED);
+        let path = std::env::temp_dir().join("gaq_test_weights_gnn.json");
+        std::fs::write(&path, crate::util::json::to_string(&w.to_json())).unwrap();
+        let mut mj = m.clone();
+        mj.weights_json = Some(path.clone());
+        let pos = ref_positions();
+        let (e_seed, f_seed) = load("gaq_w4a8").energy_forces_f32(&pos).unwrap();
+        let ff = GnnForceField::new(&mj, mj.variant("gaq_w4a8").unwrap()).unwrap();
+        let (e_json, f_json) = ff.energy_forces_f32(&pos).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(e_seed.to_bits(), e_json.to_bits());
+        assert_eq!(f_seed, f_json);
+    }
+
+    #[test]
+    fn missing_weights_json_is_an_error() {
+        let mut m = Manifest::reference();
+        m.weights_json = Some(std::path::PathBuf::from("/nonexistent/weights.json"));
+        assert!(GnnForceField::new(&m, m.variant("fp32").unwrap()).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shape() {
+        assert!(load("fp32").energy_forces_f32(&[0.0; 10]).is_err());
+    }
+
+    #[test]
+    fn pooled_batch_matches_singles_for_every_pool_size() {
+        let ff = load("gaq_w4a8");
+        let base = ref_positions();
+        let batch: Vec<Vec<f32>> = (0..6)
+            .map(|i| base.iter().map(|&x| x + 0.01 * (i as f32 + 1.0)).collect())
+            .collect();
+        let singles: Vec<(f32, Vec<f32>)> =
+            batch.iter().map(|p| ff.energy_forces_f32(p).unwrap()).collect();
+        for threads in [1usize, 2, 4] {
+            let pool = ThreadPool::new(threads);
+            let outs = ff.energy_forces_batch_with(&batch, &pool).unwrap();
+            assert_eq!(outs.len(), singles.len());
+            for (i, ((eb, fb), (es, fs))) in outs.iter().zip(&singles).enumerate() {
+                assert_eq!(eb.to_bits(), es.to_bits(), "item {i} energy (threads={threads})");
+                assert_eq!(fb, fs, "item {i} forces (threads={threads})");
+            }
+        }
+    }
+
+    #[test]
+    fn short_nve_trajectory_is_stable() {
+        // 100 steps of NVE at 300 K through the full ExecBackend/MD stack:
+        // bounded energy, no explosion (the long run is the `md --backend
+        // gnn` acceptance path)
+        let m = Manifest::reference();
+        let ff = Arc::new(CompiledForceField::from_backend(Box::new(load("gaq_w4a8"))));
+        let mut provider = ModelForceProvider::new(ff);
+        let mut state = MdState::new(m.molecule.positions.clone(), m.molecule.masses.clone());
+        let mut rng = Rng::new(11);
+        state.thermalize(300.0, &mut rng);
+        let (pe0, mut forces) = provider.energy_forces(&state.positions).unwrap();
+        let e0 = pe0 + state.kinetic_energy();
+        for _ in 0..100 {
+            let (pe, f) = verlet_step(&mut state, &forces, 0.5, &mut provider).unwrap();
+            forces = f;
+            let etot = pe + state.kinetic_energy();
+            assert!(etot.is_finite());
+            assert!((etot - e0).abs() < 1.0, "energy excursion {} eV", (etot - e0).abs());
+            assert!(state.temperature() < 2000.0, "T = {}", state.temperature());
+        }
+    }
+}

@@ -42,7 +42,13 @@ pub struct Manifest {
     pub batch_sizes: Vec<usize>,
     pub model_f: usize,
     pub model_layers: usize,
+    /// radial basis features per edge of the GNN backend (`model.n_rbf`)
+    pub model_rbf: usize,
     pub cutoff: f64,
+    /// optional trained-parameter dump for the GNN backend
+    /// (`model.weights_json`, resolved relative to the artifact dir);
+    /// absent -> deterministic seeded weights
+    pub weights_json: Option<PathBuf>,
     /// true when this manifest was synthesised in-process (no artifact files
     /// on disk; only the reference backend can serve it)
     pub builtin: bool,
@@ -115,7 +121,13 @@ impl Manifest {
         let model_f = model.and_then(|m| m.get("f")).and_then(|v| v.as_usize()).unwrap_or(32);
         let model_layers =
             model.and_then(|m| m.get("layers")).and_then(|v| v.as_usize()).unwrap_or(2);
+        let model_rbf =
+            model.and_then(|m| m.get("n_rbf")).and_then(|v| v.as_usize()).unwrap_or(16);
         let cutoff = model.and_then(|m| m.get("cutoff")).and_then(|v| v.as_f64()).unwrap_or(5.0);
+        let weights_json = model
+            .and_then(|m| m.get("weights_json"))
+            .and_then(|v| v.as_str())
+            .map(|p| dir.join(p));
 
         let mut variants = BTreeMap::new();
         let vobj = j
@@ -133,7 +145,9 @@ impl Manifest {
             batch_sizes,
             model_f,
             model_layers,
+            model_rbf,
             cutoff,
+            weights_json,
             builtin: false,
         })
     }
@@ -208,7 +222,9 @@ impl Manifest {
             batch_sizes: vec![1, 8],
             model_f,
             model_layers,
+            model_rbf: 16,
             cutoff: 5.0,
+            weights_json: None,
             builtin: true,
         }
     }

@@ -1,15 +1,17 @@
 //! Runtime (S8): execution backends + artifact manifest.
 //!
 //! [`ExecBackend`] abstracts how a force-field variant is evaluated
-//! (DESIGN.md §4): the always-on pure-Rust [`ReferenceForceField`], or the
-//! PJRT engine behind the off-by-default `pjrt` feature. [`Manifest`]
-//! describes what python/compile/aot.py exported — or synthesises the
-//! builtin reference roster when no artifacts exist — and
-//! [`CompiledForceField`] is one loaded variant with single + batched entry
-//! points.
+//! (DESIGN.md §4): the always-on pure-Rust [`ReferenceForceField`] (classical
+//! oracle + quantization emulation), the in-tree quantized GNN
+//! [`GnnForceField`] (DESIGN.md §9), or the PJRT engine behind the
+//! off-by-default `pjrt` feature. [`Manifest`] describes what
+//! python/compile/aot.py exported — or synthesises the builtin reference
+//! roster when no artifacts exist — and [`CompiledForceField`] is one loaded
+//! variant with single + batched entry points.
 
 pub mod backend;
 pub mod engine;
+pub mod gnn;
 pub mod manifest;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -17,11 +19,65 @@ pub mod reference;
 
 pub use backend::ExecBackend;
 pub use engine::{CompiledForceField, Engine, ModelForceProvider};
+pub use gnn::GnnForceField;
 pub use manifest::{Manifest, ManifestError, Variant, VariantMetrics};
 pub use reference::ReferenceForceField;
 
 use crate::util::error::Result;
 use std::sync::Arc;
+
+/// Which execution backend to load a variant on — the CLI's `--backend`
+/// knob and the coordinator's per-pool routing key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// Strongest available: PJRT when compiled in with artifacts on disk,
+    /// else the reference backend.
+    Auto,
+    /// The pure-Rust classical-oracle reference backend.
+    Reference,
+    /// The in-tree quantized SO(3)-equivariant GNN.
+    Gnn,
+    /// AOT-compiled HLO through PJRT (requires the `pjrt` feature).
+    Pjrt,
+}
+
+impl BackendChoice {
+    /// Accepted `--backend` spellings, for error messages and `info`.
+    pub const NAMES: [&'static str; 4] = ["auto", "reference", "gnn", "pjrt"];
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendChoice::Auto => "auto",
+            BackendChoice::Reference => "reference",
+            BackendChoice::Gnn => "gnn",
+            BackendChoice::Pjrt => "pjrt",
+        }
+    }
+
+    /// Parse a user-supplied backend name; unknown values fail with the
+    /// valid roster instead of panicking downstream.
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendChoice::Auto),
+            "reference" | "ref" => Ok(BackendChoice::Reference),
+            "gnn" | "model" => Ok(BackendChoice::Gnn),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            other => crate::bail!(
+                "unknown backend {other:?}; expected one of: {}",
+                BackendChoice::NAMES.join(", ")
+            ),
+        }
+    }
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = crate::util::error::Error;
+
+    fn from_str(s: &str) -> Result<BackendChoice> {
+        BackendChoice::parse(s)
+    }
+}
 
 /// Convenience: load manifest + one variant on the default engine in a
 /// single call. Falls back to the builtin reference manifest (and forces the
@@ -30,7 +86,7 @@ pub fn load_variant(
     artifacts_dir: &str,
     variant: &str,
 ) -> Result<(Manifest, Engine, Arc<CompiledForceField>)> {
-    load_variant_with(artifacts_dir, variant, false)
+    load_variant_choice(artifacts_dir, variant, BackendChoice::Auto)
 }
 
 /// As [`load_variant`], but `force_reference` pins the pure-Rust backend even
@@ -40,13 +96,110 @@ pub fn load_variant_with(
     variant: &str,
     force_reference: bool,
 ) -> Result<(Manifest, Engine, Arc<CompiledForceField>)> {
+    let choice = if force_reference { BackendChoice::Reference } else { BackendChoice::Auto };
+    load_variant_choice(artifacts_dir, variant, choice)
+}
+
+/// Load manifest + one variant on an explicit backend choice. This is the
+/// one call that wires manifest -> engine -> backend for every CLI command
+/// and coordinator worker.
+pub fn load_variant_choice(
+    artifacts_dir: &str,
+    variant: &str,
+    choice: BackendChoice,
+) -> Result<(Manifest, Engine, Arc<CompiledForceField>)> {
     let manifest = Manifest::load_or_reference(artifacts_dir)?;
-    let engine = if force_reference || manifest.builtin {
-        Engine::reference()
-    } else {
-        Engine::cpu()?
-    };
-    let v = manifest.variant(variant)?;
-    let ff = Arc::new(CompiledForceField::load(&engine, v, &manifest.molecule)?);
-    Ok((manifest, engine, ff))
+    match choice {
+        BackendChoice::Gnn => {
+            let v = manifest.variant(variant)?;
+            let ff = GnnForceField::new(&manifest, v)?;
+            let ff = Arc::new(CompiledForceField::from_backend(Box::new(ff)));
+            Ok((manifest, Engine::reference(), ff))
+        }
+        BackendChoice::Reference => {
+            let engine = Engine::reference();
+            let v = manifest.variant(variant)?;
+            let ff = Arc::new(CompiledForceField::load(&engine, v, &manifest.molecule)?);
+            Ok((manifest, engine, ff))
+        }
+        BackendChoice::Auto => {
+            let engine = if manifest.builtin { Engine::reference() } else { Engine::cpu()? };
+            let v = manifest.variant(variant)?;
+            let ff = Arc::new(CompiledForceField::load(&engine, v, &manifest.molecule)?);
+            Ok((manifest, engine, ff))
+        }
+        #[cfg(feature = "pjrt")]
+        BackendChoice::Pjrt => {
+            crate::ensure!(
+                !manifest.builtin,
+                "backend \"pjrt\" needs compiled artifacts in {artifacts_dir:?}; run `make artifacts`"
+            );
+            let engine = Engine::cpu()?;
+            let v = manifest.variant(variant)?;
+            let ff = Arc::new(CompiledForceField::load(&engine, v, &manifest.molecule)?);
+            Ok((manifest, engine, ff))
+        }
+        #[cfg(not(feature = "pjrt"))]
+        BackendChoice::Pjrt => crate::bail!(
+            "backend \"pjrt\" is not compiled in (it needs the `pjrt` feature and a vendored \
+             `xla` crate); use --backend reference or --backend gnn"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_choice_parses_known_names() {
+        assert_eq!(BackendChoice::parse("auto").unwrap(), BackendChoice::Auto);
+        assert_eq!(BackendChoice::parse("Reference").unwrap(), BackendChoice::Reference);
+        assert_eq!(BackendChoice::parse("GNN").unwrap(), BackendChoice::Gnn);
+        assert_eq!(BackendChoice::parse("pjrt").unwrap(), BackendChoice::Pjrt);
+        assert_eq!("gnn".parse::<BackendChoice>().unwrap(), BackendChoice::Gnn);
+    }
+
+    #[test]
+    fn backend_choice_rejects_unknown_names_helpfully() {
+        let e = BackendChoice::parse("cuda").unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("cuda"), "{msg}");
+        for name in BackendChoice::NAMES {
+            assert!(msg.contains(name), "{msg} should list {name}");
+        }
+    }
+
+    #[test]
+    fn load_variant_choice_serves_gnn_from_builtin_manifest() {
+        let (m, _engine, ff) =
+            load_variant_choice("/nonexistent/nowhere", "gaq_w4a8", BackendChoice::Gnn).unwrap();
+        assert!(m.builtin);
+        assert_eq!(ff.backend_kind(), "gnn");
+        let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+        let (e, f) = ff.energy_forces_f32(&pos).unwrap();
+        assert!(e.is_finite());
+        assert_eq!(f.len(), pos.len());
+    }
+
+    #[test]
+    fn gnn_and_reference_backends_disagree_on_purpose() {
+        // the two backends are different physics: the oracle vs the network
+        let dir = "/nonexistent/nowhere";
+        let (m, _, gnn) = load_variant_choice(dir, "fp32", BackendChoice::Gnn).unwrap();
+        let (_, _, refb) = load_variant_choice(dir, "fp32", BackendChoice::Reference).unwrap();
+        assert_eq!(refb.backend_kind(), "reference");
+        let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
+        let (eg, _) = gnn.energy_forces_f32(&pos).unwrap();
+        let (er, _) = refb.energy_forces_f32(&pos).unwrap();
+        assert!((eg - er).abs() > 1e-3, "gnn {eg} vs reference {er}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_choice_fails_helpfully_without_the_feature() {
+        let e = load_variant_choice("/nonexistent/nowhere", "fp32", BackendChoice::Pjrt)
+            .unwrap_err();
+        assert!(format!("{e}").contains("pjrt"), "{e}");
+    }
 }

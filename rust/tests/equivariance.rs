@@ -1,5 +1,6 @@
 //! Metamorphic SO(3) equivariance suite (EGNN-style property tests) over
-//! every variant in the builtin manifest.
+//! every variant in the builtin manifest, on **both** execution backends:
+//! the reference emulation and the real quantized GNN (runtime/gnn.rs).
 //!
 //! Metamorphic relations, checked under Haar-random rotations at randomly
 //! perturbed configurations over many seeds:
@@ -9,15 +10,22 @@
 //! 2. **Force equivariance** — mean_i ||f(R r)_i - R f(r)_i|| stays below a
 //!    per-variant cap.
 //! 3. **LEE ordering** (the paper's Table III law) —
-//!    fp32 < gaq < degree < naive, as a property of the aggregated means.
+//!    fp32 < gaq < degree < naive on the reference backend, and
+//!    fp32 < gaq < naive with a >= 10x gaq-vs-naive gap on the GNN backend.
 //! 4. **Serial/parallel agreement** — every evaluation is computed on both
 //!    the serial single path and the pooled batch path, and the two must be
 //!    bit-identical (the suite runs each relation on both paths at once).
+//! 5. **Layer parity** — the quantized linear layer agrees with a
+//!    dequantized f32 reference on randomized shapes (the integer GEMMs
+//!    compute exactly the fake-quant product).
 
 use std::collections::BTreeMap;
 
 use gaq_md::geometry::matvec;
-use gaq_md::runtime::{ExecBackend, Manifest, ReferenceForceField};
+use gaq_md::model::{GemmKind, QuantLinear};
+use gaq_md::quant::pack::{dequantize_i8, quantize_i8};
+use gaq_md::runtime::{ExecBackend, GnnForceField, Manifest, ReferenceForceField};
+use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 use gaq_md::util::threadpool::ThreadPool;
 
@@ -34,11 +42,29 @@ fn to_f32(v: &[f64]) -> Vec<f32> {
     v.iter().map(|&x| x as f32).collect()
 }
 
+/// The two pooled-capable backends under one hat: single-path evaluation
+/// from [`ExecBackend`] plus the explicit-pool batched entry point.
+trait PooledBackend: ExecBackend {
+    fn batch_with(&self, batch: &[Vec<f32>], pool: &ThreadPool) -> Result<Vec<(f32, Vec<f32>)>>;
+}
+
+impl PooledBackend for ReferenceForceField {
+    fn batch_with(&self, batch: &[Vec<f32>], pool: &ThreadPool) -> Result<Vec<(f32, Vec<f32>)>> {
+        self.energy_forces_batch_with(batch, pool)
+    }
+}
+
+impl PooledBackend for GnnForceField {
+    fn batch_with(&self, batch: &[Vec<f32>], pool: &ThreadPool) -> Result<Vec<(f32, Vec<f32>)>> {
+        self.energy_forces_batch_with(batch, pool)
+    }
+}
+
 /// Evaluate one metamorphic probe: returns (mean force LEE eV/A, |dE| eV).
 /// Both configurations are evaluated twice — serially and as a pooled
 /// batch — and the two paths must agree bit-for-bit.
 fn lee_once(
-    ff: &ReferenceForceField,
+    ff: &dyn PooledBackend,
     pos: &[f64],
     rot: &[[f64; 3]; 3],
     pool: &ThreadPool,
@@ -49,7 +75,7 @@ fn lee_once(
     let (e0, f0) = ff.energy_forces_f32(&batch[0]).expect("serial eval");
     let (er, fr) = ff.energy_forces_f32(&batch[1]).expect("serial eval (rotated)");
 
-    let outs = ff.energy_forces_batch_with(&batch, pool).expect("pooled batch eval");
+    let outs = ff.batch_with(&batch, pool).expect("pooled batch eval");
     assert_eq!(outs.len(), 2);
     assert_eq!(outs[0].0.to_bits(), e0.to_bits(), "parallel energy != serial");
     assert_eq!(outs[1].0.to_bits(), er.to_bits(), "parallel energy != serial (rotated)");
@@ -158,6 +184,119 @@ fn batch_evaluation_is_permutation_equivariant() {
         for (slot, &src) in perm.iter().enumerate() {
             assert_eq!(out_shuffled[slot].0.to_bits(), out[src].0.to_bits());
             assert_eq!(out_shuffled[slot].1, out[src].1);
+        }
+    }
+}
+
+/// The same metamorphic relations on the **GNN backend**: a genuine
+/// multi-layer quantized network rather than the post-processed oracle.
+/// Asserts the acceptance law of the model subsystem: energies invariant,
+/// LEE ordering fp32 < gaq < naive with LEE(gaq_w4a8) at least 10x below
+/// LEE(naive_int8), every probe bit-identical between the serial and
+/// pooled paths.
+#[test]
+fn gnn_metamorphic_equivariance_and_lee_ordering() {
+    let m = Manifest::reference();
+    let pool = ThreadPool::new(4);
+
+    let mut mean_lee: BTreeMap<&str, f64> = BTreeMap::new();
+    for name in ["fp32", "gaq_w4a8", "naive_int8"] {
+        let ff = GnnForceField::new(&m, m.variant(name).unwrap()).unwrap();
+        let mut lee_sum = 0.0;
+        let mut count = 0usize;
+        for seed in 0..3u64 {
+            let mut rng = Rng::new(2000 + seed);
+            let mut pos = m.molecule.positions.clone();
+            for x in pos.iter_mut() {
+                *x += 0.05 * rng.gaussian();
+            }
+            for _ in 0..4 {
+                let rot = rng.rotation();
+                let (lee, einv) = lee_once(&ff, &pos, &rot, &pool);
+                // the floor is f32 noise plus (rarely) one flipped
+                // quantization bin in an invariant activation (~3e-4 eV)
+                assert!(
+                    einv < 5e-3,
+                    "{name}: GNN energy not rotation-invariant: |dE| = {einv} eV"
+                );
+                lee_sum += lee;
+                count += 1;
+            }
+        }
+        mean_lee.insert(name, lee_sum / count as f64);
+    }
+
+    let fp32 = mean_lee["fp32"];
+    let gaq = mean_lee["gaq_w4a8"];
+    let naive = mean_lee["naive_int8"];
+    assert!(fp32 < 1e-5, "fp32 GNN LEE {fp32:.2e} above the f32 noise floor");
+    assert!(
+        fp32 < gaq && gaq < naive,
+        "GNN LEE ordering violated: fp32={fp32:.2e} gaq={gaq:.2e} naive={naive:.2e}"
+    );
+    assert!(
+        gaq * 10.0 <= naive,
+        "MDDQ gap collapsed: LEE(gaq)={gaq:.2e} not 10x below LEE(naive)={naive:.2e}"
+    );
+}
+
+/// Pooled GNN inference must be bit-identical to serial for every pool
+/// size (the data-parallel substrate never reorders any reduction).
+#[test]
+fn gnn_pooled_batch_is_bit_identical_for_every_pool_size() {
+    let m = Manifest::reference();
+    let ff = GnnForceField::new(&m, m.variant("gaq_w4a8").unwrap()).unwrap();
+    let mut rng = Rng::new(17);
+    let base = to_f32(&m.molecule.positions);
+    let batch: Vec<Vec<f32>> = (0..7)
+        .map(|_| base.iter().map(|&x| x + 0.02 * rng.gaussian() as f32).collect())
+        .collect();
+    let singles: Vec<(f32, Vec<f32>)> =
+        batch.iter().map(|p| ff.energy_forces_f32(p).unwrap()).collect();
+    for threads in [1usize, 2, 3, 8] {
+        let pool = ThreadPool::new(threads);
+        let outs = ff.energy_forces_batch_with(&batch, &pool).unwrap();
+        for (i, ((eb, fb), (es, fs))) in outs.iter().zip(&singles).enumerate() {
+            assert_eq!(eb.to_bits(), es.to_bits(), "item {i} energy (threads={threads})");
+            assert_eq!(fb, fs, "item {i} forces (threads={threads})");
+        }
+    }
+}
+
+/// Randomized-shape parity of the quantized linear layer against a
+/// dequantized f32 reference: the integer GEMMs must compute exactly the
+/// product of the fake-quantized operands (up to f32 epilogue rounding).
+#[test]
+fn quant_linear_matches_dequantized_reference_on_random_shapes() {
+    let mut rng = Rng::new(99);
+    for trial in 0..20 {
+        let mm = 1 + rng.below(40);
+        let k = 2 + rng.below(96);
+        let n = 1 + rng.below(64); // odd n exercises the nibble-packed rows
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let a: Vec<f32> = (0..mm * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let qa = quantize_i8(&a);
+        let mut a_deq = vec![0f32; a.len()];
+        dequantize_i8(&qa, &mut a_deq);
+        for kind in [GemmKind::Int8, GemmKind::W4A8] {
+            let lin = QuantLinear::new(w.clone(), k, n, kind);
+            let mut out = vec![0f32; mm * n];
+            lin.forward(&a, mm, &mut out);
+            let w_deq = lin.dequantized_weights();
+            for i in 0..mm {
+                for j in 0..n {
+                    let mut acc = 0f64;
+                    for kk in 0..k {
+                        acc += a_deq[i * k + kk] as f64 * w_deq[kk * n + j] as f64;
+                    }
+                    let got = out[i * n + j] as f64;
+                    assert!(
+                        (got - acc).abs() <= 1e-4 * acc.abs().max(1.0),
+                        "trial {trial} {kind:?} ({mm}x{k}x{n}) element ({i},{j}): \
+                         kernel {got} vs dequantized reference {acc}"
+                    );
+                }
+            }
         }
     }
 }
