@@ -7,7 +7,8 @@ PYTEST ?= python3 -m pytest
 
 BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency
 
-.PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke clean
+.PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke \
+	bench-baselines clean
 
 build:
 	$(CARGO) build --release
@@ -44,12 +45,22 @@ artifacts:
 smoke:
 	cd python && python3 -m compile.aot --out ../artifacts_smoke --quick
 
-# one short iteration of every bench binary so they can't bit-rot
+# one short iteration of every bench binary so they can't bit-rot. The
+# parallel_scaling and gnn_inference binaries additionally diff their
+# numbers against the checked-in BENCH_gemm.json / BENCH_gnn_inference.json
+# baselines (warn-only, generous tolerance — see DESIGN.md §10).
 bench-smoke:
 	@for b in $(BENCHES); do \
 		echo "== bench $$b (smoke) =="; \
 		GAQ_BENCH_FAST=1 $(CARGO) bench --bench $$b || exit 1; \
 	done
+
+# refresh the checked-in bench baselines in place — run on the reference
+# machine with the full measurement budget (NOT under GAQ_BENCH_FAST) after
+# any intentional kernel change, and commit the updated JSON
+bench-baselines:
+	GAQ_BENCH_JSON=BENCH_gemm.json $(CARGO) bench --bench parallel_scaling
+	GAQ_BENCH_JSON=BENCH_gnn_inference.json $(CARGO) bench --bench gnn_inference
 
 clean:
 	$(CARGO) clean

@@ -4,8 +4,9 @@
 //! one-worker pool and on the configured pool (`GAQ_THREADS`, default all
 //! cores), asserts the two batch paths are bit-identical, and reports the
 //! speedup + deployed weight-image bytes. Results land in a JSON file
-//! (`GAQ_BENCH_JSON`, default `<workspace>/target/gnn_inference.json`) so
-//! the inference-perf trajectory is diffable across runs.
+//! (`GAQ_BENCH_JSON`, default `<workspace>/target/gnn_inference.json`) and
+//! are diffed warn-only against the checked-in `BENCH_gnn_inference.json`
+//! baseline so the end-to-end latency trajectory cannot silently regress.
 //!
 //! Run: `cargo bench --bench gnn_inference` (GAQ_BENCH_FAST=1 to shrink).
 
@@ -13,7 +14,7 @@ use std::collections::BTreeMap;
 
 use gaq_md::quant::gemm::f32_bits_eq;
 use gaq_md::runtime::{ExecBackend, GnnForceField, Manifest};
-use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::benchkit::{black_box, warn_against_baseline, Bench};
 use gaq_md::util::json::{to_string, Json};
 use gaq_md::util::prng::Rng;
 use gaq_md::util::threadpool::{configured_threads, ThreadPool};
@@ -129,5 +130,12 @@ fn main() {
     match std::fs::write(&path, to_string(&json)) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    // warn-only diff against the checked-in baseline (DESIGN.md §10)
+    let baseline = gaq_md::workspace_root().join("BENCH_gnn_inference.json");
+    let warnings = warn_against_baseline(&json, &baseline, "variant", 4.0);
+    if warnings > 0 {
+        println!("{warnings} baseline warning(s) — investigate or refresh the baseline");
     }
 }

@@ -1,21 +1,26 @@
 //! Serial-vs-parallel scaling of the three sharded hot layers (DESIGN.md
 //! §8): quantized GEMMs, reference-backend batched inference and the
-//! classical nonbonded loop. Every case runs the *same* kernel twice — on a
+//! classical nonbonded loop — plus the single-thread register-tiled-vs-
+//! scalar GEMM comparison and the O(N) neighbor-construction scaling leg
+//! of DESIGN.md §10. Every pooled case runs the *same* kernel twice — on a
 //! one-worker pool and on the configured pool (`GAQ_THREADS`, default all
 //! cores) — verifies the outputs are bit-identical, and reports the
 //! speedup. Results land in a JSON file (`GAQ_BENCH_JSON`, default
-//! `<workspace>/target/parallel_scaling.json`) so scaling regressions are
-//! diffable across runs.
+//! `<workspace>/target/parallel_scaling.json`) and are diffed warn-only
+//! against the checked-in `BENCH_gemm.json` baseline.
 //!
 //! Run: `cargo bench --bench parallel_scaling` (GAQ_BENCH_FAST=1 to shrink).
 
 use std::collections::BTreeMap;
 
 use gaq_md::md::classical;
-use gaq_md::quant::gemm::{f32_bits_eq, gemm_f32_pool, gemm_i8_pool, gemm_w4a8_pool};
+use gaq_md::model::NeighborGraph;
+use gaq_md::quant::gemm::{
+    f32_bits_eq, gemm_f32_pool, gemm_i8_pool, gemm_i8_scalar, gemm_w4a8_pool, gemm_w4a8_scalar,
+};
 use gaq_md::quant::pack::{quantize_i4, quantize_i8};
 use gaq_md::runtime::{Manifest, ReferenceForceField};
-use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::benchkit::{black_box, warn_against_baseline, Bench};
 use gaq_md::util::json::{to_string, Json};
 use gaq_md::util::prng::Rng;
 use gaq_md::util::threadpool::{configured_threads, ThreadPool};
@@ -88,6 +93,47 @@ fn main() {
     assert_bits_eq(&c_serial, &c_par, "gemm_w4a8");
     cases.push(Case { name: "gemm_w4a8".into(), serial_ns: s.median_ns, parallel_ns: p.median_ns });
 
+    // ---- register-tiled vs pre-refactor scalar, single thread ---------------
+    // the DESIGN.md §10 acceptance leg: same quantized images, same output
+    // bits, "serial" = old scalar triple loop, "parallel" = tiled kernel,
+    // so the reported speedup is the single-thread tiling win (>= 2x W4A8
+    // at model shapes is the bar)
+    for (tm, tk, tn, tag) in [(48usize, 384usize, 384usize, "mlp"), (256, 80, 32, "edge")] {
+        let ta = random_vec(tm * tk, 5);
+        let tw = random_vec(tk * tn, 6);
+        let tqa = quantize_i8(&ta);
+        let tq8 = quantize_i8(&tw);
+        let tq4 = quantize_i4(&tw);
+        let mut c_old = vec![0f32; tm * tn];
+        let mut c_new = vec![0f32; tm * tn];
+
+        let s = b.run(&format!("gemm_i8_scalar/{tag}/1t"), || {
+            gemm_i8_scalar(black_box(&tqa), &tq8, &mut c_old, tm, tk, tn)
+        });
+        let p = b.run(&format!("gemm_i8_tiled/{tag}/1t"), || {
+            gemm_i8_pool(&serial, black_box(&tqa), &tq8, &mut c_new, tm, tk, tn)
+        });
+        assert_bits_eq(&c_old, &c_new, "i8 tiled vs scalar");
+        cases.push(Case {
+            name: format!("i8_tiled_vs_scalar/{tag}"),
+            serial_ns: s.median_ns,
+            parallel_ns: p.median_ns,
+        });
+
+        let s = b.run(&format!("gemm_w4a8_scalar/{tag}/1t"), || {
+            gemm_w4a8_scalar(black_box(&tqa), &tq4, &mut c_old, tm, tk, tn)
+        });
+        let p = b.run(&format!("gemm_w4a8_tiled/{tag}/1t"), || {
+            gemm_w4a8_pool(&serial, black_box(&tqa), &tq4, &mut c_new, tm, tk, tn)
+        });
+        assert_bits_eq(&c_old, &c_new, "w4a8 tiled vs scalar");
+        cases.push(Case {
+            name: format!("w4a8_tiled_vs_scalar/{tag}"),
+            serial_ns: s.median_ns,
+            parallel_ns: p.median_ns,
+        });
+    }
+
     // ---- batched inference through the reference backend --------------------
     let manifest = Manifest::reference();
     let ff = ReferenceForceField::new(manifest.variant("gaq_w4a8").unwrap(), &manifest.molecule);
@@ -135,33 +181,67 @@ fn main() {
         parallel_ns: p.median_ns,
     });
 
+    // ---- O(N) neighbor construction scaling ---------------------------------
+    // constant density (~27 neighbors/atom at the 5 A cutoff), N spanning
+    // 1k -> 16k atoms: the cell list should hold ns/atom roughly flat where
+    // the old scan grew linearly in N; scan equivalence is asserted once at
+    // a mid size (the full sweep is covered by the graph proptest suite)
+    let cutoff = 5.0;
+    let density = 0.05f64; // atoms per cubic Angstrom
+    let mut neigh: Vec<(String, usize, f64)> = Vec::new();
+    for natoms in [1_000usize, 4_000, 16_000] {
+        let side = (natoms as f64 / density).cbrt();
+        let mut rng = Rng::new(7 + natoms as u64);
+        let pos: Vec<f64> = (0..3 * natoms).map(|_| rng.f64() * side).collect();
+        if natoms == 4_000 {
+            let cells = NeighborGraph::build_cell_list(&pos, cutoff);
+            assert!(
+                cells.bitwise_eq(&NeighborGraph::build_scan(&pos, cutoff)),
+                "cell list diverged from the scan oracle at n={natoms}"
+            );
+        }
+        let s = b.run(&format!("neighbor_cell_list/n{natoms}"), || {
+            NeighborGraph::build(black_box(&pos), cutoff).n_edges()
+        });
+        neigh.push((format!("neighbor_cell_list/n{natoms}"), natoms, s.median_ns));
+    }
+
     b.report();
 
     println!("\n=== serial -> parallel speedup ({threads} workers) ===");
     for c in &cases {
-        println!("{:<18} {:>6.2}x", c.name, c.speedup());
+        println!("{:<28} {:>6.2}x", c.name, c.speedup());
+    }
+
+    println!("\n=== neighbor construction (O(N) check: ns/atom should stay flat) ===");
+    for (name, natoms, ns) in &neigh {
+        println!("{:<28} {:>8} atoms {:>10.1} ns/atom", name, natoms, ns / *natoms as f64);
     }
 
     // ---- bench JSON ----------------------------------------------------------
+    let mut case_rows: Vec<Json> = cases
+        .iter()
+        .map(|c| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(c.name.clone())),
+                ("serial_ns".to_string(), Json::Num(c.serial_ns)),
+                ("parallel_ns".to_string(), Json::Num(c.parallel_ns)),
+                ("speedup".to_string(), Json::Num(c.speedup())),
+            ]))
+        })
+        .collect();
+    for (name, natoms, ns) in &neigh {
+        case_rows.push(Json::Obj(BTreeMap::from([
+            ("name".to_string(), Json::Str(name.clone())),
+            ("atoms".to_string(), Json::Num(*natoms as f64)),
+            ("build_ns".to_string(), Json::Num(*ns)),
+            ("per_atom_ns".to_string(), Json::Num(ns / *natoms as f64)),
+        ])));
+    }
     let json = Json::Obj(BTreeMap::from([
         ("bench".to_string(), Json::Str("parallel_scaling".to_string())),
         ("threads".to_string(), Json::Num(threads as f64)),
-        (
-            "cases".to_string(),
-            Json::Arr(
-                cases
-                    .iter()
-                    .map(|c| {
-                        Json::Obj(BTreeMap::from([
-                            ("name".to_string(), Json::Str(c.name.clone())),
-                            ("serial_ns".to_string(), Json::Num(c.serial_ns)),
-                            ("parallel_ns".to_string(), Json::Num(c.parallel_ns)),
-                            ("speedup".to_string(), Json::Num(c.speedup())),
-                        ]))
-                    })
-                    .collect(),
-            ),
-        ),
+        ("cases".to_string(), Json::Arr(case_rows)),
     ]));
     let path = std::env::var("GAQ_BENCH_JSON").unwrap_or_else(|_| {
         gaq_md::workspace_root()
@@ -176,5 +256,13 @@ fn main() {
     match std::fs::write(&path, to_string(&json)) {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    // warn-only diff against the checked-in baseline (DESIGN.md §10) —
+    // generous tolerance because runner hardware varies wildly
+    let baseline = gaq_md::workspace_root().join("BENCH_gemm.json");
+    let warnings = warn_against_baseline(&json, &baseline, "name", 4.0);
+    if warnings > 0 {
+        println!("{warnings} baseline warning(s) — investigate or refresh BENCH_gemm.json");
     }
 }

@@ -235,6 +235,24 @@ impl EgnnModel {
         per_block + self.out.weight_bytes()
     }
 
+    /// Total bytes of the runtime [`PackedB`](crate::quant::pack::PackedB)
+    /// panels (all blocks + readout) — the acceleration structures built
+    /// once at weight-image time, accounted separately from the transport
+    /// image that [`EgnnModel::weight_bytes`] measures.
+    pub fn packed_bytes(&self) -> usize {
+        let per_block: usize = self
+            .blocks
+            .iter()
+            .map(|b| {
+                b.msg.packed_bytes()
+                    + b.att.packed_bytes()
+                    + b.upd.packed_bytes()
+                    + b.vec.packed_bytes()
+            })
+            .sum();
+        per_block + self.out.packed_bytes()
+    }
+
     /// Full model evaluation: (energy eV, forces eV/A flat `[n*3]`).
     /// Pure function of the positions — no interior mutability, so a shared
     /// reference can be evaluated from many pool workers concurrently.

@@ -41,11 +41,39 @@ pub struct NeighborGraph {
     pub recv: Vec<usize>,
 }
 
+/// Atom count at which [`NeighborGraph::build`] switches from the O(n^2)
+/// scan to the O(n) cell list. Below this the scan's tiny constant wins
+/// and the cell-list bookkeeping is pure overhead.
+pub const CELL_LIST_MIN_ATOMS: usize = 64;
+
 impl NeighborGraph {
-    /// Build the graph from flat `[n*3]` f64 positions. O(n^2) pair scan —
-    /// the serving molecules are tens of atoms, far below where cell lists
-    /// would pay for themselves.
+    /// Build the graph from flat `[n*3]` f64 positions: the O(n^2) scan
+    /// for small systems, the O(n) cell list at
+    /// [`CELL_LIST_MIN_ATOMS`] and above. Both builders emit the identical
+    /// receiver-major `(dst, src)` edge stream, bits included — in debug
+    /// builds the scan runs as an oracle against the cell list for
+    /// moderate n.
     pub fn build(positions: &[f64], cutoff: f64) -> NeighborGraph {
+        assert_eq!(positions.len() % 3, 0, "positions not [n*3]");
+        let n = positions.len() / 3;
+        if n < CELL_LIST_MIN_ATOMS {
+            return NeighborGraph::build_scan(positions, cutoff);
+        }
+        let g = NeighborGraph::build_cell_list(positions, cutoff);
+        #[cfg(debug_assertions)]
+        if n <= 512 {
+            let oracle = NeighborGraph::build_scan(positions, cutoff);
+            debug_assert!(
+                g.bitwise_eq(&oracle),
+                "cell-list graph diverged from the O(n^2) scan oracle"
+            );
+        }
+        g
+    }
+
+    /// The O(n^2) all-pairs builder — the original construction, kept as
+    /// the oracle the cell list must reproduce bit-for-bit.
+    pub fn build_scan(positions: &[f64], cutoff: f64) -> NeighborGraph {
         assert_eq!(positions.len() % 3, 0, "positions not [n*3]");
         let n = positions.len() / 3;
         let mut edges = Vec::new();
@@ -53,34 +81,156 @@ impl NeighborGraph {
         recv.push(0);
         for i in 0..n {
             for j in 0..n {
-                if i == j {
-                    continue;
+                if i != j {
+                    push_edge(&mut edges, positions, i, j, cutoff);
                 }
-                let d = [
-                    positions[3 * i] - positions[3 * j],
-                    positions[3 * i + 1] - positions[3 * j + 1],
-                    positions[3 * i + 2] - positions[3 * j + 2],
-                ];
-                let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
-                if r >= cutoff || r < 1e-9 {
-                    continue;
-                }
-                edges.push(Edge {
-                    dst: i,
-                    src: j,
-                    dist: r,
-                    unit: [d[0] / r, d[1] / r, d[2] / r],
-                    env: cosine_cutoff(r, cutoff),
-                });
             }
             recv.push(edges.len());
         }
         NeighborGraph { n_atoms: n, cutoff, edges, recv }
     }
 
+    /// The O(n) cell-list builder (DESIGN.md §10): atoms are binned into a
+    /// grid of cells at least `cutoff` wide, so every neighbor of atom `i`
+    /// lies in the 27-cell block around `i`'s cell. Candidates from the
+    /// sweep are sorted by index before edge emission, which restores the
+    /// scan's ascending-`src` order exactly; the per-edge arithmetic is
+    /// shared with the scan ([`push_edge`]), so the edge stream — offsets,
+    /// order, and every f64 — is bit-identical to [`build_scan`].
+    pub fn build_cell_list(positions: &[f64], cutoff: f64) -> NeighborGraph {
+        assert_eq!(positions.len() % 3, 0, "positions not [n*3]");
+        assert!(cutoff > 0.0, "cutoff must be positive");
+        let n = positions.len() / 3;
+        let mut edges = Vec::new();
+        let mut recv = Vec::with_capacity(n + 1);
+        recv.push(0);
+        if n == 0 {
+            return NeighborGraph { n_atoms: 0, cutoff, edges, recv };
+        }
+
+        // bounding box
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for p in positions.chunks_exact(3) {
+            for ax in 0..3 {
+                lo[ax] = lo[ax].min(p[ax]);
+                hi[ax] = hi[ax].max(p[ax]);
+            }
+        }
+
+        // grid dims: cell width >= cutoff along every axis (so a pair
+        // within the cutoff spans at most one cell boundary per axis),
+        // capped at O(n) total cells so sparse systems cannot blow memory
+        // (wider cells stay correct — just more candidates per sweep)
+        let mut dims = [1usize; 3];
+        for ax in 0..3 {
+            let extent = hi[ax] - lo[ax];
+            let mut d = ((extent / cutoff).floor() as usize).max(1);
+            // guard the fp corner where extent/d rounds below the cutoff
+            while d > 1 && extent / d as f64 < cutoff {
+                d -= 1;
+            }
+            dims[ax] = d;
+        }
+        let cap = 8 * n + 64;
+        while dims[0] * dims[1] * dims[2] > cap {
+            let ax = (0..3).max_by_key(|&ax| dims[ax]).unwrap();
+            dims[ax] = dims[ax].div_ceil(2);
+        }
+        let mut width = [0f64; 3];
+        for ax in 0..3 {
+            width[ax] = (hi[ax] - lo[ax]) / dims[ax] as f64;
+        }
+        let cell_coord = |i: usize, ax: usize| -> usize {
+            if width[ax] > 0.0 {
+                (((positions[3 * i + ax] - lo[ax]) / width[ax]) as usize).min(dims[ax] - 1)
+            } else {
+                0
+            }
+        };
+        let cell_id = |c: [usize; 3]| -> usize { (c[2] * dims[1] + c[1]) * dims[0] + c[0] };
+
+        // bin atoms: per-cell singly-linked lists (head/next), O(n) memory
+        const NONE: usize = usize::MAX;
+        let mut head = vec![NONE; dims[0] * dims[1] * dims[2]];
+        let mut next = vec![NONE; n];
+        for i in 0..n {
+            let c = cell_id([cell_coord(i, 0), cell_coord(i, 1), cell_coord(i, 2)]);
+            next[i] = head[c];
+            head[c] = i;
+        }
+
+        // 27-neighbor sweep, receiver-major; candidates sorted so the edge
+        // stream matches the scan's ascending-src order exactly
+        let mut cand: Vec<usize> = Vec::with_capacity(64);
+        for i in 0..n {
+            cand.clear();
+            let c = [cell_coord(i, 0), cell_coord(i, 1), cell_coord(i, 2)];
+            for cz in c[2].saturating_sub(1)..=(c[2] + 1).min(dims[2] - 1) {
+                for cy in c[1].saturating_sub(1)..=(c[1] + 1).min(dims[1] - 1) {
+                    for cx in c[0].saturating_sub(1)..=(c[0] + 1).min(dims[0] - 1) {
+                        let mut j = head[cell_id([cx, cy, cz])];
+                        while j != NONE {
+                            if j != i {
+                                cand.push(j);
+                            }
+                            j = next[j];
+                        }
+                    }
+                }
+            }
+            cand.sort_unstable();
+            for &j in &cand {
+                push_edge(&mut edges, positions, i, j, cutoff);
+            }
+            recv.push(edges.len());
+        }
+        NeighborGraph { n_atoms: n, cutoff, edges, recv }
+    }
+
+    /// Bitwise equality of two graphs: identical CSR offsets and an
+    /// identical edge stream (indices, and the exact bits of every
+    /// distance, unit component and envelope). The predicate behind the
+    /// cell-list-vs-scan guard.
+    pub fn bitwise_eq(&self, other: &NeighborGraph) -> bool {
+        self.n_atoms == other.n_atoms
+            && self.recv == other.recv
+            && self.edges.len() == other.edges.len()
+            && self.edges.iter().zip(&other.edges).all(|(a, b)| {
+                a.dst == b.dst
+                    && a.src == b.src
+                    && a.dist.to_bits() == b.dist.to_bits()
+                    && a.env.to_bits() == b.env.to_bits()
+                    && (0..3).all(|ax| a.unit[ax].to_bits() == b.unit[ax].to_bits())
+            })
+    }
+
     pub fn n_edges(&self) -> usize {
         self.edges.len()
     }
+}
+
+/// Emit the directed edge `src=j -> dst=i` if it passes the cutoff — the
+/// single per-edge arithmetic path shared by both builders, so their edge
+/// values cannot diverge.
+#[inline]
+fn push_edge(edges: &mut Vec<Edge>, positions: &[f64], i: usize, j: usize, cutoff: f64) {
+    let d = [
+        positions[3 * i] - positions[3 * j],
+        positions[3 * i + 1] - positions[3 * j + 1],
+        positions[3 * i + 2] - positions[3 * j + 2],
+    ];
+    let r = (d[0] * d[0] + d[1] * d[1] + d[2] * d[2]).sqrt();
+    if r >= cutoff || r < 1e-9 {
+        return;
+    }
+    edges.push(Edge {
+        dst: i,
+        src: j,
+        dist: r,
+        unit: [d[0] / r, d[1] / r, d[2] / r],
+        env: cosine_cutoff(r, cutoff),
+    });
 }
 
 /// Smooth cosine cutoff envelope: `0.5 (1 + cos(pi r / rc))` for `r < rc`,
@@ -170,6 +320,105 @@ mod tests {
                 assert!((want[ax] - b.unit[ax]).abs() < 1e-9);
             }
         }
+    }
+
+    #[test]
+    fn prop_cell_list_matches_scan_bitwise() {
+        // randomized conformations across densities: same CSR offsets,
+        // same edge order, same bits in dist/unit/env (RBF inputs)
+        crate::util::proptest::check(
+            "cell list == O(n^2) scan (bitwise)",
+            23,
+            25,
+            |r: &mut Rng| {
+                let n = 2 + r.below(200);
+                let side = 2.0 + r.f64() * 18.0; // dense through sparse
+                let cutoff = 1.5 + r.f64() * 5.0;
+                (n, side, cutoff, r.next_u64())
+            },
+            |&(n, side, cutoff, seed)| {
+                let mut rng = Rng::new(seed);
+                let pos: Vec<f64> = (0..3 * n).map(|_| rng.f64() * side).collect();
+                let scan = NeighborGraph::build_scan(&pos, cutoff);
+                let cells = NeighborGraph::build_cell_list(&pos, cutoff);
+                crate::prop_assert!(
+                    cells.bitwise_eq(&scan),
+                    "diverged at n={n} side={side:.2} cutoff={cutoff:.2}: \
+                     scan {} edges, cells {} edges",
+                    scan.n_edges(),
+                    cells.n_edges()
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn cell_list_handles_atoms_exactly_at_the_cutoff() {
+        // pairs at exactly r == cutoff are excluded by both builders (the
+        // envelope is 0 there anyway); pairs a hair inside are kept
+        let cutoff = 2.0;
+        let eps = 1e-12;
+        let mut pos = vec![
+            0.0, 0.0, 0.0, //
+            cutoff, 0.0, 0.0, // exactly at the cutoff from atom 0
+            0.0, cutoff - eps, 0.0, // just inside from atom 0
+        ];
+        // pad past CELL_LIST_MIN_ATOMS with a far-away lattice so build()
+        // takes the cell-list path in release too
+        let mut k = 0;
+        while pos.len() / 3 < CELL_LIST_MIN_ATOMS + 8 {
+            pos.extend_from_slice(&[100.0 + 3.0 * k as f64, 50.0, 50.0]);
+            k += 1;
+        }
+        let scan = NeighborGraph::build_scan(&pos, cutoff);
+        let cells = NeighborGraph::build_cell_list(&pos, cutoff);
+        assert!(cells.bitwise_eq(&scan));
+        let built = NeighborGraph::build(&pos, cutoff);
+        assert!(built.bitwise_eq(&scan));
+        // atom 0 sees only atom 2 (the exact-cutoff pair 0-1 is excluded)
+        let recv0: Vec<usize> = cells.edges[cells.recv[0]..cells.recv[1]]
+            .iter()
+            .map(|e| e.src)
+            .collect();
+        assert_eq!(recv0, vec![2]);
+    }
+
+    #[test]
+    fn cell_list_matches_scan_on_degenerate_geometries() {
+        // all atoms on one line (two axes have zero extent), and
+        // duplicated positions (r < 1e-9 pairs are skipped by both)
+        let mut line: Vec<f64> = Vec::new();
+        for i in 0..80 {
+            line.extend_from_slice(&[i as f64 * 0.7, 1.0, -2.0]);
+        }
+        let scan = NeighborGraph::build_scan(&line, 2.5);
+        let cells = NeighborGraph::build_cell_list(&line, 2.5);
+        assert!(cells.bitwise_eq(&scan));
+
+        let mut dup: Vec<f64> = Vec::new();
+        for i in 0..70 {
+            let x = (i / 2) as f64; // every position appears twice
+            dup.extend_from_slice(&[x, 0.0, 0.0]);
+        }
+        let scan = NeighborGraph::build_scan(&dup, 1.5);
+        let cells = NeighborGraph::build_cell_list(&dup, 1.5);
+        assert!(cells.bitwise_eq(&scan));
+    }
+
+    #[test]
+    fn build_dispatches_by_size_with_identical_output() {
+        // under the threshold build() is the scan; over it, the cell list —
+        // either way the edge stream is the scan's, bit for bit
+        let m = Molecule::azobenzene_builtin();
+        let small = NeighborGraph::build(&m.positions, 5.0);
+        assert!(small.bitwise_eq(&NeighborGraph::build_scan(&m.positions, 5.0)));
+
+        let mut rng = Rng::new(9);
+        let n = CELL_LIST_MIN_ATOMS + 40;
+        let pos: Vec<f64> = (0..3 * n).map(|_| rng.f64() * 12.0).collect();
+        let big = NeighborGraph::build(&pos, 4.0);
+        assert!(big.bitwise_eq(&NeighborGraph::build_scan(&pos, 4.0)));
     }
 
     #[test]

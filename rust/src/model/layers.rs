@@ -6,21 +6,25 @@
 //! scheme —
 //!
 //! * [`GemmKind::F32`]  — `gemm_f32_auto` on the raw weights
-//! * [`GemmKind::Int8`] — per-tensor INT8 activations x INT8 weights through
-//!   `gemm_i8_auto` (W8A8 roster rows)
-//! * [`GemmKind::W4A8`] — per-tensor INT8 activations x nibble-packed INT4
-//!   weights through `gemm_w4a8_auto` (the deployed W4A8 format)
+//! * [`GemmKind::Int8`] — per-tensor INT8 activations x an INT8 weight image
+//!   (W8A8 roster rows)
+//! * [`GemmKind::W4A8`] — per-tensor INT8 activations x a nibble-packed INT4
+//!   weight image (the deployed W4A8 transport format)
 //!
 //! — while direction channels never pass through here (egnn.rs keeps them on
-//! the equivariant path). Weights are quantized once at construction; the
-//! integer images are what the GEMMs stream. Activation scales are
-//! per-tensor max-abs, recomputed per call — a deterministic function of the
-//! input, so the layer output is bit-identical for every pool size (the
-//! `*_auto` kernels shard rows without changing any accumulation order).
+//! the equivariant path). Weights are quantized once at construction, and
+//! the integer image is immediately reordered into a [`PackedB`] column
+//! panel (DESIGN.md §10) — W4 nibbles decoded exactly once, at weight-image
+//! time — so every forward call streams the pre-packed panel through the
+//! register-tiled `gemm_packed_auto` kernel instead of re-consuming the raw
+//! transport image. Activation scales are per-tensor max-abs, recomputed
+//! per call — a deterministic function of the input, so the layer output is
+//! bit-identical for every pool size (the `*_auto` kernels shard rows
+//! without changing any accumulation order).
 
-use crate::quant::gemm::{gemm_f32_auto, gemm_i8_auto, gemm_w4a8_auto};
+use crate::quant::gemm::{gemm_f32_auto, gemm_packed_auto};
 use crate::quant::pack::{
-    dequantize_i4, dequantize_i8, quantize_i4, quantize_i8, QuantizedI4, QuantizedI8,
+    dequantize_i4, dequantize_i8, quantize_i4, quantize_i8, PackedB, QuantizedI4, QuantizedI8,
 };
 
 /// Which GEMM kernel a [`QuantLinear`] routes through.
@@ -45,7 +49,8 @@ impl GemmKind {
 }
 
 /// A bias-free linear layer `[m, in_dim] -> [m, out_dim]` with the weight
-/// image stored in the variant's deployed precision.
+/// image stored in the variant's deployed precision, plus the panel-packed
+/// form the tiled kernels stream.
 #[derive(Debug, Clone)]
 pub struct QuantLinear {
     pub in_dim: usize,
@@ -54,20 +59,33 @@ pub struct QuantLinear {
     /// master f32 weights, row-major `[in_dim, out_dim]` (kept for the
     /// calibration pass and the dequantized reference)
     w_f32: Vec<f32>,
+    /// deployed transport image (the Table IV memory format)
     w_i8: Option<QuantizedI8>,
     w_i4: Option<QuantizedI4>,
+    /// panel-packed weight image, built once here at weight-image time —
+    /// the operand every quantized forward call actually streams
+    packed: Option<PackedB>,
 }
 
 impl QuantLinear {
-    /// Wrap master weights, quantizing the image once per the kind.
+    /// Wrap master weights, quantizing the transport image and packing the
+    /// GEMM panel once per the kind.
     pub fn new(w: Vec<f32>, in_dim: usize, out_dim: usize, kind: GemmKind) -> QuantLinear {
         assert_eq!(w.len(), in_dim * out_dim, "weight shape mismatch");
-        let (w_i8, w_i4) = match kind {
-            GemmKind::F32 => (None, None),
-            GemmKind::Int8 => (Some(quantize_i8(&w)), None),
-            GemmKind::W4A8 => (None, Some(quantize_i4(&w))),
+        let (w_i8, w_i4, packed) = match kind {
+            GemmKind::F32 => (None, None, None),
+            GemmKind::Int8 => {
+                let q = quantize_i8(&w);
+                let p = PackedB::from_i8(&q, in_dim, out_dim);
+                (Some(q), None, Some(p))
+            }
+            GemmKind::W4A8 => {
+                let q = quantize_i4(&w);
+                let p = PackedB::from_i4(&q, in_dim, out_dim);
+                (None, Some(q), Some(p))
+            }
         };
-        QuantLinear { in_dim, out_dim, kind, w_f32: w, w_i8, w_i4 }
+        QuantLinear { in_dim, out_dim, kind, w_f32: w, w_i8, w_i4, packed }
     }
 
     pub fn kind(&self) -> GemmKind {
@@ -75,7 +93,8 @@ impl QuantLinear {
     }
 
     /// Forward through the variant's kernel: `a` is `[m, in_dim]` row-major,
-    /// `out` is `[m, out_dim]`.
+    /// `out` is `[m, out_dim]`. Quantized kinds quantize the activations
+    /// per call and stream the pre-packed weight panel.
     pub fn forward(&self, a: &[f32], m: usize, out: &mut [f32]) {
         assert_eq!(a.len(), m * self.in_dim);
         assert_eq!(out.len(), m * self.out_dim);
@@ -83,15 +102,10 @@ impl QuantLinear {
             GemmKind::F32 => {
                 gemm_f32_auto(a, &self.w_f32, out, m, self.in_dim, self.out_dim);
             }
-            GemmKind::Int8 => {
+            GemmKind::Int8 | GemmKind::W4A8 => {
                 let qa = quantize_i8(a);
-                let qw = self.w_i8.as_ref().expect("int8 image");
-                gemm_i8_auto(&qa, qw, out, m, self.in_dim, self.out_dim);
-            }
-            GemmKind::W4A8 => {
-                let qa = quantize_i8(a);
-                let qw = self.w_i4.as_ref().expect("int4 image");
-                gemm_w4a8_auto(&qa, qw, out, m, self.in_dim, self.out_dim);
+                let qw = self.packed.as_ref().expect("packed image");
+                gemm_packed_auto(&qa, qw, out, m, self.in_dim, self.out_dim);
             }
         }
     }
@@ -125,12 +139,21 @@ impl QuantLinear {
     }
 
     /// Bytes of the stored weight image (the Table IV memory row, per layer).
+    ///
+    /// This counts the *transport* image only — nibble-packed for W4A8 —
+    /// which is what the paper's memory table measures. The runtime panel
+    /// is accounted separately by [`QuantLinear::packed_bytes`].
     pub fn weight_bytes(&self) -> usize {
         match self.kind {
             GemmKind::F32 => self.w_f32.len() * 4,
             GemmKind::Int8 => self.w_i8.as_ref().map(|q| q.data.len()).unwrap_or(0),
             GemmKind::W4A8 => self.w_i4.as_ref().map(|q| q.data.len()).unwrap_or(0),
         }
+    }
+
+    /// Bytes of the runtime [`PackedB`] acceleration panel (0 for F32).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.as_ref().map(|p| p.bytes()).unwrap_or(0)
     }
 }
 
@@ -247,6 +270,42 @@ mod tests {
         assert_eq!(b32, 64 * 32 * 4);
         assert_eq!(b8, 64 * 32);
         assert_eq!(b4, 64 * 32 / 2);
+    }
+
+    #[test]
+    fn packed_bytes_count_the_runtime_panel() {
+        let w = random_vec(64 * 32, 5);
+        assert_eq!(QuantLinear::new(w.clone(), 64, 32, GemmKind::F32).packed_bytes(), 0);
+        assert_eq!(QuantLinear::new(w.clone(), 64, 32, GemmKind::Int8).packed_bytes(), 64 * 32);
+        // the W4 panel is decoded to i8, so it is 2x the transport image
+        assert_eq!(QuantLinear::new(w, 64, 32, GemmKind::W4A8).packed_bytes(), 64 * 32);
+    }
+
+    #[test]
+    fn packed_forward_is_bit_identical_to_the_scalar_oracles() {
+        use crate::quant::gemm::{gemm_i8_scalar, gemm_w4a8_scalar};
+        // odd shapes: m not a tile multiple, n not a panel multiple
+        let (m, k, n) = (7usize, 33usize, 19usize);
+        let w = random_vec(k * n, 11);
+        let a = random_vec(m * k, 12);
+        let qa = quantize_i8(&a);
+        for kind in [GemmKind::Int8, GemmKind::W4A8] {
+            let lin = QuantLinear::new(w.clone(), k, n, kind);
+            let mut out = vec![0f32; m * n];
+            lin.forward(&a, m, &mut out);
+            let mut oracle = vec![0f32; m * n];
+            match kind {
+                GemmKind::Int8 => {
+                    gemm_i8_scalar(&qa, &quantize_i8(&w), &mut oracle, m, k, n);
+                }
+                GemmKind::W4A8 => {
+                    gemm_w4a8_scalar(&qa, &quantize_i4(&w), &mut oracle, m, k, n);
+                }
+                GemmKind::F32 => unreachable!(),
+            }
+            let same = out.iter().zip(&oracle).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "{kind:?}: packed forward drifted from the scalar oracle");
+        }
     }
 
     #[test]

@@ -7,7 +7,12 @@
 //! scheme*, exactly like post-training quantization of one trained model.
 //! Per-variant behaviour comes from how [`super::layers::QuantLinear`]
 //! images those masters (INT8 / packed INT4 / f32), never from different
-//! random draws.
+//! random draws. Imaging happens exactly once per layer, in the
+//! `QuantLinear` constructor: the transport image is quantized and — for
+//! the integer kinds — immediately reordered into the panel-packed
+//! [`crate::quant::pack::PackedB`] form the register-tiled GEMMs stream
+//! (DESIGN.md §10). Both load paths (seeded and `weights_json`) funnel
+//! through that one constructor, so the packed image can never go stale.
 //!
 //! The optional JSON path (`model.weights_json` in the artifact manifest)
 //! loads trained parameters exported by the python side instead; the format

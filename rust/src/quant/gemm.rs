@@ -1,14 +1,26 @@
 //! Quantized GEMM (S11): the Table IV "Compute (GEMM)" row.
 //!
 //! Row-major `C[M,N] = A[M,K] @ B[K,N]` in three precisions:
-//! * `gemm_f32`   — blocked f32 reference
-//! * `gemm_i8`    — INT8 x INT8 -> i32 accumulate, dequantised epilogue
-//! * `gemm_w4a8`  — nibble-packed INT4 weights x INT8 activations
+//! * `gemm_f32`    — blocked f32 reference
+//! * `gemm_i8`     — INT8 x INT8 -> i32 accumulate, dequantised epilogue
+//! * `gemm_w4a8`   — nibble-packed INT4 weights x INT8 activations
+//! * `gemm_packed` — either integer precision on a pre-packed
+//!   [`PackedB`] weight panel (the weight-image-time fast path)
 //!
-//! The integer kernels move 1/4 (resp. ~1/8) of the weight bytes and let
-//! the compiler autovectorise the i8 x i8 inner loop; on memory-bound
-//! shapes (small M, large K*N — the batch-1 inference regime) they land
-//! close to the bandwidth multiplier, matching the paper's 1.8x GEMM row.
+//! The integer kernels run a register-tiled micro-kernel (DESIGN.md §10):
+//! B is reordered into K-major column panels of [`PANEL_NR`] columns
+//! ([`PackedB`] — W4 nibbles decoded once at pack time, never in the inner
+//! loop), and each [`TILE_MR`]`x`[`PANEL_NR`] output tile accumulates in
+//! i32 registers across the whole K loop. The inner loop is a fixed-width
+//! broadcast-multiply-accumulate the autovectorizer lifts to SIMD. The
+//! `gemm_{i8,w4a8}` entry points pack B per call; `gemm_packed` consumes a
+//! panel built once at weight-image time (`model::layers::QuantLinear`).
+//!
+//! **Bit-identity**: i8 x i8 products accumulated in i32 are exact, so any
+//! tiling/blocking order produces the same integer sums; the epilogue is
+//! one `i32 as f32 * scale` per element. Tiled output is therefore
+//! bit-identical to the pre-refactor scalar kernels — kept here as
+//! `gemm_{i8,w4a8}_scalar`, the oracles of `rust/tests/parallel_parity.rs`.
 //!
 //! Each kernel also has a row-sharded data-parallel form (`*_pool`, and
 //! `*_auto` which engages the global [`ThreadPool`] above
@@ -18,10 +30,16 @@
 //! are **bit-identical** to serial (guarded by `rust/tests/parallel_parity.rs`
 //! and the in-module tests below; DESIGN.md §8).
 
-use super::pack::{nibble_to_i8, QuantizedI4, QuantizedI8};
+use super::pack::{nibble_to_i8, PackedB, QuantizedI4, QuantizedI8, PANEL_NR};
 use crate::util::threadpool::ThreadPool;
 
 const BLOCK: usize = 64;
+
+/// Rows per register tile of the packed integer micro-kernel. With
+/// [`PANEL_NR`] = 16 i32 lanes per tile row, MR = 4 keeps the 4x16 i32
+/// accumulator block (8 x 256-bit vectors) resident in registers for the
+/// whole K loop.
+pub const TILE_MR: usize = 4;
 
 /// Work threshold (M*K*N multiply-accumulates) above which the `*_auto`
 /// entry points shard rows across the global pool. The pool spawns scoped
@@ -88,41 +106,150 @@ pub fn gemm_f32_auto(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n:
     }
 }
 
-/// INT8 GEMM with i32 accumulation; `c = (a_q @ b_q) * a_scale * b_scale`.
-pub fn gemm_i8(a: &QuantizedI8, b: &QuantizedI8, c: &mut [f32], m: usize, k: usize, n: usize) {
-    assert_eq!(a.data.len(), m * k);
-    assert_eq!(b.data.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    gemm_i8_core(&a.data, &b.data, a.scale * b.scale, c, m, k, n);
-}
+// ---------------------------------------------------------------------------
+// register-tiled packed integer core
+// ---------------------------------------------------------------------------
 
-/// Serial INT8 core on raw slices (shared by the full-matrix and row-block
-/// entry points — one code path, so sharded results cannot diverge).
-fn gemm_i8_core(a: &[i8], b: &[i8], scale: f32, c: &mut [f32], m: usize, k: usize, n: usize) {
-    let mut acc = vec![0i32; n];
-    for i in 0..m {
-        acc.fill(0);
-        let arow = &a[i * k..(i + 1) * k];
-        for (kk, &av) in arow.iter().enumerate() {
-            if av == 0 {
-                continue;
-            }
-            let av = av as i32;
-            let brow = &b[kk * n..kk * n + n];
-            // iterator zip: no bounds checks -> LLVM vectorises the
-            // widen-multiply-accumulate (EXPERIMENTS.md §Perf)
-            for (a, &bv) in acc.iter_mut().zip(brow) {
-                *a += av * bv as i32;
+/// The register-tiled integer core: `a` is row-major i8 `[m, k]`, `b` a
+/// panel-packed weight image, `c = (a @ b) * scale`.
+///
+/// Per column panel (width NR, K-major): full [`TILE_MR`]`x`NR tiles run a
+/// fixed-width broadcast-MAC over the whole K extent with the 4x16 i32
+/// accumulator block in registers; leftover rows (and the natural-width
+/// tail panel) fall through to a 1xNR edge loop. Reduction order within a
+/// tile is fixed (ascending k), tiles are visited in ascending (panel,
+/// row-block) order — and i32 sums are exact anyway — so the output is
+/// bit-identical to the scalar oracle and independent of tiling.
+fn gemm_packed_core(
+    a: &[i8],
+    b: &PackedB,
+    scale: f32,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!((b.k, b.n), (k, n));
+    debug_assert_eq!(c.len(), m * n);
+    const NR: usize = PANEL_NR;
+    for p in 0..b.panels() {
+        let (j0, w, panel) = b.panel(p);
+        let mut i0 = 0usize;
+        if w == NR {
+            // full MR x NR register tiles
+            while i0 + TILE_MR <= m {
+                let mut acc = [[0i32; NR]; TILE_MR];
+                let a0 = &a[i0 * k..(i0 + 1) * k];
+                let a1 = &a[(i0 + 1) * k..(i0 + 2) * k];
+                let a2 = &a[(i0 + 2) * k..(i0 + 3) * k];
+                let a3 = &a[(i0 + 3) * k..(i0 + 4) * k];
+                for (kk, brow) in panel.chunks_exact(NR).enumerate() {
+                    let av = [a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32];
+                    for (acc_r, &av_r) in acc.iter_mut().zip(&av) {
+                        // fixed 16-lane trip count: LLVM lifts this to a
+                        // widen-multiply-accumulate vector loop
+                        for (x, &bv) in acc_r.iter_mut().zip(brow) {
+                            *x += av_r * bv as i32;
+                        }
+                    }
+                }
+                for (r, acc_r) in acc.iter().enumerate() {
+                    let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
+                    for (cv, &x) in crow.iter_mut().zip(acc_r) {
+                        *cv = x as f32 * scale;
+                    }
+                }
+                i0 += TILE_MR;
             }
         }
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (cv, &av) in crow.iter_mut().zip(acc.iter()) {
-            *cv = av as f32 * scale;
+        // row tail of full panels + every row of the natural-width tail panel
+        for i in i0..m {
+            let mut acc = [0i32; NR];
+            let arow = &a[i * k..(i + 1) * k];
+            for (kk, brow) in panel.chunks_exact(w).enumerate() {
+                let av = arow[kk] as i32;
+                for (x, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *x += av * bv as i32;
+                }
+            }
+            let crow = &mut c[i * n + j0..i * n + j0 + w];
+            for (cv, &x) in crow.iter_mut().zip(&acc[..w]) {
+                *cv = x as f32 * scale;
+            }
         }
     }
 }
 
-/// Row-sharded INT8 GEMM; bit-identical to [`gemm_i8`].
+/// Tiled GEMM on a pre-packed weight panel: `c = (a_q @ b) * a_scale *
+/// b_scale`. The weight-image-time fast path — `b` is built once
+/// ([`PackedB::from_i8`] / [`PackedB::from_i4`]) and streamed per call.
+pub fn gemm_packed(a: &QuantizedI8, b: &PackedB, c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!((b.k, b.n), (k, n), "packed panel shape mismatch");
+    assert_eq!(c.len(), m * n);
+    gemm_packed_core(&a.data, b, a.scale * b.scale, c, m, k, n);
+}
+
+/// Row-sharded [`gemm_packed`]; bit-identical to serial (each shard runs
+/// the identical tiled core on its own output rows).
+pub fn gemm_packed_pool(
+    pool: &ThreadPool,
+    a: &QuantizedI8,
+    b: &PackedB,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!((b.k, b.n), (k, n), "packed panel shape mismatch");
+    assert_eq!(c.len(), m * n);
+    let scale = a.scale * b.scale;
+    if pool.threads() <= 1 || m <= 1 || n == 0 {
+        gemm_packed_core(&a.data, b, scale, c, m, k, n);
+        return;
+    }
+    pool.for_each_row_block(c, n, |r0, cblock| {
+        let rows = cblock.len() / n;
+        gemm_packed_core(&a.data[r0 * k..(r0 + rows) * k], b, scale, cblock, rows, k, n);
+    });
+}
+
+/// [`gemm_packed`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
+pub fn gemm_packed_auto(
+    a: &QuantizedI8,
+    b: &PackedB,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let pool = ThreadPool::global();
+    if pool.threads() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        gemm_packed_pool(pool, a, b, c, m, k, n);
+    } else {
+        gemm_packed(a, b, c, m, k, n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// INT8 / W4A8 entry points (pack per call, then run the tiled core)
+// ---------------------------------------------------------------------------
+
+/// INT8 GEMM with i32 accumulation; `c = (a_q @ b_q) * a_scale * b_scale`.
+/// Packs B into column panels per call, then runs the tiled core —
+/// bit-identical to [`gemm_i8_scalar`].
+pub fn gemm_i8(a: &QuantizedI8, b: &QuantizedI8, c: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.data.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    let packed = PackedB::from_i8(b, k, n);
+    gemm_packed_core(&a.data, &packed, a.scale * b.scale, c, m, k, n);
+}
+
+/// Row-sharded INT8 GEMM; bit-identical to [`gemm_i8`]. B is packed once
+/// and shared read-only by every shard.
 pub fn gemm_i8_pool(
     pool: &ThreadPool,
     a: &QuantizedI8,
@@ -135,15 +262,8 @@ pub fn gemm_i8_pool(
     assert_eq!(a.data.len(), m * k);
     assert_eq!(b.data.len(), k * n);
     assert_eq!(c.len(), m * n);
-    let scale = a.scale * b.scale;
-    if pool.threads() <= 1 || m <= 1 || n == 0 {
-        gemm_i8_core(&a.data, &b.data, scale, c, m, k, n);
-        return;
-    }
-    pool.for_each_row_block(c, n, |r0, cblock| {
-        let rows = cblock.len() / n;
-        gemm_i8_core(&a.data[r0 * k..(r0 + rows) * k], &b.data, scale, cblock, rows, k, n);
-    });
+    let packed = PackedB::from_i8(b, k, n);
+    gemm_packed_pool(pool, a, &packed, c, m, k, n);
 }
 
 /// [`gemm_i8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
@@ -156,10 +276,9 @@ pub fn gemm_i8_auto(a: &QuantizedI8, b: &QuantizedI8, c: &mut [f32], m: usize, k
     }
 }
 
-/// W4A8 GEMM: INT4 weights (packed per *column-major blocks of K*) times
-/// INT8 activations. Weights are stored row-major [K, N] nibble-packed
-/// along N; we unpack per row into a small i8 scratch to keep the inner
-/// loop dense.
+/// W4A8 GEMM: INT4 weights times INT8 activations. The nibbles are decoded
+/// exactly once, at pack time, then the tiled core runs on the i8 panel —
+/// bit-identical to [`gemm_w4a8_scalar`].
 pub fn gemm_w4a8(
     a: &QuantizedI8, // [M, K] activations
     b: &QuantizedI4, // [K, N] weights, nibble-packed row-major
@@ -171,17 +290,124 @@ pub fn gemm_w4a8(
     assert_eq!(a.data.len(), m * k);
     assert_eq!(b.len, k * n);
     assert_eq!(c.len(), m * n);
-    gemm_w4a8_core(&a.data, &b.data, a.scale * b.scale, c, m, k, n);
+    let packed = PackedB::from_i4(b, k, n);
+    gemm_packed_core(&a.data, &packed, a.scale * b.scale, c, m, k, n);
 }
 
-/// Serial W4A8 core on raw slices. i32 accumulation is exact (wrapping
-/// adds commute), so any row sharding of the same core is bit-identical.
-fn gemm_w4a8_core(a: &[i8], bdata: &[u8], scale: f32, c: &mut [f32], m: usize, k: usize, n: usize) {
-    // k-outer loop: each packed weight row is unpacked exactly ONCE (not
-    // once per output row), then broadcast-accumulated into all m output
-    // rows. acc is m*n i32 (32 KiB at the serving shapes — L1/L2 resident).
-    // The unpack walks bytes (two outputs per byte, branch only at row
-    // edges) instead of branching per element. EXPERIMENTS.md §Perf.
+/// Row-sharded W4A8 GEMM; bit-identical to [`gemm_w4a8`]. The panel is
+/// packed (nibbles decoded) once and shared read-only by every shard —
+/// unlike the pre-refactor kernel, which re-unpacked per shard.
+pub fn gemm_w4a8_pool(
+    pool: &ThreadPool,
+    a: &QuantizedI8,
+    b: &QuantizedI4,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.len, k * n);
+    assert_eq!(c.len(), m * n);
+    let packed = PackedB::from_i4(b, k, n);
+    gemm_packed_pool(pool, a, &packed, c, m, k, n);
+}
+
+/// [`gemm_w4a8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
+pub fn gemm_w4a8_auto(
+    a: &QuantizedI8,
+    b: &QuantizedI4,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let pool = ThreadPool::global();
+    if pool.threads() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
+        gemm_w4a8_pool(pool, a, b, c, m, k, n);
+    } else {
+        gemm_w4a8(a, b, c, m, k, n);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pre-refactor scalar kernels — kept as the bitwise oracles
+// ---------------------------------------------------------------------------
+
+/// The pre-refactor scalar INT8 kernel (row-major triple loop with a
+/// per-row i32 accumulator). Kept as the bitwise oracle for the tiled
+/// kernels (`rust/tests/parallel_parity.rs`) and the baseline leg of
+/// `benches/parallel_scaling.rs` — not a serving path.
+pub fn gemm_i8_scalar(
+    a: &QuantizedI8,
+    b: &QuantizedI8,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.data.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    gemm_i8_scalar_core(&a.data, &b.data, a.scale * b.scale, c, m, k, n);
+}
+
+fn gemm_i8_scalar_core(
+    a: &[i8],
+    b: &[i8],
+    scale: f32,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut acc = vec![0i32; n];
+    for i in 0..m {
+        acc.fill(0);
+        let arow = &a[i * k..(i + 1) * k];
+        for (kk, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i32;
+            let brow = &b[kk * n..kk * n + n];
+            for (a, &bv) in acc.iter_mut().zip(brow) {
+                *a += av * bv as i32;
+            }
+        }
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (cv, &av) in crow.iter_mut().zip(acc.iter()) {
+            *cv = av as f32 * scale;
+        }
+    }
+}
+
+/// The pre-refactor scalar W4A8 kernel (k-outer loop, weight row unpacked
+/// per k into a scratch buffer). Kept as the bitwise oracle and baseline —
+/// not a serving path.
+pub fn gemm_w4a8_scalar(
+    a: &QuantizedI8,
+    b: &QuantizedI4,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    assert_eq!(a.data.len(), m * k);
+    assert_eq!(b.len, k * n);
+    assert_eq!(c.len(), m * n);
+    gemm_w4a8_scalar_core(&a.data, &b.data, a.scale * b.scale, c, m, k, n);
+}
+
+fn gemm_w4a8_scalar_core(
+    a: &[i8],
+    bdata: &[u8],
+    scale: f32,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     let mut acc = vec![0i32; m * n];
     let mut wrow = vec![0i8; n];
     for kk in 0..k {
@@ -200,49 +426,6 @@ fn gemm_w4a8_core(a: &[i8], bdata: &[u8], scale: f32, c: &mut [f32], m: usize, k
     }
     for (cv, &av) in c.iter_mut().zip(acc.iter()) {
         *cv = av as f32 * scale;
-    }
-}
-
-/// Row-sharded W4A8 GEMM; bit-identical to [`gemm_w4a8`]. Each block
-/// re-unpacks the weight rows it touches (threads× total unpack work) in
-/// exchange for fully independent shards.
-pub fn gemm_w4a8_pool(
-    pool: &ThreadPool,
-    a: &QuantizedI8,
-    b: &QuantizedI4,
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-) {
-    assert_eq!(a.data.len(), m * k);
-    assert_eq!(b.len, k * n);
-    assert_eq!(c.len(), m * n);
-    let scale = a.scale * b.scale;
-    if pool.threads() <= 1 || m <= 1 || n == 0 {
-        gemm_w4a8_core(&a.data, &b.data, scale, c, m, k, n);
-        return;
-    }
-    pool.for_each_row_block(c, n, |r0, cblock| {
-        let rows = cblock.len() / n;
-        gemm_w4a8_core(&a.data[r0 * k..(r0 + rows) * k], &b.data, scale, cblock, rows, k, n);
-    });
-}
-
-/// [`gemm_w4a8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
-pub fn gemm_w4a8_auto(
-    a: &QuantizedI8,
-    b: &QuantizedI4,
-    c: &mut [f32],
-    m: usize,
-    k: usize,
-    n: usize,
-) {
-    let pool = ThreadPool::global();
-    if pool.threads() > 1 && m.saturating_mul(k).saturating_mul(n) >= PAR_MIN_MACS {
-        gemm_w4a8_pool(pool, a, b, c, m, k, n);
-    } else {
-        gemm_w4a8(a, b, c, m, k, n);
     }
 }
 
@@ -374,8 +557,50 @@ mod tests {
     }
 
     #[test]
+    fn tiled_kernels_are_bit_identical_to_scalar_oracles() {
+        // shapes straddle every tile edge: m % TILE_MR != 0, n % PANEL_NR
+        // != 0, n < PANEL_NR, n == 1, odd n (unaligned nibble rows)
+        for (m, k, n) in [
+            (1usize, 5usize, 7usize),
+            (TILE_MR, 16, PANEL_NR),
+            (7, 16, 9),
+            (16, 33, 31),
+            (5, 8, 1),
+            (9, 21, PANEL_NR + 5),
+            (13, 40, 2 * PANEL_NR + 1),
+        ] {
+            let a = random_vec(m * k, 11);
+            let b = random_vec(k * n, 12);
+            let qa = quantize_i8(&a);
+            let qb8 = quantize_i8(&b);
+            let qb4 = quantize_i4(&b);
+            let mut c_tiled = vec![0f32; m * n];
+            let mut c_scalar = vec![0f32; m * n];
+
+            gemm_i8(&qa, &qb8, &mut c_tiled, m, k, n);
+            gemm_i8_scalar(&qa, &qb8, &mut c_scalar, m, k, n);
+            assert_bits_eq(&c_tiled, &c_scalar, "i8 tiled vs scalar");
+
+            gemm_w4a8(&qa, &qb4, &mut c_tiled, m, k, n);
+            gemm_w4a8_scalar(&qa, &qb4, &mut c_scalar, m, k, n);
+            assert_bits_eq(&c_tiled, &c_scalar, "w4a8 tiled vs scalar");
+
+            // prepacked panels are the same kernel, same bits
+            let p8 = PackedB::from_i8(&qb8, k, n);
+            gemm_packed(&qa, &p8, &mut c_tiled, m, k, n);
+            gemm_i8_scalar(&qa, &qb8, &mut c_scalar, m, k, n);
+            assert_bits_eq(&c_tiled, &c_scalar, "packed i8 vs scalar");
+
+            let p4 = PackedB::from_i4(&qb4, k, n);
+            gemm_packed(&qa, &p4, &mut c_tiled, m, k, n);
+            gemm_w4a8_scalar(&qa, &qb4, &mut c_scalar, m, k, n);
+            assert_bits_eq(&c_tiled, &c_scalar, "packed w4 vs scalar");
+        }
+    }
+
+    #[test]
     fn pooled_kernels_are_bit_identical_to_serial() {
-        // odd n exercises the unaligned-nibble rows of unpack_row
+        // odd n exercises the unaligned-nibble rows of the W4 pack
         for (m, k, n) in [(1usize, 5usize, 7usize), (7, 16, 9), (16, 33, 31), (5, 8, 1)] {
             let a = random_vec(m * k, 7);
             let b = random_vec(k * n, 8);
@@ -400,6 +625,11 @@ mod tests {
                 gemm_w4a8(&qa, &qb4, &mut c_serial, m, k, n);
                 gemm_w4a8_pool(&pool, &qa, &qb4, &mut c_pool, m, k, n);
                 assert_bits_eq(&c_serial, &c_pool, "w4a8");
+
+                let p8 = PackedB::from_i8(&qb8, k, n);
+                gemm_packed(&qa, &p8, &mut c_serial, m, k, n);
+                gemm_packed_pool(&pool, &qa, &p8, &mut c_pool, m, k, n);
+                assert_bits_eq(&c_serial, &c_pool, "packed");
             }
         }
     }
@@ -427,6 +657,11 @@ mod tests {
             gemm_w4a8(&qa, &qb4, &mut c_serial, m, k, n);
             gemm_w4a8_auto(&qa, &qb4, &mut c_auto, m, k, n);
             assert_bits_eq(&c_serial, &c_auto, "w4a8 auto");
+
+            let p8 = PackedB::from_i8(&qb8, k, n);
+            gemm_packed(&qa, &p8, &mut c_serial, m, k, n);
+            gemm_packed_auto(&qa, &p8, &mut c_auto, m, k, n);
+            assert_bits_eq(&c_serial, &c_auto, "packed auto");
         }
     }
 }

@@ -65,6 +65,104 @@ pub fn nibble_to_i8(nib: u8) -> i8 {
     ((nib << 4) as i8) >> 4
 }
 
+/// Signed value of logical element `idx` of a nibble-packed image.
+#[inline]
+pub fn nibble_at(data: &[u8], idx: usize) -> i8 {
+    let byte = data[idx / 2];
+    nibble_to_i8(if idx % 2 == 0 { byte & 0x0F } else { byte >> 4 })
+}
+
+/// Column-panel width of [`PackedB`] — the NR of the register-tiled GEMM
+/// micro-kernel (DESIGN.md §10). 16 i32 accumulator lanes per tile row fit
+/// two 256-bit vectors, which is what the autovectorizer targets.
+pub const PANEL_NR: usize = 16;
+
+/// Panel-packed B weight image for the register-tiled integer GEMMs
+/// (DESIGN.md §10): the `[K, N]` weight matrix reordered into column
+/// panels of [`PANEL_NR`] columns, each panel stored K-major (`[K, NR]`
+/// row-major), so the micro-kernel streams one contiguous `NR`-wide row
+/// per k-step. The tail panel (when `NR` does not divide `N`) is packed at
+/// its natural width — no padding, `data.len() == k * n` always.
+///
+/// W4 images are unpacked to i8 **once here, at pack time**, hoisting the
+/// nibble decode out of every GEMM inner loop. The panel is a runtime
+/// acceleration structure: the nibble-packed transport image remains the
+/// deployed (Table IV) memory format.
+#[derive(Debug, Clone)]
+pub struct PackedB {
+    /// panel-packed i8 elements, `k * n` total (see type docs for layout)
+    pub data: Vec<i8>,
+    /// weight quantisation scale (copied from the source image)
+    pub scale: f32,
+    /// rows of the logical `[K, N]` matrix
+    pub k: usize,
+    /// columns of the logical `[K, N]` matrix
+    pub n: usize,
+}
+
+impl PackedB {
+    /// Pack a row-major `[k, n]` INT8 image into column panels.
+    pub fn from_i8(q: &QuantizedI8, k: usize, n: usize) -> PackedB {
+        assert_eq!(q.data.len(), k * n, "i8 image shape mismatch");
+        PackedB::pack(|kk, j| q.data[kk * n + j], q.scale, k, n)
+    }
+
+    /// Pack a nibble-packed row-major `[k, n]` INT4 image, decoding every
+    /// nibble exactly once.
+    pub fn from_i4(q: &QuantizedI4, k: usize, n: usize) -> PackedB {
+        assert_eq!(q.len, k * n, "i4 image shape mismatch");
+        PackedB::pack(|kk, j| nibble_at(&q.data, kk * n + j), q.scale, k, n)
+    }
+
+    fn pack(elem: impl Fn(usize, usize) -> i8, scale: f32, k: usize, n: usize) -> PackedB {
+        let mut data = Vec::with_capacity(k * n);
+        for p in 0..n.div_ceil(PANEL_NR) {
+            let j0 = p * PANEL_NR;
+            let w = PANEL_NR.min(n - j0);
+            for kk in 0..k {
+                for j in j0..j0 + w {
+                    data.push(elem(kk, j));
+                }
+            }
+        }
+        PackedB { data, scale, k, n }
+    }
+
+    /// Number of column panels.
+    pub fn panels(&self) -> usize {
+        self.n.div_ceil(PANEL_NR)
+    }
+
+    /// Panel `p` as `(first column, width, K-major [k, width] slice)`.
+    pub fn panel(&self, p: usize) -> (usize, usize, &[i8]) {
+        let j0 = p * PANEL_NR;
+        let w = PANEL_NR.min(self.n - j0);
+        // full panels precede the tail, so the offset stays regular
+        let off = j0 * self.k;
+        (j0, w, &self.data[off..off + self.k * w])
+    }
+
+    /// Resident bytes of the packed panel image.
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Reconstruct the row-major `[k, n]` i8 matrix (the round-trip
+    /// inverse of `from_i8` / of `from_i4` after nibble decode).
+    pub fn unpack(&self) -> Vec<i8> {
+        let mut out = vec![0i8; self.k * self.n];
+        for p in 0..self.panels() {
+            let (j0, w, panel) = self.panel(p);
+            for kk in 0..self.k {
+                for j in 0..w {
+                    out[kk * self.n + j0 + j] = panel[kk * w + j];
+                }
+            }
+        }
+        out
+    }
+}
+
 /// Dequantise packed INT4 back to f32.
 pub fn dequantize_i4(q: &QuantizedI4, out: &mut [f32]) {
     debug_assert_eq!(out.len(), q.len);
@@ -168,6 +266,57 @@ mod tests {
         let x = random_vec(64, 3);
         let q = quantize_i4(&x);
         assert_eq!(q.data.len(), 32);
+    }
+
+    #[test]
+    fn prop_packed_b_roundtrips_exactly() {
+        // pack -> unpack is the identity on the source i8 / decoded W4
+        // matrix for randomized shapes, including n < NR, n == NR, odd n
+        // (unaligned nibble rows) and single-row/column edges
+        crate::util::proptest::check(
+            "PackedB pack/unpack roundtrip",
+            41,
+            60,
+            |r: &mut Rng| (1 + r.below(37), 1 + r.below(41), r.next_u64()),
+            |&(k, n, seed)| {
+                let mut rng = Rng::new(seed);
+                let x: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+
+                let q8 = quantize_i8(&x);
+                let p8 = PackedB::from_i8(&q8, k, n);
+                crate::prop_assert!(p8.bytes() == k * n, "i8 panel bytes {}", p8.bytes());
+                crate::prop_assert!(p8.unpack() == q8.data, "i8 roundtrip diverged at ({k},{n})");
+                crate::prop_assert!(p8.scale == q8.scale, "i8 scale not copied");
+
+                let q4 = quantize_i4(&x);
+                let p4 = PackedB::from_i4(&q4, k, n);
+                let want: Vec<i8> = (0..k * n).map(|i| nibble_at(&q4.data, i)).collect();
+                crate::prop_assert!(p4.unpack() == want, "i4 roundtrip diverged at ({k},{n})");
+                crate::prop_assert!(p4.scale == q4.scale, "i4 scale not copied");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn packed_b_panel_layout_is_k_major() {
+        // 2x panels + tail: n = NR + 3 gives one full panel and a width-3 tail
+        let (k, n) = (5usize, PANEL_NR + 3);
+        let x: Vec<f32> = (0..k * n).map(|i| (i as f32) / (k * n) as f32 - 0.5).collect();
+        let q = quantize_i8(&x);
+        let p = PackedB::from_i8(&q, k, n);
+        assert_eq!(p.panels(), 2);
+        let (j0, w, panel) = p.panel(0);
+        assert_eq!((j0, w), (0, PANEL_NR));
+        // K-major: panel row kk holds columns j0..j0+w of source row kk
+        for kk in 0..k {
+            assert_eq!(&panel[kk * w..(kk + 1) * w], &q.data[kk * n..kk * n + w]);
+        }
+        let (j0, w, tail) = p.panel(1);
+        assert_eq!((j0, w), (PANEL_NR, 3));
+        for kk in 0..k {
+            assert_eq!(&tail[kk * w..(kk + 1) * w], &q.data[kk * n + j0..kk * n + j0 + w]);
+        }
     }
 
     #[test]

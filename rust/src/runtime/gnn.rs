@@ -58,8 +58,18 @@ impl GnnForceField {
     }
 
     /// Bytes of the deployed weight images (the Table IV memory row).
+    ///
+    /// Transport format only — the runtime GEMM panels that
+    /// [`GnnForceField::packed_bytes`] counts are built from this image at
+    /// load time (manifest JSON or seeded weights alike: both funnel through
+    /// `QuantLinear::new`, which packs each layer exactly once).
     pub fn weight_bytes(&self) -> usize {
         self.model.weight_bytes()
+    }
+
+    /// Bytes of the panel-packed runtime weight images (DESIGN.md §10).
+    pub fn packed_bytes(&self) -> usize {
+        self.model.packed_bytes()
     }
 
     /// Batched evaluation fanned out across `pool`. Items are independent
@@ -178,6 +188,17 @@ mod tests {
         std::fs::remove_file(&path).ok();
         assert_eq!(e_seed.to_bits(), e_json.to_bits());
         assert_eq!(f_seed, f_json);
+    }
+
+    #[test]
+    fn packed_bytes_follow_the_variant_kind() {
+        // fp32 runs on the master weights (no panel); both quantized kinds
+        // carry one decoded i8 element per weight in the runtime panel
+        assert_eq!(load("fp32").packed_bytes(), 0);
+        let b8 = load("naive_int8");
+        assert_eq!(b8.packed_bytes(), b8.weight_bytes());
+        let b4 = load("gaq_w4a8");
+        assert_eq!(b4.packed_bytes(), 2 * b4.weight_bytes());
     }
 
     #[test]

@@ -4,9 +4,15 @@
 //! `black_box` to defeat const-folding, and a compact reporter whose rows
 //! the `benches/*.rs` binaries print per paper table. Measures wall time
 //! via `Instant`; iteration counts auto-calibrate to a target duration.
+//! [`warn_against_baseline`] diffs a bench report against a checked-in
+//! `BENCH_*.json` so the kernels cannot silently regress (warn-only — CI
+//! runners are too noisy to gate on wall time).
 
 use std::hint::black_box as bb;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use super::json::{parse, Json};
 
 /// Re-export of `std::hint::black_box` under the usual bench name.
 pub fn black_box<T>(x: T) -> T {
@@ -145,6 +151,85 @@ impl Bench {
     }
 }
 
+/// Diff a freshly produced bench report against a checked-in baseline,
+/// **warn-only**: prints one `WARN` line per `*_ns` field that drifted
+/// more than `tol`× in either direction and returns the warning count —
+/// the caller reports, never fails. Cases are matched by the string under
+/// `key` ("name" or "variant") inside each report's `"cases"` array;
+/// baseline cases with no current counterpart (and vice versa) warn too,
+/// so renames cannot silently drop coverage. A missing or unparsable
+/// baseline file is a note, not a warning: fresh checkouts and new benches
+/// must not fail the smoke leg.
+pub fn warn_against_baseline(current: &Json, baseline_path: &Path, key: &str, tol: f64) -> usize {
+    let text = match std::fs::read_to_string(baseline_path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!("baseline {}: not found, skipping diff", baseline_path.display());
+            return 0;
+        }
+    };
+    let baseline = match parse(&text) {
+        Ok(j) => j,
+        Err(e) => {
+            println!("baseline {}: unparsable ({e:?}), skipping diff", baseline_path.display());
+            return 0;
+        }
+    };
+    let empty: &[Json] = &[];
+    let cur_cases = current.get("cases").and_then(|c| c.as_arr()).unwrap_or(empty);
+    let base_cases = baseline.get("cases").and_then(|c| c.as_arr()).unwrap_or(empty);
+    let find = |cases: &[Json], id: &str| -> Option<Json> {
+        cases
+            .iter()
+            .find(|c| c.get(key).and_then(|k| k.as_str()) == Some(id))
+            .cloned()
+    };
+
+    let mut warnings = 0usize;
+    for cur in cur_cases {
+        let Some(id) = cur.get(key).and_then(|k| k.as_str()) else { continue };
+        let Some(base) = find(base_cases, id) else {
+            println!("WARN {id}: no baseline case (new bench? refresh the BENCH_*.json)");
+            warnings += 1;
+            continue;
+        };
+        let Some(fields) = cur.as_obj() else { continue };
+        for (field, val) in fields {
+            if !field.ends_with("_ns") {
+                continue;
+            }
+            let (now, then) = match (val.as_f64(), base.get(field).and_then(|v| v.as_f64())) {
+                (Some(a), Some(b)) => (a, b),
+                _ => continue,
+            };
+            if now <= 0.0 || then <= 0.0 {
+                continue;
+            }
+            let ratio = now / then;
+            if ratio > tol || ratio < 1.0 / tol {
+                println!(
+                    "WARN {id}.{field}: {} vs baseline {} ({ratio:.2}x, tol {tol:.1}x)",
+                    fmt_ns(now),
+                    fmt_ns(then)
+                );
+                warnings += 1;
+            }
+        }
+    }
+    for base in base_cases {
+        if let Some(id) = base.get(key).and_then(|k| k.as_str()) {
+            if find(cur_cases, id).is_none() {
+                println!("WARN {id}: baseline case no longer produced by this bench");
+                warnings += 1;
+            }
+        }
+    }
+    if warnings == 0 {
+        println!("baseline {}: all cases within {tol:.1}x", baseline_path.display());
+    }
+    warnings
+}
+
 /// Human duration formatting (ns -> ns/us/ms/s).
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
@@ -181,5 +266,35 @@ mod tests {
         assert!(fmt_ns(12.0).ends_with("ns"));
         assert!(fmt_ns(12_000.0).ends_with("us"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+    }
+
+    #[test]
+    fn baseline_diff_counts_drift_and_missing_cases() {
+        use std::collections::BTreeMap;
+        let case = |name: &str, ns: f64| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(name.to_string())),
+                ("serial_ns".to_string(), Json::Num(ns)),
+            ]))
+        };
+        let report = |cases: Vec<Json>| {
+            Json::Obj(BTreeMap::from([("cases".to_string(), Json::Arr(cases))]))
+        };
+        let path = std::env::temp_dir().join("gaq_test_bench_baseline.json");
+        let baseline = report(vec![case("steady", 100.0), case("gone", 50.0)]);
+        std::fs::write(&path, crate::util::json::to_string(&baseline)).unwrap();
+
+        // within tolerance + one regression + one new case + one dropped case
+        let current = report(vec![case("steady", 150.0), case("slow", 1000.0)]);
+        let n = warn_against_baseline(&current, &path, "name", 3.0);
+        assert_eq!(n, 2, "expected warnings for the new and the dropped case");
+
+        let regressed = report(vec![case("steady", 400.0), case("gone", 49.0)]);
+        let n = warn_against_baseline(&regressed, &path, "name", 3.0);
+        assert_eq!(n, 1, "expected exactly the 4x regression to warn");
+        std::fs::remove_file(&path).ok();
+
+        // a missing baseline file is a note, never a warning
+        assert_eq!(warn_against_baseline(&current, &path, "name", 3.0), 0);
     }
 }

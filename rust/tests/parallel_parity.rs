@@ -9,9 +9,10 @@ use gaq_md::md::integrator::{self, MdState};
 use gaq_md::md::ForceProvider;
 use gaq_md::molecule::ForceField;
 use gaq_md::quant::gemm::{
-    f32_bits_eq, gemm_f32, gemm_f32_pool, gemm_i8, gemm_i8_pool, gemm_w4a8, gemm_w4a8_pool,
+    f32_bits_eq, gemm_f32, gemm_f32_pool, gemm_i8, gemm_i8_pool, gemm_i8_scalar, gemm_packed,
+    gemm_packed_pool, gemm_w4a8, gemm_w4a8_pool, gemm_w4a8_scalar,
 };
-use gaq_md::quant::pack::{quantize_i4, quantize_i8};
+use gaq_md::quant::pack::{quantize_i4, quantize_i8, PackedB, PANEL_NR};
 use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 use gaq_md::util::proptest::check;
@@ -64,6 +65,100 @@ fn prop_pooled_gemms_bit_identical_on_randomized_shapes() {
                 gemm_w4a8_pool(&pool, &qa, &qb4, &mut c_pool, m, k, n);
                 if let Err(e) = f32_bits_eq(&c_serial, &c_pool) {
                     return Err(format!("w4a8 diverged at ({m},{k},{n}) threads={threads}: {e}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_tiled_kernels_bit_identical_to_scalar_oracles_on_randomized_shapes() {
+    // the register-tiled packed kernels (DESIGN.md §10) against the
+    // pre-refactor scalar triple loops: odd M (row-tail of the MR tile),
+    // K not a multiple of anything in particular, and N straddling the
+    // panel width so the natural-width tail panel is exercised; odd k*n
+    // additionally lands W4 rows on unaligned nibbles
+    check(
+        "tiled gemm == scalar oracle (bitwise)",
+        91,
+        60,
+        |r: &mut Rng| {
+            let m = 1 + r.below(21);
+            let k = 1 + r.below(50);
+            let n = 1 + r.below(2 * PANEL_NR + 5);
+            (m, k, n, r.next_u64())
+        },
+        |&(m, k, n, seed)| {
+            let mut rng = Rng::new(seed);
+            let a = random_vec(&mut rng, m * k);
+            let b = random_vec(&mut rng, k * n);
+            let qa = quantize_i8(&a);
+            let qb8 = quantize_i8(&b);
+            let qb4 = quantize_i4(&b);
+
+            let mut c_tiled = vec![0f32; m * n];
+            let mut c_scalar = vec![0f32; m * n];
+
+            gemm_i8(&qa, &qb8, &mut c_tiled, m, k, n);
+            gemm_i8_scalar(&qa, &qb8, &mut c_scalar, m, k, n);
+            if let Err(e) = f32_bits_eq(&c_tiled, &c_scalar) {
+                return Err(format!("i8 tiled != scalar at ({m},{k},{n}): {e}"));
+            }
+
+            gemm_w4a8(&qa, &qb4, &mut c_tiled, m, k, n);
+            gemm_w4a8_scalar(&qa, &qb4, &mut c_scalar, m, k, n);
+            if let Err(e) = f32_bits_eq(&c_tiled, &c_scalar) {
+                return Err(format!("w4a8 tiled != scalar at ({m},{k},{n}): {e}"));
+            }
+
+            // pre-packed images through the same core, each against the
+            // scalar oracle of its own quantized image
+            gemm_packed(&qa, &PackedB::from_i8(&qb8, k, n), &mut c_tiled, m, k, n);
+            gemm_i8_scalar(&qa, &qb8, &mut c_scalar, m, k, n);
+            if let Err(e) = f32_bits_eq(&c_tiled, &c_scalar) {
+                return Err(format!("packed-i8 != scalar at ({m},{k},{n}): {e}"));
+            }
+            gemm_packed(&qa, &PackedB::from_i4(&qb4, k, n), &mut c_tiled, m, k, n);
+            gemm_w4a8_scalar(&qa, &qb4, &mut c_scalar, m, k, n);
+            if let Err(e) = f32_bits_eq(&c_tiled, &c_scalar) {
+                return Err(format!("packed-i4 != scalar at ({m},{k},{n}): {e}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_packed_pool_bit_identical_to_serial_on_randomized_shapes() {
+    // serial/pooled contract of the tiled path: sharding distributes whole
+    // output rows, so pooled output must equal serial bit for bit at every
+    // thread count and shape
+    check(
+        "pooled packed gemm == serial (bitwise)",
+        92,
+        40,
+        |r: &mut Rng| {
+            let m = 1 + r.below(24);
+            let k = 1 + r.below(40);
+            let n = 1 + r.below(2 * PANEL_NR + 3);
+            (m, k, n, r.next_u64())
+        },
+        |&(m, k, n, seed)| {
+            let mut rng = Rng::new(seed);
+            let a = random_vec(&mut rng, m * k);
+            let b = random_vec(&mut rng, k * n);
+            let qa = quantize_i8(&a);
+            let packed = PackedB::from_i4(&quantize_i4(&b), k, n);
+
+            let mut c_serial = vec![0f32; m * n];
+            let mut c_pool = vec![0f32; m * n];
+            gemm_packed(&qa, &packed, &mut c_serial, m, k, n);
+            for threads in [2usize, 3, 7] {
+                let pool = ThreadPool::new(threads);
+                gemm_packed_pool(&pool, &qa, &packed, &mut c_pool, m, k, n);
+                if let Err(e) = f32_bits_eq(&c_serial, &c_pool) {
+                    return Err(format!("packed diverged at ({m},{k},{n}) threads={threads}: {e}"));
                 }
             }
             Ok(())
