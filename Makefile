@@ -8,7 +8,7 @@ PYTEST ?= python3 -m pytest
 BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency
 
 .PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke \
-	bench-baselines clean
+	bench-baselines serve-smoke clean
 
 build:
 	$(CARGO) build --release
@@ -61,6 +61,14 @@ bench-smoke:
 bench-baselines:
 	GAQ_BENCH_JSON=BENCH_gemm.json $(CARGO) bench --bench parallel_scaling
 	GAQ_BENCH_JSON=BENCH_gnn_inference.json $(CARGO) bench --bench gnn_inference
+
+# end-to-end network smoke: bind the TCP front-end on a free loopback port,
+# drive the multi-connection network loadgen against it, and fail unless
+# requests actually completed (the binary exits nonzero on zero completions
+# or any transport error — see serve_over_tcp in src/main.rs)
+serve-smoke: build
+	$(CARGO) run --release -q -- serve --listen 127.0.0.1:0 \
+		--requests 64 --replicas 4 --rate 2000 --max-batch 8
 
 clean:
 	$(CARGO) clean

@@ -21,6 +21,7 @@ fn mk_req(id: u64) -> (InferenceRequest, mpsc::Receiver<gaq_md::coordinator::Inf
             positions: vec![0.5; 72],
             reply: tx,
             enqueued: Instant::now(),
+            depth: None,
         },
         rx,
     )
@@ -34,6 +35,7 @@ fn main() {
         let mut batcher = Batcher::new(BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_micros(100),
+            ..BatchPolicy::default()
         });
         let mut rxs = Vec::with_capacity(64);
         for i in 0..64 {
@@ -54,6 +56,7 @@ fn main() {
             policy: BatchPolicy {
                 max_batch,
                 max_wait: Duration::from_micros(wait_us),
+                ..BatchPolicy::default()
             },
             variants: vec![("mock".into(), Backend::Mock { n_atoms: 24 }, 2)],
         })
@@ -85,6 +88,7 @@ fn main() {
             policy: BatchPolicy {
                 max_batch: 8,
                 max_wait: Duration::from_micros(200),
+                ..BatchPolicy::default()
             },
             variants: vec![("mock".into(), Backend::Mock { n_atoms: 24 }, 2)],
         })

@@ -55,6 +55,7 @@ fn main() -> Result<()> {
             policy: BatchPolicy {
                 max_batch,
                 max_wait: Duration::from_micros(max_wait_us),
+                ..BatchPolicy::default()
             },
             variants: vec![(vname.clone(), Backend::auto(&dir, vname), workers)],
         })?;

@@ -16,11 +16,21 @@ use super::request::InferenceRequest;
 pub struct BatchPolicy {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound: maximum per-variant in-system requests (queued in
+    /// the batcher or in flight at workers) before new submissions are
+    /// rejected `Overloaded` instead of queueing unboundedly. Enforced by
+    /// [`Submitter::submit_bounded`](crate::coordinator::Submitter); the
+    /// plain `submit` path stays unbounded for in-process callers.
+    pub max_queue_depth: usize,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(500) }
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+            max_queue_depth: 1024,
+        }
     }
 }
 
@@ -101,6 +111,7 @@ mod tests {
                 positions: vec![0.0; 6],
                 reply: tx,
                 enqueued: enq,
+                depth: None,
             },
             rx,
         )
@@ -108,7 +119,11 @@ mod tests {
 
     #[test]
     fn closes_on_max_batch() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(10),
+            ..BatchPolicy::default()
+        });
         let now = Instant::now();
         let mut rxs = Vec::new();
         for i in 0..4 {
@@ -124,7 +139,11 @@ mod tests {
 
     #[test]
     fn closes_on_deadline() {
-        let mut b = Batcher::new(BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(1) });
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        });
         let past = Instant::now() - Duration::from_millis(5);
         let (r, _rx) = req(0, past);
         b.push(r);
@@ -154,6 +173,7 @@ mod tests {
                 let mut b = Batcher::new(BatchPolicy {
                     max_batch,
                     max_wait: Duration::from_secs(1),
+                    ..BatchPolicy::default()
                 });
                 let now = Instant::now();
                 let mut rxs = Vec::new();

@@ -4,9 +4,16 @@
 //! The paper's Table IV simulates "online inference" (batch 1); real
 //! deployments see bursty arrivals, which is what makes the dynamic
 //! batcher earn its keep. This module generates reproducible open-loop
-//! arrival schedules.
+//! arrival schedules, and [`run_net_load`] drives them over real sockets
+//! against the TCP front-end ([`super::net::NetServer`]) from N concurrent
+//! client connections.
 
+use std::time::{Duration, Instant};
+
+use crate::util::error::Result;
 use crate::util::prng::Rng;
+
+use super::net::NetClient;
 
 /// Arrival process for an open-loop load test.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -31,10 +38,13 @@ pub fn arrival_times(arrival: Arrival, n: usize, seed: u64) -> Vec<f64> {
                 t += 1.0 / rate.max(1e-9);
             }
             Arrival::Poisson { rate } => {
-                out.push(t);
-                // exponential inter-arrival: -ln(U)/rate
+                // exponential inter-arrival: -ln(U)/rate. The gap is drawn
+                // *before* the push so the first arrival is itself
+                // exponentially distributed — emitting it deterministically
+                // at t=0 biased the measured rate high for small n.
                 let u = rng.f64().max(1e-15);
                 t += -u.ln() / rate.max(1e-9);
+                out.push(t);
             }
             Arrival::Burst => out.push(0.0),
         }
@@ -62,6 +72,139 @@ impl GeometryGen {
     }
 }
 
+/// A multi-connection network load run against the TCP front-end.
+#[derive(Debug, Clone)]
+pub struct NetLoadConfig {
+    /// server address, e.g. `"127.0.0.1:7878"`
+    pub addr: String,
+    /// variants to round-robin requests across
+    pub variants: Vec<String>,
+    /// reference geometry (flat `[n*3]`), perturbed per request
+    pub base: Vec<f32>,
+    /// thermal perturbation sigma (Angstrom)
+    pub sigma: f64,
+    /// total requests across all clients
+    pub n_requests: usize,
+    /// concurrent client connections
+    pub clients: usize,
+    /// open-loop arrival schedule per client
+    pub arrival: Arrival,
+    /// max pipelined (sent, unanswered) frames per connection
+    pub window: usize,
+    pub seed: u64,
+}
+
+impl NetLoadConfig {
+    pub fn new(addr: impl Into<String>, variants: Vec<String>, base: Vec<f32>) -> Self {
+        NetLoadConfig {
+            addr: addr.into(),
+            variants,
+            base,
+            sigma: 0.02,
+            n_requests: 256,
+            clients: 1,
+            arrival: Arrival::Burst,
+            window: 32,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregate outcome of a [`run_net_load`] run. Every sent request is
+/// accounted for: `sent == completed + rejected + transport_errors`.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct NetLoadStats {
+    /// frames sent
+    pub sent: usize,
+    /// `ok` replies
+    pub completed: usize,
+    /// typed rejections (e.g. `Overloaded` under admission control)
+    pub rejected: usize,
+    /// socket-level failures / unanswered requests
+    pub transport_errors: usize,
+}
+
+impl NetLoadStats {
+    fn absorb(&mut self, other: &NetLoadStats) {
+        self.sent += other.sent;
+        self.completed += other.completed;
+        self.rejected += other.rejected;
+        self.transport_errors += other.transport_errors;
+    }
+}
+
+fn recv_one(client: &mut NetClient, stats: &mut NetLoadStats) {
+    match client.recv() {
+        Ok(r) if r.is_ok() => stats.completed += 1,
+        Ok(_) => stats.rejected += 1,
+        Err(_) => stats.transport_errors += 1,
+    }
+}
+
+/// One client connection's worth of load: paced sends with up to
+/// `cfg.window` pipelined requests, then drain the remaining replies.
+fn run_net_client(cfg: &NetLoadConfig, client_idx: usize, count: usize) -> Result<NetLoadStats> {
+    let mut stats = NetLoadStats::default();
+    if count == 0 {
+        return Ok(stats);
+    }
+    let seed = cfg.seed.wrapping_add(client_idx as u64);
+    let mut client = NetClient::connect(&cfg.addr)?;
+    let mut geo = GeometryGen::new(cfg.base.clone(), cfg.sigma, seed);
+    let times = arrival_times(cfg.arrival, count, seed ^ 0x9e37_79b9_7f4a_7c15);
+    let start = Instant::now();
+    let mut outstanding = 0usize;
+    for (i, t_off) in times.iter().enumerate() {
+        let target = Duration::from_secs_f64(*t_off);
+        if let Some(sleep) = target.checked_sub(start.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let v = &cfg.variants[(client_idx + i) % cfg.variants.len()];
+        if client.send_infer(i as u64, v, &geo.next()).is_err() {
+            stats.transport_errors += 1;
+            break;
+        }
+        stats.sent += 1;
+        outstanding += 1;
+        if outstanding >= cfg.window.max(1) {
+            recv_one(&mut client, &mut stats);
+            outstanding -= 1;
+        }
+    }
+    for _ in 0..outstanding {
+        recv_one(&mut client, &mut stats);
+    }
+    Ok(stats)
+}
+
+/// Drive `cfg.n_requests` requests over `cfg.clients` real TCP connections.
+///
+/// Closed over transport failures, open-loop in arrivals: each connection
+/// follows its own [`Arrival`] schedule and pipelines up to `cfg.window`
+/// requests (replies come back in request order, so no correlation state
+/// is needed beyond FIFO accounting).
+pub fn run_net_load(cfg: &NetLoadConfig) -> NetLoadStats {
+    let clients = cfg.clients.max(1);
+    let per_client = cfg.n_requests.div_ceil(clients);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let count = per_client.min(cfg.n_requests.saturating_sub(c * per_client));
+                s.spawn(move || run_net_client(cfg, c, count))
+            })
+            .collect();
+        let mut total = NetLoadStats::default();
+        for h in handles {
+            match h.join().expect("load client thread panicked") {
+                Ok(st) => total.absorb(&st),
+                // connect failed before anything was sent
+                Err(_) => total.transport_errors += 1,
+            }
+        }
+        total
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -77,8 +220,36 @@ mod tests {
     fn poisson_mean_rate_close() {
         let n = 20_000;
         let t = arrival_times(Arrival::Poisson { rate: 500.0 }, n, 1);
-        let measured = (n - 1) as f64 / t[n - 1];
+        // all n arrivals now carry a drawn gap, so the estimator is n/t[n-1]
+        let measured = n as f64 / t[n - 1];
         assert!((measured - 500.0).abs() < 25.0, "rate = {measured}");
+    }
+
+    /// Regression (ISSUE 7): the first Poisson arrival used to be emitted
+    /// deterministically at t=0 instead of after an exponential gap.
+    #[test]
+    fn poisson_first_gap_is_exponential() {
+        let rate = 200.0;
+        let trials = 4_000;
+        let mut sum = 0.0;
+        let mut under_mean = 0usize;
+        for seed in 0..trials {
+            let t = arrival_times(Arrival::Poisson { rate }, 1, seed as u64);
+            assert!(t[0] > 0.0, "seed {seed}: first arrival at t=0");
+            sum += t[0];
+            if t[0] < 1.0 / rate {
+                under_mean += 1;
+            }
+        }
+        let mean = sum / trials as f64;
+        assert!(
+            (mean - 1.0 / rate).abs() < 0.15 / rate,
+            "first-gap mean {mean} far from {}",
+            1.0 / rate
+        );
+        // P(X < mean) = 1 - 1/e ≈ 0.632 for an exponential
+        let frac = under_mean as f64 / trials as f64;
+        assert!((frac - 0.632).abs() < 0.05, "P(gap < mean) = {frac}, want ~0.632");
     }
 
     #[test]

@@ -6,6 +6,8 @@
 
 use std::time::Duration;
 
+use crate::util::json::Json;
+
 /// Bounded latency reservoir + counters.
 #[derive(Debug, Clone)]
 pub struct Metrics {
@@ -13,6 +15,9 @@ pub struct Metrics {
     cap: usize,
     pub completed: u64,
     pub errors: u64,
+    /// admission-control rejections (never reached a worker; disjoint from
+    /// `errors`, which counts requests that were dispatched and failed)
+    pub rejected: u64,
     pub batches: u64,
     pub batched_requests: u64,
     started: std::time::Instant,
@@ -31,6 +36,7 @@ impl Metrics {
             cap,
             completed: 0,
             errors: 0,
+            rejected: 0,
             batches: 0,
             batched_requests: 0,
             started: std::time::Instant::now(),
@@ -46,10 +52,25 @@ impl Metrics {
         if self.latencies_us.len() < self.cap {
             self.latencies_us.push(latency_us);
         } else {
-            // reservoir replacement keyed on the counter (deterministic)
-            let idx = (self.completed as usize * 2654435761) % self.cap;
+            // Deterministic reservoir replacement keyed on the *total* sample
+            // count: keying on `completed` alone aliased every error sample to
+            // one slot (it doesn't advance on errors), and the unchecked
+            // multiply overflowed (panicking in debug builds) once the counter
+            // grew past usize::MAX / 2654435761.
+            let total = (self.completed + self.errors) as usize;
+            let idx = total.wrapping_mul(2654435761) % self.cap;
             self.latencies_us[idx] = latency_us;
         }
+    }
+
+    /// Count an admission-control rejection (Overloaded etc.).
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// Total latency samples observed (ok + error).
+    pub fn samples(&self) -> u64 {
+        self.completed + self.errors
     }
 
     pub fn record_batch(&mut self, size: usize) {
@@ -92,11 +113,29 @@ impl Metrics {
         }
     }
 
+    /// Snapshot as a JSON object (the `metrics` wire request, DESIGN.md §11).
+    pub fn to_json(&self) -> Json {
+        let us = |d: Option<Duration>| Json::Num(d.unwrap_or_default().as_micros() as f64);
+        Json::obj([
+            ("completed", Json::Num(self.completed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch", Json::Num(self.mean_batch_size())),
+            ("mean_us", us(self.mean_latency())),
+            ("p50_us", us(self.percentile(0.50))),
+            ("p95_us", us(self.percentile(0.95))),
+            ("p99_us", us(self.percentile(0.99))),
+            ("throughput_rps", Json::Num(self.throughput_rps())),
+        ])
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "completed={} errors={} mean={:?} p50={:?} p95={:?} p99={:?} mean_batch={:.2} thrpt={:.1}/s",
+            "completed={} errors={} rejected={} mean={:?} p50={:?} p95={:?} p99={:?} mean_batch={:.2} thrpt={:.1}/s",
             self.completed,
             self.errors,
+            self.rejected,
             self.mean_latency().unwrap_or_default(),
             self.percentile(0.50).unwrap_or_default(),
             self.percentile(0.95).unwrap_or_default(),
@@ -140,5 +179,55 @@ mod tests {
         }
         assert!(m.percentile(0.5).is_some());
         assert_eq!(m.completed, 10_000);
+    }
+
+    /// Regression (ISSUE 7): driving the reservoir past `cap` with mixed
+    /// ok/error samples used to panic in debug builds (`completed *
+    /// 2654435761` overflow) and aliased all error samples to a single slot
+    /// because `completed` doesn't advance on errors.
+    #[test]
+    fn reservoir_survives_mixed_ok_error_past_cap() {
+        let cap = 64usize;
+        let mut m = Metrics::new(cap);
+        // fill the reservoir with zeros, then overflow it with errors only:
+        // with the old `completed`-keyed slot, every error would land in the
+        // same slot and at most one nonzero latency could survive.
+        for _ in 0..cap {
+            m.record(0, true);
+        }
+        for i in 0..(4 * cap as u64) {
+            m.record(1_000 + i, false);
+        }
+        assert_eq!(m.completed, cap as u64);
+        assert_eq!(m.errors, 4 * cap as u64);
+        assert_eq!(m.samples(), cap as u64 + 4 * cap as u64);
+        let distinct: std::collections::BTreeSet<u64> =
+            m.latencies_us.iter().copied().filter(|&l| l >= 1_000).collect();
+        assert!(
+            distinct.len() > 1,
+            "error samples aliased to a single reservoir slot: {distinct:?}"
+        );
+
+        // huge counters must not overflow the slot computation (debug panic)
+        let mut m2 = Metrics::new(8);
+        m2.completed = u64::MAX / 2;
+        m2.errors = u64::MAX / 2;
+        for i in 0..64u64 {
+            m2.record(i, i % 3 == 0);
+        }
+        assert!(m2.percentile(0.99).is_some());
+    }
+
+    #[test]
+    fn json_snapshot_has_counters() {
+        let mut m = Metrics::new(16);
+        m.record(100, true);
+        m.record(200, false);
+        m.record_rejected();
+        let j = m.to_json();
+        assert_eq!(j.get("completed").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("errors").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("rejected").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(j.get("p99_us").is_some());
     }
 }

@@ -5,17 +5,23 @@
 //! dispatch -> worker threads owning thread-confined PJRT executables.
 //! Metrics (p50/p95/p99, throughput, mean batch size) via
 //! [`metrics::Metrics`]. The MD engine reuses the same worker path at
-//! batch=1 for online simulation.
+//! batch=1 for online simulation. The [`net`] module puts a zero-dep TCP
+//! front-end (length-prefixed JSON, typed [`reject::Rejection`] taxonomy)
+//! over the same coordinator.
 
 pub mod batcher;
 pub mod loadgen;
 pub mod metrics;
+pub mod net;
+pub mod reject;
 pub mod request;
 pub mod router;
 pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
+pub use net::{NetClient, NetConfig, NetOutcome, NetReply, NetServer, NetStats};
+pub use reject::Rejection;
 pub use request::{InferenceRequest, InferenceResponse, PendingRequest};
 pub use router::{Backend, Pool};
-pub use server::{Server, ServerConfig, Submitter};
+pub use server::{Server, ServerConfig, SubmitError, Submitter};

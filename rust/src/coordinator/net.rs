@@ -1,0 +1,665 @@
+//! Zero-dep TCP front-end over the serving coordinator (S9, DESIGN.md §11).
+//!
+//! Wire protocol: length-prefixed JSON — each frame is a big-endian `u32`
+//! payload length followed by that many bytes of UTF-8 JSON. Requests are
+//! `{"type": "infer", "variant": ..., "positions": [...], "id"?: N}`
+//! (`type` defaults to `infer` when a `variant` key is present) or
+//! `{"type": "metrics"}`. Replies either succeed (`{"ok": true, ...}`) or
+//! carry a typed [`Rejection`] — a client never observes a bare disconnect
+//! while the server is alive.
+//!
+//! Threading: one nonblocking accept loop; per connection, a reader thread
+//! (decodes frames, pre-validates, funnels into
+//! [`Submitter::submit_bounded`]) plus a writer thread (serialises replies
+//! in request order). Graceful drain on [`NetServer::shutdown`]: stop
+//! accepting, stop reading, flush the batchers and answer everything
+//! in flight, then close the sockets.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{Context as _, Result};
+use crate::util::json::{self, Json};
+
+use super::metrics::Metrics;
+use super::reject::Rejection;
+use super::request::{InferenceResponse, PendingRequest};
+use super::server::{Server, SubmitError, Submitter};
+
+/// Hard frame-size bound: a length prefix above this means the stream is
+/// unsynchronized (or hostile), so the connection is closed after a
+/// `MalformedFrame` reply rather than resynchronised.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// Reader poll quantum: how quickly a parked connection notices shutdown.
+const POLL: Duration = Duration::from_millis(25);
+/// Accept-loop poll quantum.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+/// How long a partially-received frame may stall before the connection is
+/// dropped (guards `read_full` against a peer that sent a length prefix and
+/// then went silent).
+const MID_FRAME_DEADLINE: Duration = Duration::from_secs(30);
+/// How long the writer waits for an admitted request's reply. Generous:
+/// replies normally arrive in microseconds, and during drain the batchers
+/// are force-flushed, so only a wedged backend can hit this.
+const DRAIN_WAIT: Duration = Duration::from_secs(120);
+
+/// TCP front-end configuration.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address, e.g. `"127.0.0.1:7878"` (port 0 picks a free port;
+    /// read it back via [`NetServer::local_addr`]).
+    pub addr: String,
+    /// Expected flat positions length (`n_atoms * 3`); requests of any
+    /// other length are rejected [`Rejection::BadShape`] before admission.
+    /// `None` skips the exact-length check (multiples of 3 still enforced).
+    pub expected_len: Option<usize>,
+}
+
+impl NetConfig {
+    pub fn new(addr: impl Into<String>) -> NetConfig {
+        NetConfig { addr: addr.into(), expected_len: None }
+    }
+
+    pub fn with_expected_len(mut self, len: usize) -> NetConfig {
+        self.expected_len = Some(len);
+        self
+    }
+}
+
+/// Front-end counters, exported under `"net"` by the `metrics` request.
+#[derive(Debug, Default)]
+pub struct NetStats {
+    /// connections accepted
+    pub connections: AtomicU64,
+    /// frames decoded (any type)
+    pub frames: AtomicU64,
+    /// infer requests admitted into the coordinator
+    pub accepted: AtomicU64,
+    /// requests refused with a typed [`Rejection`] before admission
+    pub rejected: AtomicU64,
+}
+
+impl NetStats {
+    pub fn to_json(&self) -> Json {
+        let n = |v: &AtomicU64| Json::Num(v.load(Ordering::Relaxed) as f64);
+        Json::obj([
+            ("connections", n(&self.connections)),
+            ("frames", n(&self.frames)),
+            ("accepted", n(&self.accepted)),
+            ("rejected", n(&self.rejected)),
+        ])
+    }
+}
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    let len = u32::try_from(payload.len())
+        .map_err(|_| std::io::Error::new(ErrorKind::InvalidInput, "frame too large"))?;
+    w.write_all(&len.to_be_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame (blocking; client side).
+pub fn read_frame(r: &mut impl Read) -> std::io::Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            ErrorKind::InvalidData,
+            format!("frame length {len} exceeds max {MAX_FRAME}"),
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// The TCP front-end: owns the coordinator [`Server`] plus the accept loop
+/// and all connection threads.
+pub struct NetServer {
+    server: Option<Server>,
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<Vec<JoinHandle<Option<JoinHandle<()>>>>>>,
+    stats: Arc<NetStats>,
+}
+
+/// Everything a connection thread needs (cloned per connection).
+#[derive(Clone)]
+struct ConnCtx {
+    submitter: Submitter,
+    roster: Arc<Vec<String>>,
+    expected_len: Option<usize>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<Mutex<Metrics>>,
+    stats: Arc<NetStats>,
+}
+
+impl NetServer {
+    /// Bind and start serving `server` on `cfg.addr`.
+    pub fn start(server: Server, cfg: NetConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let addr = listener.local_addr().context("local_addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(NetStats::default());
+        let ctx = ConnCtx {
+            submitter: server.submitter(),
+            roster: Arc::new(server.variants()),
+            expected_len: cfg.expected_len,
+            stop: stop.clone(),
+            metrics: server.metrics_handle(),
+            stats: stats.clone(),
+        };
+        let accept = std::thread::Builder::new()
+            .name("gaq-net-accept".into())
+            .spawn(move || accept_loop(listener, ctx))
+            .context("spawning accept loop")?;
+        Ok(NetServer { server: Some(server), addr, stop, accept: Some(accept), stats })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &NetStats {
+        &self.stats
+    }
+
+    /// Graceful drain: stop accepting, stop reading new frames, flush the
+    /// batchers and answer every in-flight request, then close sockets.
+    pub fn shutdown(mut self) {
+        self.drain();
+    }
+
+    fn drain(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        let conns = match self.accept.take() {
+            Some(h) => h.join().unwrap_or_default(),
+            None => Vec::new(),
+        };
+        // Readers notice the flag within one poll quantum and stop
+        // submitting; collect each connection's writer handle.
+        let mut writers = Vec::new();
+        for c in conns {
+            if let Ok(Some(w)) = c.join() {
+                writers.push(w);
+            }
+        }
+        // All submissions have ceased: flush batchers, answer in flight.
+        if let Some(server) = self.server.take() {
+            server.shutdown();
+        }
+        // Writers deliver the final replies, then close their sockets.
+        for w in writers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+fn accept_loop(listener: TcpListener, ctx: ConnCtx) -> Vec<JoinHandle<Option<JoinHandle<()>>>> {
+    let mut conns = Vec::new();
+    loop {
+        if ctx.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                ctx.stats.connections.fetch_add(1, Ordering::Relaxed);
+                let cctx = ctx.clone();
+                let spawned = std::thread::Builder::new()
+                    .name("gaq-net-conn".into())
+                    .spawn(move || handle_conn(stream, cctx));
+                if let Ok(h) = spawned {
+                    conns.push(h);
+                }
+            }
+            Err(_) => std::thread::sleep(ACCEPT_POLL),
+        }
+    }
+    conns
+}
+
+/// Replies queued to the writer in request order (per-connection FIFO).
+enum Outgoing {
+    /// Already-formed reply (rejections, metrics).
+    Immediate(Json),
+    /// Admitted request: the writer waits for the coordinator's reply.
+    Pending { id: u64, pending: PendingRequest },
+}
+
+/// Reader half of a connection. Returns the writer's handle so shutdown can
+/// join readers *before* draining the coordinator and writers *after*.
+fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) -> Option<JoinHandle<()>> {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(POLL)).is_err() {
+        return None;
+    }
+    let write_half = stream.try_clone().ok()?;
+    let (out_tx, out_rx) = mpsc::channel::<Outgoing>();
+    let writer = std::thread::Builder::new()
+        .name("gaq-net-writer".into())
+        .spawn(move || writer_loop(write_half, out_rx))
+        .ok()?;
+    let mut seq: u64 = 0;
+    loop {
+        match read_frame_polling(&mut stream, &ctx.stop) {
+            FrameRead::Frame(bytes) => {
+                ctx.stats.frames.fetch_add(1, Ordering::Relaxed);
+                let out = handle_frame(&bytes, &mut seq, &ctx);
+                if out_tx.send(out).is_err() {
+                    break; // writer died (peer gone)
+                }
+            }
+            FrameRead::Corrupt(detail) => {
+                // unsynchronized stream: reply once, then close
+                let r = Rejection::MalformedFrame { detail };
+                ctx.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = out_tx.send(Outgoing::Immediate(r.to_json(None)));
+                break;
+            }
+            FrameRead::Eof | FrameRead::Err | FrameRead::Shutdown => break,
+        }
+    }
+    drop(out_tx); // writer drains the queue, then closes the socket
+    Some(writer)
+}
+
+fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
+    for out in rx.iter() {
+        let reply = match out {
+            Outgoing::Immediate(j) => j,
+            Outgoing::Pending { id, pending } => match pending.wait_timeout(DRAIN_WAIT) {
+                Ok(resp) => response_json(id, &resp),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    Rejection::ShuttingDown.to_json(Some(id))
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    let detail = format!("no reply within {DRAIN_WAIT:?}");
+                    Rejection::Internal { detail }.to_json(Some(id))
+                }
+            },
+        };
+        let payload = json::to_string(&reply);
+        if write_frame(&mut stream, payload.as_bytes()).is_err() {
+            break;
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Successful replies mirror [`InferenceResponse`]; worker-side errors
+/// (post-admission) surface as [`Rejection::Internal`].
+fn response_json(id: u64, resp: &InferenceResponse) -> Json {
+    match &resp.error {
+        Some(err) => Rejection::Internal { detail: err.clone() }.to_json(Some(id)),
+        None => Json::obj([
+            ("ok", Json::Bool(true)),
+            ("id", Json::Num(id as f64)),
+            ("energy_ev", Json::Num(resp.energy_ev as f64)),
+            ("forces", Json::from_f32s(&resp.forces)),
+            ("latency_us", Json::Num(resp.latency_us as f64)),
+            ("batch_size", Json::Num(resp.batch_size as f64)),
+        ]),
+    }
+}
+
+/// Decode + pre-validate one frame, producing the reply (or a pending
+/// admission) for the writer.
+fn handle_frame(bytes: &[u8], seq: &mut u64, ctx: &ConnCtx) -> Outgoing {
+    // Wire id: client-provided, else this connection's frame sequence.
+    let fallback_id = *seq;
+    *seq += 1;
+    let reject = |r: Rejection, id: Option<u64>| {
+        ctx.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        Outgoing::Immediate(r.to_json(id))
+    };
+    let text = match std::str::from_utf8(bytes) {
+        Ok(t) => t,
+        Err(e) => {
+            let detail = format!("invalid utf-8: {e}");
+            return reject(Rejection::MalformedFrame { detail }, None);
+        }
+    };
+    let j = match json::parse(text) {
+        Ok(j) => j,
+        Err(e) => return reject(Rejection::MalformedFrame { detail: e.to_string() }, None),
+    };
+    let id = j.get("id").and_then(|v| v.as_u64()).unwrap_or(fallback_id);
+    let typ = match j.get("type") {
+        Some(t) => match t.as_str() {
+            Some(t) => t,
+            None => {
+                let detail = "\"type\" must be a string".to_string();
+                return reject(Rejection::MalformedFrame { detail }, Some(id));
+            }
+        },
+        None if j.get("variant").is_some() => "infer",
+        None => {
+            let detail = "missing \"type\" (or \"variant\" for infer)".to_string();
+            return reject(Rejection::MalformedFrame { detail }, Some(id));
+        }
+    };
+    match typ {
+        "metrics" => {
+            let m = ctx.metrics.lock().unwrap().to_json();
+            Outgoing::Immediate(Json::obj([
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(id as f64)),
+                ("metrics", m),
+                ("net", ctx.stats.to_json()),
+            ]))
+        }
+        "infer" => handle_infer(&j, id, reject, ctx),
+        other => {
+            let detail = format!("unknown request type {other:?}");
+            reject(Rejection::MalformedFrame { detail }, Some(id))
+        }
+    }
+}
+
+fn handle_infer(
+    j: &Json,
+    id: u64,
+    reject: impl Fn(Rejection, Option<u64>) -> Outgoing,
+    ctx: &ConnCtx,
+) -> Outgoing {
+    let variant = match j.get("variant").and_then(|v| v.as_str()) {
+        Some(v) => v,
+        None => {
+            let detail = "missing \"variant\" string".to_string();
+            return reject(Rejection::MalformedFrame { detail }, Some(id));
+        }
+    };
+    let positions = match j.get("positions").and_then(|v| v.as_f32_vec()) {
+        Some(p) => p,
+        None => {
+            let detail = "\"positions\" must be a flat number array".to_string();
+            return reject(Rejection::MalformedFrame { detail }, Some(id));
+        }
+    };
+    if !ctx.roster.iter().any(|v| v == variant) {
+        let r = Rejection::UnknownVariant {
+            variant: variant.to_string(),
+            known: ctx.roster.as_ref().clone(),
+        };
+        return reject(r, Some(id));
+    }
+    let got = positions.len();
+    match ctx.expected_len {
+        Some(want) if got != want => {
+            return reject(Rejection::BadShape { got, want }, Some(id));
+        }
+        // no exact bound configured: still require a nonempty flat [n*3]
+        None if got == 0 || got % 3 != 0 => {
+            let want = got.max(1).div_ceil(3) * 3;
+            return reject(Rejection::BadShape { got, want }, Some(id));
+        }
+        _ => {}
+    }
+    if ctx.stop.load(Ordering::Relaxed) {
+        return reject(Rejection::ShuttingDown, Some(id));
+    }
+    match ctx.submitter.submit_bounded(variant, positions) {
+        Ok(pending) => {
+            ctx.stats.accepted.fetch_add(1, Ordering::Relaxed);
+            Outgoing::Pending { id, pending }
+        }
+        Err(SubmitError::Overloaded { depth, limit }) => {
+            reject(Rejection::Overloaded { depth, limit }, Some(id))
+        }
+        Err(SubmitError::ShutDown) => reject(Rejection::ShuttingDown, Some(id)),
+    }
+}
+
+enum FrameRead {
+    Frame(Vec<u8>),
+    /// clean close from the peer
+    Eof,
+    /// shutdown flag observed
+    Shutdown,
+    /// length prefix out of bounds — stream unsynchronized
+    Corrupt(String),
+    /// io error / mid-frame stall
+    Err,
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted)
+}
+
+/// Server-side frame read: polls for the first byte under the read timeout
+/// (so shutdown is noticed within [`POLL`]), then reads the remainder with
+/// a hard deadline.
+fn read_frame_polling(stream: &mut TcpStream, stop: &AtomicBool) -> FrameRead {
+    let mut first = [0u8; 1];
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return FrameRead::Shutdown;
+        }
+        match stream.read(&mut first) {
+            Ok(0) => return FrameRead::Eof,
+            Ok(_) => break,
+            Err(e) if would_block(&e) => continue,
+            Err(_) => return FrameRead::Err,
+        }
+    }
+    let mut rest = [0u8; 3];
+    if let Err(fr) = read_full(stream, &mut rest, stop) {
+        return fr;
+    }
+    let len = u32::from_be_bytes([first[0], rest[0], rest[1], rest[2]]) as usize;
+    if len > MAX_FRAME {
+        return FrameRead::Corrupt(format!("frame length {len} exceeds max {MAX_FRAME}"));
+    }
+    let mut buf = vec![0u8; len];
+    if let Err(fr) = read_full(stream, &mut buf, stop) {
+        return fr;
+    }
+    FrameRead::Frame(buf)
+}
+
+/// Finish reading a partially-arrived frame: retry through poll timeouts,
+/// bounded by [`MID_FRAME_DEADLINE`] so a stalled peer cannot pin the
+/// thread (a bare `read_exact` under a read timeout would corrupt framing
+/// by discarding partial reads).
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Result<(), FrameRead> {
+    let deadline = Instant::now() + MID_FRAME_DEADLINE;
+    let mut off = 0usize;
+    while off < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return Err(FrameRead::Shutdown);
+        }
+        if Instant::now() > deadline {
+            return Err(FrameRead::Err);
+        }
+        match stream.read(&mut buf[off..]) {
+            Ok(0) => return Err(FrameRead::Eof),
+            Ok(n) => off += n,
+            Err(e) if would_block(&e) => continue,
+            Err(_) => return Err(FrameRead::Err),
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client for the length-prefixed protocol (loadgen, tests,
+/// examples). One request/reply at a time per call; pipelining is allowed
+/// by the protocol (replies come back in request order).
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+/// A decoded server reply.
+#[derive(Debug, Clone)]
+pub struct NetReply {
+    pub id: Option<u64>,
+    pub outcome: NetOutcome,
+}
+
+#[derive(Debug, Clone)]
+pub enum NetOutcome {
+    Ok { energy_ev: f32, forces: Vec<f32>, latency_us: u64, batch_size: usize },
+    Rejected { code: String, message: String },
+    Metrics { metrics: Json, net: Json },
+}
+
+impl NetReply {
+    pub fn parse(bytes: &[u8]) -> Result<NetReply> {
+        let text = std::str::from_utf8(bytes).context("reply not utf-8")?;
+        let j = json::parse(text).context("reply not json")?;
+        let id = j.get("id").and_then(|v| v.as_u64());
+        let ok = j.get("ok").and_then(|v| v.as_bool()).unwrap_or(false);
+        let outcome = if !ok {
+            NetOutcome::Rejected {
+                code: j.get("reject").and_then(|v| v.as_str()).unwrap_or("?").to_string(),
+                message: j.get("message").and_then(|v| v.as_str()).unwrap_or_default().to_string(),
+            }
+        } else if let Some(m) = j.get("metrics") {
+            NetOutcome::Metrics {
+                metrics: m.clone(),
+                net: j.get("net").cloned().unwrap_or(Json::Null),
+            }
+        } else {
+            NetOutcome::Ok {
+                energy_ev: j.get("energy_ev").and_then(|v| v.as_f32()).unwrap_or(f32::NAN),
+                forces: j.get("forces").and_then(|v| v.as_f32_vec()).unwrap_or_default(),
+                latency_us: j.get("latency_us").and_then(|v| v.as_u64()).unwrap_or(0),
+                batch_size: j.get("batch_size").and_then(|v| v.as_u64()).unwrap_or(0) as usize,
+            }
+        };
+        Ok(NetReply { id, outcome })
+    }
+
+    pub fn is_ok(&self) -> bool {
+        matches!(self.outcome, NetOutcome::Ok { .. })
+    }
+
+    /// The rejection code, if this reply is a rejection.
+    pub fn reject_code(&self) -> Option<&str> {
+        match &self.outcome {
+            NetOutcome::Rejected { code, .. } => Some(code),
+            _ => None,
+        }
+    }
+}
+
+impl NetClient {
+    pub fn connect(addr: &str) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(NetClient { stream })
+    }
+
+    /// Send an infer request (does not wait for the reply; see [`recv`]).
+    ///
+    /// [`recv`]: NetClient::recv
+    pub fn send_infer(&mut self, id: u64, variant: &str, positions: &[f32]) -> Result<()> {
+        let j = Json::obj([
+            ("type", Json::str("infer")),
+            ("id", Json::Num(id as f64)),
+            ("variant", Json::str(variant)),
+            ("positions", Json::from_f32s(positions)),
+        ]);
+        self.send_payload(json::to_string(&j).as_bytes())
+    }
+
+    pub fn send_metrics(&mut self, id: u64) -> Result<()> {
+        let j = Json::obj([("type", Json::str("metrics")), ("id", Json::Num(id as f64))]);
+        self.send_payload(json::to_string(&j).as_bytes())
+    }
+
+    /// Raw frame escape hatch (tests: malformed payloads).
+    pub fn send_payload(&mut self, payload: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, payload).context("writing frame")?;
+        Ok(())
+    }
+
+    /// Raw bytes escape hatch (tests: corrupt length prefixes).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes).context("writing raw bytes")?;
+        self.stream.flush().context("flushing")?;
+        Ok(())
+    }
+
+    pub fn recv(&mut self) -> Result<NetReply> {
+        let bytes = read_frame(&mut self.stream).context("reading reply frame")?;
+        NetReply::parse(&bytes)
+    }
+
+    /// Blocking infer round trip.
+    pub fn infer(&mut self, id: u64, variant: &str, positions: &[f32]) -> Result<NetReply> {
+        self.send_infer(id, variant, positions)?;
+        self.recv()
+    }
+
+    /// Blocking metrics round trip.
+    pub fn metrics(&mut self) -> Result<NetReply> {
+        self.send_metrics(0)?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"{\"a\":1}").unwrap();
+        assert_eq!(&buf[..4], &7u32.to_be_bytes());
+        let got = read_frame(&mut Cursor::new(&buf)).unwrap();
+        assert_eq!(got, b"{\"a\":1}");
+    }
+
+    #[test]
+    fn read_frame_rejects_oversized_length() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_be_bytes());
+        let err = read_frame(&mut Cursor::new(&buf)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn reply_parse_ok_and_reject() {
+        let ok = NetReply::parse(
+            br#"{"ok":true,"id":3,"energy_ev":6.0,"forces":[0,0,0],"latency_us":12,"batch_size":2}"#,
+        )
+        .unwrap();
+        assert!(ok.is_ok());
+        assert_eq!(ok.id, Some(3));
+        match ok.outcome {
+            NetOutcome::Ok { energy_ev, ref forces, latency_us, batch_size } => {
+                assert_eq!(energy_ev, 6.0);
+                assert_eq!(forces.len(), 3);
+                assert_eq!(latency_us, 12);
+                assert_eq!(batch_size, 2);
+            }
+            ref other => panic!("expected Ok outcome, got {other:?}"),
+        }
+        let rej = NetReply::parse(
+            br#"{"ok":false,"reject":"Overloaded","message":"try later","id":9}"#,
+        )
+        .unwrap();
+        assert!(!rej.is_ok());
+        assert_eq!(rej.reject_code(), Some("Overloaded"));
+        assert_eq!(rej.id, Some(9));
+    }
+}

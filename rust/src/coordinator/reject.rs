@@ -1,0 +1,110 @@
+//! Typed rejection taxonomy for the TCP serving front-end (S9, DESIGN.md
+//! §11).
+//!
+//! Modeled on lighthouse's `http_api` rejection pattern: every way the
+//! server can refuse a request is a variant with a stable machine-readable
+//! code plus a human-oriented message, converted to the wire form in one
+//! place. Clients switch on the code; the message is for logs. A client
+//! must never observe a bare disconnect while the server is alive — every
+//! failure path funnels through one of these.
+
+use crate::util::json::Json;
+
+/// Every way the serving front-end refuses a request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Rejection {
+    /// The requested variant is not in the served roster.
+    UnknownVariant { variant: String, known: Vec<String> },
+    /// `positions` is not a flat `[n_atoms * 3]` array of the served
+    /// molecule's size.
+    BadShape { got: usize, want: usize },
+    /// Admission control: the variant's in-system queue depth reached the
+    /// configured bound; retry later.
+    Overloaded { depth: usize, limit: usize },
+    /// The server is draining; no new work is admitted.
+    ShuttingDown,
+    /// The frame could not be decoded (bad length prefix, invalid UTF-8 or
+    /// JSON, missing/mistyped fields).
+    MalformedFrame { detail: String },
+    /// The backend failed after admission (model load/evaluation error).
+    Internal { detail: String },
+}
+
+impl Rejection {
+    /// Stable machine-readable code (the wire `reject` field).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Rejection::UnknownVariant { .. } => "UnknownVariant",
+            Rejection::BadShape { .. } => "BadShape",
+            Rejection::Overloaded { .. } => "Overloaded",
+            Rejection::ShuttingDown => "ShuttingDown",
+            Rejection::MalformedFrame { .. } => "MalformedFrame",
+            Rejection::Internal { .. } => "Internal",
+        }
+    }
+
+    /// Human-oriented detail (the wire `message` field).
+    pub fn message(&self) -> String {
+        match self {
+            Rejection::UnknownVariant { variant, known } => {
+                format!("unknown variant {variant:?}; served variants: {known:?}")
+            }
+            Rejection::BadShape { got, want } => {
+                format!("positions length {got} != expected {want} (flat [n_atoms*3] f32)")
+            }
+            Rejection::Overloaded { depth, limit } => {
+                format!("variant queue depth {depth} at limit {limit}; retry later")
+            }
+            Rejection::ShuttingDown => "server is draining; no new work admitted".into(),
+            Rejection::MalformedFrame { detail } => format!("malformed frame: {detail}"),
+            Rejection::Internal { detail } => format!("backend error: {detail}"),
+        }
+    }
+
+    /// Wire form: `{"ok": false, "reject": CODE, "message": ..., "id": ...}`.
+    pub fn to_json(&self, id: Option<u64>) -> Json {
+        let mut pairs = vec![
+            ("ok", Json::Bool(false)),
+            ("reject", Json::str(self.code())),
+            ("message", Json::str(self.message())),
+        ];
+        if let Some(id) = id {
+            pairs.push(("id", Json::Num(id as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn codes_are_stable_and_distinct() {
+        let all = [
+            Rejection::UnknownVariant { variant: "x".into(), known: vec!["fp32".into()] },
+            Rejection::BadShape { got: 5, want: 72 },
+            Rejection::Overloaded { depth: 9, limit: 8 },
+            Rejection::ShuttingDown,
+            Rejection::MalformedFrame { detail: "bad json".into() },
+            Rejection::Internal { detail: "load failed".into() },
+        ];
+        let codes: std::collections::BTreeSet<&str> = all.iter().map(|r| r.code()).collect();
+        assert_eq!(codes.len(), all.len(), "duplicate rejection codes");
+        for r in &all {
+            assert!(!r.message().is_empty());
+        }
+    }
+
+    #[test]
+    fn wire_form_roundtrips() {
+        let r = Rejection::Overloaded { depth: 12, limit: 8 };
+        let j = json::parse(&json::to_string(&r.to_json(Some(42)))).unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(j.get("reject").and_then(|v| v.as_str()), Some("Overloaded"));
+        assert_eq!(j.get("id").and_then(|v| v.as_u64()), Some(42));
+        let no_id = Rejection::ShuttingDown.to_json(None);
+        assert!(no_id.get("id").is_none());
+    }
+}

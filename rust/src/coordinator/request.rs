@@ -1,6 +1,7 @@
 //! Request/response types flowing through the serving coordinator (S9).
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// A single inference request: one molecule's positions, one variant.
@@ -14,6 +15,26 @@ pub struct InferenceRequest {
     /// reply channel (oneshot-style: exactly one send)
     pub reply: mpsc::Sender<InferenceResponse>,
     pub enqueued: Instant,
+    /// Per-variant in-system gauge (submitted, not yet replied) backing
+    /// admission control; `None` when the request was not counted
+    /// (hand-built test requests). Decremented exactly once by [`respond`].
+    ///
+    /// [`respond`]: InferenceRequest::respond
+    pub depth: Option<Arc<AtomicUsize>>,
+}
+
+impl InferenceRequest {
+    /// Deliver the reply and release this request's slot in the per-variant
+    /// depth gauge. Every terminal path (worker result, load-failure drain,
+    /// dispatch failure, unknown variant) must answer through here so the
+    /// gauge cannot leak and the client never sees a bare disconnect while
+    /// the server is alive.
+    pub fn respond(self, resp: InferenceResponse) {
+        if let Some(g) = &self.depth {
+            g.fetch_sub(1, Ordering::Relaxed);
+        }
+        let _ = self.reply.send(resp);
+    }
 }
 
 /// The result delivered back to the caller.

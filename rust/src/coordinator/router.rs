@@ -11,8 +11,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::ensure;
-use crate::util::error::{Error, Result};
+use crate::util::error::Result;
 
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
@@ -36,6 +35,9 @@ pub enum Backend {
     /// Deterministic stub (tests / load-gen): energy = sum(positions),
     /// forces = -positions. n_atoms validated like the real model.
     Mock { n_atoms: usize },
+    /// [`Backend::Mock`] with an artificial per-batch latency — makes
+    /// overload/drain behaviour deterministic in tests without real compute.
+    SlowMock { n_atoms: usize, delay_ms: u64 },
 }
 
 impl Backend {
@@ -81,6 +83,20 @@ pub fn spawn_worker(
     Ok(Worker { tx, inflight, handle })
 }
 
+/// Test fixture: a worker whose channel is already closed (thread gone) —
+/// dispatching to a pool of these exercises the dispatch-failure path
+/// deterministically.
+#[cfg(test)]
+pub(crate) fn dead_worker() -> Worker {
+    let (tx, rx) = mpsc::channel::<Vec<InferenceRequest>>();
+    drop(rx);
+    let handle = std::thread::Builder::new()
+        .name("gaq-dead-worker".into())
+        .spawn(|| {})
+        .expect("spawn dead worker stub");
+    Worker { tx, inflight: Arc::new(AtomicUsize::new(0)), handle }
+}
+
 fn worker_loop(
     backend: Backend,
     rx: mpsc::Receiver<Vec<InferenceRequest>>,
@@ -92,7 +108,7 @@ fn worker_loop(
     // constructed where it is used).
     enum Eval {
         Model(Arc<crate::runtime::CompiledForceField>),
-        Mock { n_atoms: usize },
+        Mock { n_atoms: usize, delay_ms: u64 },
     }
 
     let load = |dir: &str, variant: &str, choice: crate::runtime::BackendChoice| {
@@ -113,19 +129,31 @@ fn worker_loop(
                 Ok(ff) => Eval::Model(ff),
                 Err(e) => {
                     eprintln!("worker failed to load {variant:?}: {e:#}");
-                    // drain requests with errors so clients don't hang
+                    // Drain requests with errors so clients don't hang. Each
+                    // drained request must release its in-flight slot and be
+                    // counted: skipping the decrement made the least-loaded
+                    // balancer see a dead worker as permanently loaded, and
+                    // skipping `Metrics::record` undercounted errors.
                     for batch in rx.iter() {
                         for req in batch {
-                            let _ = req
-                                .reply
-                                .send(InferenceResponse::error(req.id, format!("load failed: {e}")));
+                            let latency_us =
+                                req.enqueued.elapsed().as_micros() as u64;
+                            metrics.lock().unwrap().record(latency_us, false);
+                            inflight.fetch_sub(1, Ordering::Relaxed);
+                            req.respond(InferenceResponse::error(
+                                req.id,
+                                format!("load failed: {e}"),
+                            ));
                         }
                     }
                     return;
                 }
             }
         }
-        Backend::Mock { n_atoms } => Eval::Mock { n_atoms: *n_atoms },
+        Backend::Mock { n_atoms } => Eval::Mock { n_atoms: *n_atoms, delay_ms: 0 },
+        Backend::SlowMock { n_atoms, delay_ms } => {
+            Eval::Mock { n_atoms: *n_atoms, delay_ms: *delay_ms }
+        }
     };
 
     for batch in rx.iter() {
@@ -139,22 +167,27 @@ fn worker_loop(
                     Err(e) => batch.iter().map(|_| Err(format!("{e}"))).collect(),
                 }
             }
-            Eval::Mock { n_atoms } => batch
-                .iter()
-                .map(|r| {
-                    if r.positions.len() != n_atoms * 3 {
-                        Err(format!(
-                            "bad positions len {} != {}",
-                            r.positions.len(),
-                            n_atoms * 3
-                        ))
-                    } else {
-                        let e: f32 = r.positions.iter().sum();
-                        let f: Vec<f32> = r.positions.iter().map(|&x| -x).collect();
-                        Ok((e, f))
-                    }
-                })
-                .collect(),
+            Eval::Mock { n_atoms, delay_ms } => {
+                if *delay_ms > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(*delay_ms));
+                }
+                batch
+                    .iter()
+                    .map(|r| {
+                        if r.positions.len() != n_atoms * 3 {
+                            Err(format!(
+                                "bad positions len {} != {}",
+                                r.positions.len(),
+                                n_atoms * 3
+                            ))
+                        } else {
+                            let e: f32 = r.positions.iter().sum();
+                            let f: Vec<f32> = r.positions.iter().map(|&x| -x).collect();
+                            Ok((e, f))
+                        }
+                    })
+                    .collect()
+            }
         };
 
         let now = Instant::now();
@@ -180,7 +213,7 @@ fn worker_loop(
                 let mut m = metrics.lock().unwrap();
                 m.record(latency_us, ok);
             }
-            let _ = req.reply.send(resp);
+            req.respond(resp);
             inflight.fetch_sub(1, Ordering::Relaxed);
         }
     }
@@ -203,9 +236,19 @@ impl Pool {
     }
 
     /// Least-loaded dispatch (ties broken round-robin).
-    pub fn dispatch(&self, batch: Vec<InferenceRequest>) -> Result<()> {
+    ///
+    /// On failure (no workers, or the chosen worker's channel is closed) the
+    /// batch is handed back so the caller can answer every request with a
+    /// typed error — dropping the reply senders would surface to clients as
+    /// a bare channel disconnect.
+    pub fn dispatch(
+        &self,
+        batch: Vec<InferenceRequest>,
+    ) -> std::result::Result<(), Vec<InferenceRequest>> {
         let n = self.workers.len();
-        ensure!(n > 0, "pool {} has no workers", self.variant);
+        if n == 0 {
+            return Err(batch);
+        }
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
         let mut best = start;
         let mut best_load = usize::MAX;
@@ -218,10 +261,20 @@ impl Pool {
             }
         }
         self.workers[best].inflight.fetch_add(batch.len(), Ordering::Relaxed);
-        self.workers[best]
-            .tx
-            .send(batch)
-            .map_err(|_| Error::msg("worker channel closed"))
+        match self.workers[best].tx.send(batch) {
+            Ok(()) => Ok(()),
+            Err(mpsc::SendError(batch)) => {
+                // the worker is gone: undo the in-flight accounting it will
+                // never decrement, and give the batch back
+                self.workers[best].inflight.fetch_sub(batch.len(), Ordering::Relaxed);
+                Err(batch)
+            }
+        }
+    }
+
+    /// Total in-flight requests across this pool's workers.
+    pub fn total_inflight(&self) -> usize {
+        self.workers.iter().map(|w| w.inflight.load(Ordering::Relaxed)).sum()
     }
 
     /// Close channels and join all workers.
@@ -262,6 +315,7 @@ mod tests {
             positions: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
             reply: tx,
             enqueued: Instant::now(),
+            depth: None,
         };
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -283,6 +337,7 @@ mod tests {
             positions: vec![0.0; 5],
             reply: tx,
             enqueued: Instant::now(),
+            depth: None,
         };
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -314,6 +369,7 @@ mod tests {
             positions: pos,
             reply: tx,
             enqueued: Instant::now(),
+            depth: None,
         };
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
@@ -341,12 +397,80 @@ mod tests {
             positions: pos,
             reply: tx,
             enqueued: Instant::now(),
+            depth: None,
         };
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
         assert!(resp.energy_ev.is_finite());
         assert_eq!(resp.forces.len(), 72);
+        pool.shutdown();
+    }
+
+    /// Regression (ISSUE 7): the load-failure drain replied with errors but
+    /// never decremented `inflight` (the least-loaded balancer saw the dead
+    /// worker as permanently loaded) and never recorded the errors.
+    #[test]
+    fn dead_load_worker_releases_inflight_and_counts_errors() {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let backend = Backend::Reference {
+            artifacts_dir: "/nonexistent/nowhere".into(),
+            variant: "no_such_variant".into(),
+        };
+        let worker = spawn_worker(backend, metrics.clone()).unwrap();
+        let pool = Pool::new("no_such_variant".into(), vec![worker]);
+
+        let k = 5u64;
+        let mut rxs = Vec::new();
+        let mut batch = Vec::new();
+        for id in 0..k {
+            let (tx, rx) = mpsc::channel();
+            batch.push(InferenceRequest {
+                id,
+                variant: "no_such_variant".into(),
+                positions: vec![0.0; 6],
+                reply: tx,
+                enqueued: Instant::now(),
+                depth: None,
+            });
+            rxs.push(rx);
+        }
+        pool.dispatch(batch).unwrap();
+        for rx in rxs {
+            let r = rx
+                .recv_timeout(Duration::from_secs(20))
+                .expect("typed error reply, not a disconnect");
+            assert!(r.error.is_some(), "expected a load-failure error");
+        }
+        // every reply implies its inflight slot was released first
+        assert_eq!(pool.total_inflight(), 0, "dead worker left inflight stuck");
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.errors, k, "drained errors must be recorded");
+        assert_eq!(m.completed, 0);
+        pool.shutdown();
+    }
+
+    /// A dispatch to a dead pool hands the batch back (typed-error path)
+    /// and undoes its in-flight accounting.
+    #[test]
+    fn dispatch_to_dead_worker_returns_batch() {
+        let pool = Pool::new("dead".into(), vec![dead_worker()]);
+        let (tx, rx) = mpsc::channel();
+        let req = InferenceRequest {
+            id: 9,
+            variant: "dead".into(),
+            positions: vec![0.0; 6],
+            reply: tx,
+            enqueued: Instant::now(),
+            depth: None,
+        };
+        let back = pool.dispatch(vec![req]).unwrap_err();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back[0].id, 9);
+        assert_eq!(pool.total_inflight(), 0);
+        drop(back);
+        // only after the caller drops the batch does the channel disconnect
+        assert!(rx.recv().is_err());
         pool.shutdown();
     }
 
@@ -363,6 +487,7 @@ mod tests {
                 positions: vec![id as f32, 0.0, 0.0],
                 reply: tx,
                 enqueued: Instant::now(),
+                depth: None,
             };
             pool.dispatch(vec![req]).unwrap();
         }

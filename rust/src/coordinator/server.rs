@@ -5,7 +5,7 @@
 //! `submit` is non-blocking; callers hold a [`PendingRequest`].
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -29,12 +29,29 @@ enum Control {
     Shutdown,
 }
 
+/// Per-variant in-system depth gauges (submitted, not yet replied): the
+/// admission-control signal behind [`Submitter::submit_bounded`].
+type Depths = BTreeMap<String, Arc<AtomicUsize>>;
+
+/// Why a bounded submission was refused (maps onto the wire
+/// [`Rejection`](super::reject::Rejection) taxonomy).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The variant's in-system depth reached the configured bound; the
+    /// request was rejected instead of queueing unboundedly.
+    Overloaded { depth: usize, limit: usize },
+    /// The server's control channel is closed (shutdown in progress).
+    ShutDown,
+}
+
 /// The serving coordinator.
 pub struct Server {
     tx: mpsc::Sender<Control>,
     dispatcher: Option<std::thread::JoinHandle<Vec<Pool>>>,
     metrics: Arc<Mutex<Metrics>>,
     next_id: Arc<AtomicU64>,
+    depths: Arc<Depths>,
+    max_queue_depth: usize,
 }
 
 /// A cloneable, `Send` submission handle ([`Server::submitter`]): each
@@ -44,32 +61,77 @@ pub struct Server {
 pub struct Submitter {
     tx: mpsc::Sender<Control>,
     next_id: Arc<AtomicU64>,
+    depths: Arc<Depths>,
+    max_queue_depth: usize,
+    metrics: Arc<Mutex<Metrics>>,
 }
 
 impl Submitter {
     /// Non-blocking submit; returns a handle to await the response.
     pub fn submit(&self, variant: &str, positions: Vec<f32>) -> Result<PendingRequest> {
-        submit_on(&self.tx, &self.next_id, variant, positions)
+        submit_on(&self.tx, &self.next_id, &self.depths, variant, positions)
+    }
+
+    /// Admission-controlled submit: refuses with
+    /// [`SubmitError::Overloaded`] once the variant's in-system depth
+    /// (queued in the batcher or in flight at workers) reaches the policy's
+    /// `max_queue_depth`, instead of queueing unboundedly. Unknown variants
+    /// are admitted and answered with a typed error by the dispatcher.
+    pub fn submit_bounded(
+        &self,
+        variant: &str,
+        positions: Vec<f32>,
+    ) -> std::result::Result<PendingRequest, SubmitError> {
+        if let Some(g) = self.depths.get(variant) {
+            let depth = g.load(Ordering::Relaxed);
+            if depth >= self.max_queue_depth {
+                self.metrics.lock().unwrap().record_rejected();
+                return Err(SubmitError::Overloaded { depth, limit: self.max_queue_depth });
+            }
+        }
+        submit_on(&self.tx, &self.next_id, &self.depths, variant, positions)
+            .map_err(|_| SubmitError::ShutDown)
+    }
+
+    /// Current in-system depth for a variant (None for unknown variants).
+    pub fn queue_depth(&self, variant: &str) -> Option<usize> {
+        self.depths.get(variant).map(|g| g.load(Ordering::Relaxed))
     }
 }
 
 fn submit_on(
     tx: &mpsc::Sender<Control>,
     next_id: &AtomicU64,
+    depths: &Depths,
     variant: &str,
     positions: Vec<f32>,
 ) -> Result<PendingRequest> {
     let id = next_id.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = mpsc::channel();
+    let depth = depths.get(variant).cloned();
+    if let Some(g) = &depth {
+        g.fetch_add(1, Ordering::Relaxed);
+    }
     let req = InferenceRequest {
         id,
         variant: variant.to_string(),
         positions,
         reply,
         enqueued: Instant::now(),
+        depth,
     };
-    tx.send(Control::Request(req)).map_err(|_| Error::msg("server is shut down"))?;
-    Ok(PendingRequest { id, rx })
+    match tx.send(Control::Request(req)) {
+        Ok(()) => Ok(PendingRequest { id, rx }),
+        Err(mpsc::SendError(ctrl)) => {
+            // never entered the system: release the gauge slot
+            if let Control::Request(req) = ctrl {
+                if let Some(g) = &req.depth {
+                    g.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            Err(Error::msg("server is shut down"))
+        }
+    }
 }
 
 impl Server {
@@ -77,36 +139,69 @@ impl Server {
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let mut pools: BTreeMap<String, Pool> = BTreeMap::new();
+        let mut depths: Depths = BTreeMap::new();
         for (name, backend, n) in &cfg.variants {
             let workers = (0..*n)
                 .map(|_| spawn_worker(backend.clone(), metrics.clone()))
                 .collect::<Result<Vec<_>>>()?;
             pools.insert(name.clone(), Pool::new(name.clone(), workers));
+            depths.insert(name.clone(), Arc::new(AtomicUsize::new(0)));
         }
 
         let (tx, rx) = mpsc::channel::<Control>();
         let policy = cfg.policy.clone();
+        let max_queue_depth = policy.max_queue_depth;
+        let metrics2 = metrics.clone();
         let dispatcher = std::thread::Builder::new()
             .name("gaq-dispatcher".into())
-            .spawn(move || dispatcher_loop(rx, pools, policy))?;
+            .spawn(move || dispatcher_loop(rx, pools, policy, metrics2))?;
 
         Ok(Server {
             tx,
             dispatcher: Some(dispatcher),
             metrics,
             next_id: Arc::new(AtomicU64::new(1)),
+            depths: Arc::new(depths),
+            max_queue_depth,
         })
     }
 
     /// Non-blocking submit; returns a handle to await the response.
     pub fn submit(&self, variant: &str, positions: Vec<f32>) -> Result<PendingRequest> {
-        submit_on(&self.tx, &self.next_id, variant, positions)
+        submit_on(&self.tx, &self.next_id, &self.depths, variant, positions)
     }
 
     /// A submission handle for concurrent client threads (request ids stay
     /// unique across all handles and [`Server::submit`]).
     pub fn submitter(&self) -> Submitter {
-        Submitter { tx: self.tx.clone(), next_id: self.next_id.clone() }
+        Submitter {
+            tx: self.tx.clone(),
+            next_id: self.next_id.clone(),
+            depths: self.depths.clone(),
+            max_queue_depth: self.max_queue_depth,
+            metrics: self.metrics.clone(),
+        }
+    }
+
+    /// The served variant roster (admission pre-checks, `info` listings).
+    pub fn variants(&self) -> Vec<String> {
+        self.depths.keys().cloned().collect()
+    }
+
+    /// Current in-system depth for a variant (None for unknown variants).
+    pub fn queue_depth(&self, variant: &str) -> Option<usize> {
+        self.depths.get(variant).map(|g| g.load(Ordering::Relaxed))
+    }
+
+    /// Configured per-variant admission bound.
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_queue_depth
+    }
+
+    /// Shared metrics handle (the TCP front-end's `metrics` endpoint reads
+    /// through this from connection threads).
+    pub fn metrics_handle(&self) -> Arc<Mutex<Metrics>> {
+        self.metrics.clone()
     }
 
     /// Blocking convenience call.
@@ -143,36 +238,72 @@ impl Drop for Server {
     }
 }
 
+/// Route one request into its variant's batcher; unknown variants get an
+/// immediate typed error reply (counted in `errors`).
+fn route(
+    batchers: &mut BTreeMap<String, Batcher>,
+    metrics: &Arc<Mutex<Metrics>>,
+    req: InferenceRequest,
+) {
+    match batchers.get_mut(&req.variant) {
+        Some(b) => b.push(req),
+        None => {
+            let latency_us = req.enqueued.elapsed().as_micros() as u64;
+            metrics.lock().unwrap().record(latency_us, false);
+            let msg = format!("unknown variant {:?}", req.variant);
+            req.respond(InferenceResponse::error(req.id, msg));
+        }
+    }
+}
+
+/// Drain every variant's ready batches into its pool.
+///
+/// A failed dispatch (dead pool) answers each request in the batch with a
+/// typed error — counted in `errors` — and keeps draining, both the rest of
+/// that variant's queue and every other variant. The old behaviour dropped
+/// the reply senders (clients saw a bare channel disconnect) and `break`-ed,
+/// stranding every remaining ready batch for the variant.
+fn flush_ready(
+    batchers: &mut BTreeMap<String, Batcher>,
+    pools: &BTreeMap<String, Pool>,
+    metrics: &Arc<Mutex<Metrics>>,
+    force: bool,
+) {
+    let now = Instant::now();
+    for (name, b) in batchers.iter_mut() {
+        while !b.is_empty() && (force || b.ready(now)) {
+            let batch = b.take_batch();
+            let failed = match pools.get(name) {
+                Some(pool) => match pool.dispatch(batch) {
+                    Ok(()) => continue,
+                    Err(batch) => batch,
+                },
+                None => batch,
+            };
+            {
+                let mut m = metrics.lock().unwrap();
+                for req in &failed {
+                    m.record(req.enqueued.elapsed().as_micros() as u64, false);
+                }
+            }
+            for req in failed {
+                let msg = format!("variant {name:?}: worker pool unavailable");
+                req.respond(InferenceResponse::error(req.id, msg));
+            }
+        }
+    }
+}
+
 fn dispatcher_loop(
     rx: mpsc::Receiver<Control>,
     pools: BTreeMap<String, Pool>,
     policy: BatchPolicy,
+    metrics: Arc<Mutex<Metrics>>,
 ) -> Vec<Pool> {
     let mut batchers: BTreeMap<String, Batcher> = pools
         .keys()
         .map(|k| (k.clone(), Batcher::new(policy.clone())))
         .collect();
-
-    let flush_ready = |batchers: &mut BTreeMap<String, Batcher>, force: bool| {
-        let now = Instant::now();
-        for (name, b) in batchers.iter_mut() {
-            while !b.is_empty() && (force || b.ready(now)) {
-                let batch = b.take_batch();
-                if let Some(pool) = pools.get(name) {
-                    if pool.dispatch(batch).is_err() {
-                        break;
-                    }
-                } else {
-                    for req in batch {
-                        let _ = req.reply.send(InferenceResponse::error(
-                            req.id,
-                            format!("unknown variant {name:?}"),
-                        ));
-                    }
-                }
-            }
-        }
-    };
 
     'outer: loop {
         // sleep until the nearest deadline (or block if queues are empty)
@@ -192,24 +323,22 @@ fn dispatcher_loop(
         };
 
         match ctrl {
-            Some(Control::Request(req)) => {
-                match batchers.get_mut(&req.variant) {
-                    Some(b) => b.push(req),
-                    None => {
-                        let _ = req.reply.send(InferenceResponse::error(
-                            req.id,
-                            format!("unknown variant {:?}", req.variant),
-                        ));
+            Some(Control::Request(req)) => route(&mut batchers, &metrics, req),
+            Some(Control::Shutdown) => {
+                // graceful drain: everything that reached the control channel
+                // before the shutdown marker gets answered — dropping it here
+                // would surface as a bare disconnect to racing submitters
+                while let Ok(c) = rx.try_recv() {
+                    if let Control::Request(req) = c {
+                        route(&mut batchers, &metrics, req);
                     }
                 }
-            }
-            Some(Control::Shutdown) => {
-                flush_ready(&mut batchers, true);
+                flush_ready(&mut batchers, &pools, &metrics, true);
                 break 'outer;
             }
             None => {} // deadline tick
         }
-        flush_ready(&mut batchers, false);
+        flush_ready(&mut batchers, &pools, &metrics, false);
     }
 
     pools.into_values().collect()
@@ -221,7 +350,11 @@ mod tests {
 
     fn mock_server(max_batch: usize, n_workers: usize) -> Server {
         Server::start(ServerConfig {
-            policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+                ..BatchPolicy::default()
+            },
             variants: vec![(
                 "mock".to_string(),
                 Backend::Mock { n_atoms: 2 },
@@ -290,6 +423,117 @@ mod tests {
             assert_eq!(r.forces.len(), base.len());
         }
         s.shutdown();
+    }
+
+    /// Regression (ISSUE 7): a failed `Pool::dispatch` used to drop the
+    /// whole batch (clients saw a raw channel disconnect) and `break`,
+    /// stranding every remaining ready batch for that variant. Now every
+    /// request in a failed batch gets a typed error, errors are counted,
+    /// and the other variants keep draining.
+    #[test]
+    fn dead_pool_yields_typed_errors_and_keeps_draining() {
+        use super::super::router::dead_worker;
+
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let mut pools: BTreeMap<String, Pool> = BTreeMap::new();
+        pools.insert("dead".into(), Pool::new("dead".into(), vec![dead_worker()]));
+        pools.insert(
+            "live".into(),
+            Pool::new(
+                "live".into(),
+                vec![spawn_worker(Backend::Mock { n_atoms: 2 }, metrics.clone()).unwrap()],
+            ),
+        );
+        let policy = BatchPolicy { max_batch: 2, ..BatchPolicy::default() };
+        let mut batchers: BTreeMap<String, Batcher> = pools
+            .keys()
+            .map(|k| (k.clone(), Batcher::new(policy.clone())))
+            .collect();
+
+        // queue 3 batches' worth on the dead variant and 1 on the live one
+        let mk = |id: u64, variant: &str| {
+            let (tx, rx) = mpsc::channel();
+            (
+                InferenceRequest {
+                    id,
+                    variant: variant.into(),
+                    positions: vec![1.0; 6],
+                    reply: tx,
+                    enqueued: Instant::now(),
+                    depth: None,
+                },
+                rx,
+            )
+        };
+        let mut dead_rxs = Vec::new();
+        for id in 0..6u64 {
+            let (req, rx) = mk(id, "dead");
+            batchers.get_mut("dead").unwrap().push(req);
+            dead_rxs.push(rx);
+        }
+        let (live_req, live_rx) = mk(100, "live");
+        batchers.get_mut("live").unwrap().push(live_req);
+
+        flush_ready(&mut batchers, &pools, &metrics, true);
+
+        // every dead-variant request gets a typed error, none stranded
+        for (i, rx) in dead_rxs.into_iter().enumerate() {
+            let r = rx
+                .recv_timeout(Duration::from_secs(10))
+                .unwrap_or_else(|e| panic!("request {i} stranded/disconnected: {e}"));
+            assert!(r.error.is_some(), "request {i}: expected typed error");
+        }
+        assert!(batchers.get("dead").unwrap().is_empty(), "dead queue stranded");
+        // ...and the live variant still got served
+        let r = live_rx.recv_timeout(Duration::from_secs(10)).expect("live variant stranded");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.energy_ev, 6.0);
+        // errors were counted for the failed batches
+        assert_eq!(metrics.lock().unwrap().errors, 6);
+        for p in pools.into_values() {
+            p.shutdown();
+        }
+    }
+
+    #[test]
+    fn submit_bounded_rejects_overloaded_and_depth_returns_to_zero() {
+        // one slow worker, batch=1: requests pile up in-system
+        let server = Server::start(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(50),
+                max_queue_depth: 3,
+            },
+            variants: vec![(
+                "mock".to_string(),
+                Backend::SlowMock { n_atoms: 2, delay_ms: 30 },
+                1,
+            )],
+        })
+        .unwrap();
+        let sub = server.submitter();
+        let mut pending = Vec::new();
+        let mut overloaded = 0usize;
+        for i in 0..16 {
+            match sub.submit_bounded("mock", vec![i as f32; 6]) {
+                Ok(p) => pending.push(p),
+                Err(SubmitError::Overloaded { depth, limit }) => {
+                    assert!(depth >= limit, "rejected below the bound: {depth} < {limit}");
+                    overloaded += 1;
+                }
+                Err(SubmitError::ShutDown) => panic!("server is live"),
+            }
+        }
+        assert!(overloaded > 0, "burst of 16 at depth 3 never rejected");
+        assert!(!pending.is_empty(), "admission rejected everything");
+        for p in pending {
+            let r = p.wait_timeout(Duration::from_secs(30)).expect("admitted request answered");
+            assert!(r.error.is_none(), "{:?}", r.error);
+        }
+        // all replies delivered => every gauge slot released
+        assert_eq!(server.queue_depth("mock"), Some(0));
+        assert_eq!(server.metrics().rejected, overloaded as u64);
+        server.shutdown();
     }
 
     #[test]

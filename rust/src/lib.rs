@@ -13,7 +13,8 @@
 //! * [`runtime`] — execution backends, artifact manifest, compiled force fields
 //! * [`model`] — the in-tree quantized SO(3)-equivariant GNN (graph, layers,
 //!   EGNN blocks, deterministic weights) behind `runtime::GnnForceField`
-//! * [`coordinator`] — request router, dynamic batcher, serving metrics
+//! * [`coordinator`] — request router, dynamic batcher, serving metrics,
+//!   length-prefixed-JSON TCP front-end with typed rejections
 //! * [`md`] — NVE/NVT integrators, classical oracle, drift tracking (Fig. 3)
 //! * [`quant`] — packed INT4/INT8 images, integer GEMMs, S² codebooks (Table IV)
 //! * [`lee`] — Local Equivariance Error harness (Table III)

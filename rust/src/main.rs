@@ -9,7 +9,8 @@
 //!                 [--replicas R]
 //! gaq-md serve    [--artifacts DIR] [--variants a,b] [--backend B]
 //!                 [--workers N] [--requests N] [--max-batch B]
-//!                 [--max-wait-us U] [--replicas C]
+//!                 [--max-wait-us U] [--max-queue-depth N] [--replicas C]
+//!                 [--listen ADDR] [--rate R]
 //! gaq-md lee      [--artifacts DIR] [--variants a,b] [--backend B]
 //!                 [--rotations N]
 //! ```
@@ -23,11 +24,19 @@
 //! independent trajectories (distinct seeds) on concurrent threads; `serve`
 //! drives the synthetic load from C concurrent client threads.
 //!
+//! `serve --listen ADDR` puts the zero-dep TCP front-end (length-prefixed
+//! JSON, typed rejections — DESIGN.md §11) on ADDR and drives the load over
+//! real sockets, one connection per client; `--requests 0` serves until
+//! stdin closes instead of generating load.
+//!
 //! All experiment tables/figures have dedicated binaries under examples/
 //! and benches/; this CLI is the operational front-end.
 
 use gaq_md::bail;
-use gaq_md::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use gaq_md::coordinator::loadgen::{self, Arrival, NetLoadConfig};
+use gaq_md::coordinator::{
+    Backend, BatchPolicy, NetClient, NetConfig, NetOutcome, NetServer, Server, ServerConfig,
+};
 use gaq_md::md::integrator::MdState;
 use gaq_md::md::{integrator, ForceProvider};
 use gaq_md::runtime::{self, BackendChoice, Manifest};
@@ -83,7 +92,20 @@ COMMON OPTIONS:
                      (default auto; `gnn` runs the in-tree quantized
                      SO(3)-equivariant network, no artifacts required)
   --replicas N       md: N concurrent independent trajectories;
-                     serve: N concurrent client threads (default 1)
+                     serve: N concurrent client threads/connections (default 1)
+
+SERVE OPTIONS:
+  --listen ADDR      bind a TCP front-end (length-prefixed JSON protocol,
+                     DESIGN.md §11) and drive the load over real sockets;
+                     port 0 picks a free port. Without --listen the load is
+                     submitted in-process.
+  --rate R           per-connection Poisson arrival rate in req/s
+                     (default 0 = closed burst); network mode only
+  --requests N       total requests across all clients (default 256);
+                     with --listen, 0 means serve until stdin closes
+  --max-queue-depth N  per-variant admission bound: submissions beyond this
+                     many in-system requests are rejected Overloaded
+                     instead of queueing unboundedly (default 1024)
 
 ENVIRONMENT:
   GAQ_THREADS        worker budget of the data-parallel pool
@@ -385,6 +407,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 256);
     let max_batch = args.get_usize("max-batch", 8);
     let max_wait_us = args.get_u64("max-wait-us", 500);
+    let max_queue_depth = args.get_usize("max-queue-depth", 1024).max(1);
     let clients = args.get_usize("replicas", 1).max(1);
     let seed = args.get_u64("seed", 0);
     let choice = backend_choice(args)?;
@@ -421,6 +444,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: BatchPolicy {
             max_batch,
             max_wait: std::time::Duration::from_micros(max_wait_us),
+            max_queue_depth,
         },
         variants: variants.iter().map(|v| (v.clone(), worker_backend(v), workers)).collect(),
     })?;
@@ -434,6 +458,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // synthetic online load: perturbed reference geometries, fanned out
     // across `clients` concurrent submitter threads
     let base: Vec<f32> = manifest.molecule.positions.iter().map(|&x| x as f32).collect();
+
+    if let Some(listen) = args.get("listen") {
+        return serve_over_tcp(args, server, listen, &variants, base);
+    }
     let per_client = n_requests.div_ceil(clients);
     let t0 = std::time::Instant::now();
     let (submitted, errors) = std::thread::scope(|s| {
@@ -489,6 +517,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bail!(
             "serving failed: {errors} errored replies, {submitted}/{n_requests} requests submitted"
         );
+    }
+    Ok(())
+}
+
+/// `serve --listen ADDR`: put the TCP front-end on ADDR and either drive
+/// the synthetic load over real sockets (one connection per `--replicas`
+/// client) or, with `--requests 0`, serve until stdin closes.
+fn serve_over_tcp(
+    args: &Args,
+    server: Server,
+    listen: &str,
+    variants: &[String],
+    base: Vec<f32>,
+) -> Result<()> {
+    let n_requests = args.get_usize("requests", 256);
+    let clients = args.get_usize("replicas", 1).max(1);
+    let net = NetServer::start(server, NetConfig::new(listen).with_expected_len(base.len()))?;
+    let addr = net.local_addr().to_string();
+    println!("listening on {addr} (length-prefixed JSON; DESIGN.md §11)");
+
+    if n_requests == 0 {
+        // foreground server: run until the operator closes stdin (zero-dep
+        // stand-in for signal handling), then drain gracefully
+        println!("serving until stdin closes (press Ctrl-D to drain and exit)");
+        let mut sink = String::new();
+        let _ = std::io::Read::read_to_string(&mut std::io::stdin().lock(), &mut sink);
+        net.shutdown();
+        return Ok(());
+    }
+
+    let rate = args.get_f64("rate", 0.0);
+    let mut cfg = NetLoadConfig::new(addr.clone(), variants.to_vec(), base);
+    cfg.n_requests = n_requests;
+    cfg.clients = clients;
+    cfg.seed = args.get_u64("seed", 0);
+    cfg.arrival = if rate > 0.0 { Arrival::Poisson { rate } } else { Arrival::Burst };
+
+    let t0 = std::time::Instant::now();
+    let stats = loadgen::run_net_load(&cfg);
+    let wall = t0.elapsed();
+
+    // metrics endpoint round trip (also exercises the `metrics` frame type)
+    if let Ok(reply) = NetClient::connect(&addr).and_then(|mut c| c.metrics()) {
+        if let NetOutcome::Metrics { metrics, net } = reply.outcome {
+            println!("metrics: {}", gaq_md::util::json::to_string(&metrics));
+            println!("net:     {}", gaq_md::util::json::to_string(&net));
+        }
+    }
+    println!(
+        "completed {}/{} over TCP in {wall:?} ({} rejected, {} transport errors, \
+         {clients} connections)",
+        stats.completed, stats.sent, stats.rejected, stats.transport_errors
+    );
+    net.shutdown();
+    if stats.transport_errors > 0 {
+        bail!("network serving failed: {} transport errors ({stats:?})", stats.transport_errors);
+    }
+    if stats.completed == 0 {
+        bail!("network serving failed: no request completed ({stats:?})");
     }
     Ok(())
 }

@@ -22,6 +22,30 @@ pub enum Json {
 }
 
 impl Json {
+    /// Build an object from (key, value) pairs (BTreeMap keeps keys sorted,
+    /// so serialisation is deterministic regardless of pair order).
+    pub fn obj<K: Into<String>>(pairs: impl IntoIterator<Item = (K, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.into(), v)).collect())
+    }
+
+    /// String value (shorthand for `Json::Str(s.into())`).
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Flat numeric array from an f32 slice (positions/forces payloads).
+    pub fn from_f32s(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    /// Non-negative integer accessor (request ids, counts).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self.as_f64() {
+            Some(n) if n >= 0.0 && n.fract() == 0.0 => Some(n as u64),
+            _ => None,
+        }
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -416,6 +440,24 @@ mod tests {
         assert_eq!(v.as_str(), Some("\u{e9}\t\\"));
         let v2 = parse("\"caf\u{e9}\"").unwrap();
         assert_eq!(v2.as_str(), Some("caf\u{e9}"));
+    }
+
+    #[test]
+    fn builders_roundtrip() {
+        let j = Json::obj([
+            ("variant", Json::str("gaq_w4a8")),
+            ("positions", Json::from_f32s(&[1.0, 2.5, -3.0])),
+            ("id", Json::Num(7.0)),
+        ]);
+        let re = parse(&to_string(&j)).unwrap();
+        assert_eq!(re.get("variant").and_then(|v| v.as_str()), Some("gaq_w4a8"));
+        assert_eq!(re.get("id").and_then(|v| v.as_u64()), Some(7));
+        assert_eq!(
+            re.get("positions").and_then(|v| v.as_f32_vec()),
+            Some(vec![1.0, 2.5, -3.0])
+        );
+        assert_eq!(parse("-1").unwrap().as_u64(), None);
+        assert_eq!(parse("1.5").unwrap().as_u64(), None);
     }
 
     #[test]

@@ -145,6 +145,7 @@ fn server_serves_pjrt_backend_requests() {
         policy: BatchPolicy {
             max_batch: 4,
             max_wait: std::time::Duration::from_micros(300),
+            ..BatchPolicy::default()
         },
         variants: vec![(
             "fp32".into(),
@@ -174,6 +175,7 @@ fn server_serves_reference_backend_requests() {
         policy: BatchPolicy {
             max_batch: 8,
             max_wait: std::time::Duration::from_micros(300),
+            ..BatchPolicy::default()
         },
         variants: vec![
             ("fp32".into(), mk("fp32"), 2),

@@ -16,7 +16,11 @@ fn concurrent_clients_across_all_builtin_variants() {
     assert!(names.len() >= 7, "builtin roster shrank: {names:?}");
     let max_batch = 4usize;
     let server = Server::start(ServerConfig {
-        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(200) },
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+            ..BatchPolicy::default()
+        },
         variants: names
             .iter()
             .map(|v| {
@@ -92,7 +96,11 @@ fn concurrent_clients_across_all_builtin_variants() {
 #[test]
 fn shutdown_mid_load_neither_deadlocks_nor_hangs_clients() {
     let server = Server::start(ServerConfig {
-        policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) },
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            ..BatchPolicy::default()
+        },
         variants: vec![("mock".into(), Backend::Mock { n_atoms: 2 }, 2)],
     })
     .expect("server start");
@@ -148,7 +156,11 @@ fn shutdown_mid_load_neither_deadlocks_nor_hangs_clients() {
 fn burst_load_never_exceeds_max_batch() {
     let max_batch = 5usize;
     let server = Server::start(ServerConfig {
-        policy: BatchPolicy { max_batch, max_wait: Duration::from_micros(500) },
+        policy: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(500),
+            ..BatchPolicy::default()
+        },
         variants: vec![("mock".into(), Backend::Mock { n_atoms: 2 }, 2)],
     })
     .expect("server start");
