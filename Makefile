@@ -8,7 +8,7 @@ PYTEST ?= python3 -m pytest
 BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency
 
 .PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke \
-	bench-baselines serve-smoke clean
+	bench-baselines serve-smoke trace-smoke clean
 
 build:
 	$(CARGO) build --release
@@ -64,11 +64,24 @@ bench-baselines:
 
 # end-to-end network smoke: bind the TCP front-end on a free loopback port,
 # drive the multi-connection network loadgen against it, and fail unless
-# requests actually completed (the binary exits nonzero on zero completions
-# or any transport error — see serve_over_tcp in src/main.rs)
+# requests actually completed AND the observability registry is populated
+# (the binary exits nonzero on zero completions, any transport error, a
+# broken sent == completed + rejected + transport_errors identity, or an
+# empty per-variant/per-stage latency histogram — see serve_over_tcp and
+# validate_serve_registry in src/main.rs). --backend gnn so the model-stage
+# histograms (message/attention/neighbor/gemm) are exercised too.
 serve-smoke: build
-	$(CARGO) run --release -q -- serve --listen 127.0.0.1:0 \
+	$(CARGO) run --release -q -- serve --listen 127.0.0.1:0 --backend gnn \
 		--requests 64 --replicas 4 --rate 2000 --max-batch 8
+
+# span-tracing smoke: short traced MD run, then validate the exported
+# Chrome trace — JSON parses, expected span names present, and direct
+# children cover >=95% of md/step wall time (ISSUE 8 acceptance)
+trace-smoke: build
+	$(CARGO) run --release -q -- md --steps 50 --equil 10 --report-every 0 \
+		--trace-out target/trace.json
+	$(CARGO) run --release -q -- trace-check target/trace.json \
+		--expect md/step,md/integrate,md/force,md/thermostat
 
 clean:
 	$(CARGO) clean

@@ -7,10 +7,12 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
+use gaq_md::coordinator::loadgen::{run_net_load, NetLoadConfig};
 use gaq_md::coordinator::{
-    Backend, BatchPolicy, Batcher, InferenceRequest, Server, ServerConfig,
+    Backend, BatchPolicy, Batcher, InferenceRequest, NetConfig, NetServer, Server, ServerConfig,
 };
 use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::json;
 
 fn mk_req(id: u64) -> (InferenceRequest, mpsc::Receiver<gaq_md::coordinator::InferenceResponse>) {
     let (tx, rx) = mpsc::channel();
@@ -116,6 +118,45 @@ fn main() {
             black_box(total)
         });
         server.shutdown();
+    }
+
+    // ---- network loadgen: client-observed latency over real sockets ----------
+    // One measured load run; the loadgen's JSON report (counters + merged
+    // log-bucket latency histogram percentiles, µs) is printed for offline
+    // comparison against the server-side coordinator_* histograms.
+    {
+        let fast = std::env::var("GAQ_BENCH_FAST").ok().as_deref() == Some("1");
+        let server = Server::start(ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_micros(200),
+                ..BatchPolicy::default()
+            },
+            variants: vec![("mock".into(), Backend::Mock { n_atoms: 24 }, 2)],
+        })
+        .expect("server");
+        let net = NetServer::start(server, NetConfig::new("127.0.0.1:0").with_expected_len(72))
+            .expect("net server");
+        let mut cfg =
+            NetLoadConfig::new(net.local_addr().to_string(), vec!["mock".into()], vec![0.5; 72]);
+        cfg.n_requests = if fast { 64 } else { 512 };
+        cfg.clients = 2;
+        let t0 = Instant::now();
+        let stats = run_net_load(&cfg);
+        let wall = t0.elapsed();
+        assert_eq!(
+            stats.sent,
+            stats.completed + stats.rejected + stats.transport_errors,
+            "loadgen accounting identity broken: {stats:?}"
+        );
+        assert!(stats.completed > 0, "no request completed: {stats:?}");
+        println!(
+            "  net_loadgen ({} reqs, {} clients, {wall:?}): {}",
+            cfg.n_requests,
+            cfg.clients,
+            json::to_string(&stats.to_json())
+        );
+        net.shutdown();
     }
 
     b.report();

@@ -8,9 +8,12 @@
 //! against the TCP front-end ([`super::net::NetServer`]) from N concurrent
 //! client connections.
 
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
+use crate::obs::hist::HistSnapshot;
 use crate::util::error::Result;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 
 use super::net::NetClient;
@@ -122,6 +125,9 @@ pub struct NetLoadStats {
     pub rejected: usize,
     /// socket-level failures / unanswered requests
     pub transport_errors: usize,
+    /// client-observed round-trip latency (µs) of completed requests —
+    /// send-to-reply as seen from the load generator, queueing included
+    pub latency: HistSnapshot,
 }
 
 impl NetLoadStats {
@@ -130,12 +136,34 @@ impl NetLoadStats {
         self.completed += other.completed;
         self.rejected += other.rejected;
         self.transport_errors += other.transport_errors;
+        self.latency.merge(&other.latency);
+    }
+
+    /// Client-side report (benches/coordinator.rs consumes this): counters
+    /// plus the merged latency histogram summary (`count/sum/max/mean/
+    /// p50/p95/p99`, µs).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("sent", Json::Num(self.sent as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("transport_errors", Json::Num(self.transport_errors as f64)),
+            ("latency_us", self.latency.to_json()),
+        ])
     }
 }
 
-fn recv_one(client: &mut NetClient, stats: &mut NetLoadStats) {
+fn recv_one(client: &mut NetClient, sends: &mut VecDeque<Instant>, stats: &mut NetLoadStats) {
+    // Replies come back in request order, so the oldest outstanding send
+    // timestamp belongs to this reply.
+    let sent_at = sends.pop_front();
     match client.recv() {
-        Ok(r) if r.is_ok() => stats.completed += 1,
+        Ok(r) if r.is_ok() => {
+            stats.completed += 1;
+            if let Some(t) = sent_at {
+                stats.latency.record(t.elapsed().as_micros() as u64);
+            }
+        }
         Ok(_) => stats.rejected += 1,
         Err(_) => stats.transport_errors += 1,
     }
@@ -154,6 +182,7 @@ fn run_net_client(cfg: &NetLoadConfig, client_idx: usize, count: usize) -> Resul
     let times = arrival_times(cfg.arrival, count, seed ^ 0x9e37_79b9_7f4a_7c15);
     let start = Instant::now();
     let mut outstanding = 0usize;
+    let mut sends: VecDeque<Instant> = VecDeque::with_capacity(cfg.window.max(1));
     for (i, t_off) in times.iter().enumerate() {
         let target = Duration::from_secs_f64(*t_off);
         if let Some(sleep) = target.checked_sub(start.elapsed()) {
@@ -165,14 +194,15 @@ fn run_net_client(cfg: &NetLoadConfig, client_idx: usize, count: usize) -> Resul
             break;
         }
         stats.sent += 1;
+        sends.push_back(Instant::now());
         outstanding += 1;
         if outstanding >= cfg.window.max(1) {
-            recv_one(&mut client, &mut stats);
+            recv_one(&mut client, &mut sends, &mut stats);
             outstanding -= 1;
         }
     }
     for _ in 0..outstanding {
-        recv_one(&mut client, &mut stats);
+        recv_one(&mut client, &mut sends, &mut stats);
     }
     Ok(stats)
 }

@@ -1,18 +1,24 @@
 //! Serving metrics (S9): latency percentiles + throughput counters.
 //!
-//! Lock-free-ish: workers push latencies through a channel into the
-//! collector owned by whoever wants the report; percentiles computed on
-//! demand from a bounded reservoir.
+//! Latencies feed a fixed-bucket log₂ histogram ([`obs::hist`]): recording
+//! is O(1), percentile queries walk the cumulative bucket counts in
+//! O(buckets) with ≤3.1% relative error, and *every* sample is counted —
+//! unlike the bounded reservoir this replaced, which sampled lossily past
+//! its cap and clone-and-sorted the whole buffer on every query.
+//!
+//! Throughput is measured from the **first recorded sample**, not from
+//! construction: a server can sit idle arbitrarily long before the first
+//! request without deflating the reported rate.
 
 use std::time::Duration;
 
+use crate::obs::hist::HistSnapshot;
 use crate::util::json::Json;
 
-/// Bounded latency reservoir + counters.
+/// Latency histogram + serving counters.
 #[derive(Debug, Clone)]
 pub struct Metrics {
-    latencies_us: Vec<u64>,
-    cap: usize,
+    latencies: HistSnapshot,
     pub completed: u64,
     pub errors: u64,
     /// admission-control rejections (never reached a worker; disjoint from
@@ -20,7 +26,8 @@ pub struct Metrics {
     pub rejected: u64,
     pub batches: u64,
     pub batched_requests: u64,
-    started: std::time::Instant,
+    /// set on the first `record` — the throughput measurement anchor
+    first_sample: Option<std::time::Instant>,
 }
 
 impl Default for Metrics {
@@ -30,37 +37,30 @@ impl Default for Metrics {
 }
 
 impl Metrics {
-    pub fn new(cap: usize) -> Self {
+    /// `_cap` is kept for API compatibility with the old bounded reservoir;
+    /// the histogram is fixed-size regardless of sample count.
+    pub fn new(_cap: usize) -> Self {
         Metrics {
-            latencies_us: Vec::with_capacity(cap.min(4096)),
-            cap,
+            latencies: HistSnapshot::new(),
             completed: 0,
             errors: 0,
             rejected: 0,
             batches: 0,
             batched_requests: 0,
-            started: std::time::Instant::now(),
+            first_sample: None,
         }
     }
 
     pub fn record(&mut self, latency_us: u64, ok: bool) {
+        if self.first_sample.is_none() {
+            self.first_sample = Some(std::time::Instant::now());
+        }
         if ok {
             self.completed += 1;
         } else {
             self.errors += 1;
         }
-        if self.latencies_us.len() < self.cap {
-            self.latencies_us.push(latency_us);
-        } else {
-            // Deterministic reservoir replacement keyed on the *total* sample
-            // count: keying on `completed` alone aliased every error sample to
-            // one slot (it doesn't advance on errors), and the unchecked
-            // multiply overflowed (panicking in debug builds) once the counter
-            // grew past usize::MAX / 2654435761.
-            let total = (self.completed + self.errors) as usize;
-            let idx = total.wrapping_mul(2654435761) % self.cap;
-            self.latencies_us[idx] = latency_us;
-        }
+        self.latencies.record(latency_us);
     }
 
     /// Count an admission-control rejection (Overloaded etc.).
@@ -78,22 +78,20 @@ impl Metrics {
         self.batched_requests += size as u64;
     }
 
+    /// Latency quantile from the histogram — O(buckets), ≤3.1% relative
+    /// error, no sampling loss at any request count.
     pub fn percentile(&self, p: f64) -> Option<Duration> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let mut v = self.latencies_us.clone();
-        v.sort_unstable();
-        let idx = ((v.len() as f64 * p).floor() as usize).min(v.len() - 1);
-        Some(Duration::from_micros(v[idx]))
+        self.latencies.percentile(p).map(Duration::from_micros)
     }
 
+    /// Exact mean latency (histogram `sum`/`count` are exact).
     pub fn mean_latency(&self) -> Option<Duration> {
-        if self.latencies_us.is_empty() {
-            return None;
-        }
-        let sum: u64 = self.latencies_us.iter().sum();
-        Some(Duration::from_micros(sum / self.latencies_us.len() as u64))
+        self.latencies.mean().map(|m| Duration::from_micros(m as u64))
+    }
+
+    /// Owned copy of the latency histogram (mergeable across servers).
+    pub fn latency_histogram(&self) -> HistSnapshot {
+        self.latencies.clone()
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -104,12 +102,20 @@ impl Metrics {
         }
     }
 
+    /// Completed requests per second since the **first sample** (0.0 while
+    /// nothing has been recorded). Idle warmup before the first request no
+    /// longer deflates the rate.
     pub fn throughput_rps(&self) -> f64 {
-        let el = self.started.elapsed().as_secs_f64();
-        if el > 0.0 {
-            self.completed as f64 / el
-        } else {
-            0.0
+        match self.first_sample {
+            Some(t0) => {
+                let el = t0.elapsed().as_secs_f64();
+                if el > 0.0 {
+                    self.completed as f64 / el
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
         }
     }
 
@@ -172,43 +178,37 @@ mod tests {
     }
 
     #[test]
-    fn reservoir_caps_memory() {
+    fn histogram_counts_every_sample_past_any_cap() {
         let mut m = Metrics::new(128);
         for i in 0..10_000u64 {
             m.record(i, true);
         }
         assert!(m.percentile(0.5).is_some());
         assert_eq!(m.completed, 10_000);
+        assert_eq!(m.latency_histogram().count, 10_000);
     }
 
-    /// Regression (ISSUE 7): driving the reservoir past `cap` with mixed
-    /// ok/error samples used to panic in debug builds (`completed *
-    /// 2654435761` overflow) and aliased all error samples to a single slot
-    /// because `completed` doesn't advance on errors.
+    /// The histogram keeps mixed ok/error samples distinguishable at any
+    /// volume (the old reservoir aliased error samples to one slot past
+    /// `cap`) and huge counters can't overflow slot arithmetic — there are
+    /// no slots.
     #[test]
-    fn reservoir_survives_mixed_ok_error_past_cap() {
+    fn mixed_ok_error_samples_all_land_in_the_histogram() {
         let cap = 64usize;
         let mut m = Metrics::new(cap);
-        // fill the reservoir with zeros, then overflow it with errors only:
-        // with the old `completed`-keyed slot, every error would land in the
-        // same slot and at most one nonzero latency could survive.
         for _ in 0..cap {
             m.record(0, true);
         }
         for i in 0..(4 * cap as u64) {
-            m.record(1_000 + i, false);
+            m.record(100_000 + i, false);
         }
         assert_eq!(m.completed, cap as u64);
         assert_eq!(m.errors, 4 * cap as u64);
         assert_eq!(m.samples(), cap as u64 + 4 * cap as u64);
-        let distinct: std::collections::BTreeSet<u64> =
-            m.latencies_us.iter().copied().filter(|&l| l >= 1_000).collect();
-        assert!(
-            distinct.len() > 1,
-            "error samples aliased to a single reservoir slot: {distinct:?}"
-        );
-
-        // huge counters must not overflow the slot computation (debug panic)
+        // 4/5 of the samples are ~100ms errors: the tail must reflect them
+        // (the old aliasing bug left at most one surviving error sample).
+        let p99 = m.percentile(0.99).unwrap().as_micros() as f64;
+        assert!((p99 - 100_000.0).abs() / 100_000.0 < 0.05, "p99={p99}");
         let mut m2 = Metrics::new(8);
         m2.completed = u64::MAX / 2;
         m2.errors = u64::MAX / 2;
@@ -216,6 +216,26 @@ mod tests {
             m2.record(i, i % 3 == 0);
         }
         assert!(m2.percentile(0.99).is_some());
+    }
+
+    /// Regression (ISSUE 8): throughput used to be measured from
+    /// `Metrics::new()`, so idle warmup before the first request deflated
+    /// the reported rate. It now anchors at the first sample.
+    #[test]
+    fn throughput_anchors_at_first_sample_not_construction() {
+        let mut m = Metrics::new(16);
+        assert_eq!(m.throughput_rps(), 0.0);
+        std::thread::sleep(Duration::from_millis(120));
+        for _ in 0..50 {
+            m.record(10, true);
+        }
+        // 50 samples recorded within far less than the 120 ms idle gap: the
+        // rate anchored at the first sample must dwarf 50/0.12s ≈ 417/s.
+        assert!(
+            m.throughput_rps() > 1_000.0,
+            "idle warmup deflated throughput: {}",
+            m.throughput_rps()
+        );
     }
 
     #[test]

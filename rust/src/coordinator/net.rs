@@ -240,7 +240,8 @@ enum Outgoing {
     /// Already-formed reply (rejections, metrics).
     Immediate(Json),
     /// Admitted request: the writer waits for the coordinator's reply.
-    Pending { id: u64, pending: PendingRequest },
+    /// `variant` labels the reply-write stage histogram.
+    Pending { id: u64, variant: String, pending: PendingRequest },
 }
 
 /// Reader half of a connection. Returns the writer's handle so shutdown can
@@ -281,22 +282,43 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) -> Option<JoinHandle<()>> {
 }
 
 fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
+    use std::collections::BTreeMap;
+    // Reply-write stage (DESIGN.md §12): serialisation + socket write time
+    // per admitted request, labelled by variant. Handles are cached per
+    // connection so the registry map is touched once per variant.
+    let mut reply_hists: BTreeMap<String, &'static crate::obs::LogHistogram> = BTreeMap::new();
+    let reply_span = crate::obs::span::intern("coordinator/reply");
     for out in rx.iter() {
-        let reply = match out {
-            Outgoing::Immediate(j) => j,
-            Outgoing::Pending { id, pending } => match pending.wait_timeout(DRAIN_WAIT) {
-                Ok(resp) => response_json(id, &resp),
-                Err(mpsc::RecvTimeoutError::Disconnected) => {
-                    Rejection::ShuttingDown.to_json(Some(id))
-                }
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    let detail = format!("no reply within {DRAIN_WAIT:?}");
-                    Rejection::Internal { detail }.to_json(Some(id))
-                }
-            },
+        let (reply, variant) = match out {
+            Outgoing::Immediate(j) => (j, None),
+            Outgoing::Pending { id, variant, pending } => {
+                let j = match pending.wait_timeout(DRAIN_WAIT) {
+                    Ok(resp) => response_json(id, &resp),
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Rejection::ShuttingDown.to_json(Some(id))
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        let detail = format!("no reply within {DRAIN_WAIT:?}");
+                        Rejection::Internal { detail }.to_json(Some(id))
+                    }
+                };
+                (j, Some(variant))
+            }
         };
+        let _sp = crate::obs::span::SpanGuard::enter(reply_span);
+        let t0 = Instant::now();
         let payload = json::to_string(&reply);
-        if write_frame(&mut stream, payload.as_bytes()).is_err() {
+        let res = write_frame(&mut stream, payload.as_bytes());
+        if let Some(v) = variant {
+            let h = reply_hists.entry(v).or_insert_with_key(|v| {
+                crate::obs::histogram(&crate::obs::labeled(
+                    "coordinator_reply_us",
+                    &[("variant", v)],
+                ))
+            });
+            h.record(t0.elapsed().as_micros() as u64);
+        }
+        if res.is_err() {
             break;
         }
     }
@@ -363,8 +385,14 @@ fn handle_frame(bytes: &[u8], seq: &mut u64, ctx: &ConnCtx) -> Outgoing {
                 ("id", Json::Num(id as f64)),
                 ("metrics", m),
                 ("net", ctx.stats.to_json()),
+                ("registry", crate::obs::registry::global().to_json()),
             ]))
         }
+        "metrics_prometheus" => Outgoing::Immediate(Json::obj([
+            ("ok", Json::Bool(true)),
+            ("id", Json::Num(id as f64)),
+            ("prometheus", Json::str(crate::obs::registry::global().render_prometheus())),
+        ])),
         "infer" => handle_infer(&j, id, reject, ctx),
         other => {
             let detail = format!("unknown request type {other:?}");
@@ -418,7 +446,7 @@ fn handle_infer(
     match ctx.submitter.submit_bounded(variant, positions) {
         Ok(pending) => {
             ctx.stats.accepted.fetch_add(1, Ordering::Relaxed);
-            Outgoing::Pending { id, pending }
+            Outgoing::Pending { id, variant: variant.to_string(), pending }
         }
         Err(SubmitError::Overloaded { depth, limit }) => {
             reject(Rejection::Overloaded { depth, limit }, Some(id))
@@ -516,7 +544,11 @@ pub struct NetReply {
 pub enum NetOutcome {
     Ok { energy_ev: f32, forces: Vec<f32>, latency_us: u64, batch_size: usize },
     Rejected { code: String, message: String },
-    Metrics { metrics: Json, net: Json },
+    /// `metrics` frame: serving metrics + front-end counters + the full
+    /// observability registry dump (counters/gauges/histograms).
+    Metrics { metrics: Json, net: Json, registry: Json },
+    /// `metrics_prometheus` frame: the registry in Prometheus text format.
+    Prometheus { text: String },
 }
 
 impl NetReply {
@@ -534,7 +566,10 @@ impl NetReply {
             NetOutcome::Metrics {
                 metrics: m.clone(),
                 net: j.get("net").cloned().unwrap_or(Json::Null),
+                registry: j.get("registry").cloned().unwrap_or(Json::Null),
             }
+        } else if let Some(p) = j.get("prometheus").and_then(|v| v.as_str()) {
+            NetOutcome::Prometheus { text: p.to_string() }
         } else {
             NetOutcome::Ok {
                 energy_ev: j.get("energy_ev").and_then(|v| v.as_f32()).unwrap_or(f32::NAN),
@@ -584,6 +619,14 @@ impl NetClient {
         self.send_payload(json::to_string(&j).as_bytes())
     }
 
+    pub fn send_metrics_prometheus(&mut self, id: u64) -> Result<()> {
+        let j = Json::obj([
+            ("type", Json::str("metrics_prometheus")),
+            ("id", Json::Num(id as f64)),
+        ]);
+        self.send_payload(json::to_string(&j).as_bytes())
+    }
+
     /// Raw frame escape hatch (tests: malformed payloads).
     pub fn send_payload(&mut self, payload: &[u8]) -> Result<()> {
         write_frame(&mut self.stream, payload).context("writing frame")?;
@@ -611,6 +654,12 @@ impl NetClient {
     /// Blocking metrics round trip.
     pub fn metrics(&mut self) -> Result<NetReply> {
         self.send_metrics(0)?;
+        self.recv()
+    }
+
+    /// Blocking Prometheus-format metrics round trip.
+    pub fn metrics_prometheus(&mut self) -> Result<NetReply> {
+        self.send_metrics_prometheus(0)?;
         self.recv()
     }
 }

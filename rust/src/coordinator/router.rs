@@ -41,6 +41,16 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Variant label for per-stage metrics (mock backends report `"mock"`).
+    pub fn variant_label(&self) -> &str {
+        match self {
+            Backend::Pjrt { variant, .. }
+            | Backend::Reference { variant, .. }
+            | Backend::Gnn { variant, .. } => variant,
+            Backend::Mock { .. } | Backend::SlowMock { .. } => "mock",
+        }
+    }
+
     /// Pick the strongest backend this build can serve for `variant`: PJRT
     /// when compiled in and artifacts exist, the reference backend otherwise.
     pub fn auto(artifacts_dir: &str, variant: &str) -> Backend {
@@ -103,6 +113,13 @@ fn worker_loop(
     inflight: Arc<AtomicUsize>,
     metrics: Arc<Mutex<Metrics>>,
 ) {
+    // Per-variant inference stage histogram (µs per batch) + trace span.
+    let inference_us = crate::obs::histogram(&crate::obs::labeled(
+        "coordinator_inference_us",
+        &[("variant", backend.variant_label())],
+    ));
+    let infer_span = crate::obs::span::intern("coordinator/inference");
+
     // Build the evaluator inside the thread (PJRT handles are thread-confined
     // and never migrate; the reference backend is plain data and is simply
     // constructed where it is used).
@@ -158,6 +175,8 @@ fn worker_loop(
 
     for batch in rx.iter() {
         let bsize = batch.len();
+        let _sp = crate::obs::span::SpanGuard::enter(infer_span);
+        let t0 = Instant::now();
         let results: Vec<Result<(f32, Vec<f32>), String>> = match &eval {
             Eval::Model(ff) => {
                 let positions: Vec<Vec<f32>> =
@@ -189,6 +208,7 @@ fn worker_loop(
                     .collect()
             }
         };
+        inference_us.record(t0.elapsed().as_micros() as u64);
 
         let now = Instant::now();
         {

@@ -238,6 +238,26 @@ impl Drop for Server {
     }
 }
 
+/// Per-variant coordinator stage histograms (DESIGN.md §12): queue wait per
+/// request and batch age (oldest member's wait) per dispatched batch, both
+/// in microseconds. Registered once per variant in the global registry.
+struct StageHists {
+    queue_us: &'static crate::obs::LogHistogram,
+    batch_us: &'static crate::obs::LogHistogram,
+}
+
+fn stage_hists(variant: &str) -> StageHists {
+    let lbl = [("variant", variant)];
+    StageHists {
+        queue_us: crate::obs::histogram(&crate::obs::labeled("coordinator_queue_us", &lbl)),
+        batch_us: crate::obs::histogram(&crate::obs::labeled("coordinator_batch_us", &lbl)),
+    }
+}
+
+fn stage_map(pools: &BTreeMap<String, Pool>) -> BTreeMap<String, StageHists> {
+    pools.keys().map(|k| (k.clone(), stage_hists(k))).collect()
+}
+
 /// Route one request into its variant's batcher; unknown variants get an
 /// immediate typed error reply (counted in `errors`).
 fn route(
@@ -266,13 +286,23 @@ fn route(
 fn flush_ready(
     batchers: &mut BTreeMap<String, Batcher>,
     pools: &BTreeMap<String, Pool>,
+    stages: &BTreeMap<String, StageHists>,
     metrics: &Arc<Mutex<Metrics>>,
     force: bool,
 ) {
+    let _s = crate::span!("coordinator/flush");
     let now = Instant::now();
     for (name, b) in batchers.iter_mut() {
         while !b.is_empty() && (force || b.ready(now)) {
             let batch = b.take_batch();
+            if let Some(sh) = stages.get(name) {
+                for req in &batch {
+                    sh.queue_us.record(req.enqueued.elapsed().as_micros() as u64);
+                }
+                if let Some(oldest) = batch.iter().map(|r| r.enqueued).min() {
+                    sh.batch_us.record(oldest.elapsed().as_micros() as u64);
+                }
+            }
             let failed = match pools.get(name) {
                 Some(pool) => match pool.dispatch(batch) {
                     Ok(()) => continue,
@@ -304,6 +334,7 @@ fn dispatcher_loop(
         .keys()
         .map(|k| (k.clone(), Batcher::new(policy.clone())))
         .collect();
+    let stages = stage_map(&pools);
 
     'outer: loop {
         // sleep until the nearest deadline (or block if queues are empty)
@@ -333,12 +364,12 @@ fn dispatcher_loop(
                         route(&mut batchers, &metrics, req);
                     }
                 }
-                flush_ready(&mut batchers, &pools, &metrics, true);
+                flush_ready(&mut batchers, &pools, &stages, &metrics, true);
                 break 'outer;
             }
             None => {} // deadline tick
         }
-        flush_ready(&mut batchers, &pools, &metrics, false);
+        flush_ready(&mut batchers, &pools, &stages, &metrics, false);
     }
 
     pools.into_values().collect()
@@ -474,7 +505,7 @@ mod tests {
         let (live_req, live_rx) = mk(100, "live");
         batchers.get_mut("live").unwrap().push(live_req);
 
-        flush_ready(&mut batchers, &pools, &metrics, true);
+        flush_ready(&mut batchers, &pools, &stage_map(&pools), &metrics, true);
 
         // every dead-variant request gets a typed error, none stranded
         for (i, rx) in dead_rxs.into_iter().enumerate() {

@@ -18,6 +18,7 @@
 //! * [`md`] — NVE/NVT integrators, classical oracle, drift tracking (Fig. 3)
 //! * [`quant`] — packed INT4/INT8 images, integer GEMMs, S² codebooks (Table IV)
 //! * [`lee`] — Local Equivariance Error harness (Table III)
+//! * [`obs`] — metrics registry, log₂-bucket histograms, span tracing
 //! * [`costmodel`] — Table I complexity model
 //! * [`geometry`], [`molecule`], [`util`] — shared substrates
 
@@ -28,6 +29,7 @@ pub mod lee;
 pub mod md;
 pub mod model;
 pub mod molecule;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod util;

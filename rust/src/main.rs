@@ -13,6 +13,7 @@
 //!                 [--listen ADDR] [--rate R]
 //! gaq-md lee      [--artifacts DIR] [--variants a,b] [--backend B]
 //!                 [--rotations N]
+//! gaq-md trace-check PATH [--expect a,b] [--parent NAME] [--coverage F]
 //! ```
 //!
 //! `--backend` selects the execution backend per `runtime::BackendChoice`:
@@ -29,6 +30,12 @@
 //! real sockets, one connection per client; `--requests 0` serves until
 //! stdin closes instead of generating load.
 //!
+//! Every subcommand accepts `--trace-out PATH` (or the `GAQ_TRACE` env
+//! var): span tracing is enabled for the run and a Chrome trace-event JSON
+//! file (Perfetto / `chrome://tracing` loadable) is written at exit.
+//! `trace-check` validates such a file — span-name roster + parent/child
+//! wall-time coverage — and is what `make trace-smoke` runs.
+//!
 //! All experiment tables/figures have dedicated binaries under examples/
 //! and benches/; this CLI is the operational front-end.
 
@@ -41,7 +48,8 @@ use gaq_md::md::integrator::MdState;
 use gaq_md::md::{integrator, ForceProvider};
 use gaq_md::runtime::{self, BackendChoice, Manifest};
 use gaq_md::util::cli::Args;
-use gaq_md::util::error::Result;
+use gaq_md::util::error::{Context, Result};
+use gaq_md::util::json::Json;
 use gaq_md::util::prng::Rng;
 
 fn main() {
@@ -58,32 +66,56 @@ fn main() {
 }
 
 fn run(cmd: &str, args: &Args) -> Result<()> {
-    match cmd {
+    // Span tracing is process-global: enable before the command runs, export
+    // the ring at quiescence after it returns (DESIGN.md §12). trace-check is
+    // exempt — exporting would clobber the file it is validating when
+    // GAQ_TRACE is set in the ambient environment.
+    let trace_out = if cmd == "trace-check" { None } else { trace_out_path(args) };
+    if trace_out.is_some() {
+        gaq_md::obs::enable_tracing(gaq_md::obs::span::DEFAULT_RING_CAPACITY);
+    }
+    let res = match cmd {
         "info" => cmd_info(args),
         "predict" => cmd_predict(args),
         "md" => cmd_md(args),
         "serve" => cmd_serve(args),
         "lee" => cmd_lee(args),
+        "trace-check" => cmd_trace_check(args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
         }
         other => bail!("unknown subcommand {other:?}; see `gaq-md help`"),
+    };
+    if let Some(path) = trace_out {
+        match gaq_md::obs::export_chrome_trace(&path) {
+            Ok(n) => eprintln!("trace: wrote {n} spans to {path}"),
+            Err(e) => eprintln!("trace: export failed: {e:#}"),
+        }
     }
+    res
+}
+
+/// `--trace-out PATH` (flag wins) or the `GAQ_TRACE` environment variable.
+fn trace_out_path(args: &Args) -> Option<String> {
+    args.get("trace-out")
+        .map(|s| s.to_string())
+        .or_else(|| std::env::var("GAQ_TRACE").ok().filter(|s| !s.is_empty()))
 }
 
 const HELP: &str = "\
 gaq-md — Geometric-Aware Quantization for SO(3)-equivariant GNNs (L3 runtime)
 
 USAGE:
-  gaq-md <info|predict|md|serve|lee|help> [--options]
+  gaq-md <info|predict|md|serve|lee|trace-check|help> [--options]
 
 SUBCOMMANDS:
-  info      show manifest: molecule, variants, training metrics
-  predict   single energy/force inference on the reference geometry
-  md        NVE molecular dynamics with a compiled quantized force field
-  serve     run the batching server against a synthetic request load
-  lee       measure Local Equivariance Error of deployed variants
+  info         show manifest: molecule, variants, training metrics
+  predict      single energy/force inference on the reference geometry
+  md           NVE molecular dynamics with a compiled quantized force field
+  serve        run the batching server against a synthetic request load
+  lee          measure Local Equivariance Error of deployed variants
+  trace-check  validate a --trace-out JSON file (span roster + coverage)
 
 COMMON OPTIONS:
   --artifacts DIR    artifact directory (default: ./artifacts, env GAQ_ARTIFACTS)
@@ -93,6 +125,16 @@ COMMON OPTIONS:
                      SO(3)-equivariant network, no artifacts required)
   --replicas N       md: N concurrent independent trajectories;
                      serve: N concurrent client threads/connections (default 1)
+  --trace-out PATH   enable span tracing for the run and write a Chrome
+                     trace-event JSON file (Perfetto loadable) at exit;
+                     env GAQ_TRACE is the same switch
+
+TRACE-CHECK OPTIONS (gaq-md trace-check PATH):
+  --expect a,b       span names that must appear in the trace
+                     (default: md/step,md/integrate,md/force)
+  --parent NAME      span whose direct children must cover its wall time
+                     (default: md/step)
+  --coverage F       minimum child/parent duration ratio (default: 0.95)
 
 SERVE OPTIONS:
   --listen ADDR      bind a TCP front-end (length-prefixed JSON protocol,
@@ -106,6 +148,13 @@ SERVE OPTIONS:
   --max-queue-depth N  per-variant admission bound: submissions beyond this
                      many in-system requests are rejected Overloaded
                      instead of queueing unboundedly (default 1024)
+
+METRICS (network mode):
+  the TCP protocol serves `{\"type\":\"metrics\"}` (JSON registry dump under
+  `registry`: counters / gauges / per-stage latency histograms) and
+  `{\"type\":\"metrics_prometheus\"}` (text exposition format under
+  `prometheus`); after a load run the CLI scrapes and prints both the
+  server metrics and the client-side loadgen latency report
 
 ENVIRONMENT:
   GAQ_THREADS        worker budget of the data-parallel pool
@@ -511,6 +560,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let m = server.metrics();
     println!("completed {submitted} requests in {wall:?} ({errors} errors, {clients} clients)");
     println!("{}", m.report());
+    println!(
+        "registry: {}",
+        gaq_md::util::json::to_string(&gaq_md::obs::registry::global().to_json())
+    );
     println!("end-to-end throughput: {:.1} req/s", submitted as f64 / wall.as_secs_f64());
     server.shutdown();
     if errors > 0 || submitted < n_requests {
@@ -533,6 +586,7 @@ fn serve_over_tcp(
 ) -> Result<()> {
     let n_requests = args.get_usize("requests", 256);
     let clients = args.get_usize("replicas", 1).max(1);
+    let choice = backend_choice(args)?;
     let net = NetServer::start(server, NetConfig::new(listen).with_expected_len(base.len()))?;
     let addr = net.local_addr().to_string();
     println!("listening on {addr} (length-prefixed JSON; DESIGN.md §11)");
@@ -558,24 +612,182 @@ fn serve_over_tcp(
     let stats = loadgen::run_net_load(&cfg);
     let wall = t0.elapsed();
 
-    // metrics endpoint round trip (also exercises the `metrics` frame type)
+    // metrics endpoint round trip (also exercises the `metrics` frame type);
+    // the registry check result is deferred so the server still shuts down
+    let mut registry_check: Result<()> = Ok(());
     if let Ok(reply) = NetClient::connect(&addr).and_then(|mut c| c.metrics()) {
-        if let NetOutcome::Metrics { metrics, net } = reply.outcome {
-            println!("metrics: {}", gaq_md::util::json::to_string(&metrics));
-            println!("net:     {}", gaq_md::util::json::to_string(&net));
+        if let NetOutcome::Metrics { metrics, net, registry } = reply.outcome {
+            println!("metrics:  {}", gaq_md::util::json::to_string(&metrics));
+            println!("net:      {}", gaq_md::util::json::to_string(&net));
+            println!("registry: {}", gaq_md::util::json::to_string(&registry));
+            if stats.completed > 0 {
+                registry_check = validate_serve_registry(&registry, variants, choice);
+            }
         }
     }
+    // client-side latency report (benches/coordinator.rs parses this line)
+    println!("loadgen: {}", gaq_md::util::json::to_string(&stats.to_json()));
     println!(
         "completed {}/{} over TCP in {wall:?} ({} rejected, {} transport errors, \
          {clients} connections)",
         stats.completed, stats.sent, stats.rejected, stats.transport_errors
     );
     net.shutdown();
+    if stats.sent != stats.completed + stats.rejected + stats.transport_errors {
+        bail!(
+            "request accounting broken: sent {} != completed {} + rejected {} + transport {}",
+            stats.sent,
+            stats.completed,
+            stats.rejected,
+            stats.transport_errors
+        );
+    }
     if stats.transport_errors > 0 {
         bail!("network serving failed: {} transport errors ({stats:?})", stats.transport_errors);
     }
     if stats.completed == 0 {
         bail!("network serving failed: no request completed ({stats:?})");
+    }
+    registry_check
+}
+
+/// `count` of histogram `name` in a registry dump (0 if absent or empty).
+fn hist_count(registry: &Json, name: &str) -> u64 {
+    registry.at(&["histograms", name, "count"]).and_then(Json::as_u64).unwrap_or(0)
+}
+
+/// True if any registry histogram whose name starts with `prefix` has
+/// samples. Model-stage names embed the *engine's* variant label (which
+/// need not match the serving roster), so those checks go by prefix.
+fn any_hist_nonzero(registry: &Json, prefix: &str) -> bool {
+    registry
+        .get("histograms")
+        .and_then(Json::as_obj)
+        .map(|map| {
+            map.iter().any(|(k, v)| {
+                k.starts_with(prefix) && v.get("count").and_then(Json::as_u64).unwrap_or(0) > 0
+            })
+        })
+        .unwrap_or(false)
+}
+
+/// Serve-smoke gate: after a load run with completed requests, every
+/// serving variant must have nonzero coordinator stage histograms
+/// (queue → batch → inference → reply), and when the in-tree gnn backend
+/// ran, the model/kernel stage histograms must be populated too.
+fn validate_serve_registry(
+    registry: &Json,
+    variants: &[String],
+    choice: BackendChoice,
+) -> Result<()> {
+    const STAGES: [&str; 4] = [
+        "coordinator_queue_us",
+        "coordinator_batch_us",
+        "coordinator_inference_us",
+        "coordinator_reply_us",
+    ];
+    for v in variants {
+        for stage in STAGES {
+            let name = format!("{stage}{{variant=\"{v}\"}}");
+            if hist_count(registry, &name) == 0 {
+                bail!("registry histogram {name} is empty after a completed load run");
+            }
+        }
+    }
+    if choice == BackendChoice::Gnn {
+        for prefix in
+            ["model_message_ns", "model_attention_ns", "model_neighbor_build_ns", "gemm_time_ns"]
+        {
+            if !any_hist_nonzero(registry, prefix) {
+                bail!("no nonzero {prefix}* histogram after a gnn-backend load run");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// `trace-check PATH`: validate a Chrome trace written by `--trace-out`.
+///
+/// Two gates (both from the ISSUE's acceptance criteria): every `--expect`
+/// span name must appear, and the direct children of `--parent` spans must
+/// cover at least `--coverage` of their summed wall time — i.e. the
+/// instrumentation accounts for the step, not a sliver of it.
+fn cmd_trace_check(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.get(1) else {
+        bail!("usage: gaq-md trace-check PATH [--expect a,b] [--parent NAME] [--coverage F]");
+    };
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading trace {path}"))?;
+    let doc = gaq_md::util::json::parse(&text)
+        .with_context(|| format!("trace {path} is not valid JSON"))?;
+    let Some(events) = doc.get("traceEvents").and_then(Json::as_arr) else {
+        bail!("trace {path} has no traceEvents array");
+    };
+    if events.is_empty() {
+        bail!("trace {path} has zero events (was tracing enabled?)");
+    }
+
+    let names: std::collections::BTreeSet<&str> =
+        events.iter().filter_map(|ev| ev.get("name").and_then(Json::as_str)).collect();
+    let expect = args.get_or("expect", "md/step,md/integrate,md/force");
+    let missing: Vec<&str> = expect
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty() && !names.contains(s))
+        .collect();
+    if !missing.is_empty() {
+        bail!(
+            "trace {path} is missing expected spans {missing:?} (has {} names: {:?})",
+            names.len(),
+            names
+        );
+    }
+
+    // Coverage: sum of direct-child durations over sum of parent durations.
+    // Children of md/step (integrate / force / thermostat) are sequential
+    // and non-overlapping, so this ratio is the instrumented fraction.
+    let parent_name = args.get_or("parent", "md/step");
+    let min_cov = args.get_f64("coverage", 0.95);
+    let mut parent_ids: std::collections::BTreeSet<u64> = Default::default();
+    let mut parent_dur = 0.0f64;
+    for ev in events {
+        if ev.get("name").and_then(Json::as_str) == Some(parent_name) {
+            if let Some(id) = ev.at(&["args", "id"]).and_then(Json::as_u64) {
+                parent_ids.insert(id);
+            }
+            parent_dur += ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+        }
+    }
+    if parent_ids.is_empty() {
+        bail!("trace {path} has no {parent_name:?} spans to measure coverage against");
+    }
+    let mut child_dur = 0.0f64;
+    for ev in events {
+        if ev.get("name").and_then(Json::as_str) == Some(parent_name) {
+            continue;
+        }
+        let under_parent = ev
+            .at(&["args", "parent"])
+            .and_then(Json::as_u64)
+            .is_some_and(|p| parent_ids.contains(&p));
+        if under_parent {
+            child_dur += ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0);
+        }
+    }
+    let cov = if parent_dur > 0.0 { child_dur / parent_dur } else { 1.0 };
+    println!(
+        "trace-check {path}: {} events, {} span names, {} {parent_name:?} spans, \
+         direct-child coverage {:.1}%",
+        events.len(),
+        names.len(),
+        parent_ids.len(),
+        cov * 100.0
+    );
+    if cov < min_cov {
+        bail!(
+            "direct children cover {:.1}% of {parent_name:?} wall time (required {:.1}%)",
+            cov * 100.0,
+            min_cov * 100.0
+        );
     }
     Ok(())
 }

@@ -4,6 +4,18 @@
 //! least-squares line through the total-energy trace — plus an explosion
 //! detector (energy or coordinates diverging).
 
+/// Per-atom excursion from the first sample (meV/atom) beyond which a
+/// recorded sample counts as a conservation violation. Healthy NVE runs of
+/// this system stay well under 1 meV/atom; 50 is unambiguous pathology.
+const VIOLATION_MEV_ATOM: f64 = 50.0;
+
+/// Global tally of conservation violations across every tracker (registry
+/// name `md_conservation_violations_total`; DESIGN.md §12).
+fn violations_counter() -> &'static crate::obs::Counter {
+    static C: std::sync::OnceLock<&'static crate::obs::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::obs::counter("md_conservation_violations_total"))
+}
+
 /// Accumulates (t, E_total) samples during an NVE run.
 #[derive(Debug, Default, Clone)]
 pub struct DriftTracker {
@@ -11,6 +23,7 @@ pub struct DriftTracker {
     pub e_total: Vec<f64>,
     pub temperature: Vec<f64>,
     n_atoms: usize,
+    violations: u64,
 }
 
 /// Summary of an NVE trajectory's energy behaviour.
@@ -24,6 +37,8 @@ pub struct DriftReport {
     pub rms_fluct_mev_atom: f64,
     pub exploded: bool,
     pub steps: usize,
+    /// samples that violated conservation (see [`DriftTracker::violations`])
+    pub violations: u64,
 }
 
 impl DriftTracker {
@@ -32,9 +47,26 @@ impl DriftTracker {
     }
 
     pub fn record(&mut self, t_fs: f64, e_total_ev: f64, temperature_k: f64) {
+        let e0 = self.e_total.first().copied().unwrap_or(e_total_ev);
+        let na = self.n_atoms.max(1) as f64;
+        let bad = !e_total_ev.is_finite()
+            || !temperature_k.is_finite()
+            || temperature_k > 1e5
+            || (e_total_ev - e0).abs() * 1000.0 / na > VIOLATION_MEV_ATOM;
+        if bad {
+            self.violations += 1;
+            violations_counter().inc();
+        }
         self.times_fs.push(t_fs);
         self.e_total.push(e_total_ev);
         self.temperature.push(temperature_k);
+    }
+
+    /// Samples so far that violated conservation (non-finite energy or
+    /// temperature, T > 1e5 K, or an excursion past
+    /// [`VIOLATION_MEV_ATOM`] meV/atom from the first sample).
+    pub fn violations(&self) -> u64 {
+        self.violations
     }
 
     /// True once the trajectory has blown up (NaN or absurd energy/T).
@@ -57,6 +89,7 @@ impl DriftTracker {
                 rms_fluct_mev_atom: 0.0,
                 exploded: self.exploded(),
                 steps: n,
+                violations: self.violations,
             };
         }
         let na = self.n_atoms.max(1) as f64;
@@ -75,6 +108,7 @@ impl DriftTracker {
                 rms_fluct_mev_atom: f64::INFINITY,
                 exploded: true,
                 steps: n,
+                violations: self.violations,
             };
         }
         let m = pts.len() as f64;
@@ -111,6 +145,7 @@ impl DriftTracker {
             rms_fluct_mev_atom: rms,
             exploded: self.exploded(),
             steps: n,
+            violations: self.violations,
         }
     }
 }
@@ -149,5 +184,20 @@ mod tests {
         d.record(1.0, f64::NAN, 300.0);
         assert!(d.exploded());
         assert!(d.report().exploded);
+    }
+
+    #[test]
+    fn counts_conservation_violations() {
+        let global0 = violations_counter().get();
+        let mut d = DriftTracker::new(2);
+        d.record(0.0, 1.0, 300.0); // baseline, fine
+        d.record(1.0, 1.0001, 300.0); // tiny excursion, fine
+        assert_eq!(d.violations(), 0);
+        d.record(2.0, 1.5, 300.0); // 250 meV/atom excursion
+        d.record(3.0, f64::NAN, 300.0); // non-finite energy
+        d.record(4.0, 1.0, 2e5); // absurd temperature
+        assert_eq!(d.violations(), 3);
+        assert_eq!(d.report().violations, 3);
+        assert!(violations_counter().get() >= global0 + 3);
     }
 }

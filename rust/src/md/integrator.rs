@@ -7,6 +7,36 @@ use super::{ForceProvider, ACC_UNIT, KB_EV};
 use crate::util::error::Result;
 use crate::util::prng::Rng;
 
+/// Per-stage MD observability (DESIGN.md §12): span names double as the
+/// trace-event labels (`md/step` > `md/integrate` / `md/force` /
+/// `md/thermostat`), histograms record nanoseconds always.
+struct MdObs {
+    step: u32,
+    integrate: u32,
+    force: u32,
+    thermostat: u32,
+    step_ns: &'static crate::obs::LogHistogram,
+    integrate_ns: &'static crate::obs::LogHistogram,
+    force_ns: &'static crate::obs::LogHistogram,
+    thermostat_ns: &'static crate::obs::LogHistogram,
+    steps: &'static crate::obs::Counter,
+}
+
+fn md_obs() -> &'static MdObs {
+    static OBS: std::sync::OnceLock<MdObs> = std::sync::OnceLock::new();
+    OBS.get_or_init(|| MdObs {
+        step: crate::obs::span::intern("md/step"),
+        integrate: crate::obs::span::intern("md/integrate"),
+        force: crate::obs::span::intern("md/force"),
+        thermostat: crate::obs::span::intern("md/thermostat"),
+        step_ns: crate::obs::histogram("md_step_ns"),
+        integrate_ns: crate::obs::histogram("md_integrate_ns"),
+        force_ns: crate::obs::histogram("md_force_ns"),
+        thermostat_ns: crate::obs::histogram("md_thermostat_ns"),
+        steps: crate::obs::counter("md_steps_total"),
+    })
+}
+
 /// Mutable MD state.
 #[derive(Debug, Clone)]
 pub struct MdState {
@@ -81,24 +111,36 @@ pub fn verlet_step(
     dt_fs: f64,
     provider: &mut dyn ForceProvider,
 ) -> Result<(f64, Vec<f64>)> {
+    let obs = md_obs();
+    let _step = crate::obs::SpanGuard::enter_timed(obs.step, obs.step_ns);
+    obs.steps.inc();
     let n = state.n_atoms();
-    // half-kick + drift
-    for i in 0..n {
-        let inv_m = ACC_UNIT / state.masses[i];
-        for ax in 0..3 {
-            let idx = 3 * i + ax;
-            state.velocities[idx] += 0.5 * dt_fs * forces[idx] * inv_m;
-            state.positions[idx] += dt_fs * state.velocities[idx];
+    {
+        // half-kick + drift
+        let _t = crate::obs::SpanGuard::enter_timed(obs.integrate, obs.integrate_ns);
+        for i in 0..n {
+            let inv_m = ACC_UNIT / state.masses[i];
+            for ax in 0..3 {
+                let idx = 3 * i + ax;
+                state.velocities[idx] += 0.5 * dt_fs * forces[idx] * inv_m;
+                state.positions[idx] += dt_fs * state.velocities[idx];
+            }
         }
     }
     // force at new positions
-    let (e, new_forces) = provider.energy_forces(&state.positions)?;
-    // second half-kick
-    for i in 0..n {
-        let inv_m = ACC_UNIT / state.masses[i];
-        for ax in 0..3 {
-            let idx = 3 * i + ax;
-            state.velocities[idx] += 0.5 * dt_fs * new_forces[idx] * inv_m;
+    let (e, new_forces) = {
+        let _t = crate::obs::SpanGuard::enter_timed(obs.force, obs.force_ns);
+        provider.energy_forces(&state.positions)?
+    };
+    {
+        // second half-kick
+        let _t = crate::obs::SpanGuard::enter_timed(obs.integrate, obs.integrate_ns);
+        for i in 0..n {
+            let inv_m = ACC_UNIT / state.masses[i];
+            for ax in 0..3 {
+                let idx = 3 * i + ax;
+                state.velocities[idx] += 0.5 * dt_fs * new_forces[idx] * inv_m;
+            }
         }
     }
     state.time_fs += dt_fs;
@@ -116,24 +158,37 @@ pub fn langevin_step(
     rng: &mut Rng,
     provider: &mut dyn ForceProvider,
 ) -> Result<(f64, Vec<f64>)> {
+    let obs = md_obs();
+    let _step = crate::obs::SpanGuard::enter_timed(obs.step, obs.step_ns);
+    obs.steps.inc();
     let n = state.n_atoms();
     let c1 = (-gamma * dt_fs).exp();
-    for i in 0..n {
-        let inv_m = ACC_UNIT / state.masses[i];
-        let sigma = (KB_EV * t_kelvin * ACC_UNIT / state.masses[i] * (1.0 - c1 * c1)).sqrt();
-        for ax in 0..3 {
-            let idx = 3 * i + ax;
-            state.velocities[idx] += 0.5 * dt_fs * forces[idx] * inv_m;
-            state.velocities[idx] = c1 * state.velocities[idx] + sigma * rng.gaussian();
-            state.positions[idx] += dt_fs * state.velocities[idx];
+    {
+        let _t = crate::obs::SpanGuard::enter_timed(obs.thermostat, obs.thermostat_ns);
+        for i in 0..n {
+            let inv_m = ACC_UNIT / state.masses[i];
+            let sigma =
+                (KB_EV * t_kelvin * ACC_UNIT / state.masses[i] * (1.0 - c1 * c1)).sqrt();
+            for ax in 0..3 {
+                let idx = 3 * i + ax;
+                state.velocities[idx] += 0.5 * dt_fs * forces[idx] * inv_m;
+                state.velocities[idx] = c1 * state.velocities[idx] + sigma * rng.gaussian();
+                state.positions[idx] += dt_fs * state.velocities[idx];
+            }
         }
     }
-    let (e, new_forces) = provider.energy_forces(&state.positions)?;
-    for i in 0..n {
-        let inv_m = ACC_UNIT / state.masses[i];
-        for ax in 0..3 {
-            let idx = 3 * i + ax;
-            state.velocities[idx] += 0.5 * dt_fs * new_forces[idx] * inv_m;
+    let (e, new_forces) = {
+        let _t = crate::obs::SpanGuard::enter_timed(obs.force, obs.force_ns);
+        provider.energy_forces(&state.positions)?
+    };
+    {
+        let _t = crate::obs::SpanGuard::enter_timed(obs.thermostat, obs.thermostat_ns);
+        for i in 0..n {
+            let inv_m = ACC_UNIT / state.masses[i];
+            for ax in 0..3 {
+                let idx = 3 * i + ax;
+                state.velocities[idx] += 0.5 * dt_fs * new_forces[idx] * inv_m;
+            }
         }
     }
     state.time_fs += dt_fs;

@@ -121,6 +121,48 @@ struct PriorPair {
     r0: f64,
 }
 
+/// One instrumented network stage: a span name plus the per-variant
+/// duration histogram it always records into (DESIGN.md §12).
+struct Stage {
+    span_id: u32,
+    ns: &'static crate::obs::LogHistogram,
+}
+
+impl Stage {
+    fn new(span_name: &'static str, base: &str, variant: &str) -> Stage {
+        Stage {
+            span_id: crate::obs::span::intern(span_name),
+            ns: crate::obs::histogram(&crate::obs::labeled(base, &[("variant", variant)])),
+        }
+    }
+
+    fn enter(&self) -> crate::obs::SpanGuard {
+        crate::obs::SpanGuard::enter_timed(self.span_id, self.ns)
+    }
+}
+
+/// Per-variant handles for the five EGNN stages, resolved once at model
+/// construction so `network` never touches the registry name map.
+struct StageObs {
+    message: Stage,
+    attention: Stage,
+    update: Stage,
+    vector: Stage,
+    readout: Stage,
+}
+
+impl StageObs {
+    fn for_variant(variant: &str) -> StageObs {
+        StageObs {
+            message: Stage::new("egnn/message", "model_message_ns", variant),
+            attention: Stage::new("egnn/attention", "model_attention_ns", variant),
+            update: Stage::new("egnn/update", "model_update_ns", variant),
+            vector: Stage::new("egnn/vector", "model_vector_ns", variant),
+            readout: Stage::new("egnn/readout", "model_readout_ns", variant),
+        }
+    }
+}
+
 /// A loaded, calibrated EGNN for one variant over one molecule.
 pub struct EgnnModel {
     cfg: EgnnConfig,
@@ -133,6 +175,8 @@ pub struct EgnnModel {
     prior_pairs: Vec<PriorPair>,
     /// direct force head scale (calibrated, variant-independent)
     f_scale: f64,
+    /// per-variant stage timing handles
+    stages: StageObs,
 }
 
 impl EgnnModel {
@@ -204,6 +248,7 @@ impl EgnnModel {
             vec_scheme: VecScheme::for_variant(&variant.name, &variant.scheme),
             prior_pairs,
             f_scale: 1.0,
+            stages: StageObs::for_variant(&variant.name),
         };
 
         // calibrate the force head on the unquantized twin at the reference
@@ -310,53 +355,65 @@ impl EgnnModel {
         let mut upd = vec![0f32; n * f];
 
         for block in &self.blocks {
-            // edge inputs: [h_receiver, h_sender, rbf]
-            for (e, edge) in g.edges.iter().enumerate() {
-                let row = &mut x[e * (2 * f + r)..(e + 1) * (2 * f + r)];
-                row[..f].copy_from_slice(&h[edge.dst * f..(edge.dst + 1) * f]);
-                row[f..2 * f].copy_from_slice(&h[edge.src * f..(edge.src + 1) * f]);
-                row[2 * f..].copy_from_slice(&rbf[e * r..(e + 1) * r]);
+            {
+                // edge inputs: [h_receiver, h_sender, rbf] -> messages
+                let _t = self.stages.message.enter();
+                for (e, edge) in g.edges.iter().enumerate() {
+                    let row = &mut x[e * (2 * f + r)..(e + 1) * (2 * f + r)];
+                    row[..f].copy_from_slice(&h[edge.dst * f..(edge.dst + 1) * f]);
+                    row[f..2 * f].copy_from_slice(&h[edge.src * f..(edge.src + 1) * f]);
+                    row[2 * f..].copy_from_slice(&rbf[e * r..(e + 1) * r]);
+                }
+                run(&block.msg, &x, ne, &mut msg);
+                silu_inplace(&mut msg);
             }
-            run(&block.msg, &x, ne, &mut msg);
-            silu_inplace(&mut msg);
 
-            // robust attention over each receiver's neighborhood
-            run(&block.att, &msg, ne, &mut logits);
-            robust_attention_norm(&logits, &env, &g.recv, &mut att);
-
-            // attention-weighted scalar aggregation (receiver-major order)
-            agg.fill(0.0);
-            for (e, edge) in g.edges.iter().enumerate() {
-                let dst = &mut agg[edge.dst * f..(edge.dst + 1) * f];
-                for (d, &m_e) in dst.iter_mut().zip(&msg[e * f..(e + 1) * f]) {
-                    *d += att[e] * m_e;
+            {
+                // robust attention over each receiver's neighborhood, then
+                // attention-weighted scalar aggregation (receiver-major)
+                let _t = self.stages.attention.enter();
+                run(&block.att, &msg, ne, &mut logits);
+                robust_attention_norm(&logits, &env, &g.recv, &mut att);
+                agg.fill(0.0);
+                for (e, edge) in g.edges.iter().enumerate() {
+                    let dst = &mut agg[edge.dst * f..(edge.dst + 1) * f];
+                    for (d, &m_e) in dst.iter_mut().zip(&msg[e * f..(e + 1) * f]) {
+                        *d += att[e] * m_e;
+                    }
                 }
             }
 
-            // residual scalar update
-            for i in 0..n {
-                let row = &mut cat[i * 2 * f..(i + 1) * 2 * f];
-                row[..f].copy_from_slice(&h[i * f..(i + 1) * f]);
-                row[f..].copy_from_slice(&agg[i * f..(i + 1) * f]);
-            }
-            run(&block.upd, &cat, n, &mut upd);
-            silu_inplace(&mut upd);
-            for (hv, &u) in h.iter_mut().zip(&upd) {
-                *hv += u;
+            {
+                // residual scalar update
+                let _t = self.stages.update.enter();
+                for i in 0..n {
+                    let row = &mut cat[i * 2 * f..(i + 1) * 2 * f];
+                    row[..f].copy_from_slice(&h[i * f..(i + 1) * f]);
+                    row[f..].copy_from_slice(&agg[i * f..(i + 1) * f]);
+                }
+                run(&block.upd, &cat, n, &mut upd);
+                silu_inplace(&mut upd);
+                for (hv, &u) in h.iter_mut().zip(&upd) {
+                    *hv += u;
+                }
             }
 
-            // equivariant vector update: invariant coefficients x unit vectors
-            run(&block.vec, &msg, ne, &mut coef);
-            for (e, edge) in g.edges.iter().enumerate() {
-                let c = coef[e] as f64 * att[e] as f64 * edge.env;
-                v[edge.dst] = add(v[edge.dst], scale(edge.unit, c));
-            }
-            if quantized {
-                quantize_vectors(&self.vec_scheme, &mut v);
+            {
+                // equivariant vector update: invariant coefficients x units
+                let _t = self.stages.vector.enter();
+                run(&block.vec, &msg, ne, &mut coef);
+                for (e, edge) in g.edges.iter().enumerate() {
+                    let c = coef[e] as f64 * att[e] as f64 * edge.env;
+                    v[edge.dst] = add(v[edge.dst], scale(edge.unit, c));
+                }
+                if quantized {
+                    quantize_vectors(&self.vec_scheme, &mut v);
+                }
             }
         }
 
         // invariant energy readout
+        let _t = self.stages.readout.enter();
         let mut eout = vec![0f32; n];
         run(&self.out, &h, n, &mut eout);
         let e_raw: f64 = eout.iter().map(|&e| e as f64).sum();

@@ -15,6 +15,34 @@
 
 use crate::geometry::Vec3;
 
+/// Neighbor-build instrumentation (DESIGN.md §12): which builder path ran
+/// (scan vs cell list), total build time, and normalized ns/atom — the
+/// N-scaling signal `benches/parallel_scaling.rs` tracks, now visible in
+/// production via the metrics registry.
+struct NeighborObs {
+    scan_builds: &'static crate::obs::Counter,
+    cell_builds: &'static crate::obs::Counter,
+    build_ns: &'static crate::obs::LogHistogram,
+    ns_per_atom: &'static crate::obs::LogHistogram,
+}
+
+fn neighbor_obs() -> &'static NeighborObs {
+    static S: std::sync::OnceLock<NeighborObs> = std::sync::OnceLock::new();
+    S.get_or_init(|| NeighborObs {
+        scan_builds: crate::obs::counter("model_neighbor_builds{path=\"scan\"}"),
+        cell_builds: crate::obs::counter("model_neighbor_builds{path=\"cell_list\"}"),
+        build_ns: crate::obs::histogram("model_neighbor_build_ns"),
+        ns_per_atom: crate::obs::histogram("model_neighbor_ns_per_atom"),
+    })
+}
+
+fn record_ns_per_atom(obs: &NeighborObs, t0_ns: u64, n: usize) {
+    if n > 0 {
+        let dt = crate::obs::span::now_ns().saturating_sub(t0_ns);
+        obs.ns_per_atom.record(dt / n as u64);
+    }
+}
+
 /// One directed edge `src -> dst` of the radial graph.
 #[derive(Debug, Clone)]
 pub struct Edge {
@@ -56,10 +84,19 @@ impl NeighborGraph {
     pub fn build(positions: &[f64], cutoff: f64) -> NeighborGraph {
         assert_eq!(positions.len() % 3, 0, "positions not [n*3]");
         let n = positions.len() / 3;
+        let obs = neighbor_obs();
+        let _t = crate::span!("neighbor_build", obs.build_ns);
         if n < CELL_LIST_MIN_ATOMS {
-            return NeighborGraph::build_scan(positions, cutoff);
+            obs.scan_builds.inc();
+            let t0 = crate::obs::span::now_ns();
+            let g = NeighborGraph::build_scan(positions, cutoff);
+            record_ns_per_atom(obs, t0, n);
+            return g;
         }
+        obs.cell_builds.inc();
+        let t0 = crate::obs::span::now_ns();
         let g = NeighborGraph::build_cell_list(positions, cutoff);
+        record_ns_per_atom(obs, t0, n);
         #[cfg(debug_assertions)]
         if n <= 512 {
             let oracle = NeighborGraph::build_scan(positions, cutoff);

@@ -1,0 +1,317 @@
+//! Fixed-bucket log₂-scale histograms with bounded relative error.
+//!
+//! The recording side ([`LogHistogram`]) is a flat array of relaxed atomic
+//! bucket counters plus exact `count`/`sum`/`max` — `record` is four atomic
+//! adds, safe on any hot path and shared freely across threads. The query
+//! side ([`HistSnapshot`]) is a plain owned copy of the bucket counts:
+//! percentiles walk the cumulative counts in O(`N_BUCKETS`), means are exact
+//! (`sum / count`), and two snapshots merge by element-wise addition — an
+//! associative, commutative operation, so per-client / per-shard histograms
+//! aggregate without order sensitivity.
+//!
+//! Bucketing: values below [`SUB`] (= 16) get one exact bucket each; above
+//! that, each power-of-two octave is split into [`SUB`] sub-buckets keyed by
+//! the 4 mantissa bits under the leading one. Reporting a bucket's midpoint
+//! bounds the relative quantile error by `2^-(SUB_BITS+1)` ≈ 3.1%, at any
+//! count, with no sampling loss — unlike the reservoir this replaces
+//! (see `coordinator/metrics.rs`). The whole table is 976 buckets ≈ 8 KB.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+
+use crate::util::json::Json;
+
+/// Mantissa bits kept per octave: 2^4 = 16 sub-buckets.
+pub const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave; also the width of the exact linear region.
+pub const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: 16 exact small-value buckets + 60 octaves × 16.
+pub const N_BUCKETS: usize = SUB + (64 - SUB_BITS as usize) * SUB;
+
+/// Bucket index for a value. Total order preserving: `a <= b` implies
+/// `bucket_index(a) <= bucket_index(b)`.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        v as usize
+    } else {
+        let msb = 63 - v.leading_zeros();
+        let mantissa = ((v >> (msb - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        SUB + (msb - SUB_BITS) as usize * SUB + mantissa
+    }
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lo(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        let msb = ((i - SUB) / SUB) as u32 + SUB_BITS;
+        let mantissa = ((i - SUB) % SUB) as u64;
+        (1u64 << msb) + (mantissa << (msb - SUB_BITS))
+    }
+}
+
+/// Width of bucket `i` (1 in the linear region, `2^(msb-4)` above it).
+pub fn bucket_width(i: usize) -> u64 {
+    if i < SUB {
+        1
+    } else {
+        1u64 << (((i - SUB) / SUB) as u32)
+    }
+}
+
+/// Representative (midpoint) value of bucket `i` — what percentile queries
+/// report. Exact in the linear region; relative error ≤ 2^-(SUB_BITS+1)
+/// ≈ 3.1% above it.
+pub fn bucket_mid(i: usize) -> u64 {
+    bucket_lo(i) + bucket_width(i) / 2
+}
+
+/// Concurrent recording side: fixed buckets of relaxed atomics. ~8 KB each;
+/// intended to live for the process (the registry leaks them on purpose).
+pub struct LogHistogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> LogHistogram {
+        LogHistogram {
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation. Four relaxed atomic RMWs — no locks, no
+    /// allocation; cheap enough for per-GEMM-call use.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.max.fetch_max(v, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    /// Owned copy of the current state. Concurrent recorders may land
+    /// between the field loads; each observation is still counted exactly
+    /// once by a later snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.buckets.iter().map(|b| b.load(Relaxed)).collect(),
+            count: self.count.load(Relaxed),
+            sum: self.sum.load(Relaxed),
+            max: self.max.load(Relaxed),
+        }
+    }
+}
+
+impl Clone for LogHistogram {
+    fn clone(&self) -> Self {
+        let s = self.snapshot();
+        LogHistogram {
+            buckets: s.buckets.iter().map(|&b| AtomicU64::new(b)).collect(),
+            count: AtomicU64::new(s.count),
+            sum: AtomicU64::new(s.sum),
+            max: AtomicU64::new(s.max),
+        }
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count())
+            .field("sum", &self.sum())
+            .field("max", &self.max.load(Relaxed))
+            .finish()
+    }
+}
+
+/// Plain (non-atomic) histogram state: the query/merge/serialize side.
+/// `Default` is the empty histogram with no bucket storage; buckets are
+/// allocated on first `record`/`merge`, so zero-valued snapshots stay cheap.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket counts; empty means all-zero.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    pub fn new() -> HistSnapshot {
+        HistSnapshot::default()
+    }
+
+    fn ensure_buckets(&mut self) {
+        if self.buckets.len() != N_BUCKETS {
+            self.buckets.resize(N_BUCKETS, 0);
+        }
+    }
+
+    /// Record into an owned snapshot (single-threaded recording, e.g. the
+    /// loadgen client threads that later merge into one report).
+    pub fn record(&mut self, v: u64) {
+        self.ensure_buckets();
+        self.buckets[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.max = self.max.max(v);
+    }
+
+    /// Element-wise merge: associative and commutative, so shard order
+    /// never changes the aggregate.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if other.count == 0 {
+            return;
+        }
+        self.ensure_buckets();
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean (`sum` and `count` are exact, only buckets quantize).
+    pub fn mean(&self) -> Option<f64> {
+        if self.count == 0 {
+            None
+        } else {
+            Some(self.sum as f64 / self.count as f64)
+        }
+    }
+
+    /// Quantile by cumulative bucket walk, O(`N_BUCKETS`). Rank rule matches
+    /// the reservoir it replaced: index `floor(count·p)` clamped into range.
+    /// Returns the holding bucket's midpoint — relative error ≤ 3.1%.
+    pub fn percentile(&self, p: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let rank = ((self.count as f64 * p) as u64).min(self.count - 1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return Some(bucket_mid(i));
+            }
+        }
+        Some(self.max) // unreachable unless buckets/count disagree
+    }
+
+    /// Summary object: `{count, sum, max, mean, p50, p95, p99}`.
+    pub fn to_json(&self) -> Json {
+        let q = |p: f64| Json::Num(self.percentile(p).unwrap_or(0) as f64);
+        Json::obj([
+            ("count", Json::Num(self.count as f64)),
+            ("sum", Json::Num(self.sum as f64)),
+            ("max", Json::Num(self.max as f64)),
+            ("mean", Json::Num(self.mean().unwrap_or(0.0))),
+            ("p50", q(0.50)),
+            ("p95", q(0.95)),
+            ("p99", q(0.99)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounds_contain_values() {
+        let probes: Vec<u64> = (0..200)
+            .chain((0..60).flat_map(|s| {
+                let b = 1u64 << s.min(63);
+                [b.saturating_sub(1), b, b + 1, b + b / 3]
+            }))
+            .chain([u64::MAX - 1, u64::MAX])
+            .collect();
+        let mut prev = 0usize;
+        let mut sorted = probes.clone();
+        sorted.sort_unstable();
+        for &v in &sorted {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "v={v} i={i}");
+            assert!(i >= prev, "monotonicity broke at v={v}");
+            prev = i;
+            let lo = bucket_lo(i);
+            let w = bucket_width(i);
+            assert!(v >= lo, "v={v} below lo={lo}");
+            assert!(v - lo < w, "v={v} outside bucket [{lo}, {lo}+{w})");
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact_and_mid_has_bounded_error() {
+        for v in 0..SUB as u64 {
+            assert_eq!(bucket_mid(bucket_index(v)), v);
+        }
+        for v in [16u64, 100, 999, 12_345, 1 << 30, (1 << 40) + 12345] {
+            let mid = bucket_mid(bucket_index(v));
+            let err = (mid as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / 32.0 + 1e-12, "v={v} mid={mid} err={err}");
+        }
+    }
+
+    #[test]
+    fn snapshot_percentile_and_mean_agree_with_exact_small_case() {
+        let h = LogHistogram::new();
+        for v in 0..10u64 {
+            h.record(v); // all in the exact linear region
+        }
+        let s = h.snapshot();
+        assert_eq!(s.percentile(0.0), Some(0));
+        assert_eq!(s.percentile(0.5), Some(5));
+        assert_eq!(s.percentile(0.99), Some(9));
+        assert_eq!(s.mean(), Some(4.5));
+        assert_eq!(s.max, 9);
+    }
+
+    #[test]
+    fn merge_adds_counts_and_empty_default_is_identity() {
+        let mut a = HistSnapshot::new();
+        let mut b = HistSnapshot::new();
+        for v in [1u64, 100, 10_000] {
+            a.record(v);
+        }
+        b.record(7);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab.count, 4);
+        assert_eq!(ab.sum, a.sum + b.sum);
+        let mut with_empty = a.clone();
+        with_empty.merge(&HistSnapshot::new());
+        assert_eq!(with_empty.count, a.count);
+        assert_eq!(with_empty.sum, a.sum);
+    }
+}

@@ -1,0 +1,33 @@
+//! Zero-dependency observability: metrics registry, log-bucket histograms,
+//! and span tracing (DESIGN.md §12).
+//!
+//! Three pieces, all std-only and always-on cheap:
+//!
+//! * [`hist`] — fixed-bucket log₂ latency histograms: relaxed-atomic
+//!   recording, O(buckets) mergeable snapshots, ≤3.1% quantile error.
+//! * [`registry`] — process-global named counters / gauges / histograms with
+//!   `&'static` handles (leaked once per distinct name) and Prometheus-style
+//!   labels embedded in the name; dumps as JSON or the Prometheus text
+//!   exposition format (the `{"type":"metrics"}` / `{"type":
+//!   "metrics_prometheus"}` network frames).
+//! * [`span`] / [`trace`] — RAII span guards over thread-local stacks, a
+//!   seqlock ring of span events, and a Chrome trace-event JSON exporter
+//!   (`--trace-out PATH` / `GAQ_TRACE`).
+//!
+//! Instrumentation only reads clocks and bumps atomics — it never touches
+//! computed values, so the bit-identical serial/pooled contract is
+//! unaffected with or without tracing enabled.
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use hist::{HistSnapshot, LogHistogram};
+pub use registry::{counter, gauge, hist as histogram, labeled, Counter, Gauge, Registry};
+pub use span::{enable_tracing, tracing_enabled, SpanGuard};
+pub use trace::export_chrome_trace;
+
+// Re-export the `span!` macro (defined at the crate root by #[macro_export])
+// under `obs::` so call sites read `obs::span!("name")`.
+pub use crate::span;

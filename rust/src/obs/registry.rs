@@ -1,0 +1,301 @@
+//! Process-global metrics registry: named atomic counters, gauges, and
+//! log-bucket histograms.
+//!
+//! Handles are `&'static` — the registry `Box::leak`s each metric on first
+//! registration so hot paths hold a plain reference and never touch the
+//! name map again (call sites cache the handle in a `OnceLock` or a struct
+//! field). The leak is bounded by the number of *distinct metric names*,
+//! which is small and fixed by the instrumentation, not by traffic.
+//!
+//! Naming scheme (see DESIGN.md §12): `component_metric_unit` with optional
+//! Prometheus-style labels embedded in the name, e.g.
+//! `coordinator_queue_us{variant="fp32"}` or `gemm_calls{kind="w4a8"}`.
+//! The unit suffix (`_us`, `_ns`, `_bytes`, …) is part of the name; the
+//! Prometheus renderer splits at `{` and splices `quantile` labels into any
+//! existing label set.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, OnceLock};
+
+use crate::obs::hist::{HistSnapshot, LogHistogram};
+use crate::util::json::Json;
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Signed instantaneous value (queue depths, inflight counts).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Name → leaked metric maps, one per kind. The mutexes guard only
+/// registration and snapshotting — never the hot recording path.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, &'static Counter>>,
+    gauges: Mutex<BTreeMap<String, &'static Gauge>>,
+    hists: Mutex<BTreeMap<String, &'static LogHistogram>>,
+}
+
+/// The process-global registry.
+pub fn global() -> &'static Registry {
+    static R: OnceLock<Registry> = OnceLock::new();
+    R.get_or_init(Registry::default)
+}
+
+/// Register (or fetch) the named counter on the global registry.
+pub fn counter(name: &str) -> &'static Counter {
+    global().counter(name)
+}
+
+/// Register (or fetch) the named gauge on the global registry.
+pub fn gauge(name: &str) -> &'static Gauge {
+    global().gauge(name)
+}
+
+/// Register (or fetch) the named histogram on the global registry.
+pub fn hist(name: &str) -> &'static LogHistogram {
+    global().hist(name)
+}
+
+/// `labeled("coordinator_queue_us", &[("variant", "fp32")])` →
+/// `coordinator_queue_us{variant="fp32"}`.
+pub fn labeled(base: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return base.to_string();
+    }
+    let body: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{base}{{{}}}", body.join(","))
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        let mut map = self.counters.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| Box::leak(Box::new(Counter::new())))
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        let mut map = self.gauges.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| Box::leak(Box::new(Gauge::new())))
+    }
+
+    pub fn hist(&self, name: &str) -> &'static LogHistogram {
+        let mut map = self.hists.lock().unwrap();
+        map.entry(name.to_string())
+            .or_insert_with(|| Box::leak(Box::new(LogHistogram::new())))
+    }
+
+    /// Owned snapshots of every registered histogram.
+    pub fn hist_snapshots(&self) -> BTreeMap<String, HistSnapshot> {
+        let map = self.hists.lock().unwrap();
+        map.iter().map(|(k, h)| (k.clone(), h.snapshot())).collect()
+    }
+
+    /// Full registry dump:
+    /// `{counters: {name: n}, gauges: {...}, histograms: {name: summary}}`.
+    pub fn to_json(&self) -> Json {
+        let mut c = BTreeMap::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            c.insert(k.clone(), Json::Num(v.get() as f64));
+        }
+        let mut g = BTreeMap::new();
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            g.insert(k.clone(), Json::Num(v.get() as f64));
+        }
+        let mut h = BTreeMap::new();
+        for (k, hist) in self.hists.lock().unwrap().iter() {
+            h.insert(k.clone(), hist.snapshot().to_json());
+        }
+        Json::Obj(BTreeMap::from([
+            ("counters".to_string(), Json::Obj(c)),
+            ("gauges".to_string(), Json::Obj(g)),
+            ("histograms".to_string(), Json::Obj(h)),
+        ]))
+    }
+
+    /// Render the whole registry in the Prometheus text exposition format.
+    /// Counters get a `_total` suffix, histograms render as summaries
+    /// (`{quantile="…"}` series plus `_sum`/`_count`), every family gets a
+    /// `# TYPE` line, and all names carry a `gaq_` prefix.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut typed: std::collections::BTreeSet<String> = Default::default();
+
+        for (name, v) in self.counters.lock().unwrap().iter() {
+            let (base, labels) = split_labels(name);
+            let mut fam = format!("gaq_{}", sanitize(base));
+            if !fam.ends_with("_total") {
+                fam.push_str("_total");
+            }
+            if typed.insert(fam.clone()) {
+                out.push_str(&format!("# TYPE {fam} counter\n"));
+            }
+            out.push_str(&format!("{fam}{} {}\n", braced(labels, None), v.get()));
+        }
+        for (name, v) in self.gauges.lock().unwrap().iter() {
+            let (base, labels) = split_labels(name);
+            let fam = format!("gaq_{}", sanitize(base));
+            if typed.insert(fam.clone()) {
+                out.push_str(&format!("# TYPE {fam} gauge\n"));
+            }
+            out.push_str(&format!("{fam}{} {}\n", braced(labels, None), v.get()));
+        }
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let s = h.snapshot();
+            let (base, labels) = split_labels(name);
+            let fam = format!("gaq_{}", sanitize(base));
+            if typed.insert(fam.clone()) {
+                out.push_str(&format!("# TYPE {fam} summary\n"));
+            }
+            for (q, qs) in [(0.5, "0.5"), (0.95, "0.95"), (0.99, "0.99")] {
+                let v = s.percentile(q).unwrap_or(0);
+                out.push_str(&format!(
+                    "{fam}{} {v}\n",
+                    braced(labels, Some(("quantile", qs)))
+                ));
+            }
+            out.push_str(&format!("{fam}_sum{} {}\n", braced(labels, None), s.sum));
+            out.push_str(&format!(
+                "{fam}_count{} {}\n",
+                braced(labels, None),
+                s.count
+            ));
+        }
+        out
+    }
+}
+
+/// Split `base{k="v",...}` into `(base, Some(inner))`.
+fn split_labels(name: &str) -> (&str, Option<&str>) {
+    match name.split_once('{') {
+        Some((base, rest)) => (base, Some(rest.trim_end_matches('}'))),
+        None => (name, None),
+    }
+}
+
+/// Keep `[a-zA-Z0-9_:]`, map everything else to `_`.
+fn sanitize(base: &str) -> String {
+    base.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Rebuild a label block, optionally splicing one extra label in.
+fn braced(labels: Option<&str>, extra: Option<(&str, &str)>) -> String {
+    match (labels, extra) {
+        (None, None) => String::new(),
+        (Some(l), None) => format!("{{{l}}}"),
+        (None, Some((k, v))) => format!("{{{k}=\"{v}\"}}"),
+        (Some(l), Some((k, v))) => format!("{{{l},{k}=\"{v}\"}}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip_through_global_registry() {
+        let c = counter("test_registry_counter{case=\"a\"}");
+        c.add(3);
+        c.inc();
+        assert!(c.get() >= 4); // >= : other tests may share the name
+        let g = gauge("test_registry_gauge");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(gauge("test_registry_gauge").get(), 5);
+        // same name returns the same leaked instance
+        assert!(std::ptr::eq(c, counter("test_registry_counter{case=\"a\"}")));
+    }
+
+    #[test]
+    fn labeled_builds_prometheus_style_names() {
+        assert_eq!(labeled("x_us", &[]), "x_us");
+        assert_eq!(
+            labeled("x_us", &[("variant", "fp32"), ("stage", "queue")]),
+            "x_us{variant=\"fp32\",stage=\"queue\"}"
+        );
+    }
+
+    #[test]
+    fn prometheus_rendering_has_types_quantiles_and_labels() {
+        let r = Registry::default();
+        r.counter("demo_calls{kind=\"i8\"}").add(5);
+        r.gauge("demo_depth").set(2);
+        r.hist("demo_lat_us{variant=\"fp32\"}").record(100);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE gaq_demo_calls_total counter"));
+        assert!(text.contains("gaq_demo_calls_total{kind=\"i8\"} 5"));
+        assert!(text.contains("# TYPE gaq_demo_depth gauge"));
+        assert!(text.contains("gaq_demo_depth 2"));
+        assert!(text.contains("# TYPE gaq_demo_lat_us summary"));
+        assert!(text.contains("gaq_demo_lat_us{variant=\"fp32\",quantile=\"0.5\"}"));
+        assert!(text.contains("gaq_demo_lat_us_count{variant=\"fp32\"} 1"));
+        // every non-comment line is `name{labels} value`
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("value field");
+            val.parse::<f64>().expect("numeric value");
+        }
+    }
+
+    #[test]
+    fn registry_json_has_three_sections() {
+        let r = Registry::default();
+        r.counter("j_c").inc();
+        r.hist("j_h").record(42);
+        let j = r.to_json();
+        let c = j.get("counters").and_then(|c| c.get("j_c"));
+        assert_eq!(c.and_then(Json::as_u64), Some(1));
+        let h = j.get("histograms").and_then(|h| h.get("j_h")).expect("hist");
+        assert_eq!(h.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(h.get("p50").and_then(Json::as_u64), Some(42));
+    }
+}

@@ -1,0 +1,101 @@
+//! Chrome trace-event JSON export (Perfetto / `chrome://tracing` loadable).
+//!
+//! Writes the ring's span events as complete (`"ph":"X"`) events with
+//! microsecond `ts`/`dur`, one trace `tid` per OS thread, and the span and
+//! parent ids in `args` so parent/child structure survives the export.
+//! Driven by `--trace-out PATH` / `GAQ_TRACE` in `main.rs`; the export runs
+//! at quiescence (after the traced command returns), so the seqlock
+//! snapshot is complete.
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::{snapshot_events, SpanEvent};
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+
+/// Build the trace-event JSON document for a set of span events.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    let arr = events
+        .iter()
+        .map(|ev| {
+            Json::obj([
+                ("name", Json::str(ev.name())),
+                ("cat", Json::str("gaq")),
+                ("ph", Json::str("X")),
+                ("ts", Json::Num(ev.start_ns as f64 / 1000.0)),
+                ("dur", Json::Num(ev.dur_ns as f64 / 1000.0)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(ev.tid as f64)),
+                (
+                    "args",
+                    Json::obj([
+                        ("id", Json::Num(ev.id as f64)),
+                        ("parent", Json::Num(ev.parent as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(BTreeMap::from([
+        ("traceEvents".to_string(), Json::Arr(arr)),
+        ("displayTimeUnit".to_string(), Json::str("ms")),
+    ]))
+}
+
+/// Export the current ring contents to `path`. Returns the event count.
+/// Errors if tracing was never enabled (nothing to export).
+pub fn export_chrome_trace(path: &str) -> Result<usize> {
+    let events = snapshot_events();
+    if crate::obs::span::ring().is_none() {
+        crate::bail!("tracing was never enabled; nothing to export");
+    }
+    let doc = chrome_trace_json(&events);
+    std::fs::write(path, json::to_string(&doc))
+        .with_context(|| format!("writing trace to {path}"))?;
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_trace_doc_roundtrips_through_the_json_parser() {
+        let evs = vec![
+            SpanEvent {
+                name_id: crate::obs::span::intern("test_trace_root"),
+                tid: 1,
+                start_ns: 1_000,
+                dur_ns: 5_000,
+                id: 10,
+                parent: 0,
+            },
+            SpanEvent {
+                name_id: crate::obs::span::intern("test_trace_child"),
+                tid: 1,
+                start_ns: 2_000,
+                dur_ns: 1_500,
+                id: 11,
+                parent: 10,
+            },
+        ];
+        let doc = chrome_trace_json(&evs);
+        let text = json::to_string(&doc);
+        let back = json::parse(&text).expect("parses");
+        let events = back.get("traceEvents").and_then(Json::as_arr).expect("arr");
+        assert_eq!(events.len(), 2);
+        assert_eq!(
+            events[0].get("name").and_then(Json::as_str),
+            Some("test_trace_root")
+        );
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(events[1].get("dur").and_then(Json::as_f64), Some(1.5));
+        assert_eq!(
+            events[1]
+                .get("args")
+                .and_then(|a| a.get("parent"))
+                .and_then(Json::as_u64),
+            Some(10)
+        );
+    }
+}

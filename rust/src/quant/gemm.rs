@@ -30,10 +30,69 @@
 //! are **bit-identical** to serial (guarded by `rust/tests/parallel_parity.rs`
 //! and the in-module tests below; DESIGN.md §8).
 
+use std::sync::OnceLock;
+
 use super::pack::{nibble_to_i8, PackedB, QuantizedI4, QuantizedI8, PANEL_NR};
+use crate::obs;
 use crate::util::threadpool::ThreadPool;
 
 const BLOCK: usize = 64;
+
+/// Per-kind kernel instrumentation (DESIGN.md §12): call/MAC/byte counters
+/// plus a compute-time histogram, registered once and cached as `&'static`
+/// handles. Pack time is accounted separately in `quant::pack` so
+/// `gemm_time_ns` is pure compute.
+struct KernelStats {
+    calls: &'static obs::Counter,
+    macs: &'static obs::Counter,
+    bytes: &'static obs::Counter,
+    time_ns: &'static obs::LogHistogram,
+    span_id: u32,
+}
+
+impl KernelStats {
+    fn get(cell: &'static OnceLock<KernelStats>, kind: &'static str) -> &'static KernelStats {
+        cell.get_or_init(|| {
+            let l = |base: &str| obs::labeled(base, &[("kind", kind)]);
+            KernelStats {
+                calls: obs::counter(&l("gemm_calls")),
+                macs: obs::counter(&l("gemm_macs")),
+                bytes: obs::counter(&l("gemm_bytes")),
+                time_ns: obs::histogram(&l("gemm_time_ns")),
+                span_id: obs::span::intern(kind),
+            }
+        })
+    }
+
+    /// Bump the counters and open the timing span for one kernel call.
+    /// `bytes` is the total matrix traffic (A + B + C) in bytes.
+    fn observe(&'static self, m: usize, k: usize, n: usize, bytes: usize) -> obs::SpanGuard {
+        self.calls.inc();
+        self.macs.add((m * k * n) as u64);
+        self.bytes.add(bytes as u64);
+        obs::SpanGuard::enter_timed(self.span_id, self.time_ns)
+    }
+}
+
+fn stats_f32() -> &'static KernelStats {
+    static S: OnceLock<KernelStats> = OnceLock::new();
+    KernelStats::get(&S, "gemm_f32")
+}
+
+fn stats_i8() -> &'static KernelStats {
+    static S: OnceLock<KernelStats> = OnceLock::new();
+    KernelStats::get(&S, "gemm_i8")
+}
+
+fn stats_w4a8() -> &'static KernelStats {
+    static S: OnceLock<KernelStats> = OnceLock::new();
+    KernelStats::get(&S, "gemm_w4a8")
+}
+
+fn stats_packed() -> &'static KernelStats {
+    static S: OnceLock<KernelStats> = OnceLock::new();
+    KernelStats::get(&S, "gemm_packed")
+}
 
 /// Rows per register tile of the packed integer micro-kernel. With
 /// [`PANEL_NR`] = 16 i32 lanes per tile row, MR = 4 keeps the 4x16 i32
@@ -53,6 +112,13 @@ pub fn gemm_f32(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usiz
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    let _t = stats_f32().observe(m, k, n, 4 * (m * k + k * n + m * n));
+    gemm_f32_core(a, b, c, m, k, n);
+}
+
+/// Uninstrumented serial core shared by [`gemm_f32`] and the pool shards
+/// (so a pooled call counts once, not once per shard).
+fn gemm_f32_core(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     c.fill(0.0);
     for i0 in (0..m).step_by(BLOCK) {
         for k0 in (0..k).step_by(BLOCK) {
@@ -86,13 +152,14 @@ pub fn gemm_f32_pool(
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
+    let _t = stats_f32().observe(m, k, n, 4 * (m * k + k * n + m * n));
     if pool.threads() <= 1 || m <= 1 || n == 0 {
-        gemm_f32(a, b, c, m, k, n);
+        gemm_f32_core(a, b, c, m, k, n);
         return;
     }
     pool.for_each_row_block(c, n, |r0, cblock| {
         let rows = cblock.len() / n;
-        gemm_f32(&a[r0 * k..(r0 + rows) * k], b, cblock, rows, k, n);
+        gemm_f32_core(&a[r0 * k..(r0 + rows) * k], b, cblock, rows, k, n);
     });
 }
 
@@ -188,6 +255,7 @@ pub fn gemm_packed(a: &QuantizedI8, b: &PackedB, c: &mut [f32], m: usize, k: usi
     assert_eq!(a.data.len(), m * k);
     assert_eq!((b.k, b.n), (k, n), "packed panel shape mismatch");
     assert_eq!(c.len(), m * n);
+    let _t = stats_packed().observe(m, k, n, m * k + b.bytes() + 4 * m * n);
     gemm_packed_core(&a.data, b, a.scale * b.scale, c, m, k, n);
 }
 
@@ -205,6 +273,21 @@ pub fn gemm_packed_pool(
     assert_eq!(a.data.len(), m * k);
     assert_eq!((b.k, b.n), (k, n), "packed panel shape mismatch");
     assert_eq!(c.len(), m * n);
+    let _t = stats_packed().observe(m, k, n, m * k + b.bytes() + 4 * m * n);
+    packed_pool_core(pool, a, b, c, m, k, n);
+}
+
+/// Uninstrumented pooled dispatch shared by [`gemm_packed_pool`] and the
+/// per-call-pack entry points, which account under their own kind labels.
+fn packed_pool_core(
+    pool: &ThreadPool,
+    a: &QuantizedI8,
+    b: &PackedB,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
     let scale = a.scale * b.scale;
     if pool.threads() <= 1 || m <= 1 || n == 0 {
         gemm_packed_core(&a.data, b, scale, c, m, k, n);
@@ -245,6 +328,7 @@ pub fn gemm_i8(a: &QuantizedI8, b: &QuantizedI8, c: &mut [f32], m: usize, k: usi
     assert_eq!(b.data.len(), k * n);
     assert_eq!(c.len(), m * n);
     let packed = PackedB::from_i8(b, k, n);
+    let _t = stats_i8().observe(m, k, n, m * k + k * n + 4 * m * n);
     gemm_packed_core(&a.data, &packed, a.scale * b.scale, c, m, k, n);
 }
 
@@ -263,7 +347,8 @@ pub fn gemm_i8_pool(
     assert_eq!(b.data.len(), k * n);
     assert_eq!(c.len(), m * n);
     let packed = PackedB::from_i8(b, k, n);
-    gemm_packed_pool(pool, a, &packed, c, m, k, n);
+    let _t = stats_i8().observe(m, k, n, m * k + k * n + 4 * m * n);
+    packed_pool_core(pool, a, &packed, c, m, k, n);
 }
 
 /// [`gemm_i8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
@@ -291,6 +376,7 @@ pub fn gemm_w4a8(
     assert_eq!(b.len, k * n);
     assert_eq!(c.len(), m * n);
     let packed = PackedB::from_i4(b, k, n);
+    let _t = stats_w4a8().observe(m, k, n, m * k + k * n / 2 + 4 * m * n);
     gemm_packed_core(&a.data, &packed, a.scale * b.scale, c, m, k, n);
 }
 
@@ -310,7 +396,8 @@ pub fn gemm_w4a8_pool(
     assert_eq!(b.len, k * n);
     assert_eq!(c.len(), m * n);
     let packed = PackedB::from_i4(b, k, n);
-    gemm_packed_pool(pool, a, &packed, c, m, k, n);
+    let _t = stats_w4a8().observe(m, k, n, m * k + k * n / 2 + 4 * m * n);
+    packed_pool_core(pool, a, &packed, c, m, k, n);
 }
 
 /// [`gemm_w4a8`] with automatic parallel dispatch above [`PAR_MIN_MACS`].
@@ -632,6 +719,22 @@ mod tests {
                 assert_bits_eq(&c_serial, &c_pool, "packed");
             }
         }
+    }
+
+    #[test]
+    fn kernel_calls_register_metrics() {
+        let (m, k, n) = (4usize, 16usize, 16usize);
+        let a = random_vec(m * k, 21);
+        let b = random_vec(k * n, 22);
+        let qa = quantize_i8(&a);
+        let qb = quantize_i8(&b);
+        let mut c = vec![0f32; m * n];
+        let calls0 = stats_i8().calls.get();
+        let macs0 = stats_i8().macs.get();
+        gemm_i8(&qa, &qb, &mut c, m, k, n);
+        assert!(stats_i8().calls.get() > calls0);
+        assert!(stats_i8().macs.get() >= macs0 + (m * k * n) as u64);
+        assert!(stats_i8().time_ns.count() > 0);
     }
 
     #[test]

@@ -100,10 +100,34 @@ pub struct PackedB {
     pub n: usize,
 }
 
+/// Pack-side instrumentation: counts and times every panel build, so the
+/// per-call pack cost of `gemm_{i8,w4a8}` is separable from pure GEMM
+/// compute time (`gemm_pack_ns` vs `gemm_time_ns`, DESIGN.md §12).
+fn pack_obs(out_bytes: usize) -> crate::obs::SpanGuard {
+    use std::sync::OnceLock;
+    struct PackStats {
+        calls: &'static crate::obs::Counter,
+        bytes: &'static crate::obs::Counter,
+        time_ns: &'static crate::obs::LogHistogram,
+        span_id: u32,
+    }
+    static S: OnceLock<PackStats> = OnceLock::new();
+    let s = S.get_or_init(|| PackStats {
+        calls: crate::obs::counter("gemm_pack_calls"),
+        bytes: crate::obs::counter("gemm_pack_bytes"),
+        time_ns: crate::obs::histogram("gemm_pack_ns"),
+        span_id: crate::obs::span::intern("gemm_pack"),
+    });
+    s.calls.inc();
+    s.bytes.add(out_bytes as u64);
+    crate::obs::SpanGuard::enter_timed(s.span_id, s.time_ns)
+}
+
 impl PackedB {
     /// Pack a row-major `[k, n]` INT8 image into column panels.
     pub fn from_i8(q: &QuantizedI8, k: usize, n: usize) -> PackedB {
         assert_eq!(q.data.len(), k * n, "i8 image shape mismatch");
+        let _t = pack_obs(k * n);
         PackedB::pack(|kk, j| q.data[kk * n + j], q.scale, k, n)
     }
 
@@ -111,6 +135,7 @@ impl PackedB {
     /// nibble exactly once.
     pub fn from_i4(q: &QuantizedI4, k: usize, n: usize) -> PackedB {
         assert_eq!(q.len, k * n, "i4 image shape mismatch");
+        let _t = pack_obs(k * n);
         PackedB::pack(|kk, j| nibble_at(&q.data, kk * n + j), q.scale, k, n)
     }
 

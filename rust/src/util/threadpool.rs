@@ -24,13 +24,55 @@
 //! index order are therefore bit-identical for every pool size.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 /// Fork-join executor with a fixed worker budget (see module docs).
 #[derive(Debug)]
 pub struct ThreadPool {
     threads: usize,
+}
+
+/// Pool observability handles (forking regions only — the inline fast paths
+/// stay untouched, their time is attributed to the caller's own spans).
+struct PoolObs {
+    regions: &'static crate::obs::Counter,
+    tasks: &'static crate::obs::Counter,
+    busy_ns: &'static crate::obs::Counter,
+    idle_ns: &'static crate::obs::Counter,
+    region_ns: &'static crate::obs::LogHistogram,
+    region_span: u32,
+    worker_span: u32,
+}
+
+fn pool_obs() -> &'static PoolObs {
+    static OBS: OnceLock<PoolObs> = OnceLock::new();
+    OBS.get_or_init(|| PoolObs {
+        regions: crate::obs::counter("threadpool_regions"),
+        tasks: crate::obs::counter("threadpool_tasks"),
+        busy_ns: crate::obs::counter("threadpool_busy_ns"),
+        idle_ns: crate::obs::counter("threadpool_idle_ns"),
+        region_ns: crate::obs::histogram("threadpool_region_ns"),
+        region_span: crate::obs::span::intern("pool_region"),
+        worker_span: crate::obs::span::intern("pool_worker"),
+    })
+}
+
+impl PoolObs {
+    /// Open the caller-side region span and count the fork.
+    fn enter_region(&'static self, tasks: usize) -> crate::obs::SpanGuard {
+        self.regions.inc();
+        self.tasks.add(tasks as u64);
+        crate::obs::SpanGuard::enter_timed(self.region_span, self.region_ns)
+    }
+
+    /// Credit busy time against the region's wall clock: idle is the gap
+    /// between `workers x wall` and the summed per-worker busy time.
+    fn settle(&'static self, workers: usize, wall_ns: u64, busy: &AtomicU64) {
+        let busy = busy.load(Ordering::Relaxed);
+        self.busy_ns.add(busy);
+        self.idle_ns.add((workers as u64 * wall_ns).saturating_sub(busy));
+    }
 }
 
 static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
@@ -92,11 +134,18 @@ impl ThreadPool {
             }
             return;
         }
+        let obs = pool_obs();
+        let region = obs.enter_region(n);
+        let region_id = region.id();
+        let t0 = crate::obs::span::now_ns();
+        let busy = AtomicU64::new(0);
         let next = AtomicUsize::new(0);
         std::thread::scope(|s| {
             for _ in 0..workers {
                 s.spawn(|| {
                     IN_POOL_WORKER.with(|flag| flag.set(true));
+                    let _w = crate::obs::SpanGuard::enter_with_parent(obs.worker_span, region_id);
+                    let w0 = crate::obs::span::now_ns();
                     loop {
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
@@ -104,9 +153,11 @@ impl ThreadPool {
                         }
                         f(i);
                     }
+                    busy.fetch_add(crate::obs::span::now_ns() - w0, Ordering::Relaxed);
                 });
             }
         });
+        obs.settle(workers, crate::obs::span::now_ns() - t0, &busy);
     }
 
     /// Run `f(i)` for every `i in 0..n` and collect the results **in task
@@ -120,12 +171,20 @@ impl ThreadPool {
         if workers <= 1 {
             return (0..n).map(&f).collect();
         }
+        let obs = pool_obs();
+        let region = obs.enter_region(n);
+        let region_id = region.id();
+        let t0 = crate::obs::span::now_ns();
+        let busy = AtomicU64::new(0);
         let next = AtomicUsize::new(0);
         let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     s.spawn(|| {
                         IN_POOL_WORKER.with(|flag| flag.set(true));
+                        let _w =
+                            crate::obs::SpanGuard::enter_with_parent(obs.worker_span, region_id);
+                        let w0 = crate::obs::span::now_ns();
                         let mut out = Vec::new();
                         loop {
                             let i = next.fetch_add(1, Ordering::Relaxed);
@@ -134,6 +193,7 @@ impl ThreadPool {
                             }
                             out.push((i, f(i)));
                         }
+                        busy.fetch_add(crate::obs::span::now_ns() - w0, Ordering::Relaxed);
                         out
                     })
                 })
@@ -143,6 +203,7 @@ impl ThreadPool {
                 .map(|h| h.join().expect("pool worker panicked"))
                 .collect()
         });
+        obs.settle(workers, crate::obs::span::now_ns() - t0, &busy);
         let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
         slots.resize_with(n, || None);
         for part in parts {
@@ -172,16 +233,26 @@ impl ThreadPool {
             }
             return;
         }
+        let obs = pool_obs();
+        let region = obs.enter_region(workers);
+        let region_id = region.id();
+        let t0 = crate::obs::span::now_ns();
+        let busy = AtomicU64::new(0);
         let rows_per = rows.div_ceil(workers);
         std::thread::scope(|s| {
             for (b, block) in data.chunks_mut(rows_per * row_len).enumerate() {
                 let f = &f;
+                let busy = &busy;
                 s.spawn(move || {
                     IN_POOL_WORKER.with(|flag| flag.set(true));
+                    let _w = crate::obs::SpanGuard::enter_with_parent(obs.worker_span, region_id);
+                    let w0 = crate::obs::span::now_ns();
                     f(b * rows_per, block);
+                    busy.fetch_add(crate::obs::span::now_ns() - w0, Ordering::Relaxed);
                 });
             }
         });
+        obs.settle(workers, crate::obs::span::now_ns() - t0, &busy);
     }
 }
 

@@ -65,16 +65,39 @@ fn tcp_round_trip_all_builtin_variants() {
         }
     }
 
-    // metrics frame: coordinator counters + front-end counters
+    // metrics frame: coordinator counters + front-end counters + registry
     let reply = client.metrics().expect("metrics round trip");
     match reply.outcome {
-        NetOutcome::Metrics { metrics, net: netj } => {
+        NetOutcome::Metrics { metrics, net: netj, registry } => {
             let completed = metrics.get("completed").and_then(|v| v.as_u64()).unwrap();
             assert!(completed >= roster.len() as u64, "completed={completed}");
             let accepted = netj.get("accepted").and_then(|v| v.as_u64()).unwrap();
             assert!(accepted >= roster.len() as u64, "accepted={accepted}");
+            // per-variant per-stage histograms are populated after traffic
+            let hists = registry.get("histograms").expect("registry histograms");
+            for v in &roster {
+                for stage in ["coordinator_queue_us", "coordinator_inference_us"] {
+                    let name = format!("{stage}{{variant=\"{v}\"}}");
+                    let count = hists
+                        .get(&name)
+                        .and_then(|h| h.get("count"))
+                        .and_then(|c| c.as_u64())
+                        .unwrap_or(0);
+                    assert!(count > 0, "{name} empty after traffic");
+                }
+            }
         }
         other => panic!("expected metrics, got {other:?}"),
+    }
+
+    // metrics_prometheus frame: text exposition of the same registry
+    let reply = client.metrics_prometheus().expect("prometheus round trip");
+    match reply.outcome {
+        NetOutcome::Prometheus { text } => {
+            assert!(text.contains("# TYPE gaq_coordinator_queue_us summary"), "{text}");
+            assert!(text.contains("gaq_coordinator_inference_us_count"), "{text}");
+        }
+        other => panic!("expected prometheus, got {other:?}"),
     }
     drop(client);
     net.shutdown();

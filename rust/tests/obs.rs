@@ -1,0 +1,188 @@
+//! Observability integration tests (ISSUE 8): histogram error bounds on
+//! randomized samples, snapshot merge algebra, span nesting across the
+//! threadpool, and ring-wrap integrity.
+//!
+//! The span tests share one process-global trace ring, so they serialize on
+//! [`TRACE_LOCK`] and pin the capacity with the first `enable_tracing` call.
+
+use std::sync::Mutex;
+
+use gaq_md::obs::hist::{HistSnapshot, LogHistogram, SUB};
+use gaq_md::obs::span::{self, SpanGuard};
+use gaq_md::quant::gemm::{gemm_f32, gemm_f32_pool};
+use gaq_md::util::prng::Rng;
+use gaq_md::util::threadpool::ThreadPool;
+
+/// Small ring so the wrap test is cheap; both span tests request the same
+/// capacity (first call wins) and hold this lock while touching the ring.
+const RING_CAP: usize = 1024;
+static TRACE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Exact percentile with the same rank rule as `HistSnapshot::percentile`.
+fn exact_percentile(sorted: &[u64], p: f64) -> u64 {
+    let rank = ((sorted.len() as f64 * p) as usize).min(sorted.len() - 1);
+    sorted[rank]
+}
+
+#[test]
+fn histogram_percentiles_track_exact_within_error_bound() {
+    // Mixed-magnitude samples: uniform exponent in [0, 40), uniform mantissa.
+    for seed in [3u64, 17, 99] {
+        let mut rng = Rng::new(seed);
+        let h = LogHistogram::new();
+        let mut vals: Vec<u64> = (0..10_000)
+            .map(|_| {
+                let shift = rng.below(40) as u32;
+                let v = (rng.f64() * (1u64 << shift) as f64) as u64;
+                h.record(v);
+                v
+            })
+            .collect();
+        vals.sort_unstable();
+        let s = h.snapshot();
+        for p in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+            let exact = exact_percentile(&vals, p);
+            let approx = s.percentile(p).expect("nonempty");
+            if exact < SUB as u64 {
+                // linear region: buckets are exact
+                assert_eq!(approx, exact, "seed {seed} p {p}");
+            } else {
+                let err = (approx as f64 - exact as f64).abs() / exact as f64;
+                assert!(
+                    err <= 1.0 / 32.0 + 1e-9,
+                    "seed {seed} p {p}: exact {exact} approx {approx} err {err}"
+                );
+            }
+        }
+        // exact moments regardless of bucketing
+        assert_eq!(s.count, vals.len() as u64);
+        assert_eq!(s.sum, vals.iter().sum::<u64>());
+        assert_eq!(s.max, *vals.last().unwrap());
+    }
+}
+
+#[test]
+fn snapshot_merge_is_associative_and_commutative() {
+    let mut rng = Rng::new(42);
+    let mut parts: Vec<HistSnapshot> = Vec::new();
+    for _ in 0..3 {
+        let mut s = HistSnapshot::new();
+        for _ in 0..500 {
+            let shift = rng.below(30) as u32;
+            s.record((rng.f64() * (1u64 << shift) as f64) as u64);
+        }
+        parts.push(s);
+    }
+    let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+
+    let mut ab_c = a.clone();
+    ab_c.merge(b);
+    ab_c.merge(c);
+
+    let mut bc = b.clone();
+    bc.merge(c);
+    let mut a_bc = a.clone();
+    a_bc.merge(&bc);
+
+    assert_eq!(ab_c, a_bc, "(a+b)+c != a+(b+c)");
+
+    let mut ba = b.clone();
+    ba.merge(a);
+    let mut ab = a.clone();
+    ab.merge(b);
+    assert_eq!(ab, ba, "a+b != b+a");
+    assert_eq!(ab_c.count, a.count + b.count + c.count);
+}
+
+#[test]
+fn pool_worker_spans_nest_under_their_region() {
+    let _guard = TRACE_LOCK.lock().unwrap();
+    gaq_md::obs::enable_tracing(RING_CAP);
+
+    let pool = ThreadPool::new(4);
+    // enough tasks that the pool actually forks (workers > 1)
+    pool.for_each(64, |_| std::hint::black_box(()));
+
+    let events = span::snapshot_events();
+    let region_ids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.name() == "pool_region")
+        .map(|e| e.id)
+        .collect();
+    assert!(!region_ids.is_empty(), "no pool_region span recorded");
+    let workers: Vec<_> =
+        events.iter().filter(|e| e.name() == "pool_worker").collect();
+    assert!(!workers.is_empty(), "no pool_worker spans recorded");
+    // every worker span links to a recorded region despite running on a
+    // different OS thread than the one that opened the region
+    for w in &workers {
+        assert!(
+            region_ids.contains(&w.parent),
+            "worker span {} has parent {} not in {region_ids:?}",
+            w.id,
+            w.parent
+        );
+    }
+}
+
+/// Acceptance (ISSUE 8): instrumentation must not perturb the bit-identical
+/// serial/pooled contract — verified with tracing actually enabled, so the
+/// span/ring machinery is live on both legs.
+#[test]
+fn pooled_matches_serial_bitwise_with_tracing_enabled() {
+    let _guard = TRACE_LOCK.lock().unwrap();
+    gaq_md::obs::enable_tracing(RING_CAP);
+    let mut rng = Rng::new(7);
+    let (m, k, n) = (64usize, 32usize, 48usize);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.f32() - 0.5).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.f32() - 0.5).collect();
+    let mut c_serial = vec![0f32; m * n];
+    let mut c_pool = vec![0f32; m * n];
+    gemm_f32(&a, &b, &mut c_serial, m, k, n);
+    gemm_f32_pool(&ThreadPool::new(4), &a, &b, &mut c_pool, m, k, n);
+    assert!(
+        c_serial.iter().zip(&c_pool).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "pooled GEMM diverged from serial with tracing on"
+    );
+}
+
+#[test]
+fn ring_wraps_without_tearing() {
+    let _guard = TRACE_LOCK.lock().unwrap();
+    gaq_md::obs::enable_tracing(RING_CAP);
+    let ring = span::ring().expect("ring allocated");
+    let cap = ring.capacity() as u64;
+    let pushed0 = ring.pushed();
+
+    // concurrent writers pushing several times the capacity
+    let name = span::intern("obs_wrap_test");
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| {
+                for _ in 0..RING_CAP {
+                    let _sp = SpanGuard::enter(name);
+                }
+            });
+        }
+    });
+
+    assert!(
+        ring.pushed() - pushed0 >= 4 * cap,
+        "expected >= {} pushes, got {}",
+        4 * cap,
+        ring.pushed() - pushed0
+    );
+    let events = span::snapshot_events();
+    assert!(events.len() <= ring.capacity(), "snapshot exceeds capacity");
+    assert!(!events.is_empty());
+    // integrity: unique live span ids, resolvable names, sane clocks —
+    // a torn slot would mix fields from two different events
+    let mut ids: Vec<u64> = events.iter().map(|e| e.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), events.len(), "duplicate span ids => torn slot");
+    for e in &events {
+        assert_ne!(e.name(), "?", "unresolvable interned name");
+        assert_ne!(e.id, 0);
+    }
+}
