@@ -5,10 +5,10 @@
 CARGO ?= cargo
 PYTEST ?= python3 -m pytest
 
-BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency
+BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency store_io
 
 .PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke \
-	bench-baselines serve-smoke trace-smoke clean
+	bench-baselines serve-smoke trace-smoke store-smoke fault-smoke clean
 
 build:
 	$(CARGO) build --release
@@ -82,6 +82,50 @@ trace-smoke: build
 		--trace-out target/trace.json
 	$(CARGO) run --release -q -- trace-check target/trace.json \
 		--expect md/step,md/integrate,md/force,md/thermostat
+
+# crash/resume smoke (DESIGN.md §13): run a short stored MD trajectory to
+# completion as the reference; run the identical trajectory again but let
+# the exit-mode failpoint kill the process mid-production (exit code 42 is
+# asserted, so a genuine failure cannot masquerade as the injected crash);
+# resume the killed run from its last durable checkpoint; then require the
+# resumed store to be byte-identical to the uninterrupted reference
+# (store-check --against compares frame and checkpoint streams bit for
+# bit). CI runs this under both GAQ_THREADS matrix legs.
+MD_SMOKE_FLAGS = md --backend reference --steps 160 --equil 20 --dt 0.25 \
+	--checkpoint-every 40 --seed 3 --report-every 0
+store-smoke: build
+	rm -rf target/store_smoke
+	$(CARGO) run --release -q -- $(MD_SMOKE_FLAGS) --store target/store_smoke/ref
+	GAQ_FAILPOINTS=md/step:exit:90 \
+		$(CARGO) run --release -q -- $(MD_SMOKE_FLAGS) --store target/store_smoke/run; \
+		status=$$?; \
+		if [ $$status -ne 42 ]; then \
+			echo "store-smoke: expected injected exit 42, got $$status"; exit 1; \
+		fi
+	$(CARGO) run --release -q -- $(MD_SMOKE_FLAGS) --store target/store_smoke/run --resume
+	$(CARGO) run --release -q -- store-check target/store_smoke/run \
+		--against target/store_smoke/ref
+	@echo "store-smoke: kill-and-resume trajectory is byte-identical"
+
+# fault-injection smoke: drive the TCP serving path under a sampled
+# GAQ_FAILPOINTS matrix (worker panics, torn replies, injected submit and
+# read failures). serve exits nonzero unless the client-side accounting
+# identity `sent == completed + rejected + transport_errors` holds exactly
+# and at least one request completed — i.e. every injected fault is
+# accounted for, none lose requests. Seeded probabilistic triggers replay
+# deterministically per (seed, failpoint-name).
+SERVE_FAULT_FLAGS = serve --listen 127.0.0.1:0 --backend reference \
+	--requests 64 --replicas 2 --rate 2000 --max-batch 4
+fault-smoke: build
+	GAQ_FAILPOINTS=pool/worker_batch:panic:p6 GAQ_FAILPOINT_SEED=1 \
+		$(CARGO) run --release -q -- $(SERVE_FAULT_FLAGS)
+	GAQ_FAILPOINTS=net/write_reply:disconnect:p9 GAQ_FAILPOINT_SEED=2 \
+		$(CARGO) run --release -q -- $(SERVE_FAULT_FLAGS)
+	GAQ_FAILPOINTS=coordinator/submit:err:p7 GAQ_FAILPOINT_SEED=3 \
+		$(CARGO) run --release -q -- $(SERVE_FAULT_FLAGS)
+	GAQ_FAILPOINTS=net/read_frame:err:p12,pool/worker_batch:panic:p10 GAQ_FAILPOINT_SEED=4 \
+		$(CARGO) run --release -q -- $(SERVE_FAULT_FLAGS)
+	@echo "fault-smoke: accounting identity held under every injected fault"
 
 clean:
 	$(CARGO) clean

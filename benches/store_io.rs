@@ -1,0 +1,105 @@
+//! Trajectory-store I/O microbench (ISSUE 9): append throughput for frame
+//! records, the full checkpoint commit (segment syncs + atomic manifest
+//! replace), and the recovery scan — the costs DESIGN.md §13 budgets for
+//! crash-safe MD.
+//!
+//! Run: `cargo bench --bench store_io` (GAQ_BENCH_FAST=1 for the CI leg).
+
+use std::path::PathBuf;
+
+use gaq_md::store::checkpoint::{MdCheckpoint, MdFrame};
+use gaq_md::store::{segment, RunStore};
+use gaq_md::util::benchkit::{black_box, Bench};
+use gaq_md::util::json::Json;
+use gaq_md::util::prng::Rng;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gaq_bench_store_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Azobenzene-sized frame (24 atoms, 72 coordinates) — the store's unit of
+/// work in the MD loop.
+fn frame(step: u64) -> MdFrame {
+    let x = step as f64 * 1e-3;
+    MdFrame {
+        step,
+        time_fs: x,
+        pe_ev: -3.0 + x,
+        ke_ev: 0.5,
+        positions: (0..72).map(|i| i as f64 * 0.1 + x).collect(),
+        velocities: (0..72).map(|i| i as f64 * 1e-3).collect(),
+    }
+}
+
+fn main() {
+    let mut bench = Bench::from_env();
+
+    // frame append (buffered write, no fsync): the per-step cost
+    let dir_a = tmpdir("append");
+    let mut store = RunStore::create(&dir_a, "bench", Json::Null).expect("create store");
+    let mut step = 0u64;
+    bench.run("frame_append_72c", || {
+        step += 1;
+        store.append_frame(&frame(step)).expect("append");
+    });
+
+    // checkpoint commit: frame/result syncs + checkpoint append + sync +
+    // atomic manifest replace — the durability barrier, fsync-bound
+    let mut rng = Rng::new(7);
+    bench.run("checkpoint_commit", || {
+        step += 1;
+        let f = frame(step);
+        store.append_frame(&f).expect("append");
+        store
+            .append_checkpoint(&MdCheckpoint {
+                step,
+                time_fs: f.time_fs,
+                positions: f.positions.clone(),
+                velocities: f.velocities.clone(),
+                rng: rng.state(),
+            })
+            .expect("checkpoint");
+        rng.next_u64();
+    });
+    drop(store);
+
+    // recovery scan over a sizeable segment image (pure, in-memory)
+    let n_records = 4096;
+    let mut image = Vec::new();
+    for s in 0..n_records {
+        image.extend_from_slice(&segment::encode_record(&frame(s).encode()));
+    }
+    let sample = bench.run("scan_4096_frames", || black_box(segment::scan(&image)).records.len());
+    let mb = image.len() as f64 / (1024.0 * 1024.0);
+    let mbps = mb / sample.mean().as_secs_f64();
+    println!("  scan image: {mb:.1} MiB -> {mbps:.0} MiB/s validated");
+
+    // full reopen (recover all three segments + manifest load)
+    let dir_b = tmpdir("reopen");
+    let mut store = RunStore::create(&dir_b, "bench", Json::Null).expect("create store");
+    for s in 0..512 {
+        store.append_frame(&frame(s)).expect("append");
+    }
+    store
+        .append_checkpoint(&MdCheckpoint {
+            step: 511,
+            time_fs: 0.0,
+            positions: frame(511).positions,
+            velocities: frame(511).velocities,
+            rng: rng.state(),
+        })
+        .expect("checkpoint");
+    store.finalize().expect("finalize");
+    drop(store);
+    bench.run("reopen_512_frames", || {
+        let (s, report) = RunStore::open(&dir_b, "bench", Json::Null).expect("open");
+        assert_eq!(report.truncated_bytes(), 0);
+        black_box(s.frame_count())
+    });
+
+    bench.report();
+    let _ = std::fs::remove_dir_all(&dir_a);
+    let _ = std::fs::remove_dir_all(&dir_b);
+}

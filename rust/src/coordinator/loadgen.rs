@@ -189,11 +189,15 @@ fn run_net_client(cfg: &NetLoadConfig, client_idx: usize, count: usize) -> Resul
             std::thread::sleep(sleep);
         }
         let v = &cfg.variants[(client_idx + i) % cfg.variants.len()];
+        // counted as sent *before* the attempt: a failed send is a sent
+        // request that ended in a transport error, keeping the accounting
+        // identity `sent == completed + rejected + transport_errors` true
+        // under injected faults (counting only the error broke it)
+        stats.sent += 1;
         if client.send_infer(i as u64, v, &geo.next()).is_err() {
             stats.transport_errors += 1;
             break;
         }
-        stats.sent += 1;
         sends.push_back(Instant::now());
         outstanding += 1;
         if outstanding >= cfg.window.max(1) {
@@ -227,8 +231,12 @@ pub fn run_net_load(cfg: &NetLoadConfig) -> NetLoadStats {
         for h in handles {
             match h.join().expect("load client thread panicked") {
                 Ok(st) => total.absorb(&st),
-                // connect failed before anything was sent
-                Err(_) => total.transport_errors += 1,
+                // connect failed before anything was sent: no request entered
+                // the `sent == completed + rejected + transport_errors`
+                // identity, so nothing is counted — a fully-down server shows
+                // up as sent == completed == 0, which harnesses must treat as
+                // failure in its own right
+                Err(e) => eprintln!("load client failed to connect: {e:#}"),
             }
         }
         total

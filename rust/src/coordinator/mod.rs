@@ -20,7 +20,10 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use net::{NetClient, NetConfig, NetOutcome, NetReply, NetServer, NetStats};
+pub use net::{
+    NetClient, NetConfig, NetOutcome, NetReply, NetServer, NetStats, RetryPolicy,
+    TransportError,
+};
 pub use reject::Rejection;
 pub use request::{InferenceRequest, InferenceResponse, PendingRequest};
 pub use router::{Backend, Pool};

@@ -23,7 +23,9 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Context as _, Result};
+use crate::util::failpoint;
 use crate::util::json::{self, Json};
+use crate::util::prng::Rng;
 
 use super::metrics::Metrics;
 use super::reject::Rejection;
@@ -43,10 +45,110 @@ const ACCEPT_POLL: Duration = Duration::from_millis(5);
 /// dropped (guards `read_full` against a peer that sent a length prefix and
 /// then went silent).
 const MID_FRAME_DEADLINE: Duration = Duration::from_secs(30);
-/// How long the writer waits for an admitted request's reply. Generous:
-/// replies normally arrive in microseconds, and during drain the batchers
-/// are force-flushed, so only a wedged backend can hit this.
-const DRAIN_WAIT: Duration = Duration::from_secs(120);
+/// Default server-side per-request deadline ([`NetConfig::request_deadline`]):
+/// an admitted request with no reply within this window is answered with
+/// [`Rejection::Timeout`]. Generous: replies normally arrive in
+/// microseconds, and during drain the batchers are force-flushed, so only a
+/// wedged or injected-stalled backend can hit this.
+pub const DEFAULT_REQUEST_DEADLINE: Duration = Duration::from_secs(120);
+/// Default client-side socket read deadline (DESIGN.md §13): a reply that
+/// takes longer surfaces as [`TransportError::Timeout`], not a hang.
+pub const DEFAULT_READ_DEADLINE: Duration = Duration::from_secs(30);
+/// Default client-side socket write deadline.
+pub const DEFAULT_WRITE_DEADLINE: Duration = Duration::from_secs(10);
+
+/// Typed client-side transport failure (DESIGN.md §13): callers — and the
+/// fault-injection suite — must be able to tell "the peer went away"
+/// (reconnect, maybe resend) from "the peer is slow" (deadline expired;
+/// the request may still complete server-side) from other socket errors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// No progress within the socket deadline; the connection is still up
+    /// as far as the OS knows.
+    Timeout { after: Duration },
+    /// The peer closed or reset the connection (EOF mid-frame included).
+    Disconnected { detail: String },
+    /// Any other socket-level failure.
+    Io { detail: String },
+}
+
+impl TransportError {
+    fn from_io(e: &std::io::Error, deadline: Duration) -> TransportError {
+        match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => {
+                TransportError::Timeout { after: deadline }
+            }
+            ErrorKind::UnexpectedEof
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+            | ErrorKind::NotConnected => {
+                TransportError::Disconnected { detail: e.to_string() }
+            }
+            _ => TransportError::Io { detail: e.to_string() },
+        }
+    }
+
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, TransportError::Timeout { .. })
+    }
+
+    pub fn is_disconnect(&self) -> bool {
+        matches!(self, TransportError::Disconnected { .. })
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Timeout { after } => {
+                write!(f, "transport timeout: no progress within {after:?}")
+            }
+            TransportError::Disconnected { detail } => {
+                write!(f, "peer disconnected: {detail}")
+            }
+            TransportError::Io { detail } => write!(f, "transport error: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Client retry pacing for *idempotent* requests (metrics): capped
+/// exponential backoff with seeded jitter, so tests replay deterministically
+/// and a thundering herd of clients decorrelates. Infer requests are never
+/// retried here — the caller owns exactly-once accounting for those.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// total attempts, including the first (min 1)
+    pub attempts: u32,
+    /// backoff before the first retry
+    pub base: Duration,
+    /// backoff ceiling
+    pub cap: Duration,
+    /// jitter PRNG seed
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(25),
+            cap: Duration::from_secs(1),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `prior_attempts` (0-based): doubled per
+    /// retry, capped, then jittered into `[0.5, 1.0) * capped`.
+    pub fn backoff(&self, prior_attempts: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << prior_attempts.min(16));
+        exp.min(self.cap).mul_f64(0.5 + 0.5 * rng.f64())
+    }
+}
 
 /// TCP front-end configuration.
 #[derive(Debug, Clone)]
@@ -58,15 +160,29 @@ pub struct NetConfig {
     /// other length are rejected [`Rejection::BadShape`] before admission.
     /// `None` skips the exact-length check (multiples of 3 still enforced).
     pub expected_len: Option<usize>,
+    /// Server-side per-request deadline: an admitted request whose reply
+    /// has not arrived within this window is answered with
+    /// [`Rejection::Timeout`] (counted in [`NetStats::timeouts`] and
+    /// `net_request_timeouts_total`) instead of holding the writer forever.
+    pub request_deadline: Duration,
 }
 
 impl NetConfig {
     pub fn new(addr: impl Into<String>) -> NetConfig {
-        NetConfig { addr: addr.into(), expected_len: None }
+        NetConfig {
+            addr: addr.into(),
+            expected_len: None,
+            request_deadline: DEFAULT_REQUEST_DEADLINE,
+        }
     }
 
     pub fn with_expected_len(mut self, len: usize) -> NetConfig {
         self.expected_len = Some(len);
+        self
+    }
+
+    pub fn with_request_deadline(mut self, d: Duration) -> NetConfig {
+        self.request_deadline = d;
         self
     }
 }
@@ -82,6 +198,9 @@ pub struct NetStats {
     pub accepted: AtomicU64,
     /// requests refused with a typed [`Rejection`] before admission
     pub rejected: AtomicU64,
+    /// admitted requests answered [`Rejection::Timeout`] at the server-side
+    /// per-request deadline
+    pub timeouts: AtomicU64,
 }
 
 impl NetStats {
@@ -92,6 +211,7 @@ impl NetStats {
             ("frames", n(&self.frames)),
             ("accepted", n(&self.accepted)),
             ("rejected", n(&self.rejected)),
+            ("timeouts", n(&self.timeouts)),
         ])
     }
 }
@@ -137,6 +257,7 @@ struct ConnCtx {
     submitter: Submitter,
     roster: Arc<Vec<String>>,
     expected_len: Option<usize>,
+    request_deadline: Duration,
     stop: Arc<AtomicBool>,
     metrics: Arc<Mutex<Metrics>>,
     stats: Arc<NetStats>,
@@ -155,6 +276,7 @@ impl NetServer {
             submitter: server.submitter(),
             roster: Arc::new(server.variants()),
             expected_len: cfg.expected_len,
+            request_deadline: cfg.request_deadline,
             stop: stop.clone(),
             metrics: server.metrics_handle(),
             stats: stats.clone(),
@@ -253,9 +375,11 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) -> Option<JoinHandle<()>> {
     }
     let write_half = stream.try_clone().ok()?;
     let (out_tx, out_rx) = mpsc::channel::<Outgoing>();
+    let request_deadline = ctx.request_deadline;
+    let wstats = ctx.stats.clone();
     let writer = std::thread::Builder::new()
         .name("gaq-net-writer".into())
-        .spawn(move || writer_loop(write_half, out_rx))
+        .spawn(move || writer_loop(write_half, out_rx, request_deadline, wstats))
         .ok()?;
     let mut seq: u64 = 0;
     loop {
@@ -281,7 +405,12 @@ fn handle_conn(mut stream: TcpStream, ctx: ConnCtx) -> Option<JoinHandle<()>> {
     Some(writer)
 }
 
-fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<Outgoing>,
+    request_deadline: Duration,
+    stats: Arc<NetStats>,
+) {
     use std::collections::BTreeMap;
     // Reply-write stage (DESIGN.md §12): serialisation + socket write time
     // per admitted request, labelled by variant. Handles are cached per
@@ -292,14 +421,19 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
         let (reply, variant) = match out {
             Outgoing::Immediate(j) => (j, None),
             Outgoing::Pending { id, variant, pending } => {
-                let j = match pending.wait_timeout(DRAIN_WAIT) {
+                let j = match pending.wait_timeout(request_deadline) {
                     Ok(resp) => response_json(id, &resp),
                     Err(mpsc::RecvTimeoutError::Disconnected) => {
                         Rejection::ShuttingDown.to_json(Some(id))
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {
-                        let detail = format!("no reply within {DRAIN_WAIT:?}");
-                        Rejection::Internal { detail }.to_json(Some(id))
+                        // server-side deadline: answer on the server's
+                        // authority rather than pinning the writer on a
+                        // wedged (or injected-stalled) backend
+                        stats.timeouts.fetch_add(1, Ordering::Relaxed);
+                        crate::obs::counter("net_request_timeouts_total").inc();
+                        let deadline_ms = request_deadline.as_millis() as u64;
+                        Rejection::Timeout { deadline_ms }.to_json(Some(id))
                     }
                 };
                 (j, Some(variant))
@@ -308,6 +442,16 @@ fn writer_loop(mut stream: TcpStream, rx: mpsc::Receiver<Outgoing>) {
         let _sp = crate::obs::span::SpanGuard::enter(reply_span);
         let t0 = Instant::now();
         let payload = json::to_string(&reply);
+        // Injected writer failure: disconnect mode ships only the length
+        // prefix — a genuinely torn mid-frame reply — before severing, so
+        // clients must classify EOF-mid-frame as a disconnect.
+        if let Some(inj) = failpoint::check("net/write_reply") {
+            if inj == failpoint::Injected::Disconnect {
+                let _ = stream.write_all(&(payload.len() as u32).to_be_bytes());
+                let _ = stream.flush();
+            }
+            break;
+        }
         let res = write_frame(&mut stream, payload.as_bytes());
         if let Some(v) = variant {
             let h = reply_hists.entry(v).or_insert_with_key(|v| {
@@ -475,6 +619,12 @@ fn would_block(e: &std::io::Error) -> bool {
 /// (so shutdown is noticed within [`POLL`]), then reads the remainder with
 /// a hard deadline.
 fn read_frame_polling(stream: &mut TcpStream, stop: &AtomicBool) -> FrameRead {
+    // Injected reader failure: the connection is torn down as if the socket
+    // had died (stall mode parks inside `check` first, exercising the
+    // client-side read deadline).
+    if failpoint::check("net/read_frame").is_some() {
+        return FrameRead::Err;
+    }
     let mut first = [0u8; 1];
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -529,8 +679,18 @@ fn read_full(stream: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> Resul
 /// Blocking client for the length-prefixed protocol (loadgen, tests,
 /// examples). One request/reply at a time per call; pipelining is allowed
 /// by the protocol (replies come back in request order).
+///
+/// Every socket operation runs under a deadline (DESIGN.md §13): a stalled
+/// server surfaces as [`TransportError::Timeout`], a dead one as
+/// [`TransportError::Disconnected`] — never an indefinite hang. Idempotent
+/// requests can be retried with jittered backoff via the `*_retry` methods;
+/// infer requests are never auto-retried (the caller owns exactly-once
+/// accounting).
 pub struct NetClient {
     stream: TcpStream,
+    addr: String,
+    read_deadline: Duration,
+    write_deadline: Duration,
 }
 
 /// A decoded server reply.
@@ -595,23 +755,56 @@ impl NetReply {
 }
 
 impl NetClient {
+    /// Connect with the default read/write deadlines.
     pub fn connect(addr: &str) -> Result<NetClient> {
+        Self::connect_with_deadlines(addr, DEFAULT_READ_DEADLINE, DEFAULT_WRITE_DEADLINE)
+    }
+
+    /// Connect with explicit socket deadlines (tests shrink these to force
+    /// [`TransportError::Timeout`] deterministically).
+    pub fn connect_with_deadlines(
+        addr: &str,
+        read_deadline: Duration,
+        write_deadline: Duration,
+    ) -> Result<NetClient> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         let _ = stream.set_nodelay(true);
-        Ok(NetClient { stream })
+        stream
+            .set_read_timeout(Some(read_deadline.max(Duration::from_millis(1))))
+            .context("setting read deadline")?;
+        stream
+            .set_write_timeout(Some(write_deadline.max(Duration::from_millis(1))))
+            .context("setting write deadline")?;
+        Ok(NetClient {
+            stream,
+            addr: addr.to_string(),
+            read_deadline,
+            write_deadline,
+        })
     }
 
     /// Send an infer request (does not wait for the reply; see [`recv`]).
     ///
     /// [`recv`]: NetClient::recv
     pub fn send_infer(&mut self, id: u64, variant: &str, positions: &[f32]) -> Result<()> {
+        Ok(self.send_infer_typed(id, variant, positions)?)
+    }
+
+    /// [`send_infer`](NetClient::send_infer) with the transport failure kept
+    /// typed (timeout vs disconnect vs other).
+    pub fn send_infer_typed(
+        &mut self,
+        id: u64,
+        variant: &str,
+        positions: &[f32],
+    ) -> std::result::Result<(), TransportError> {
         let j = Json::obj([
             ("type", Json::str("infer")),
             ("id", Json::Num(id as f64)),
             ("variant", Json::str(variant)),
             ("positions", Json::from_f32s(positions)),
         ]);
-        self.send_payload(json::to_string(&j).as_bytes())
+        self.send_payload_typed(json::to_string(&j).as_bytes())
     }
 
     pub fn send_metrics(&mut self, id: u64) -> Result<()> {
@@ -629,8 +822,15 @@ impl NetClient {
 
     /// Raw frame escape hatch (tests: malformed payloads).
     pub fn send_payload(&mut self, payload: &[u8]) -> Result<()> {
-        write_frame(&mut self.stream, payload).context("writing frame")?;
-        Ok(())
+        Ok(self.send_payload_typed(payload)?)
+    }
+
+    fn send_payload_typed(
+        &mut self,
+        payload: &[u8],
+    ) -> std::result::Result<(), TransportError> {
+        write_frame(&mut self.stream, payload)
+            .map_err(|e| TransportError::from_io(&e, self.write_deadline))
     }
 
     /// Raw bytes escape hatch (tests: corrupt length prefixes).
@@ -641,8 +841,18 @@ impl NetClient {
     }
 
     pub fn recv(&mut self) -> Result<NetReply> {
-        let bytes = read_frame(&mut self.stream).context("reading reply frame")?;
+        Ok(self.recv_typed()?)
+    }
+
+    /// [`recv`](NetClient::recv) with the transport failure kept typed: a
+    /// reply slower than the read deadline is [`TransportError::Timeout`],
+    /// EOF mid-frame (server died between length prefix and payload) is
+    /// [`TransportError::Disconnected`].
+    pub fn recv_typed(&mut self) -> std::result::Result<NetReply, TransportError> {
+        let bytes = read_frame(&mut self.stream)
+            .map_err(|e| TransportError::from_io(&e, self.read_deadline))?;
         NetReply::parse(&bytes)
+            .map_err(|e| TransportError::Io { detail: format!("bad reply frame: {e}") })
     }
 
     /// Blocking infer round trip.
@@ -661,6 +871,67 @@ impl NetClient {
     pub fn metrics_prometheus(&mut self) -> Result<NetReply> {
         self.send_metrics_prometheus(0)?;
         self.recv()
+    }
+
+    /// Idempotent metrics round trip with retry: on a transport failure the
+    /// client backs off (jittered, capped), reconnects, and tries again, up
+    /// to `policy.attempts` total attempts.
+    pub fn metrics_retry(
+        &mut self,
+        policy: &RetryPolicy,
+    ) -> std::result::Result<NetReply, TransportError> {
+        self.retry_idempotent(policy, |c| {
+            c.send_payload_typed(
+                json::to_string(&Json::obj([("type", Json::str("metrics"))])).as_bytes(),
+            )?;
+            c.recv_typed()
+        })
+    }
+
+    /// Idempotent Prometheus-format metrics round trip with retry.
+    pub fn metrics_prometheus_retry(
+        &mut self,
+        policy: &RetryPolicy,
+    ) -> std::result::Result<NetReply, TransportError> {
+        self.retry_idempotent(policy, |c| {
+            c.send_payload_typed(
+                json::to_string(&Json::obj([("type", Json::str("metrics_prometheus"))]))
+                    .as_bytes(),
+            )?;
+            c.recv_typed()
+        })
+    }
+
+    fn retry_idempotent(
+        &mut self,
+        policy: &RetryPolicy,
+        op: impl Fn(&mut NetClient) -> std::result::Result<NetReply, TransportError>,
+    ) -> std::result::Result<NetReply, TransportError> {
+        let mut rng = Rng::new(policy.seed);
+        let mut last = TransportError::Io { detail: "no attempts configured".into() };
+        for attempt in 0..policy.attempts.max(1) {
+            if attempt > 0 {
+                std::thread::sleep(policy.backoff(attempt - 1, &mut rng));
+                // the old stream may be desynchronized (torn reply frame):
+                // always start a retry on a fresh connection
+                match Self::connect_with_deadlines(
+                    &self.addr,
+                    self.read_deadline,
+                    self.write_deadline,
+                ) {
+                    Ok(fresh) => *self = fresh,
+                    Err(e) => {
+                        last = TransportError::Io { detail: format!("reconnect failed: {e}") };
+                        continue;
+                    }
+                }
+            }
+            match op(self) {
+                Ok(r) => return Ok(r),
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
     }
 }
 
@@ -710,5 +981,48 @@ mod tests {
         assert!(!rej.is_ok());
         assert_eq!(rej.reject_code(), Some("Overloaded"));
         assert_eq!(rej.id, Some(9));
+    }
+
+    #[test]
+    fn transport_errors_classify_timeout_vs_disconnect() {
+        let d = Duration::from_secs(3);
+        let cases = [
+            (ErrorKind::WouldBlock, true, false),
+            (ErrorKind::TimedOut, true, false),
+            (ErrorKind::UnexpectedEof, false, true),
+            (ErrorKind::ConnectionReset, false, true),
+            (ErrorKind::BrokenPipe, false, true),
+            (ErrorKind::InvalidData, false, false),
+        ];
+        for (kind, timeout, disconnect) in cases {
+            let e = TransportError::from_io(&std::io::Error::new(kind, "x"), d);
+            assert_eq!(e.is_timeout(), timeout, "{kind:?} -> {e:?}");
+            assert_eq!(e.is_disconnect(), disconnect, "{kind:?} -> {e:?}");
+        }
+        assert_eq!(
+            TransportError::from_io(&std::io::Error::new(ErrorKind::TimedOut, "x"), d),
+            TransportError::Timeout { after: d }
+        );
+    }
+
+    #[test]
+    fn retry_backoff_is_jittered_capped_and_deterministic() {
+        let p = RetryPolicy::default();
+        let mut rng = crate::util::prng::Rng::new(7);
+        let mut prev_cap = Duration::ZERO;
+        for attempt in 0..12 {
+            let b = p.backoff(attempt, &mut rng);
+            let ceil = p.base.saturating_mul(1u32 << attempt.min(16)).min(p.cap);
+            assert!(b <= ceil, "attempt {attempt}: {b:?} > {ceil:?}");
+            assert!(b >= ceil / 2, "attempt {attempt}: {b:?} < {:?}", ceil / 2);
+            prev_cap = prev_cap.max(b);
+        }
+        assert!(prev_cap <= p.cap);
+        // same seed => same schedule (failures replay deterministically)
+        let mut a = crate::util::prng::Rng::new(3);
+        let mut b = crate::util::prng::Rng::new(3);
+        for attempt in 0..6 {
+            assert_eq!(p.backoff(attempt, &mut a), p.backoff(attempt, &mut b));
+        }
     }
 }

@@ -26,6 +26,11 @@ pub enum Rejection {
     /// The frame could not be decoded (bad length prefix, invalid UTF-8 or
     /// JSON, missing/mistyped fields).
     MalformedFrame { detail: String },
+    /// The request was admitted but produced no reply within the server-side
+    /// per-request deadline (stuck worker, injected stall). Distinct from
+    /// `Internal`: the work may still complete, the client just stops
+    /// waiting on the server's authority.
+    Timeout { deadline_ms: u64 },
     /// The backend failed after admission (model load/evaluation error).
     Internal { detail: String },
 }
@@ -39,6 +44,7 @@ impl Rejection {
             Rejection::Overloaded { .. } => "Overloaded",
             Rejection::ShuttingDown => "ShuttingDown",
             Rejection::MalformedFrame { .. } => "MalformedFrame",
+            Rejection::Timeout { .. } => "Timeout",
             Rejection::Internal { .. } => "Internal",
         }
     }
@@ -57,6 +63,9 @@ impl Rejection {
             }
             Rejection::ShuttingDown => "server is draining; no new work admitted".into(),
             Rejection::MalformedFrame { detail } => format!("malformed frame: {detail}"),
+            Rejection::Timeout { deadline_ms } => {
+                format!("no reply within {deadline_ms} ms (server-side request deadline)")
+            }
             Rejection::Internal { detail } => format!("backend error: {detail}"),
         }
     }
@@ -88,6 +97,7 @@ mod tests {
             Rejection::Overloaded { depth: 9, limit: 8 },
             Rejection::ShuttingDown,
             Rejection::MalformedFrame { detail: "bad json".into() },
+            Rejection::Timeout { deadline_ms: 120_000 },
             Rejection::Internal { detail: "load failed".into() },
         ];
         let codes: std::collections::BTreeSet<&str> = all.iter().map(|r| r.code()).collect();

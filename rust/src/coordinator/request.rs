@@ -5,6 +5,15 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 /// A single inference request: one molecule's positions, one variant.
+///
+/// Zero-lost-request invariant: every admitted request is answered exactly
+/// once. Happy paths answer through [`respond`]; if a request is dropped
+/// unanswered — a worker thread panicking mid-batch, a dispatch path
+/// forgetting a drain — the `Drop` impl sends a typed error reply and
+/// releases the depth gauge, so a crash anywhere between admission and
+/// reply degrades to an error response, never a hang or a gauge leak.
+///
+/// [`respond`]: InferenceRequest::respond
 #[derive(Debug)]
 pub struct InferenceRequest {
     pub id: u64,
@@ -12,28 +21,61 @@ pub struct InferenceRequest {
     pub variant: String,
     /// flat [n*3] f32 positions, Angstrom
     pub positions: Vec<f32>,
-    /// reply channel (oneshot-style: exactly one send)
-    pub reply: mpsc::Sender<InferenceResponse>,
+    /// reply channel (oneshot-style: exactly one send); `None` once answered
+    reply: Option<mpsc::Sender<InferenceResponse>>,
     pub enqueued: Instant,
     /// Per-variant in-system gauge (submitted, not yet replied) backing
     /// admission control; `None` when the request was not counted
-    /// (hand-built test requests). Decremented exactly once by [`respond`].
-    ///
-    /// [`respond`]: InferenceRequest::respond
-    pub depth: Option<Arc<AtomicUsize>>,
+    /// (hand-built test requests). Decremented exactly once on reply/drop.
+    depth: Option<Arc<AtomicUsize>>,
 }
 
 impl InferenceRequest {
+    pub fn new(
+        id: u64,
+        variant: impl Into<String>,
+        positions: Vec<f32>,
+        reply: mpsc::Sender<InferenceResponse>,
+        depth: Option<Arc<AtomicUsize>>,
+    ) -> Self {
+        InferenceRequest {
+            id,
+            variant: variant.into(),
+            positions,
+            reply: Some(reply),
+            enqueued: Instant::now(),
+            depth,
+        }
+    }
+
     /// Deliver the reply and release this request's slot in the per-variant
     /// depth gauge. Every terminal path (worker result, load-failure drain,
-    /// dispatch failure, unknown variant) must answer through here so the
-    /// gauge cannot leak and the client never sees a bare disconnect while
-    /// the server is alive.
-    pub fn respond(self, resp: InferenceResponse) {
-        if let Some(g) = &self.depth {
+    /// dispatch failure, unknown variant) answers through here; anything
+    /// that slips through is caught by `Drop`.
+    pub fn respond(mut self, resp: InferenceResponse) {
+        self.finish(resp);
+    }
+
+    fn finish(&mut self, resp: InferenceResponse) {
+        if let Some(g) = self.depth.take() {
             g.fetch_sub(1, Ordering::Relaxed);
         }
-        let _ = self.reply.send(resp);
+        if let Some(tx) = self.reply.take() {
+            let _ = tx.send(resp);
+        }
+    }
+}
+
+impl Drop for InferenceRequest {
+    fn drop(&mut self) {
+        if self.reply.is_some() {
+            crate::obs::counter("requests_dropped_total").inc();
+            let resp = InferenceResponse::error(
+                self.id,
+                "request dropped unanswered (worker died mid-batch)",
+            );
+            self.finish(resp);
+        }
     }
 }
 
@@ -79,5 +121,51 @@ impl PendingRequest {
         dur: std::time::Duration,
     ) -> Result<InferenceResponse, mpsc::RecvTimeoutError> {
         self.rx.recv_timeout(dur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(depth: Option<Arc<AtomicUsize>>) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (InferenceRequest::new(1, "fp32", vec![0.0; 3], tx, depth), rx)
+    }
+
+    #[test]
+    fn respond_releases_gauge_once() {
+        let g = Arc::new(AtomicUsize::new(1));
+        let (req, rx) = mk(Some(g.clone()));
+        req.respond(InferenceResponse::error(1, "x"));
+        assert_eq!(g.load(Ordering::Relaxed), 0);
+        assert!(rx.recv().unwrap().error.is_some());
+        // channel closed after the single reply
+        assert!(rx.recv().is_err());
+    }
+
+    #[test]
+    fn drop_answers_with_typed_error_and_releases_gauge() {
+        let dropped0 = crate::obs::counter("requests_dropped_total").get();
+        let g = Arc::new(AtomicUsize::new(1));
+        let (req, rx) = mk(Some(g.clone()));
+        drop(req);
+        assert_eq!(g.load(Ordering::Relaxed), 0, "drop must release the depth slot");
+        let resp = rx.recv().expect("drop must still answer the client");
+        assert!(resp.error.as_deref().unwrap_or("").contains("dropped"), "{resp:?}");
+        assert_eq!(crate::obs::counter("requests_dropped_total").get(), dropped0 + 1);
+    }
+
+    #[test]
+    fn panic_mid_batch_still_answers() {
+        let g = Arc::new(AtomicUsize::new(1));
+        let (req, rx) = mk(Some(g.clone()));
+        let h = std::thread::spawn(move || {
+            let _owned = req;
+            panic!("worker died mid-batch");
+        });
+        assert!(h.join().is_err());
+        assert!(rx.recv().unwrap().error.is_some(), "unwind must deliver an error reply");
+        assert_eq!(g.load(Ordering::Relaxed), 0);
     }
 }

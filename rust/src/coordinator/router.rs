@@ -1,20 +1,37 @@
-//! Router (S9): per-variant worker pools with least-loaded dispatch.
+//! Router (S9): per-variant worker pools with least-loaded dispatch and
+//! supervised respawn.
 //!
 //! PJRT handles are thread-confined (!Send raw pointers), so each worker
 //! thread *creates its own* engine + compiled executable and owns it for
 //! life; only plain-data requests cross channels. The router tracks
 //! per-worker in-flight counts (atomics) and picks the least-loaded
 //! worker, breaking ties round-robin.
+//!
+//! Supervision (DESIGN.md §13): a pool built with [`Pool::supervised`]
+//! reaps workers whose threads have died (panic mid-batch, injected via
+//! the `pool/worker_batch` failpoint) and respawns replacements under a
+//! capped exponential backoff — a worker that dies instantly on every
+//! batch cannot turn the dispatcher into a spawn loop. Requests owned by a
+//! dying worker are answered by [`InferenceRequest`]'s drop guard, so a
+//! crash loses zero requests.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::util::error::Result;
+use crate::util::failpoint;
 
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse};
+
+/// First respawn delay after a worker death.
+pub const RESPAWN_BASE: Duration = Duration::from_millis(50);
+/// Backoff ceiling: a permanently-crashing backend retries at this cadence.
+pub const RESPAWN_CAP: Duration = Duration::from_secs(5);
+/// A death-free stretch this long resets the backoff to [`RESPAWN_BASE`].
+pub const BACKOFF_RESET: Duration = Duration::from_secs(30);
 
 /// How a worker evaluates batches.
 #[derive(Debug, Clone)]
@@ -174,6 +191,21 @@ fn worker_loop(
     };
 
     for batch in rx.iter() {
+        // Injected worker failure (panic mode kills this thread mid-batch;
+        // the requests' drop guards answer the clients and the supervisor
+        // respawns a replacement). err/disconnect modes fail just the batch.
+        if let Some(inj) = failpoint::check("pool/worker_batch") {
+            for req in batch {
+                let latency_us = req.enqueued.elapsed().as_micros() as u64;
+                metrics.lock().unwrap().record(latency_us, false);
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                req.respond(InferenceResponse::error(
+                    req.id,
+                    format!("injected worker failure ({inj:?})"),
+                ));
+            }
+            continue;
+        }
         let bsize = batch.len();
         let _sp = crate::obs::span::SpanGuard::enter(infer_span);
         let t0 = Instant::now();
@@ -239,69 +271,178 @@ fn worker_loop(
     }
 }
 
+/// Deterministic respawn pacing: at most one spawn per poll, gated by a
+/// capped exponential backoff that decays back to base after a death-free
+/// stretch. Pure state machine over injected `now` values (unit-testable
+/// without clocks or threads).
+struct RespawnGate {
+    backoff: Duration,
+    /// earliest instant the next respawn is allowed
+    not_before: Option<Instant>,
+    /// last time a respawn was performed (for backoff decay)
+    last_spawn: Option<Instant>,
+}
+
+impl RespawnGate {
+    fn new() -> Self {
+        RespawnGate { backoff: RESPAWN_BASE, not_before: None, last_spawn: None }
+    }
+
+    /// May one worker be respawned at `now`? Advances the backoff when yes.
+    fn allow(&mut self, now: Instant) -> bool {
+        if let Some(last) = self.last_spawn {
+            if now.duration_since(last) >= BACKOFF_RESET {
+                self.backoff = RESPAWN_BASE;
+            }
+        }
+        match self.not_before {
+            Some(t) if now < t => false,
+            _ => {
+                self.not_before = Some(now + self.backoff);
+                self.last_spawn = Some(now);
+                self.backoff = (self.backoff * 2).min(RESPAWN_CAP);
+                true
+            }
+        }
+    }
+}
+
+struct PoolInner {
+    workers: Vec<Worker>,
+    rr: usize,
+    gate: RespawnGate,
+}
+
+/// Supervision config: what to respawn dead workers as, and up to how many.
+struct Supervise {
+    backend: Backend,
+    metrics: Arc<Mutex<Metrics>>,
+    target: usize,
+}
+
 /// A pool of workers for one variant.
 pub struct Pool {
     pub variant: String,
-    workers: Vec<Worker>,
-    rr: AtomicUsize,
+    inner: Mutex<PoolInner>,
+    supervise: Option<Supervise>,
 }
 
 impl Pool {
+    /// Fixed-roster pool (tests): dead workers are not replaced.
     pub fn new(variant: String, workers: Vec<Worker>) -> Self {
-        Pool { variant, workers, rr: AtomicUsize::new(0) }
+        Pool {
+            variant,
+            inner: Mutex::new(PoolInner { workers, rr: 0, gate: RespawnGate::new() }),
+            supervise: None,
+        }
+    }
+
+    /// Supervised pool: spawns `target` workers now and replaces any that
+    /// die, one per dispatch poll, under the capped backoff.
+    pub fn supervised(
+        variant: String,
+        backend: Backend,
+        target: usize,
+        metrics: Arc<Mutex<Metrics>>,
+    ) -> Result<Self> {
+        let workers: Result<Vec<Worker>> =
+            (0..target).map(|_| spawn_worker(backend.clone(), metrics.clone())).collect();
+        Ok(Pool {
+            variant,
+            inner: Mutex::new(PoolInner { workers: workers?, rr: 0, gate: RespawnGate::new() }),
+            supervise: Some(Supervise { backend, metrics, target }),
+        })
     }
 
     pub fn n_workers(&self) -> usize {
-        self.workers.len()
+        self.inner.lock().unwrap().workers.len()
+    }
+
+    /// Reap workers whose threads have exited and (when supervised) respawn
+    /// at most one replacement per call, backoff permitting.
+    fn reap_and_respawn(&self, inner: &mut PoolInner) {
+        let before = inner.workers.len();
+        inner.workers.retain(|w| !w.handle.is_finished());
+        let died = before - inner.workers.len();
+        let Some(sup) = &self.supervise else { return };
+        if died > 0 {
+            eprintln!(
+                "pool {:?}: reaped {died} dead worker(s), {} alive",
+                self.variant,
+                inner.workers.len()
+            );
+        }
+        if inner.workers.len() < sup.target && inner.gate.allow(Instant::now()) {
+            match spawn_worker(sup.backend.clone(), sup.metrics.clone()) {
+                Ok(w) => {
+                    inner.workers.push(w);
+                    crate::obs::counter("worker_respawns_total").inc();
+                    crate::obs::counter(&crate::obs::labeled(
+                        "worker_respawns_total",
+                        &[("variant", &self.variant)],
+                    ))
+                    .inc();
+                }
+                Err(e) => eprintln!("pool {:?}: respawn failed: {e:#}", self.variant),
+            }
+        }
     }
 
     /// Least-loaded dispatch (ties broken round-robin).
     ///
-    /// On failure (no workers, or the chosen worker's channel is closed) the
-    /// batch is handed back so the caller can answer every request with a
-    /// typed error — dropping the reply senders would surface to clients as
-    /// a bare channel disconnect.
+    /// On failure (no live workers, or the chosen worker's channel closed in
+    /// a race) the batch is handed back so the caller can answer every
+    /// request with a typed error.
     pub fn dispatch(
         &self,
         batch: Vec<InferenceRequest>,
     ) -> std::result::Result<(), Vec<InferenceRequest>> {
-        let n = self.workers.len();
+        let mut inner = self.inner.lock().unwrap();
+        self.reap_and_respawn(&mut inner);
+        let n = inner.workers.len();
         if n == 0 {
             return Err(batch);
         }
-        let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let start = inner.rr % n;
+        inner.rr = inner.rr.wrapping_add(1);
         let mut best = start;
         let mut best_load = usize::MAX;
         for k in 0..n {
             let i = (start + k) % n;
-            let load = self.workers[i].inflight.load(Ordering::Relaxed);
+            let load = inner.workers[i].inflight.load(Ordering::Relaxed);
             if load < best_load {
                 best_load = load;
                 best = i;
             }
         }
-        self.workers[best].inflight.fetch_add(batch.len(), Ordering::Relaxed);
-        match self.workers[best].tx.send(batch) {
+        inner.workers[best].inflight.fetch_add(batch.len(), Ordering::Relaxed);
+        match inner.workers[best].tx.send(batch) {
             Ok(()) => Ok(()),
             Err(mpsc::SendError(batch)) => {
                 // the worker is gone: undo the in-flight accounting it will
                 // never decrement, and give the batch back
-                self.workers[best].inflight.fetch_sub(batch.len(), Ordering::Relaxed);
+                inner.workers[best].inflight.fetch_sub(batch.len(), Ordering::Relaxed);
                 Err(batch)
             }
         }
     }
 
-    /// Total in-flight requests across this pool's workers.
+    /// Total in-flight requests across this pool's live workers.
     pub fn total_inflight(&self) -> usize {
-        self.workers.iter().map(|w| w.inflight.load(Ordering::Relaxed)).sum()
+        let inner = self.inner.lock().unwrap();
+        inner
+            .workers
+            .iter()
+            .filter(|w| !w.handle.is_finished())
+            .map(|w| w.inflight.load(Ordering::Relaxed))
+            .sum()
     }
 
     /// Close channels and join all workers.
     pub fn shutdown(self) {
-        let Pool { workers, .. } = self;
+        let inner = self.inner.into_inner().unwrap();
         let mut handles = Vec::new();
-        for w in workers {
+        for w in inner.workers {
             drop(w.tx);
             handles.push(w.handle);
         }
@@ -325,18 +466,15 @@ mod tests {
         (Pool::new("mock".into(), workers), metrics)
     }
 
+    fn mk_req(id: u64, variant: &str, positions: Vec<f32>) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+        let (tx, rx) = mpsc::channel();
+        (InferenceRequest::new(id, variant, positions, tx, None), rx)
+    }
+
     #[test]
     fn mock_roundtrip() {
         let (pool, metrics) = mock_pool(2, 2);
-        let (tx, rx) = mpsc::channel();
-        let req = InferenceRequest {
-            id: 7,
-            variant: "mock".into(),
-            positions: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
-            reply: tx,
-            enqueued: Instant::now(),
-            depth: None,
-        };
+        let (req, rx) = mk_req(7, "mock", vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert_eq!(resp.id, 7);
@@ -350,15 +488,7 @@ mod tests {
     #[test]
     fn bad_shape_is_error_not_hang() {
         let (pool, _m) = mock_pool(1, 4);
-        let (tx, rx) = mpsc::channel();
-        let req = InferenceRequest {
-            id: 1,
-            variant: "mock".into(),
-            positions: vec![0.0; 5],
-            reply: tx,
-            enqueued: Instant::now(),
-            depth: None,
-        };
+        let (req, rx) = mk_req(1, "mock", vec![0.0; 5]);
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(resp.error.is_some());
@@ -382,15 +512,7 @@ mod tests {
         let pool = Pool::new("gaq_w4a8".into(), vec![worker]);
         let m = crate::runtime::Manifest::reference();
         let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
-        let (tx, rx) = mpsc::channel();
-        let req = InferenceRequest {
-            id: 1,
-            variant: "gaq_w4a8".into(),
-            positions: pos,
-            reply: tx,
-            enqueued: Instant::now(),
-            depth: None,
-        };
+        let (req, rx) = mk_req(1, "gaq_w4a8", pos);
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -410,15 +532,7 @@ mod tests {
         let pool = Pool::new("gaq_w4a8".into(), vec![worker]);
         let m = crate::runtime::Manifest::reference();
         let pos: Vec<f32> = m.molecule.positions.iter().map(|&x| x as f32).collect();
-        let (tx, rx) = mpsc::channel();
-        let req = InferenceRequest {
-            id: 5,
-            variant: "gaq_w4a8".into(),
-            positions: pos,
-            reply: tx,
-            enqueued: Instant::now(),
-            depth: None,
-        };
+        let (req, rx) = mk_req(5, "gaq_w4a8", pos);
         pool.dispatch(vec![req]).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -444,15 +558,8 @@ mod tests {
         let mut rxs = Vec::new();
         let mut batch = Vec::new();
         for id in 0..k {
-            let (tx, rx) = mpsc::channel();
-            batch.push(InferenceRequest {
-                id,
-                variant: "no_such_variant".into(),
-                positions: vec![0.0; 6],
-                reply: tx,
-                enqueued: Instant::now(),
-                depth: None,
-            });
+            let (req, rx) = mk_req(id, "no_such_variant", vec![0.0; 6]);
+            batch.push(req);
             rxs.push(rx);
         }
         pool.dispatch(batch).unwrap();
@@ -470,27 +577,21 @@ mod tests {
         pool.shutdown();
     }
 
-    /// A dispatch to a dead pool hands the batch back (typed-error path)
-    /// and undoes its in-flight accounting.
+    /// A dispatch to a dead pool hands the batch back and undoes its
+    /// in-flight accounting; if the caller then drops the batch, the drop
+    /// guard still answers each request with a typed error.
     #[test]
     fn dispatch_to_dead_worker_returns_batch() {
         let pool = Pool::new("dead".into(), vec![dead_worker()]);
-        let (tx, rx) = mpsc::channel();
-        let req = InferenceRequest {
-            id: 9,
-            variant: "dead".into(),
-            positions: vec![0.0; 6],
-            reply: tx,
-            enqueued: Instant::now(),
-            depth: None,
-        };
+        let (req, rx) = mk_req(9, "dead", vec![0.0; 6]);
         let back = pool.dispatch(vec![req]).unwrap_err();
         assert_eq!(back.len(), 1);
         assert_eq!(back[0].id, 9);
         assert_eq!(pool.total_inflight(), 0);
         drop(back);
-        // only after the caller drops the batch does the channel disconnect
-        assert!(rx.recv().is_err());
+        // the drop guard answers with a typed error, never a bare disconnect
+        let resp = rx.recv().expect("drop guard must reply");
+        assert!(resp.error.as_deref().unwrap_or("").contains("dropped"), "{resp:?}");
         pool.shutdown();
     }
 
@@ -499,16 +600,8 @@ mod tests {
         let (pool, metrics) = mock_pool(3, 1);
         let mut rxs = Vec::new();
         for id in 0..200u64 {
-            let (tx, rx) = mpsc::channel();
+            let (req, rx) = mk_req(id, "mock", vec![id as f32, 0.0, 0.0]);
             rxs.push((id, rx));
-            let req = InferenceRequest {
-                id,
-                variant: "mock".into(),
-                positions: vec![id as f32, 0.0, 0.0],
-                reply: tx,
-                enqueued: Instant::now(),
-                depth: None,
-            };
             pool.dispatch(vec![req]).unwrap();
         }
         for (id, rx) in rxs {
@@ -518,5 +611,40 @@ mod tests {
         }
         pool.shutdown();
         assert_eq!(metrics.lock().unwrap().completed, 200);
+    }
+
+    #[test]
+    fn supervised_pool_serves_like_fixed_pool() {
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let pool =
+            Pool::supervised("mock".into(), Backend::Mock { n_atoms: 1 }, 2, metrics).unwrap();
+        assert_eq!(pool.n_workers(), 2);
+        let (req, rx) = mk_req(1, "mock", vec![2.0, 0.0, 0.0]);
+        pool.dispatch(vec![req]).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_secs(5)).unwrap().energy_ev, 2.0);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn respawn_gate_backs_off_exponentially_and_resets() {
+        let mut g = RespawnGate::new();
+        let t0 = Instant::now();
+        assert!(g.allow(t0), "first respawn is immediate");
+        assert!(!g.allow(t0), "second respawn at the same instant is gated");
+        assert!(!g.allow(t0 + RESPAWN_BASE / 2));
+        assert!(g.allow(t0 + RESPAWN_BASE), "base delay elapsed");
+        // after two spawns the delay has doubled once
+        assert!(!g.allow(t0 + RESPAWN_BASE + RESPAWN_BASE));
+        assert!(g.allow(t0 + RESPAWN_BASE + 2 * RESPAWN_BASE));
+        // cap: repeated deaths never exceed RESPAWN_CAP
+        let mut t = t0;
+        for _ in 0..20 {
+            t += RESPAWN_CAP;
+            assert!(g.allow(t), "cap must bound the backoff");
+        }
+        // a long death-free stretch resets to base
+        t += BACKOFF_RESET + Duration::from_secs(1);
+        assert!(g.allow(t));
+        assert!(g.allow(t + RESPAWN_BASE), "backoff reset to base after quiet period");
     }
 }

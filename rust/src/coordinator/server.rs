@@ -10,11 +10,12 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::util::error::{Error, Result};
+use crate::util::failpoint;
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferenceRequest, InferenceResponse, PendingRequest};
-use super::router::{spawn_worker, Backend, Pool};
+use super::router::{Backend, Pool};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -106,28 +107,25 @@ fn submit_on(
     variant: &str,
     positions: Vec<f32>,
 ) -> Result<PendingRequest> {
+    // Injected submit failure (fault harness): refuse before the request
+    // enters the system or touches the depth gauge.
+    failpoint::fail("coordinator/submit")?;
     let id = next_id.fetch_add(1, Ordering::Relaxed);
     let (reply, rx) = mpsc::channel();
     let depth = depths.get(variant).cloned();
     if let Some(g) = &depth {
         g.fetch_add(1, Ordering::Relaxed);
     }
-    let req = InferenceRequest {
-        id,
-        variant: variant.to_string(),
-        positions,
-        reply,
-        enqueued: Instant::now(),
-        depth,
-    };
+    let req = InferenceRequest::new(id, variant, positions, reply, depth);
     match tx.send(Control::Request(req)) {
         Ok(()) => Ok(PendingRequest { id, rx }),
         Err(mpsc::SendError(ctrl)) => {
-            // never entered the system: release the gauge slot
+            // never entered the system: answering through the request's own
+            // terminal path releases the gauge slot exactly once (the reply
+            // lands on the rx dropped below, which is fine)
             if let Control::Request(req) = ctrl {
-                if let Some(g) = &req.depth {
-                    g.fetch_sub(1, Ordering::Relaxed);
-                }
+                let id = req.id;
+                req.respond(InferenceResponse::error(id, "server is shut down"));
             }
             Err(Error::msg("server is shut down"))
         }
@@ -141,10 +139,12 @@ impl Server {
         let mut pools: BTreeMap<String, Pool> = BTreeMap::new();
         let mut depths: Depths = BTreeMap::new();
         for (name, backend, n) in &cfg.variants {
-            let workers = (0..*n)
-                .map(|_| spawn_worker(backend.clone(), metrics.clone()))
-                .collect::<Result<Vec<_>>>()?;
-            pools.insert(name.clone(), Pool::new(name.clone(), workers));
+            // supervised: workers that die (panic mid-batch) are reaped and
+            // respawned under a capped backoff (DESIGN.md §13)
+            pools.insert(
+                name.clone(),
+                Pool::supervised(name.clone(), backend.clone(), *n, metrics.clone())?,
+            );
             depths.insert(name.clone(), Arc::new(AtomicUsize::new(0)));
         }
 
@@ -463,7 +463,7 @@ mod tests {
     /// and the other variants keep draining.
     #[test]
     fn dead_pool_yields_typed_errors_and_keeps_draining() {
-        use super::super::router::dead_worker;
+        use super::super::router::{dead_worker, spawn_worker};
 
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let mut pools: BTreeMap<String, Pool> = BTreeMap::new();
@@ -484,17 +484,7 @@ mod tests {
         // queue 3 batches' worth on the dead variant and 1 on the live one
         let mk = |id: u64, variant: &str| {
             let (tx, rx) = mpsc::channel();
-            (
-                InferenceRequest {
-                    id,
-                    variant: variant.into(),
-                    positions: vec![1.0; 6],
-                    reply: tx,
-                    enqueued: Instant::now(),
-                    depth: None,
-                },
-                rx,
-            )
+            (InferenceRequest::new(id, variant, vec![1.0; 6], tx, None), rx)
         };
         let mut dead_rxs = Vec::new();
         for id in 0..6u64 {

@@ -19,6 +19,8 @@
 //! * [`quant`] — packed INT4/INT8 images, integer GEMMs, S² codebooks (Table IV)
 //! * [`lee`] — Local Equivariance Error harness (Table III)
 //! * [`obs`] — metrics registry, log₂-bucket histograms, span tracing
+//! * [`store`] — crash-safe trajectory store: checksummed segments,
+//!   versioned manifest, checkpoint/resume records
 //! * [`costmodel`] — Table I complexity model
 //! * [`geometry`], [`molecule`], [`util`] — shared substrates
 
@@ -32,6 +34,7 @@ pub mod molecule;
 pub mod obs;
 pub mod quant;
 pub mod runtime;
+pub mod store;
 pub mod util;
 
 /// Default artifacts directory (relative to the workspace root).

@@ -45,10 +45,12 @@ use gaq_md::coordinator::{
     Backend, BatchPolicy, NetClient, NetConfig, NetOutcome, NetServer, Server, ServerConfig,
 };
 use gaq_md::md::integrator::MdState;
-use gaq_md::md::{integrator, ForceProvider};
+use gaq_md::md::{integrator, runner, ForceProvider};
 use gaq_md::runtime::{self, BackendChoice, Manifest};
+use gaq_md::store::RunStore;
 use gaq_md::util::cli::Args;
 use gaq_md::util::error::{Context, Result};
+use gaq_md::util::failpoint;
 use gaq_md::util::json::Json;
 use gaq_md::util::prng::Rng;
 
@@ -81,6 +83,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "lee" => cmd_lee(args),
         "trace-check" => cmd_trace_check(args),
+        "store-check" => cmd_store_check(args),
         "help" | "--help" | "-h" => {
             print!("{}", HELP);
             Ok(())
@@ -107,7 +110,7 @@ const HELP: &str = "\
 gaq-md — Geometric-Aware Quantization for SO(3)-equivariant GNNs (L3 runtime)
 
 USAGE:
-  gaq-md <info|predict|md|serve|lee|trace-check|help> [--options]
+  gaq-md <info|predict|md|serve|lee|trace-check|store-check|help> [--options]
 
 SUBCOMMANDS:
   info         show manifest: molecule, variants, training metrics
@@ -116,6 +119,9 @@ SUBCOMMANDS:
   serve        run the batching server against a synthetic request load
   lee          measure Local Equivariance Error of deployed variants
   trace-check  validate a --trace-out JSON file (span roster + coverage)
+  store-check  open a --store directory (recovering torn tails), print a
+               summary; `--against DIR2` additionally asserts the two
+               stores' frame/checkpoint bytes are identical
 
 COMMON OPTIONS:
   --artifacts DIR    artifact directory (default: ./artifacts, env GAQ_ARTIFACTS)
@@ -128,6 +134,15 @@ COMMON OPTIONS:
   --trace-out PATH   enable span tracing for the run and write a Chrome
                      trace-event JSON file (Perfetto loadable) at exit;
                      env GAQ_TRACE is the same switch
+
+MD OPTIONS (crash safety, DESIGN.md §13):
+  --store DIR        persist every production frame + periodic checkpoints
+                     to an append-only, checksummed run store in DIR
+  --checkpoint-every N  checkpoint cadence in production steps
+                     (default 500; initial and final always checkpointed)
+  --resume           resume from the newest checkpoint in --store DIR;
+                     the resumed trajectory is bit-identical to an
+                     uninterrupted run (a fresh start if DIR is empty)
 
 TRACE-CHECK OPTIONS (gaq-md trace-check PATH):
   --expect a,b       span names that must appear in the trace
@@ -148,6 +163,10 @@ SERVE OPTIONS:
   --max-queue-depth N  per-variant admission bound: submissions beyond this
                      many in-system requests are rejected Overloaded
                      instead of queueing unboundedly (default 1024)
+  --request-deadline-ms N  per-request server-side deadline: an admitted
+                     request unanswered after N ms gets the typed Timeout
+                     rejection instead of pinning the connection on a
+                     wedged backend (default 120000)
 
 METRICS (network mode):
   the TCP protocol serves `{\"type\":\"metrics\"}` (JSON registry dump under
@@ -159,6 +178,11 @@ METRICS (network mode):
 ENVIRONMENT:
   GAQ_THREADS        worker budget of the data-parallel pool
                      (0/unset: all cores)
+  GAQ_FAILPOINTS     deterministic fault injection, `name:mode[:arg],...`
+                     (modes err/panic/exit/stall/shortwrite/disconnect;
+                     e.g. `md/step:exit:90` kills MD at step 90,
+                     `store/append:shortwrite:3` tears a store write).
+                     GAQ_FAILPOINT_SEED reseeds probabilistic triggers.
 ";
 
 fn artifacts_dir(args: &Args) -> String {
@@ -298,6 +322,10 @@ struct MdJob {
     /// 0 silences per-step prints (replica mode)
     report_every: usize,
     seed: u64,
+    /// crash-safe trajectory store directory (DESIGN.md §13); None = in-memory
+    store_dir: Option<std::path::PathBuf>,
+    checkpoint_every: usize,
+    resume: bool,
 }
 
 /// One full trajectory: load variant, Langevin equilibration, NVE production.
@@ -307,6 +335,36 @@ fn run_md_replica(job: &MdJob) -> Result<MdRunStats> {
     let mol = &manifest.molecule;
     let mut provider = runtime::ModelForceProvider::new(ff);
     let label = provider.label();
+
+    if job.store_dir.is_some() {
+        // crash-safe path: the runner owns persistence + checkpoint/resume
+        let mut cfg = runner::MdRunConfig::new(steps, dt, temp);
+        cfg.equil = equil;
+        cfg.seed = seed;
+        cfg.report_every = report_every;
+        cfg.store_dir = job.store_dir.clone();
+        cfg.checkpoint_every = job.checkpoint_every;
+        cfg.resume = job.resume;
+        cfg.run_name = job.variant.clone();
+        cfg.meta = Json::obj([
+            ("variant", Json::str(&job.variant)),
+            ("backend", Json::str(backend.name())),
+            ("molecule", Json::str(&mol.name)),
+            ("dt_fs", Json::Num(dt)),
+            ("temp_k", Json::Num(temp)),
+            ("seed", Json::Num(seed as f64)),
+        ]);
+        let t_start = std::time::Instant::now();
+        let out = runner::run_md(&mut provider, &mol.positions, &mol.masses, &cfg)?;
+        let wall = t_start.elapsed();
+        if report_every > 0 {
+            if let Some(from) = out.resumed_from {
+                println!("  resumed from checkpoint at step {from}");
+            }
+        }
+        let steps_per_s = out.report.steps as f64 / wall.as_secs_f64().max(1e-9);
+        return Ok(MdRunStats { label, report: out.report, steps_per_s });
+    }
 
     let mut state = MdState::new(mol.positions.clone(), mol.masses.clone());
     let mut rng = Rng::new(seed);
@@ -367,6 +425,12 @@ fn cmd_md(args: &Args) -> Result<()> {
     let report_every = args.get_usize("report-every", 500);
     let seed = args.get_u64("seed", 0);
     let replicas = args.get_usize("replicas", 1).max(1);
+    let store_dir = args.get("store").map(std::path::PathBuf::from);
+    let checkpoint_every = args.get_usize("checkpoint-every", 500);
+    let resume = args.flag("resume") || args.get("resume").is_some_and(|v| v != "false");
+    if resume && store_dir.is_none() {
+        bail!("--resume requires --store DIR (nowhere to resume from)");
+    }
 
     let manifest = load_manifest(args, &dir)?;
     manifest.variant(&variant)?;
@@ -376,8 +440,28 @@ fn cmd_md(args: &Args) -> Result<()> {
         manifest.molecule.n_atoms(),
         steps as f64 * dt / 1000.0
     );
+    if let Some(d) = &store_dir {
+        println!(
+            "store: {} (checkpoint every {checkpoint_every} steps{})",
+            d.display(),
+            if resume { ", resuming" } else { "" }
+        );
+    }
 
-    let job = MdJob { dir, variant, backend, steps, dt, temp, equil, report_every, seed };
+    let job = MdJob {
+        dir,
+        variant,
+        backend,
+        steps,
+        dt,
+        temp,
+        equil,
+        report_every,
+        seed,
+        store_dir: store_dir.clone(),
+        checkpoint_every,
+        resume,
+    };
 
     if replicas == 1 {
         let stats = run_md_replica(&job)?;
@@ -407,6 +491,9 @@ fn cmd_md(args: &Args) -> Result<()> {
                 let mut rep_job = job.clone();
                 rep_job.seed = seed.wrapping_add(rep as u64);
                 rep_job.report_every = 0;
+                // each replica persists to its own subdirectory
+                rep_job.store_dir =
+                    store_dir.as_ref().map(|d| d.join(format!("replica-{rep}")));
                 s.spawn(move || run_md_replica(&rep_job))
             })
             .collect();
@@ -587,7 +674,12 @@ fn serve_over_tcp(
     let n_requests = args.get_usize("requests", 256);
     let clients = args.get_usize("replicas", 1).max(1);
     let choice = backend_choice(args)?;
-    let net = NetServer::start(server, NetConfig::new(listen).with_expected_len(base.len()))?;
+    let mut net_cfg = NetConfig::new(listen).with_expected_len(base.len());
+    if let Some(ms) = args.get("request-deadline-ms").and_then(|v| v.parse::<u64>().ok()) {
+        net_cfg = net_cfg
+            .with_request_deadline(std::time::Duration::from_millis(ms.max(1)));
+    }
+    let net = NetServer::start(server, net_cfg)?;
     let addr = net.local_addr().to_string();
     println!("listening on {addr} (length-prefixed JSON; DESIGN.md §11)");
 
@@ -633,6 +725,9 @@ fn serve_over_tcp(
         stats.completed, stats.sent, stats.rejected, stats.transport_errors
     );
     net.shutdown();
+    // The zero-lost-request identity is unconditional — it is exactly what
+    // the fault-injection harness exists to prove: every sent request ends
+    // as a completion, a typed rejection, or a classified transport error.
     if stats.sent != stats.completed + stats.rejected + stats.transport_errors {
         bail!(
             "request accounting broken: sent {} != completed {} + rejected {} + transport {}",
@@ -642,13 +737,93 @@ fn serve_over_tcp(
             stats.transport_errors
         );
     }
-    if stats.transport_errors > 0 {
-        bail!("network serving failed: {} transport errors ({stats:?})", stats.transport_errors);
-    }
     if stats.completed == 0 {
         bail!("network serving failed: no request completed ({stats:?})");
     }
+    let faults = failpoint::active();
+    if faults {
+        // under GAQ_FAILPOINTS transport errors are the injected outcome,
+        // and stage-histogram coverage is not guaranteed — the identity
+        // above and liveness are the pass criteria
+        println!(
+            "failpoints active: {} transport errors accounted for, registry check skipped",
+            stats.transport_errors
+        );
+        return Ok(());
+    }
+    if stats.transport_errors > 0 {
+        bail!("network serving failed: {} transport errors ({stats:?})", stats.transport_errors);
+    }
     registry_check
+}
+
+/// `store-check DIR [--against DIR2]`: open a run store (running torn-tail
+/// recovery exactly like a resume would), print a summary, and verify the
+/// manifest's digests. With `--against`, additionally assert the two stores
+/// hold byte-identical frame and checkpoint streams — the `make store-smoke`
+/// gate that a killed-and-resumed run matches an uninterrupted one.
+fn cmd_store_check(args: &Args) -> Result<()> {
+    let Some(dir) = args.positional.get(1) else {
+        bail!("usage: gaq-md store-check DIR [--against DIR2]");
+    };
+    let summarize = |dir: &str| -> Result<(RunStore, Vec<Vec<u8>>, Vec<Vec<u8>>)> {
+        let path = std::path::Path::new(dir);
+        if !path.join(gaq_md::store::manifest::MANIFEST_NAME).exists() {
+            // RunStore::open would create a fresh store here; a *check*
+            // command must never conjure the thing it is checking
+            bail!("{dir} has no manifest (not a run store, or the run never checkpointed)");
+        }
+        let (store, report) = RunStore::open(path, "md", Json::Null)
+            .with_context(|| format!("opening store {dir}"))?;
+        let frames: Vec<Vec<u8>> =
+            store.frames()?.iter().map(|f| f.encode()).collect();
+        let cks: Vec<Vec<u8>> = store.checkpoints_raw()?;
+        let last_ck = store.latest_checkpoint()?;
+        println!(
+            "{dir}: {} frames, {} checkpoints, {} results | finalized: {} | recovered: {} torn bytes",
+            frames.len(),
+            cks.len(),
+            store.result_count(),
+            store.manifest().finalized,
+            report.truncated_bytes(),
+        );
+        if let Some(ck) = &last_ck {
+            println!(
+                "  latest checkpoint: step {} (t = {:.3} fs, {} atoms)",
+                ck.step,
+                ck.time_fs,
+                ck.positions.len() / 3
+            );
+        }
+        Ok((store, frames, cks))
+    };
+    let (_store, frames, cks) = summarize(dir)?;
+    if let Some(other) = args.get("against") {
+        let (_s2, frames2, cks2) = summarize(other)?;
+        if frames != frames2 {
+            let n = frames.len().min(frames2.len());
+            let first_diff =
+                (0..n).find(|&i| frames[i] != frames2[i]).unwrap_or(n);
+            bail!(
+                "frame streams differ: {} vs {} frames, first divergence at frame {first_diff}",
+                frames.len(),
+                frames2.len()
+            );
+        }
+        if cks != cks2 {
+            bail!(
+                "checkpoint streams differ ({} vs {} checkpoints)",
+                cks.len(),
+                cks2.len()
+            );
+        }
+        println!(
+            "stores match: {} frames and {} checkpoints byte-identical",
+            frames.len(),
+            cks.len()
+        );
+    }
+    Ok(())
 }
 
 /// `count` of histogram `name` in a registry dump (0 if absent or empty).

@@ -3,12 +3,14 @@
 //! Velocity-Verlet NVE and Langevin NVT integrators driving any
 //! [`ForceProvider`] — the PJRT-compiled quantized force fields
 //! (runtime::ModelForceProvider), the classical oracle, or test stubs.
-//! Includes the energy-drift tracker behind Fig. 3.
+//! Includes the energy-drift tracker behind Fig. 3 and the crash-safe
+//! run driver with checkpoint/resume ([`runner`], DESIGN.md §13).
 
 pub mod classical;
 pub mod drift;
 pub mod integrator;
 pub mod observables;
+pub mod runner;
 pub mod thermostat;
 pub mod trajectory;
 

@@ -1,0 +1,372 @@
+//! Crash-safe MD driver: equilibration + NVE production with optional
+//! trajectory persistence and checkpoint/resume (DESIGN.md §13).
+//!
+//! The determinism contract (DESIGN.md §9) extends across process death: a
+//! run killed at any instruction boundary and resumed from its store
+//! replays the *bit-identical* trajectory of an uninterrupted run. The
+//! ingredients:
+//!
+//! * every production step appends an [`MdFrame`] (raw `f64` bits);
+//! * a checkpoint captures positions, velocities, sim clock, step counter
+//!   and the complete PRNG state (NVE production draws nothing, but the
+//!   state is carried so thermostatted phases resume exactly too);
+//! * forces are recomputed from positions on resume (pure function);
+//! * resume rewinds frames past the checkpoint step, so replayed steps
+//!   overwrite rather than duplicate.
+//!
+//! The `md/step` failpoint at the top of each production step is the
+//! kill-switch the crash-smoke and resume-determinism suites use
+//! (`GAQ_FAILPOINTS=md/step:exit:N` is SIGKILL-equivalent mid-run).
+
+use std::path::PathBuf;
+
+use super::drift::{DriftReport, DriftTracker};
+use super::integrator::{langevin_step, verlet_step, MdState};
+use super::{ForceProvider, KB_EV};
+use crate::store::checkpoint::{MdCheckpoint, MdFrame};
+use crate::store::RunStore;
+use crate::util::error::{Context, Result};
+use crate::util::failpoint;
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// Friction used for the Langevin equilibration phase (1/fs).
+pub const EQUIL_GAMMA: f64 = 0.02;
+
+/// Parameters of one trajectory.
+#[derive(Debug, Clone)]
+pub struct MdRunConfig {
+    pub steps: usize,
+    pub dt_fs: f64,
+    pub temp_k: f64,
+    pub equil: usize,
+    pub seed: u64,
+    /// 0 silences per-step progress prints
+    pub report_every: usize,
+    /// persist frames/checkpoints here; `None` runs in-memory only
+    pub store_dir: Option<PathBuf>,
+    /// checkpoint cadence in production steps (0: only initial + final)
+    pub checkpoint_every: usize,
+    /// resume from the newest checkpoint in `store_dir` when present
+    pub resume: bool,
+    /// run name recorded in the store manifest
+    pub run_name: String,
+    /// free-form metadata recorded in the store manifest
+    pub meta: Json,
+}
+
+impl MdRunConfig {
+    pub fn new(steps: usize, dt_fs: f64, temp_k: f64) -> MdRunConfig {
+        MdRunConfig {
+            steps,
+            dt_fs,
+            temp_k,
+            equil: 0,
+            seed: 0,
+            report_every: 0,
+            store_dir: None,
+            checkpoint_every: 0,
+            resume: false,
+            run_name: "md".into(),
+            meta: Json::Null,
+        }
+    }
+}
+
+/// What a trajectory run produced.
+#[derive(Debug)]
+pub struct MdRunOutcome {
+    pub report: DriftReport,
+    /// final step index reached (== cfg.steps unless the run exploded)
+    pub last_step: u64,
+    /// checkpoint step this process resumed from (`None`: fresh start)
+    pub resumed_from: Option<u64>,
+    pub state: MdState,
+}
+
+/// Instantaneous temperature from a known kinetic energy. Kept as the
+/// single shared expression so the live loop and the resume replay of the
+/// drift tracker compute bit-identical values.
+fn temperature_from_ke(ke_ev: f64, n_atoms: usize) -> f64 {
+    let dof = 3.0 * n_atoms as f64;
+    2.0 * ke_ev / (dof * KB_EV)
+}
+
+fn checkpoint_of(state: &MdState, step: u64, rng: &Rng) -> MdCheckpoint {
+    MdCheckpoint {
+        step,
+        time_fs: state.time_fs,
+        positions: state.positions.clone(),
+        velocities: state.velocities.clone(),
+        rng: rng.state(),
+    }
+}
+
+/// Run one trajectory: Langevin equilibration (fresh starts only), then
+/// NVE production, with optional persistence and resume.
+pub fn run_md(
+    provider: &mut dyn ForceProvider,
+    positions: &[f64],
+    masses: &[f64],
+    cfg: &MdRunConfig,
+) -> Result<MdRunOutcome> {
+    let n_atoms = masses.len();
+    let mut store: Option<RunStore> = None;
+    let mut resume_ck: Option<MdCheckpoint> = None;
+
+    if let Some(dir) = &cfg.store_dir {
+        if cfg.resume {
+            let (s, report) = RunStore::open(dir, &cfg.run_name, cfg.meta.clone())
+                .with_context(|| format!("opening store {}", dir.display()))?;
+            if report.truncated_bytes() > 0 {
+                eprintln!(
+                    "store: recovered {} (truncated {} torn bytes)",
+                    dir.display(),
+                    report.truncated_bytes()
+                );
+            }
+            resume_ck = s.latest_checkpoint()?;
+            if resume_ck.is_some() {
+                store = Some(s);
+            } else {
+                // nothing durable to resume from: restart the run cleanly
+                // (drops any frames a pre-first-checkpoint crash left behind)
+                drop(s);
+                store = Some(RunStore::create(dir, &cfg.run_name, cfg.meta.clone())?);
+            }
+        } else {
+            store = Some(RunStore::create(dir, &cfg.run_name, cfg.meta.clone())?);
+        }
+    }
+
+    let (mut state, mut rng, start_step, resumed_from) = match resume_ck {
+        Some(ck) => {
+            crate::ensure!(
+                ck.positions.len() == positions.len(),
+                "checkpoint geometry ({} coords) does not match the model ({} coords)",
+                ck.positions.len(),
+                positions.len()
+            );
+            let st = MdState {
+                positions: ck.positions.clone(),
+                velocities: ck.velocities.clone(),
+                masses: masses.to_vec(),
+                time_fs: ck.time_fs,
+            };
+            // drop frames the dying process wrote past its last checkpoint:
+            // the replay below regenerates them bit-identically
+            store.as_mut().unwrap().truncate_frames_after(ck.step)?;
+            (st, Rng::from_state(ck.rng), ck.step, Some(ck.step))
+        }
+        None => {
+            let mut st = MdState::new(positions.to_vec(), masses.to_vec());
+            let mut rng = Rng::new(cfg.seed);
+            st.thermalize(cfg.temp_k, &mut rng);
+            let (_, mut forces) = provider.energy_forces(&st.positions)?;
+            for _ in 0..cfg.equil {
+                let (_, f) = langevin_step(
+                    &mut st,
+                    &forces,
+                    cfg.dt_fs,
+                    EQUIL_GAMMA,
+                    cfg.temp_k,
+                    &mut rng,
+                    provider,
+                )?;
+                forces = f;
+            }
+            st.remove_com_velocity();
+            st.time_fs = 0.0; // production clock starts after equilibration
+            (st, rng, 0u64, None)
+        }
+    };
+
+    // tracker: replay persisted frames on resume, seed from step 0 when fresh
+    let mut tracker = DriftTracker::new(n_atoms);
+    let (_, mut forces) = provider.energy_forces(&state.positions)?;
+    match resumed_from {
+        Some(_) => {
+            let frames = store.as_ref().unwrap().frames()?;
+            for f in &frames {
+                tracker.record(
+                    f.time_fs,
+                    f.pe_ev + f.ke_ev,
+                    temperature_from_ke(f.ke_ev, n_atoms),
+                );
+            }
+            crate::ensure!(
+                !frames.is_empty(),
+                "resume checkpoint exists but the frame segment is empty"
+            );
+        }
+        None => {
+            let (pe0, f0) = provider.energy_forces(&state.positions)?;
+            forces = f0;
+            let ke0 = state.kinetic_energy();
+            tracker.record(state.time_fs, pe0 + ke0, temperature_from_ke(ke0, n_atoms));
+            if let Some(s) = store.as_mut() {
+                s.append_frame(&MdFrame {
+                    step: 0,
+                    time_fs: state.time_fs,
+                    pe_ev: pe0,
+                    ke_ev: ke0,
+                    positions: state.positions.clone(),
+                    velocities: state.velocities.clone(),
+                })?;
+                s.append_checkpoint(&checkpoint_of(&state, 0, &rng))?;
+            }
+        }
+    }
+
+    let mut last_step = start_step;
+    let mut last_ck_step = start_step;
+    for step in (start_step + 1)..=(cfg.steps as u64) {
+        // the kill-switch: GAQ_FAILPOINTS=md/step:exit:N dies here, exactly
+        // between two completed steps — the crash the store must survive
+        failpoint::fail("md/step")?;
+        let (pe, f) = verlet_step(&mut state, &forces, cfg.dt_fs, provider)?;
+        forces = f;
+        let ke = state.kinetic_energy();
+        let etot = pe + ke;
+        let temp = temperature_from_ke(ke, n_atoms);
+        tracker.record(state.time_fs, etot, temp);
+        last_step = step;
+        if let Some(s) = store.as_mut() {
+            s.append_frame(&MdFrame {
+                step,
+                time_fs: state.time_fs,
+                pe_ev: pe,
+                ke_ev: ke,
+                positions: state.positions.clone(),
+                velocities: state.velocities.clone(),
+            })?;
+            if cfg.checkpoint_every > 0 && step % cfg.checkpoint_every as u64 == 0 {
+                s.append_checkpoint(&checkpoint_of(&state, step, &rng))?;
+                last_ck_step = step;
+            }
+        }
+        if tracker.exploded() {
+            if cfg.report_every > 0 {
+                println!("  step {step}: EXPLODED (E={etot:.3} eV, T={temp:.0} K)");
+            }
+            break;
+        }
+        if cfg.report_every > 0 && step % cfg.report_every as u64 == 0 {
+            println!(
+                "  step {step:6} t={:8.1} fs  E_tot={etot:+10.5} eV  T={temp:6.1} K",
+                state.time_fs
+            );
+        }
+    }
+
+    if let Some(s) = store.as_mut() {
+        if last_ck_step != last_step {
+            s.append_checkpoint(&checkpoint_of(&state, last_step, &rng))?;
+        }
+        s.finalize().context("finalizing run store")?;
+    }
+
+    Ok(MdRunOutcome { report: tracker.report(), last_step, resumed_from, state })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::md::ClassicalProvider;
+    use crate::molecule::Molecule;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gaq_runner_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn provider() -> ClassicalProvider {
+        let m = Molecule::azobenzene_builtin();
+        ClassicalProvider { ff: m.ff.clone() }
+    }
+
+    fn geometry() -> (Vec<f64>, Vec<f64>) {
+        let m = Molecule::azobenzene_builtin();
+        (m.positions.clone(), m.masses.clone())
+    }
+
+    fn cfg(steps: usize, dir: Option<PathBuf>) -> MdRunConfig {
+        let mut c = MdRunConfig::new(steps, 0.25, 300.0);
+        c.equil = 10;
+        c.seed = 11;
+        c.checkpoint_every = 10;
+        c.store_dir = dir;
+        c
+    }
+
+    #[test]
+    fn store_records_frames_and_checkpoints() {
+        let dir = tmpdir("frames");
+        let (pos, masses) = geometry();
+        let out = run_md(&mut provider(), &pos, &masses, &cfg(30, Some(dir.clone()))).unwrap();
+        assert_eq!(out.last_step, 30);
+        assert!(out.resumed_from.is_none());
+
+        let (store, _) = RunStore::open(&dir, "md", Json::Null).unwrap();
+        let frames = store.frames().unwrap();
+        assert_eq!(frames.len(), 31, "frame 0 + one per step");
+        assert_eq!(frames.last().unwrap().step, 30);
+        // checkpoints at 0, 10, 20, 30 (final coincides with the cadence)
+        assert_eq!(store.checkpoint_count(), 4);
+        assert!(store.manifest().finalized);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_replays_bit_identically() {
+        let (pos, masses) = geometry();
+        let dir_full = tmpdir("full");
+        let dir_cut = tmpdir("cut");
+
+        let full = run_md(&mut provider(), &pos, &masses, &cfg(40, Some(dir_full.clone())))
+            .unwrap();
+
+        // first process: die (cleanly, via error return) partway through
+        let mut first = cfg(25, Some(dir_cut.clone()));
+        first.checkpoint_every = 10;
+        run_md(&mut provider(), &pos, &masses, &first).unwrap();
+        // second process: resume to the full horizon
+        let mut second = cfg(40, Some(dir_cut.clone()));
+        second.resume = true;
+        let resumed = run_md(&mut provider(), &pos, &masses, &second).unwrap();
+        assert_eq!(resumed.resumed_from, Some(25));
+
+        // bit-identical end state and frame bytes
+        for (a, b) in full.state.positions.iter().zip(&resumed.state.positions) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in full.state.velocities.iter().zip(&resumed.state.velocities) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let (sa, _) = RunStore::open(&dir_full, "md", Json::Null).unwrap();
+        let (sb, _) = RunStore::open(&dir_cut, "md", Json::Null).unwrap();
+        let fa: Vec<Vec<u8>> = sa.frames().unwrap().iter().map(|f| f.encode()).collect();
+        let fb: Vec<Vec<u8>> = sb.frames().unwrap().iter().map(|f| f.encode()).collect();
+        assert_eq!(fa, fb, "frame streams must be byte-identical");
+        assert_eq!(
+            full.report.drift_mev_atom_ps.to_bits(),
+            resumed.report.drift_mev_atom_ps.to_bits(),
+            "drift fit must replay exactly"
+        );
+        let _ = std::fs::remove_dir_all(&dir_full);
+        let _ = std::fs::remove_dir_all(&dir_cut);
+    }
+
+    #[test]
+    fn storeless_run_matches_stored_run() {
+        let (pos, masses) = geometry();
+        let dir = tmpdir("nostore");
+        let with = run_md(&mut provider(), &pos, &masses, &cfg(20, Some(dir.clone()))).unwrap();
+        let without = run_md(&mut provider(), &pos, &masses, &cfg(20, None)).unwrap();
+        for (a, b) in with.state.positions.iter().zip(&without.state.positions) {
+            assert_eq!(a.to_bits(), b.to_bits(), "persistence must not perturb physics");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,258 @@
+//! Binary record payloads for MD frames and resume checkpoints
+//! (DESIGN.md §13).
+//!
+//! Both encodings are little-endian and bit-exact: positions, velocities
+//! and energies are stored as raw `f64` bits, so a resumed run replays the
+//! *identical* floating-point trajectory — the resume-determinism suite
+//! compares encoded bytes, not values-within-epsilon.
+//!
+//! A checkpoint captures everything the integrator loop consumes: step
+//! counter, simulation clock, positions, velocities, and the complete PRNG
+//! state (xoshiro words + the cached Box–Muller spare). Forces are *not*
+//! stored — they are a pure function of positions and are recomputed on
+//! resume. Thermostat runs (Langevin) draw from the checkpointed RNG, so
+//! restoring its full state is what makes kill-and-resume bit-identical.
+
+use crate::util::error::{Error, Result};
+use crate::util::prng::RngState;
+
+/// Magic prefixes version the payload layouts independently of the segment
+/// framing; bump the trailing digit on any layout change.
+pub const CHECKPOINT_MAGIC: &[u8; 8] = b"GAQCKPT1";
+pub const FRAME_MAGIC: &[u8; 8] = b"GAQFRME1";
+
+/// One trajectory sample.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MdFrame {
+    pub step: u64,
+    pub time_fs: f64,
+    pub pe_ev: f64,
+    pub ke_ev: f64,
+    pub positions: Vec<f64>,
+    pub velocities: Vec<f64>,
+}
+
+/// Everything needed to resume the integrator bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MdCheckpoint {
+    pub step: u64,
+    pub time_fs: f64,
+    pub positions: Vec<f64>,
+    pub velocities: Vec<f64>,
+    pub rng: RngState,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return Err(Error::msg(format!(
+                "truncated record: wanted {n} bytes for {what} at offset {}",
+                self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.u64(what)?))
+    }
+
+    fn f64_vec(&mut self, n: usize, what: &str) -> Result<Vec<f64>> {
+        let bytes = self.take(8 * n, what)?;
+        Ok(bytes.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.pos != self.b.len() {
+            return Err(Error::msg(format!(
+                "record has {} trailing bytes",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn push_f64s(out: &mut Vec<u8>, xs: &[f64]) {
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Read `n` from a declared coordinate count, guarding against a corrupt
+/// record demanding an absurd allocation.
+fn coord_count(n: u64, what: &str) -> Result<usize> {
+    const MAX_COORDS: u64 = 1 << 24;
+    if n > MAX_COORDS {
+        return Err(Error::msg(format!("{what}: implausible coordinate count {n}")));
+    }
+    Ok(n as usize)
+}
+
+impl MdFrame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 8 * 4 + 16 * self.positions.len());
+        out.extend_from_slice(FRAME_MAGIC);
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.time_fs.to_le_bytes());
+        out.extend_from_slice(&self.pe_ev.to_le_bytes());
+        out.extend_from_slice(&self.ke_ev.to_le_bytes());
+        out.extend_from_slice(&(self.positions.len() as u64).to_le_bytes());
+        push_f64s(&mut out, &self.positions);
+        push_f64s(&mut out, &self.velocities);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<MdFrame> {
+        let mut c = Cursor { b: bytes, pos: 0 };
+        let magic = c.take(8, "frame magic")?;
+        if magic != FRAME_MAGIC {
+            return Err(Error::msg(format!("bad frame magic {magic:?}")));
+        }
+        let step = c.u64("step")?;
+        let time_fs = c.f64("time_fs")?;
+        let pe_ev = c.f64("pe_ev")?;
+        let ke_ev = c.f64("ke_ev")?;
+        let n = coord_count(c.u64("n_coords")?, "frame")?;
+        let positions = c.f64_vec(n, "positions")?;
+        let velocities = c.f64_vec(n, "velocities")?;
+        c.done()?;
+        Ok(MdFrame { step, time_fs, pe_ev, ke_ev, positions, velocities })
+    }
+}
+
+impl MdCheckpoint {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + 8 * 8 + 16 * self.positions.len());
+        out.extend_from_slice(CHECKPOINT_MAGIC);
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&self.time_fs.to_le_bytes());
+        out.extend_from_slice(&(self.positions.len() as u64).to_le_bytes());
+        push_f64s(&mut out, &self.positions);
+        push_f64s(&mut out, &self.velocities);
+        for w in &self.rng.s {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        match self.rng.spare {
+            Some(v) => {
+                out.push(1);
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            None => out.push(0),
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<MdCheckpoint> {
+        let mut c = Cursor { b: bytes, pos: 0 };
+        let magic = c.take(8, "checkpoint magic")?;
+        if magic != CHECKPOINT_MAGIC {
+            return Err(Error::msg(format!("bad checkpoint magic {magic:?}")));
+        }
+        let step = c.u64("step")?;
+        let time_fs = c.f64("time_fs")?;
+        let n = coord_count(c.u64("n_coords")?, "checkpoint")?;
+        let positions = c.f64_vec(n, "positions")?;
+        let velocities = c.f64_vec(n, "velocities")?;
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = c.u64("rng word")?;
+        }
+        let spare = match c.u8("rng spare flag")? {
+            0 => None,
+            1 => Some(c.f64("rng spare")?),
+            x => return Err(Error::msg(format!("bad rng spare flag {x}"))),
+        };
+        c.done()?;
+        Ok(MdCheckpoint {
+            step,
+            time_fs,
+            positions,
+            velocities,
+            rng: RngState { s, spare },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn frame_roundtrips_bit_exactly() {
+        let f = MdFrame {
+            step: 42,
+            time_fs: 21.000000000000004, // a value that would round-trip lossily via text
+            pe_ev: -3.7e2,
+            ke_ev: 0.1 + 0.2,
+            positions: vec![1.0, f64::MIN_POSITIVE, -0.0, 1e308],
+            velocities: vec![0.3, -0.3, 2.5e-17, 0.0],
+        };
+        let enc = f.encode();
+        let back = MdFrame::decode(&enc).unwrap();
+        assert_eq!(back, f);
+        for (a, b) in back.positions.iter().zip(&f.positions) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.encode(), enc);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_rng_state() {
+        let mut rng = Rng::new(99);
+        for _ in 0..5 {
+            rng.gaussian(); // odd count → cached spare present
+        }
+        let ck = MdCheckpoint {
+            step: 1000,
+            time_fs: 500.0,
+            positions: vec![0.5; 9],
+            velocities: vec![-0.25; 9],
+            rng: rng.state(),
+        };
+        let back = MdCheckpoint::decode(&ck.encode()).unwrap();
+        assert_eq!(back, ck);
+        assert!(back.rng.spare.is_some());
+
+        // a continued generator must replay bit-identically
+        let mut resumed = Rng::from_state(back.rng);
+        for _ in 0..50 {
+            assert_eq!(rng.gaussian().to_bits(), resumed.gaussian().to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_bad_magic() {
+        let ck = MdCheckpoint {
+            step: 1,
+            time_fs: 0.5,
+            positions: vec![1.0, 2.0, 3.0],
+            velocities: vec![4.0, 5.0, 6.0],
+            rng: Rng::new(0).state(),
+        };
+        let enc = ck.encode();
+        for cut in [0, 7, 8, 20, enc.len() - 1] {
+            assert!(MdCheckpoint::decode(&enc[..cut]).is_err(), "cut at {cut} must error");
+        }
+        let mut bad = enc.clone();
+        bad[0] ^= 0xFF;
+        assert!(MdCheckpoint::decode(&bad).is_err());
+        assert!(MdFrame::decode(&enc).is_err(), "frame decoder must reject checkpoint magic");
+    }
+}

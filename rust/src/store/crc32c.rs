@@ -1,0 +1,73 @@
+//! CRC32C (Castagnoli, reflected polynomial 0x82F63B78) — the per-record
+//! checksum of the segment format (DESIGN.md §13). Table-driven software
+//! implementation; the table is built at compile time.
+
+const fn build_table() -> [u32; 256] {
+    const POLY: u32 = 0x82F6_3B78;
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC32C of `data` (full-message convenience over [`update`]).
+pub fn crc32c(data: &[u8]) -> u32 {
+    update(0, data)
+}
+
+/// Incremental CRC32C: feed chunks through, starting from `crc = 0`.
+pub fn update(crc: u32, data: &[u8]) -> u32 {
+    let mut c = !crc;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // RFC 3720 (iSCSI) CRC32C test vectors
+        assert_eq!(crc32c(b""), 0);
+        assert_eq!(crc32c(b"123456789"), 0xE306_9283);
+        assert_eq!(crc32c(&[0u8; 32]), 0x8A91_36AA);
+        assert_eq!(crc32c(&[0xFFu8; 32]), 0x62A8_AB43);
+    }
+
+    #[test]
+    fn incremental_matches_oneshot() {
+        let data: Vec<u8> = (0..255u8).collect();
+        let oneshot = crc32c(&data);
+        for split in [0usize, 1, 7, 128, 254, 255] {
+            let c = update(update(0, &data[..split]), &data[split..]);
+            assert_eq!(c, oneshot, "split at {split}");
+        }
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let data = vec![0xA5u8; 64];
+        let base = crc32c(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut d = data.clone();
+                d[byte] ^= 1 << bit;
+                assert_ne!(crc32c(&d), base, "flip at {byte}.{bit} undetected");
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Versioned run manifest with an atomic write protocol (DESIGN.md §13).
+//!
+//! One `MANIFEST.json` per run directory names the run, its schema
+//! version, and a digest-carrying entry per segment file. The manifest is
+//! the commit record: a checkpoint is only *reachable* once the manifest
+//! naming it has been renamed into place, and segments are fsynced before
+//! the manifest is rewritten, so the manifest never references bytes that
+//! could vanish in a crash.
+//!
+//! Write protocol: serialise → write `MANIFEST.json.tmp` → `fsync` the tmp
+//! file → `rename` over `MANIFEST.json` → `fsync` the directory. A crash
+//! at any point leaves either the old manifest or the new one, never a
+//! torn mixture. Serialisation is canonical (BTreeMap key order, integer
+//! floats printed as integers), so write → read → write is byte-identical
+//! — asserted by the durability suite.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::Path;
+
+use super::sha256::sha256_hex;
+use crate::util::error::{Context, Error, Result};
+use crate::util::failpoint;
+use crate::util::json::{self, Json};
+
+/// Store format version; bump on any incompatible layout change.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Manifest file name within a run directory.
+pub const MANIFEST_NAME: &str = "MANIFEST.json";
+
+/// Per-segment bookkeeping: record count, valid byte length, and (once
+/// finalized) the SHA-256 of the segment bytes.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct SegmentInfo {
+    pub records: u64,
+    pub bytes: u64,
+    /// lowercase hex SHA-256 of the segment file; empty until finalized
+    pub sha256: String,
+}
+
+/// The versioned run manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreManifest {
+    /// run name (CLI label or directory stem)
+    pub name: String,
+    /// producer version string (crate version)
+    pub version: String,
+    pub schema_version: u64,
+    /// set by [`finalize`](crate::store::RunStore::finalize); a run that
+    /// died mid-flight reads back `false` and triggers recovery on open
+    pub finalized: bool,
+    /// segment file name → info, sorted (deterministic serialisation)
+    pub segments: BTreeMap<String, SegmentInfo>,
+    /// free-form run metadata (seed, variant, step counts, ...)
+    pub meta: Json,
+}
+
+impl StoreManifest {
+    pub fn new(name: &str, meta: Json) -> StoreManifest {
+        StoreManifest {
+            name: name.to_string(),
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            schema_version: SCHEMA_VERSION,
+            finalized: false,
+            segments: BTreeMap::new(),
+            meta,
+        }
+    }
+
+    /// Digest over the canonical segment table — a cheap whole-manifest
+    /// integrity check that changes whenever any segment entry changes.
+    pub fn digest(&self) -> String {
+        sha256_hex(json::to_string(&self.segments_json()).as_bytes())
+    }
+
+    fn segments_json(&self) -> Json {
+        Json::Obj(
+            self.segments
+                .iter()
+                .map(|(k, v)| {
+                    (
+                        k.clone(),
+                        Json::obj([
+                            ("records", Json::Num(v.records as f64)),
+                            ("bytes", Json::Num(v.bytes as f64)),
+                            ("sha256", Json::str(v.sha256.clone())),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", Json::str(self.name.clone())),
+            ("version", Json::str(self.version.clone())),
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("finalized", Json::Bool(self.finalized)),
+            ("sha256", Json::str(self.digest())),
+            ("segments", self.segments_json()),
+            ("meta", self.meta.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<StoreManifest> {
+        let name = j.get("name").and_then(Json::as_str).context("manifest: missing name")?;
+        let version =
+            j.get("version").and_then(Json::as_str).context("manifest: missing version")?;
+        let schema_version = j
+            .get("schema_version")
+            .and_then(Json::as_u64)
+            .context("manifest: missing schema_version")?;
+        crate::ensure!(
+            schema_version == SCHEMA_VERSION,
+            "manifest schema_version {schema_version} unsupported (want {SCHEMA_VERSION})"
+        );
+        let finalized = j.get("finalized").and_then(Json::as_bool).unwrap_or(false);
+        let mut segments = BTreeMap::new();
+        if let Some(segs) = j.get("segments").and_then(Json::as_obj) {
+            for (k, v) in segs {
+                segments.insert(
+                    k.clone(),
+                    SegmentInfo {
+                        records: v.get("records").and_then(Json::as_u64).unwrap_or(0),
+                        bytes: v.get("bytes").and_then(Json::as_u64).unwrap_or(0),
+                        sha256: v
+                            .get("sha256")
+                            .and_then(Json::as_str)
+                            .unwrap_or("")
+                            .to_string(),
+                    },
+                );
+            }
+        }
+        let m = StoreManifest {
+            name: name.to_string(),
+            version: version.to_string(),
+            schema_version,
+            finalized,
+            segments,
+            meta: j.get("meta").cloned().unwrap_or(Json::Null),
+        };
+        if let Some(declared) = j.get("sha256").and_then(Json::as_str) {
+            crate::ensure!(
+                declared == m.digest(),
+                "manifest digest mismatch: declared {declared}, computed {}",
+                m.digest()
+            );
+        }
+        Ok(m)
+    }
+
+    /// Canonical serialised form (used for the byte-identity test).
+    pub fn encode(&self) -> String {
+        json::to_string(&self.to_json())
+    }
+
+    /// Atomically replace `dir/MANIFEST.json` with this manifest:
+    /// tmp-write → fsync tmp → rename → fsync dir. The `store/manifest`
+    /// failpoint fires *before* the rename — the crash window where the new
+    /// manifest is fully written but not yet visible.
+    pub fn write_atomic(&self, dir: &Path) -> Result<()> {
+        let tmp = dir.join(format!("{MANIFEST_NAME}.tmp"));
+        let dst = dir.join(MANIFEST_NAME);
+        {
+            let mut f = OpenOptions::new()
+                .write(true)
+                .create(true)
+                .truncate(true)
+                .open(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(self.encode().as_bytes()).context("writing manifest tmp")?;
+            f.sync_data().context("syncing manifest tmp")?;
+        }
+        failpoint::fail("store/manifest")?;
+        std::fs::rename(&tmp, &dst)
+            .with_context(|| format!("renaming manifest into {}", dst.display()))?;
+        // fsync the directory so the rename itself survives power loss
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    }
+
+    /// Load `dir/MANIFEST.json`. `Ok(None)` when absent (fresh directory).
+    pub fn load(dir: &Path) -> Result<Option<StoreManifest>> {
+        let path = dir.join(MANIFEST_NAME);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => {
+                return Err(Error::from(e)
+                    .context(format!("reading manifest {}", path.display())))
+            }
+        };
+        let j = json::parse(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))?;
+        Ok(Some(Self::from_json(&j)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("gaq_manifest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample() -> StoreManifest {
+        let mut m = StoreManifest::new(
+            "md-run-7",
+            Json::obj([("seed", Json::Num(7.0)), ("variant", Json::str("gaq_w4a8"))]),
+        );
+        m.segments.insert(
+            "frames.seg".into(),
+            SegmentInfo { records: 100, bytes: 4096, sha256: "ab".repeat(32) },
+        );
+        m.segments
+            .insert("checkpoints.seg".into(), SegmentInfo { records: 3, bytes: 512, sha256: String::new() });
+        m
+    }
+
+    #[test]
+    fn write_read_write_is_byte_identical() {
+        let m = sample();
+        let first = m.encode();
+        let parsed = StoreManifest::from_json(&json::parse(&first).unwrap()).unwrap();
+        assert_eq!(parsed, m);
+        assert_eq!(parsed.encode(), first, "canonical re-encode must be byte-identical");
+    }
+
+    #[test]
+    fn atomic_write_and_load() {
+        let dir = tmpdir("atomic");
+        assert!(StoreManifest::load(&dir).unwrap().is_none());
+        let m = sample();
+        m.write_atomic(&dir).unwrap();
+        let back = StoreManifest::load(&dir).unwrap().unwrap();
+        assert_eq!(back, m);
+        assert!(
+            !dir.join(format!("{MANIFEST_NAME}.tmp")).exists(),
+            "tmp file must not survive a successful write"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tampered_digest_is_rejected() {
+        let m = sample();
+        let text = m.encode();
+        let tampered = text.replace("\"records\":100", "\"records\":101");
+        assert_ne!(text, tampered);
+        let err = StoreManifest::from_json(&json::parse(&tampered).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+    }
+
+    #[test]
+    fn future_schema_is_rejected() {
+        let m = sample();
+        let text = m.encode().replace("\"schema_version\":1", "\"schema_version\":999");
+        let err = StoreManifest::from_json(&json::parse(&text).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("schema_version"), "{err}");
+    }
+}

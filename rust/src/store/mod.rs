@@ -1,0 +1,349 @@
+//! Crash-safe trajectory store (DESIGN.md §13).
+//!
+//! A *run store* is a directory holding one MD (or LEE) run:
+//!
+//! ```text
+//! run-dir/
+//!   MANIFEST.json      versioned manifest, atomically replaced
+//!   frames.seg         trajectory samples   (MdFrame records)
+//!   checkpoints.seg    resume checkpoints   (MdCheckpoint records)
+//!   results.seg        observable results   (JSON records)
+//! ```
+//!
+//! Segments are append-only with per-record CRC32C ([`segment`]); the
+//! manifest commits what the segments contain ([`manifest`]). Ordering
+//! discipline makes the store crash-safe at every instruction boundary:
+//! frames/results are synced *before* the checkpoint naming them, and the
+//! checkpoint segment is synced *before* the manifest is atomically
+//! replaced. Opening after a crash recovers every segment to its last
+//! valid record boundary and resumes from the newest intact checkpoint.
+
+pub mod checkpoint;
+pub mod crc32c;
+pub mod manifest;
+pub mod segment;
+pub mod sha256;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use checkpoint::{MdCheckpoint, MdFrame};
+use manifest::{SegmentInfo, StoreManifest};
+use segment::{read_segment, recover, Recovery, SegmentWriter};
+
+pub const FRAMES_SEG: &str = "frames.seg";
+pub const CHECKPOINTS_SEG: &str = "checkpoints.seg";
+pub const RESULTS_SEG: &str = "results.seg";
+
+/// What [`RunStore::open`] found.
+#[derive(Debug, Clone, Default)]
+pub struct OpenReport {
+    /// true when the directory had no manifest (fresh run)
+    pub fresh: bool,
+    /// per-segment recovery results (name, recovery)
+    pub recovered: Vec<(String, Recovery)>,
+}
+
+impl OpenReport {
+    /// Total torn-tail bytes truncated during open.
+    pub fn truncated_bytes(&self) -> u64 {
+        self.recovered.iter().map(|(_, r)| r.truncated).sum()
+    }
+}
+
+/// Handle over one run directory.
+pub struct RunStore {
+    dir: PathBuf,
+    manifest: StoreManifest,
+    frames: SegmentWriter,
+    checkpoints: SegmentWriter,
+    results: SegmentWriter,
+}
+
+impl RunStore {
+    /// Create a fresh store, truncating anything already in `dir`.
+    pub fn create(dir: &Path, name: &str, meta: Json) -> Result<RunStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating store directory {}", dir.display()))?;
+        let mut store = RunStore {
+            dir: dir.to_path_buf(),
+            manifest: StoreManifest::new(name, meta),
+            frames: SegmentWriter::create(&dir.join(FRAMES_SEG))?,
+            checkpoints: SegmentWriter::create(&dir.join(CHECKPOINTS_SEG))?,
+            results: SegmentWriter::create(&dir.join(RESULTS_SEG))?,
+        };
+        store.commit_manifest()?;
+        Ok(store)
+    }
+
+    /// Open an existing store (recovering torn tails), or create a fresh
+    /// one when `dir` has no manifest yet.
+    pub fn open(dir: &Path, name: &str, meta: Json) -> Result<(RunStore, OpenReport)> {
+        if StoreManifest::load(dir)?.is_none() {
+            let store = Self::create(dir, name, meta)?;
+            return Ok((store, OpenReport { fresh: true, recovered: Vec::new() }));
+        }
+        let manifest = StoreManifest::load(dir)?.unwrap();
+        let mut report = OpenReport { fresh: false, recovered: Vec::new() };
+        let mut open_seg = |seg: &str| -> Result<SegmentWriter> {
+            let path = dir.join(seg);
+            let rec = recover(&path)
+                .with_context(|| format!("recovering segment {}", path.display()))?;
+            let w = SegmentWriter::open_end(&path, rec.valid_len, rec.records as u64)?;
+            report.recovered.push((seg.to_string(), rec));
+            Ok(w)
+        };
+        let frames = open_seg(FRAMES_SEG)?;
+        let checkpoints = open_seg(CHECKPOINTS_SEG)?;
+        let results = open_seg(RESULTS_SEG)?;
+        let mut store =
+            RunStore { dir: dir.to_path_buf(), manifest, frames, checkpoints, results };
+        // reconcile the manifest with post-recovery reality: a crash between
+        // a segment sync and the manifest rewrite leaves stale counts
+        store.manifest.finalized = false;
+        store.refresh_manifest_counts();
+        Ok((store, report))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest(&self) -> &StoreManifest {
+        &self.manifest
+    }
+
+    pub fn frame_count(&self) -> u64 {
+        self.frames.records()
+    }
+
+    pub fn checkpoint_count(&self) -> u64 {
+        self.checkpoints.records()
+    }
+
+    pub fn result_count(&self) -> u64 {
+        self.results.records()
+    }
+
+    /// Append a trajectory frame (buffered; durable at the next checkpoint
+    /// or [`finalize`](Self::finalize)).
+    pub fn append_frame(&mut self, frame: &MdFrame) -> Result<()> {
+        self.frames.append(&frame.encode())
+    }
+
+    /// Append an observable result (JSON payload).
+    pub fn append_result(&mut self, result: &Json) -> Result<()> {
+        self.results.append(json::to_string(result).as_bytes())
+    }
+
+    /// Commit a checkpoint: sync data segments, append + sync the
+    /// checkpoint, then atomically publish the manifest. After this returns,
+    /// a crash at any later point resumes from `ck` (or newer).
+    pub fn append_checkpoint(&mut self, ck: &MdCheckpoint) -> Result<()> {
+        self.frames.sync().context("syncing frames before checkpoint")?;
+        self.results.sync().context("syncing results before checkpoint")?;
+        self.checkpoints.append(&ck.encode())?;
+        self.checkpoints.sync().context("syncing checkpoint segment")?;
+        self.commit_manifest()
+    }
+
+    /// All valid frames currently on disk.
+    pub fn frames(&self) -> Result<Vec<MdFrame>> {
+        read_segment(&self.dir.join(FRAMES_SEG))?
+            .iter()
+            .map(|b| MdFrame::decode(b))
+            .collect()
+    }
+
+    /// All valid results currently on disk.
+    pub fn results(&self) -> Result<Vec<Json>> {
+        read_segment(&self.dir.join(RESULTS_SEG))?
+            .iter()
+            .map(|b| {
+                let s = std::str::from_utf8(b).context("result record is not UTF-8")?;
+                json::parse(s).map_err(|e| crate::util::error::Error::from(e))
+            })
+            .collect()
+    }
+
+    /// All valid checkpoint records, raw encoded bytes (byte-identity
+    /// comparisons; `store-check --against`).
+    pub fn checkpoints_raw(&self) -> Result<Vec<Vec<u8>>> {
+        read_segment(&self.dir.join(CHECKPOINTS_SEG))
+    }
+
+    /// The newest intact checkpoint, if any.
+    pub fn latest_checkpoint(&self) -> Result<Option<MdCheckpoint>> {
+        let records = read_segment(&self.dir.join(CHECKPOINTS_SEG))?;
+        match records.last() {
+            None => Ok(None),
+            Some(b) => Ok(Some(MdCheckpoint::decode(b)?)),
+        }
+    }
+
+    /// Drop frames newer than `step` (resume rewinds the trajectory to the
+    /// checkpoint boundary so replayed steps are not duplicated). Rewrites
+    /// the frames segment, which is fine at trajectory scale.
+    pub fn truncate_frames_after(&mut self, step: u64) -> Result<()> {
+        let keep: Vec<MdFrame> =
+            self.frames()?.into_iter().filter(|f| f.step <= step).collect();
+        let path = self.dir.join(FRAMES_SEG);
+        let mut w = SegmentWriter::create(&path)?;
+        for f in &keep {
+            w.append(&f.encode())?;
+        }
+        w.sync()?;
+        self.frames = w;
+        self.refresh_manifest_counts();
+        Ok(())
+    }
+
+    /// Seal the run: sync everything, digest each segment, mark the
+    /// manifest finalized and publish it.
+    pub fn finalize(&mut self) -> Result<()> {
+        self.frames.sync()?;
+        self.checkpoints.sync()?;
+        self.results.sync()?;
+        self.refresh_manifest_counts();
+        for (name, info) in self.manifest.segments.iter_mut() {
+            let bytes = std::fs::read(self.dir.join(name))
+                .with_context(|| format!("digesting segment {name}"))?;
+            info.sha256 = sha256::sha256_hex(&bytes);
+        }
+        self.manifest.finalized = true;
+        self.manifest.write_atomic(&self.dir)
+    }
+
+    fn refresh_manifest_counts(&mut self) {
+        for (name, w) in [
+            (FRAMES_SEG, &self.frames),
+            (CHECKPOINTS_SEG, &self.checkpoints),
+            (RESULTS_SEG, &self.results),
+        ] {
+            let entry = self.manifest.segments.entry(name.to_string()).or_default();
+            let digest_stale = entry.bytes != w.len();
+            entry.records = w.records();
+            entry.bytes = w.len();
+            if digest_stale {
+                entry.sha256 = String::new();
+            }
+        }
+    }
+
+    fn commit_manifest(&mut self) -> Result<()> {
+        self.refresh_manifest_counts();
+        self.manifest.write_atomic(&self.dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gaq_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn frame(step: u64, n: usize) -> MdFrame {
+        MdFrame {
+            step,
+            time_fs: step as f64 * 0.5,
+            pe_ev: -1.0 - step as f64 * 1e-3,
+            ke_ev: 0.5,
+            positions: vec![step as f64 * 0.1; n],
+            velocities: vec![-(step as f64) * 0.01; n],
+        }
+    }
+
+    fn ckpt(step: u64, n: usize) -> MdCheckpoint {
+        let mut rng = Rng::new(step);
+        rng.gaussian();
+        MdCheckpoint {
+            step,
+            time_fs: step as f64 * 0.5,
+            positions: vec![step as f64 * 0.1; n],
+            velocities: vec![-(step as f64) * 0.01; n],
+            rng: rng.state(),
+        }
+    }
+
+    #[test]
+    fn create_append_reopen() {
+        let dir = tmpdir("basic");
+        let mut store =
+            RunStore::create(&dir, "t", Json::obj([("seed", Json::Num(1.0))])).unwrap();
+        for s in 0..10 {
+            store.append_frame(&frame(s, 6)).unwrap();
+        }
+        store.append_checkpoint(&ckpt(9, 6)).unwrap();
+        store.append_result(&Json::obj([("lee", Json::Num(0.5))])).unwrap();
+        store.finalize().unwrap();
+        drop(store);
+
+        let (back, report) = RunStore::open(&dir, "t", Json::Null).unwrap();
+        assert!(!report.fresh);
+        assert_eq!(report.truncated_bytes(), 0);
+        assert_eq!(back.frames().unwrap().len(), 10);
+        assert_eq!(back.latest_checkpoint().unwrap().unwrap(), ckpt(9, 6));
+        assert_eq!(back.results().unwrap().len(), 1);
+        assert_eq!(back.manifest().name, "t");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_frame_recovers_to_checkpoint_boundary() {
+        use std::io::Write;
+        let dir = tmpdir("torn");
+        let mut store = RunStore::create(&dir, "t", Json::Null).unwrap();
+        for s in 0..5 {
+            store.append_frame(&frame(s, 3)).unwrap();
+        }
+        store.append_checkpoint(&ckpt(4, 3)).unwrap();
+        drop(store);
+        // crash mid-append: half a frame record lands after the checkpointed data
+        let torn = segment::encode_record(&frame(5, 3).encode());
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(FRAMES_SEG))
+            .unwrap();
+        f.write_all(&torn[..torn.len() / 2]).unwrap();
+        drop(f);
+
+        let (back, report) = RunStore::open(&dir, "t", Json::Null).unwrap();
+        assert_eq!(report.truncated_bytes(), (torn.len() / 2) as u64);
+        assert_eq!(back.frames().unwrap().len(), 5, "complete frames survive");
+        assert_eq!(back.latest_checkpoint().unwrap().unwrap().step, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncate_frames_after_rewinds() {
+        let dir = tmpdir("rewind");
+        let mut store = RunStore::create(&dir, "t", Json::Null).unwrap();
+        for s in 0..8 {
+            store.append_frame(&frame(s, 3)).unwrap();
+        }
+        store.truncate_frames_after(4).unwrap();
+        let frames = store.frames().unwrap();
+        assert_eq!(frames.len(), 5);
+        assert_eq!(frames.last().unwrap().step, 4);
+        // appending continues cleanly after a rewind
+        store.append_frame(&frame(5, 3)).unwrap();
+        assert_eq!(store.frames().unwrap().len(), 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_on_empty_dir_is_fresh() {
+        let dir = tmpdir("fresh");
+        let (store, report) = RunStore::open(&dir, "t", Json::Null).unwrap();
+        assert!(report.fresh);
+        assert_eq!(store.frame_count(), 0);
+        assert!(store.latest_checkpoint().unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

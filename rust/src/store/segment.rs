@@ -1,0 +1,343 @@
+//! Append-only checksummed segment files (DESIGN.md §13).
+//!
+//! Record framing, little-endian:
+//!
+//! ```text
+//! [u32 len][u32 crc32c(payload)][payload: len bytes]
+//! ```
+//!
+//! The format has no trailer and no index: validity is established by
+//! scanning from the front and stopping at the first frame that is
+//! incomplete or fails its checksum. A crash mid-append therefore leaves a
+//! *torn tail* — a partial final record — which [`recover`] truncates away,
+//! restoring the file to the last valid record boundary. Complete records
+//! are never lost: [`SegmentWriter::sync`] is only acknowledged after
+//! `fsync`, and callers (the run store) order segment syncs before manifest
+//! updates.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use super::crc32c::crc32c;
+use crate::util::error::{Context, Error, Result};
+use crate::util::failpoint::{self, Injected};
+
+/// Bytes of framing before each payload (`u32` length + `u32` CRC32C).
+pub const RECORD_HEADER: usize = 8;
+
+/// Upper bound on a single record payload (a guard against interpreting a
+/// corrupt length field as a multi-gigabyte allocation, not a design limit).
+pub const MAX_RECORD: usize = 64 << 20;
+
+/// Result of scanning a segment image: the complete, checksum-valid record
+/// payload ranges and the byte length of the valid prefix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scan {
+    /// (offset, len) of each valid payload within the image
+    pub records: Vec<(usize, usize)>,
+    /// bytes of valid prefix; anything beyond is a torn or corrupt tail
+    pub valid_len: usize,
+}
+
+impl Scan {
+    /// True when the image ends exactly at a record boundary.
+    pub fn clean(&self, total_len: usize) -> bool {
+        self.valid_len == total_len
+    }
+}
+
+/// Scan a segment image for complete records. Pure function of the bytes —
+/// the durability proptest drives this at every truncation offset. Never
+/// panics on arbitrary input.
+pub fn scan(bytes: &[u8]) -> Scan {
+    let mut records = Vec::new();
+    let mut pos = 0usize;
+    while bytes.len() - pos >= RECORD_HEADER {
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[pos + 4..pos + 8].try_into().unwrap());
+        if len > MAX_RECORD || bytes.len() - pos - RECORD_HEADER < len {
+            break; // implausible length or incomplete payload: torn tail
+        }
+        let payload = &bytes[pos + RECORD_HEADER..pos + RECORD_HEADER + len];
+        if crc32c(payload) != crc {
+            break; // corrupt record: stop at the last valid boundary
+        }
+        records.push((pos + RECORD_HEADER, len));
+        pos += RECORD_HEADER + len;
+    }
+    Scan { records, valid_len: pos }
+}
+
+/// Encode one record frame (header + payload) for appending.
+pub fn encode_record(payload: &[u8]) -> Vec<u8> {
+    let mut frame = Vec::with_capacity(RECORD_HEADER + payload.len());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&crc32c(payload).to_le_bytes());
+    frame.extend_from_slice(payload);
+    frame
+}
+
+/// What [`recover`] found and did.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Recovery {
+    /// complete records surviving recovery
+    pub records: usize,
+    /// valid byte length after recovery
+    pub valid_len: u64,
+    /// bytes of torn/corrupt tail truncated away (0 for a clean segment)
+    pub truncated: u64,
+}
+
+/// Open a segment, validate it front-to-back, and truncate any torn tail so
+/// the file ends at the last valid record boundary. Counts recovered
+/// records into `store_recovered_records_total` and torn tails into
+/// `store_torn_tails_total`.
+pub fn recover(path: &Path) -> Result<Recovery> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Recovery { records: 0, valid_len: 0, truncated: 0 })
+        }
+        Err(e) => {
+            return Err(Error::from(e)
+                .context(format!("reading segment {}", path.display())))
+        }
+    };
+    let s = scan(&bytes);
+    let truncated = (bytes.len() - s.valid_len) as u64;
+    if truncated > 0 {
+        let f = OpenOptions::new()
+            .write(true)
+            .open(path)
+            .with_context(|| format!("opening segment {} for truncation", path.display()))?;
+        f.set_len(s.valid_len as u64)
+            .with_context(|| format!("truncating torn tail of {}", path.display()))?;
+        f.sync_data().context("syncing truncated segment")?;
+        crate::obs::counter("store_torn_tails_total").inc();
+        crate::obs::counter("store_recovered_records_total").add(s.records.len() as u64);
+    }
+    Ok(Recovery {
+        records: s.records.len(),
+        valid_len: s.valid_len as u64,
+        truncated,
+    })
+}
+
+/// Read every valid record payload from a segment (no recovery side
+/// effects; a torn tail is simply not returned).
+pub fn read_segment(path: &Path) -> Result<Vec<Vec<u8>>> {
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(Error::from(e)
+                .context(format!("reading segment {}", path.display())))
+        }
+    };
+    let s = scan(&bytes);
+    Ok(s.records.iter().map(|&(off, len)| bytes[off..off + len].to_vec()).collect())
+}
+
+/// Appending writer over a segment file. Tracks the valid length so a
+/// failed append (including an injected short write) can roll the file back
+/// to the last record boundary when the filesystem still permits it; if the
+/// rollback itself fails the torn tail is left for [`recover`] at next open.
+pub struct SegmentWriter {
+    file: File,
+    path: PathBuf,
+    len: u64,
+    records: u64,
+}
+
+impl SegmentWriter {
+    /// Create a fresh segment (truncates any existing file).
+    pub fn create(path: &Path) -> Result<SegmentWriter> {
+        let file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating segment {}", path.display()))?;
+        Ok(SegmentWriter { file, path: path.to_path_buf(), len: 0, records: 0 })
+    }
+
+    /// Open an existing segment for appending at its validated end. The
+    /// caller establishes `valid_len`/`records` via [`recover`] first.
+    pub fn open_end(path: &Path, valid_len: u64, records: u64) -> Result<SegmentWriter> {
+        let file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening segment {}", path.display()))?;
+        file.set_len(valid_len)
+            .with_context(|| format!("trimming segment {} to valid length", path.display()))?;
+        Ok(SegmentWriter { file, path: path.to_path_buf(), len: valid_len, records })
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one record. Not durable until [`sync`](Self::sync). On any
+    /// write failure the file is rolled back to the previous record
+    /// boundary (best effort — recovery handles the rest).
+    pub fn append(&mut self, payload: &[u8]) -> Result<()> {
+        crate::ensure!(
+            payload.len() <= MAX_RECORD,
+            "record of {} bytes exceeds MAX_RECORD ({MAX_RECORD})",
+            payload.len()
+        );
+        let frame = encode_record(payload);
+        let wrote = match failpoint::check("store/append") {
+            None => self.write_at_end(&frame),
+            Some(Injected::ShortWrite(budget)) => {
+                // model a torn append: some prefix of the frame lands on disk
+                let cut = budget.min(frame.len().saturating_sub(1));
+                let _ = self.write_at_end(&frame[..cut]);
+                Err(Error::msg(format!(
+                    "injected short write ({cut}/{} bytes; failpoint store/append)",
+                    frame.len()
+                )))
+            }
+            Some(_) => Err(Error::msg("injected append failure (failpoint store/append)")),
+        };
+        match wrote {
+            Ok(()) => {
+                self.len += frame.len() as u64;
+                self.records += 1;
+                Ok(())
+            }
+            Err(e) => {
+                let _ = self.file.set_len(self.len); // roll back the torn tail
+                Err(e.context(format!("appending to segment {}", self.path.display())))
+            }
+        }
+    }
+
+    fn write_at_end(&mut self, bytes: &[u8]) -> Result<()> {
+        self.file.write_all(bytes).map_err(Error::from)
+    }
+
+    /// Make everything appended so far durable.
+    pub fn sync(&mut self) -> Result<()> {
+        failpoint::fail("store/sync")?;
+        self.file
+            .sync_data()
+            .with_context(|| format!("syncing segment {}", self.path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("gaq_segment_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_reopen() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("a.seg");
+        let mut w = SegmentWriter::create(&path).unwrap();
+        let payloads: Vec<Vec<u8>> =
+            vec![b"hello".to_vec(), Vec::new(), vec![0xAB; 1000], b"tail".to_vec()];
+        for p in &payloads {
+            w.append(p).unwrap();
+        }
+        w.sync().unwrap();
+        assert_eq!(read_segment(&path).unwrap(), payloads);
+
+        // reopen at the validated end and keep appending
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.records, 4);
+        assert_eq!(rec.truncated, 0);
+        let mut w2 = SegmentWriter::open_end(&path, rec.valid_len, rec.records).unwrap();
+        w2.append(b"more").unwrap();
+        w2.sync().unwrap();
+        assert_eq!(read_segment(&path).unwrap().len(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_stops_at_torn_tail() {
+        let mut img = Vec::new();
+        img.extend_from_slice(&encode_record(b"one"));
+        img.extend_from_slice(&encode_record(b"two"));
+        let full = img.clone();
+        img.extend_from_slice(&encode_record(b"three")[..7]); // torn header+
+        let s = scan(&img);
+        assert_eq!(s.records.len(), 2);
+        assert_eq!(s.valid_len, full.len());
+    }
+
+    #[test]
+    fn scan_stops_at_bad_crc() {
+        let mut img = Vec::new();
+        img.extend_from_slice(&encode_record(b"one"));
+        let boundary = img.len();
+        img.extend_from_slice(&encode_record(b"two"));
+        let last = img.len() - 1;
+        img[last] ^= 0x01; // corrupt the final payload byte
+        let s = scan(&img);
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.valid_len, boundary);
+    }
+
+    #[test]
+    fn recover_truncates_torn_tail_on_disk() {
+        let dir = tmpdir("recover");
+        let path = dir.join("b.seg");
+        let mut w = SegmentWriter::create(&path).unwrap();
+        w.append(b"keep-me").unwrap();
+        w.sync().unwrap();
+        let valid = w.len();
+        // simulate a crash mid-append: half a frame lands on disk
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&encode_record(b"torn-away")[..10]).unwrap();
+        drop(f);
+
+        let rec = recover(&path).unwrap();
+        assert_eq!(rec.records, 1);
+        assert_eq!(rec.valid_len, valid);
+        assert_eq!(rec.truncated, 10);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), valid);
+        assert_eq!(read_segment(&path).unwrap(), vec![b"keep-me".to_vec()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_segment_recovers_to_empty() {
+        let dir = tmpdir("missing");
+        let rec = recover(&dir.join("nope.seg")).unwrap();
+        assert_eq!(rec, Recovery { records: 0, valid_len: 0, truncated: 0 });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn implausible_length_is_a_boundary_not_a_panic() {
+        let mut img = encode_record(b"ok");
+        let boundary = img.len();
+        img.extend_from_slice(&u32::MAX.to_le_bytes());
+        img.extend_from_slice(&[0u8; 20]);
+        let s = scan(&img);
+        assert_eq!(s.records.len(), 1);
+        assert_eq!(s.valid_len, boundary);
+    }
+}

@@ -1,0 +1,344 @@
+//! Deterministic fault injection (substrate — the `fail` crate is
+//! unavailable).
+//!
+//! A failpoint is a named hook compiled into a failure-prone code path
+//! (store writes, worker batches, net reader/writer, dispatcher submit).
+//! Inactive failpoints cost one relaxed atomic load. Activation comes from
+//! the `GAQ_FAILPOINTS` environment variable — a comma-separated list of
+//! `name:mode:arg` specs — or programmatically via [`set`] in tests.
+//!
+//! Modes (`arg` defaults to `1`):
+//! * `err:N`        — every Nth hit returns an injected error
+//! * `panic:N`      — every Nth hit panics (worker-kill simulation)
+//! * `exit:N`       — the Nth hit exits the process with code [`EXIT_CODE`]
+//!   (SIGKILL-equivalent for crash/resume tests)
+//! * `stall:MS`     — every hit sleeps MS milliseconds, then proceeds
+//! * `shortwrite:B` — every hit reports a B-byte write budget and errors
+//!   (torn-record / ENOSPC simulation in the store)
+//! * `disconnect:N` — every Nth hit tears the connection mid-frame
+//!
+//! For `err`/`panic`/`exit`/`disconnect`, `arg` may instead be `pK`
+//! (e.g. `err:p8`): each hit trips with probability 1/K drawn from a
+//! per-failpoint PRNG seeded by `GAQ_FAILPOINT_SEED` (default 0) mixed
+//! with the failpoint name — so probabilistic failures replay exactly.
+//!
+//! Every trip increments the `failpoint_trips_total` counter (plus a
+//! per-name labelled counter) in the observability registry.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use super::error::{Error, Result};
+use super::prng::Rng;
+
+/// Exit code used by `exit`-mode failpoints; the crash-smoke Makefile leg
+/// asserts this exact code so a genuine failure cannot masquerade as the
+/// injected crash.
+pub const EXIT_CODE: i32 = 42;
+
+/// What an active failpoint injected at a hit site. `panic`/`exit`/`stall`
+/// never reach the caller (handled inside [`check`]); the remaining modes
+/// are returned so the site can fail the way that layer actually fails.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Injected {
+    /// fail the operation with an injected error
+    Error,
+    /// tear the connection / stream mid-frame
+    Disconnect,
+    /// write at most this many bytes, then fail (torn record on disk)
+    ShortWrite(usize),
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Mode {
+    Err,
+    Panic,
+    Exit,
+    Stall(u64),
+    ShortWrite(usize),
+    Disconnect,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Trigger {
+    /// trip on every Nth hit (N=1: every hit)
+    Every(u64),
+    /// trip each hit with probability 1/K (seeded, replayable)
+    OneIn(u64),
+}
+
+struct Fp {
+    mode: Mode,
+    trigger: Trigger,
+    hits: AtomicU64,
+    trips: AtomicU64,
+    rng: Mutex<Rng>,
+}
+
+/// 0 = registry not initialised, 1 = no failpoints, 2 = failpoints active.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+type Registry = Mutex<BTreeMap<String, Arc<Fp>>>;
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut map = BTreeMap::new();
+        if let Ok(specs) = std::env::var("GAQ_FAILPOINTS") {
+            for spec in specs.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                match parse_spec(spec) {
+                    Ok((name, fp)) => {
+                        map.insert(name, Arc::new(fp));
+                    }
+                    Err(e) => eprintln!("GAQ_FAILPOINTS: ignoring {spec:?}: {e}"),
+                }
+            }
+        }
+        STATE.store(if map.is_empty() { 1 } else { 2 }, Ordering::Relaxed);
+        Mutex::new(map)
+    })
+}
+
+/// FNV-1a, mixed with `GAQ_FAILPOINT_SEED` so probabilistic failpoints are
+/// deterministic per (seed, name) and independent across names.
+fn fp_seed(name: &str) -> u64 {
+    let base = std::env::var("GAQ_FAILPOINT_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0);
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^ base.rotate_left(17)
+}
+
+/// Parse one `name:mode[:arg]` spec.
+fn parse_spec(spec: &str) -> Result<(String, Fp)> {
+    let mut parts = spec.splitn(3, ':');
+    let name = parts.next().unwrap_or_default();
+    let mode = parts.next().unwrap_or_default();
+    let arg = parts.next();
+    if name.is_empty() || mode.is_empty() {
+        return Err(Error::msg(format!("expected name:mode[:arg], got {spec:?}")));
+    }
+    let trigger = match arg {
+        Some(a) if a.starts_with('p') => {
+            let k: u64 = a[1..]
+                .parse()
+                .map_err(|_| Error::msg(format!("bad probability arg {a:?}")))?;
+            if k == 0 {
+                return Err(Error::msg("probability arg p0 is invalid"));
+            }
+            Trigger::OneIn(k)
+        }
+        Some(a) => {
+            let n: u64 =
+                a.parse().map_err(|_| Error::msg(format!("bad numeric arg {a:?}")))?;
+            Trigger::Every(n.max(1))
+        }
+        None => Trigger::Every(1),
+    };
+    let (mode, trigger) = match mode {
+        "err" => (Mode::Err, trigger),
+        "panic" => (Mode::Panic, trigger),
+        "exit" => (Mode::Exit, trigger),
+        "disconnect" => (Mode::Disconnect, trigger),
+        // for stall/shortwrite the arg is the mode parameter, not a trigger
+        "stall" => {
+            let ms = match trigger {
+                Trigger::Every(n) if arg.is_some() => n,
+                _ => 50,
+            };
+            (Mode::Stall(ms), Trigger::Every(1))
+        }
+        "shortwrite" => {
+            let bytes = match trigger {
+                Trigger::Every(n) if arg.is_some() => n as usize,
+                _ => 0,
+            };
+            (Mode::ShortWrite(bytes), Trigger::Every(1))
+        }
+        other => return Err(Error::msg(format!("unknown failpoint mode {other:?}"))),
+    };
+    let fp = Fp {
+        mode,
+        trigger,
+        hits: AtomicU64::new(0),
+        trips: AtomicU64::new(0),
+        rng: Mutex::new(Rng::new(fp_seed(name))),
+    };
+    Ok((name.to_string(), fp))
+}
+
+/// True when any failpoint is configured (one relaxed load after init).
+pub fn active() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        0 => {
+            registry();
+            STATE.load(Ordering::Relaxed) == 2
+        }
+        s => s == 2,
+    }
+}
+
+/// Activate a failpoint programmatically (tests). `spec` is the
+/// `mode[:arg]` part of the env grammar, e.g. `"panic:5"` or `"err"`.
+pub fn set(name: &str, spec: &str) -> Result<()> {
+    let (parsed_name, fp) = parse_spec(&format!("{name}:{spec}"))?;
+    let mut reg = registry().lock().unwrap();
+    reg.insert(parsed_name, Arc::new(fp));
+    STATE.store(2, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Deactivate one failpoint.
+pub fn clear(name: &str) {
+    let mut reg = registry().lock().unwrap();
+    reg.remove(name);
+    if reg.is_empty() {
+        STATE.store(1, Ordering::Relaxed);
+    }
+}
+
+/// Deactivate everything (test teardown).
+pub fn clear_all() {
+    let mut reg = registry().lock().unwrap();
+    reg.clear();
+    STATE.store(1, Ordering::Relaxed);
+}
+
+/// Times the named failpoint has tripped (0 if unknown/never).
+pub fn trips(name: &str) -> u64 {
+    let reg = registry().lock().unwrap();
+    reg.get(name).map(|fp| fp.trips.load(Ordering::Relaxed)).unwrap_or(0)
+}
+
+fn trip_counters(name: &str) {
+    crate::obs::counter("failpoint_trips_total").inc();
+    crate::obs::counter(&crate::obs::labeled("failpoint_trips_total", &[("name", name)]))
+        .inc();
+}
+
+/// The hit site: returns `None` when the failpoint is inactive or did not
+/// trip this hit. `panic`/`exit` diverge here; `stall` sleeps here and
+/// proceeds. The remaining modes return an [`Injected`] for the caller.
+pub fn check(name: &str) -> Option<Injected> {
+    if STATE.load(Ordering::Relaxed) == 1 {
+        return None; // the common case: one relaxed load
+    }
+    check_slow(name)
+}
+
+#[cold]
+fn check_slow(name: &str) -> Option<Injected> {
+    let fp = {
+        let reg = registry().lock().unwrap();
+        reg.get(name)?.clone()
+    };
+    let hit = fp.hits.fetch_add(1, Ordering::Relaxed) + 1;
+    let tripped = match fp.trigger {
+        Trigger::Every(n) => hit % n == 0,
+        Trigger::OneIn(k) => fp.rng.lock().unwrap().below(k as usize) == 0,
+    };
+    if !tripped {
+        return None;
+    }
+    fp.trips.fetch_add(1, Ordering::Relaxed);
+    trip_counters(name);
+    match fp.mode {
+        Mode::Panic => panic!("failpoint {name} tripped (hit {hit})"),
+        Mode::Exit => {
+            eprintln!("failpoint {name}: exiting with code {EXIT_CODE} (hit {hit})");
+            std::process::exit(EXIT_CODE);
+        }
+        Mode::Stall(ms) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            None
+        }
+        Mode::Err => Some(Injected::Error),
+        Mode::Disconnect => Some(Injected::Disconnect),
+        Mode::ShortWrite(b) => Some(Injected::ShortWrite(b)),
+    }
+}
+
+/// Convenience for plain-error sites: `failpoint::fail("md/step")?`.
+pub fn fail(name: &str) -> Result<()> {
+    match check(name) {
+        None => Ok(()),
+        Some(_) => Err(Error::msg(format!("injected failure (failpoint {name})"))),
+    }
+}
+
+/// Convenience for io-flavoured sites.
+pub fn fail_io(name: &str) -> std::io::Result<()> {
+    match check(name) {
+        None => Ok(()),
+        Some(_) => Err(std::io::Error::other(format!("injected io failure (failpoint {name})"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The registry is process-global; serialise tests that mutate it.
+    fn guard() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn inactive_is_none_and_cheap() {
+        let _g = guard();
+        clear_all();
+        assert!(check("util-test/nothing").is_none());
+        assert!(fail("util-test/nothing").is_ok());
+    }
+
+    #[test]
+    fn every_nth_hit_trips() {
+        let _g = guard();
+        set("util-test/nth", "err:3").unwrap();
+        let got: Vec<bool> = (0..9).map(|_| check("util-test/nth").is_some()).collect();
+        clear("util-test/nth");
+        assert_eq!(got, [false, false, true, false, false, true, false, false, true]);
+        assert_eq!(trips("util-test/nth"), 0, "cleared failpoint keeps no counters");
+    }
+
+    #[test]
+    fn shortwrite_reports_budget() {
+        let _g = guard();
+        set("util-test/sw", "shortwrite:7").unwrap();
+        assert_eq!(check("util-test/sw"), Some(Injected::ShortWrite(7)));
+        clear("util-test/sw");
+    }
+
+    #[test]
+    fn probabilistic_trigger_replays() {
+        let _g = guard();
+        let draw = || -> Vec<bool> {
+            set("util-test/prob", "err:p4").unwrap();
+            let v = (0..64).map(|_| check("util-test/prob").is_some()).collect();
+            clear("util-test/prob");
+            v
+        };
+        let a = draw();
+        let b = draw();
+        assert_eq!(a, b, "seeded probabilistic failpoint must replay");
+        let n = a.iter().filter(|&&t| t).count();
+        assert!(n > 4 && n < 40, "1-in-4 over 64 hits tripped {n} times");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(parse_spec("noname").is_err());
+        assert!(parse_spec("x:warp").is_err());
+        assert!(parse_spec("x:err:pzero").is_err());
+        assert!(parse_spec("x:err:p0").is_err());
+        assert!(parse_spec("x:err:many").is_err());
+    }
+}

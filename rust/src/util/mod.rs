@@ -1,11 +1,12 @@
 //! In-tree substrates for the offline environment (DESIGN.md §3):
-//! errors, JSON, CLI parsing, PRNG, micro-benchmarking, property testing
-//! and the scoped data-parallel thread pool.
+//! errors, JSON, CLI parsing, PRNG, micro-benchmarking, property testing,
+//! deterministic fault injection and the scoped data-parallel thread pool.
 
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod error;
+pub mod failpoint;
 pub mod json;
 pub mod prng;
 pub mod proptest;

@@ -1,0 +1,275 @@
+//! Deterministic fault-injection suite (ISSUE 9): drives the failpoint
+//! harness through the coordinator, the TCP front-end, and the trajectory
+//! store, asserting the failure-model contracts of DESIGN.md §13:
+//!
+//! * a worker panic mid-batch loses zero requests (Drop guards answer) and
+//!   the supervised pool respawns under the capped backoff;
+//! * client-side transport failures are *typed*: a deadline expiry is
+//!   [`TransportError::Timeout`], a mid-frame tear is `Disconnected`;
+//! * a stuck backend surfaces as the server-authoritative `Timeout`
+//!   rejection, not a client hang;
+//! * an injected short write rolls the segment back to the previous record
+//!   boundary — the store reopens clean;
+//! * the dispatcher submit failpoint refuses before a request enters the
+//!   system (no gauge leak).
+//!
+//! The failpoint registry is process-global, so every test here serialises
+//! on one mutex and clears the registry on entry and exit.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use gaq_md::coordinator::{
+    Backend, BatchPolicy, InferenceRequest, InferenceResponse, Metrics, NetClient, NetConfig,
+    NetServer, Pool, Server, ServerConfig,
+};
+use gaq_md::store::checkpoint::MdFrame;
+use gaq_md::store::RunStore;
+use gaq_md::util::failpoint;
+use gaq_md::util::json::Json;
+
+/// Serialise tests that touch the process-global failpoint registry.
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gaq_fault_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn mk_req(id: u64) -> (InferenceRequest, mpsc::Receiver<InferenceResponse>) {
+    let (tx, rx) = mpsc::channel();
+    (InferenceRequest::new(id, "mock", vec![1.0; 6], tx, None), rx)
+}
+
+/// Dispatch one request; if the pool has no live worker this instant,
+/// answer through the request's own terminal path (what the dispatcher
+/// does) so the accounting stays closed either way.
+fn dispatch_one(pool: &Pool, id: u64) -> mpsc::Receiver<InferenceResponse> {
+    let (req, rx) = mk_req(id);
+    if let Err(batch) = pool.dispatch(vec![req]) {
+        for r in batch {
+            let id = r.id;
+            r.respond(InferenceResponse::error(id, "no live workers"));
+        }
+    }
+    rx
+}
+
+fn mock_net_server(backend: Backend, cfg: NetConfig) -> NetServer {
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_micros(200),
+            max_queue_depth: 1024,
+        },
+        variants: vec![("mock".to_string(), backend, 1)],
+    })
+    .expect("server starts");
+    NetServer::start(server, cfg.with_expected_len(6)).expect("net server binds")
+}
+
+/// Satellite 2: kill workers under load via the `pool/worker_batch` panic
+/// failpoint. Every request must still be answered (zero lost), the pool
+/// must respawn workers, and throughput must be restored once the fault
+/// clears.
+#[test]
+fn worker_panics_lose_zero_requests_and_pool_respawns() {
+    let _g = guard();
+    failpoint::clear_all();
+    let respawns0 = gaq_md::obs::counter("worker_respawns_total").get();
+    let trips0 = gaq_md::obs::counter("failpoint_trips_total").get();
+
+    let metrics = Arc::new(Mutex::new(Metrics::default()));
+    let pool = Pool::supervised("mock".into(), Backend::Mock { n_atoms: 2 }, 2, metrics)
+        .expect("supervised pool starts");
+
+    // sanity: the pool serves before any fault is injected
+    let rx = dispatch_one(&pool, 0);
+    let r = rx.recv_timeout(Duration::from_secs(10)).expect("baseline reply");
+    assert!(r.error.is_none(), "baseline request failed: {:?}", r.error);
+
+    // every batch taken from here on panics its worker mid-batch
+    failpoint::set("pool/worker_batch", "panic").unwrap();
+    let n = 8u64;
+    let rxs: Vec<_> = (1..=n)
+        .map(|i| {
+            let rx = dispatch_one(&pool, i);
+            std::thread::sleep(Duration::from_millis(10));
+            rx
+        })
+        .collect();
+    // zero lost: every request gets exactly one reply — from the panicking
+    // worker's Drop guards or from the no-live-workers fallback above
+    for (i, rx) in rxs.iter().enumerate() {
+        let r = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("request {} lost under worker panics: {e}", i + 1));
+        assert!(r.error.is_some(), "a panicked batch cannot produce a success");
+    }
+    assert!(
+        gaq_md::obs::counter("failpoint_trips_total").get() > trips0,
+        "panic failpoint never tripped"
+    );
+
+    // fault cleared: the supervisor must restore service (respawned worker
+    // answers ok), within the capped backoff horizon
+    failpoint::clear_all();
+    let mut recovered = false;
+    for i in 0..400u64 {
+        let rx = dispatch_one(&pool, 1000 + i);
+        if let Ok(r) = rx.recv_timeout(Duration::from_secs(10)) {
+            if r.error.is_none() {
+                recovered = true;
+                break;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(recovered, "pool never recovered after the panic fault cleared");
+    assert!(
+        gaq_md::obs::counter("worker_respawns_total").get() > respawns0,
+        "recovery without a recorded respawn"
+    );
+    pool.shutdown();
+}
+
+/// Satellite 1: a reply that misses the client's read deadline is a typed
+/// `Timeout`, not a generic error and not a disconnect.
+#[test]
+fn client_read_deadline_is_typed_timeout() {
+    let _g = guard();
+    failpoint::clear_all();
+    let net = mock_net_server(
+        Backend::SlowMock { n_atoms: 2, delay_ms: 500 },
+        NetConfig::new("127.0.0.1:0"),
+    );
+    let mut client = NetClient::connect_with_deadlines(
+        &net.local_addr().to_string(),
+        Duration::from_millis(100),
+        Duration::from_secs(5),
+    )
+    .expect("client connects");
+    client.send_infer(1, "mock", &[1.0; 6]).expect("send");
+    let err = client.recv_typed().expect_err("a 500 ms backend beat a 100 ms deadline");
+    assert!(err.is_timeout(), "expected Timeout, got {err:?}");
+    assert!(!err.is_disconnect(), "{err:?}");
+    drop(client);
+    net.shutdown();
+}
+
+/// Satellite 1 (other half): a connection torn mid-frame by the
+/// `net/write_reply` failpoint is a typed `Disconnected` — distinguishable
+/// from a timeout — and a fresh connection works once the fault clears.
+#[test]
+fn mid_frame_disconnect_is_typed_disconnect() {
+    let _g = guard();
+    failpoint::clear_all();
+    let net =
+        mock_net_server(Backend::Mock { n_atoms: 2 }, NetConfig::new("127.0.0.1:0"));
+    failpoint::set("net/write_reply", "disconnect").unwrap();
+    let mut client = NetClient::connect(&net.local_addr().to_string()).expect("connect");
+    client.send_infer(3, "mock", &[1.0; 6]).expect("send");
+    let err = client.recv_typed().expect_err("server tore the reply mid-frame");
+    assert!(err.is_disconnect(), "expected Disconnected, got {err:?}");
+
+    failpoint::clear_all();
+    let mut c2 = NetClient::connect(&net.local_addr().to_string()).expect("reconnect");
+    let r = c2.infer(4, "mock", &[1.0; 6]).expect("round trip after fault cleared");
+    assert!(r.is_ok(), "{r:?}");
+    drop((client, c2));
+    net.shutdown();
+}
+
+/// A backend slower than the server's per-request deadline surfaces as the
+/// typed `Timeout` rejection on the server's authority — the client is
+/// never left hanging on a wedged worker.
+#[test]
+fn server_request_deadline_surfaces_timeout_rejection() {
+    let _g = guard();
+    failpoint::clear_all();
+    let net = mock_net_server(
+        Backend::SlowMock { n_atoms: 2, delay_ms: 400 },
+        NetConfig::new("127.0.0.1:0").with_request_deadline(Duration::from_millis(50)),
+    );
+    let mut client = NetClient::connect(&net.local_addr().to_string()).expect("connect");
+    let r = client.infer(9, "mock", &[1.0; 6]).expect("a reply, not a hang");
+    assert_eq!(r.reject_code(), Some("Timeout"), "{r:?}");
+    assert_eq!(r.id, Some(9));
+    assert!(
+        net.stats().timeouts.load(Ordering::Relaxed) >= 1,
+        "timeout not counted in NetStats"
+    );
+    drop(client);
+    net.shutdown();
+}
+
+/// An injected short write (torn append / ENOSPC) fails the append but
+/// rolls the segment back to the previous record boundary: subsequent
+/// appends succeed and the store reopens with zero torn bytes.
+#[test]
+fn store_short_write_rolls_back_to_record_boundary() {
+    let _g = guard();
+    failpoint::clear_all();
+    let frame = |step: u64| MdFrame {
+        step,
+        time_fs: step as f64 * 0.25,
+        pe_ev: -1.5,
+        ke_ev: 0.25,
+        positions: vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6],
+        velocities: vec![0.0; 6],
+    };
+
+    let dir = tmpdir("shortwrite");
+    let mut store = RunStore::create(&dir, "md", Json::Null).expect("create store");
+    store.append_frame(&frame(0)).expect("clean append");
+
+    failpoint::set("store/append", "shortwrite:5").unwrap();
+    let err = store.append_frame(&frame(1));
+    assert!(err.is_err(), "short write must fail the append");
+    failpoint::clear_all();
+
+    // the torn prefix was rolled back: the next append lands cleanly
+    store.append_frame(&frame(2)).expect("append after rollback");
+    store.finalize().expect("finalize");
+    drop(store);
+
+    let (reopened, report) = RunStore::open(&dir, "md", Json::Null).expect("reopen");
+    assert_eq!(report.truncated_bytes(), 0, "rollback left a torn tail on disk");
+    let steps: Vec<u64> = reopened.frames().unwrap().iter().map(|f| f.step).collect();
+    assert_eq!(steps, vec![0, 2], "surviving frames are exactly the completed appends");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `coordinator/submit` failpoint refuses a request before it enters
+/// the system; once cleared, the same server serves normally (the depth
+/// gauge was never touched by the refused submit).
+#[test]
+fn submit_failpoint_refuses_before_admission() {
+    let _g = guard();
+    failpoint::clear_all();
+    let server = Server::start(ServerConfig {
+        policy: BatchPolicy::default(),
+        variants: vec![("mock".to_string(), Backend::Mock { n_atoms: 2 }, 1)],
+    })
+    .expect("server starts");
+
+    let p = server.submit("mock", vec![1.0; 6]).expect("baseline submit");
+    assert!(p.wait().expect("baseline reply").error.is_none());
+
+    failpoint::set("coordinator/submit", "err").unwrap();
+    assert!(
+        server.submit("mock", vec![1.0; 6]).is_err(),
+        "injected submit failure must refuse the request"
+    );
+    failpoint::clear_all();
+
+    let p = server.submit("mock", vec![1.0; 6]).expect("submit after fault cleared");
+    assert!(p.wait().expect("reply").error.is_none());
+}

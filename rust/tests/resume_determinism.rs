@@ -1,0 +1,223 @@
+//! Resume-determinism suite (ISSUE 9, satellite 4): a run killed
+//! mid-production and resumed from its store must be *bit-identical* to an
+//! uninterrupted run — positions, velocities, energies (frame bytes carry
+//! raw f64 bits for all three) and the drift-report fit.
+//!
+//! The kill is the `md/step` failpoint in err mode: it aborts the run at
+//! the top of a chosen production step, exactly where `exit` mode would
+//! have killed the process (the store is left unfinalized, with unsynced
+//! appends past the last checkpoint — the worst in-process-observable
+//! crash state). The `exit`-mode/SIGKILL variant of the same contract is
+//! exercised end-to-end by `make store-smoke`.
+//!
+//! CI runs this suite under both legs of the `GAQ_THREADS` matrix ({1, 0}),
+//! so resume determinism is asserted on the serial and parallel force
+//! paths alike.
+//!
+//! The failpoint registry is process-global: tests serialise on one mutex.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use gaq_md::md::runner::{run_md, MdRunConfig, MdRunOutcome};
+use gaq_md::md::ClassicalProvider;
+use gaq_md::molecule::Molecule;
+use gaq_md::store::RunStore;
+use gaq_md::util::failpoint;
+use gaq_md::util::json::Json;
+
+fn guard() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("gaq_resume_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn provider() -> ClassicalProvider {
+    let m = Molecule::azobenzene_builtin();
+    ClassicalProvider { ff: m.ff.clone() }
+}
+
+fn geometry() -> (Vec<f64>, Vec<f64>) {
+    let m = Molecule::azobenzene_builtin();
+    (m.positions.clone(), m.masses.clone())
+}
+
+fn cfg(steps: usize, dir: &Path, checkpoint_every: usize) -> MdRunConfig {
+    let mut c = MdRunConfig::new(steps, 0.25, 300.0);
+    c.equil = 12;
+    c.seed = 7;
+    c.checkpoint_every = checkpoint_every;
+    c.store_dir = Some(dir.to_path_buf());
+    c
+}
+
+fn frame_bytes(dir: &Path) -> Vec<Vec<u8>> {
+    let (store, _) = RunStore::open(dir, "md", Json::Null).expect("open store");
+    store.frames().expect("read frames").iter().map(|f| f.encode()).collect()
+}
+
+/// Kill a fresh run at production step `kill_step` via the failpoint, then
+/// resume it to `steps`. Returns the resumed outcome.
+fn kill_and_resume(
+    dir: &Path,
+    steps: usize,
+    checkpoint_every: usize,
+    kill_step: u64,
+) -> MdRunOutcome {
+    let (pos, masses) = geometry();
+    failpoint::set("md/step", &format!("err:{kill_step}")).unwrap();
+    let died = run_md(&mut provider(), &pos, &masses, &cfg(steps, dir, checkpoint_every));
+    failpoint::clear_all();
+    assert!(died.is_err(), "failpoint md/step:err:{kill_step} did not kill the run");
+
+    let mut resume = cfg(steps, dir, checkpoint_every);
+    resume.resume = true;
+    run_md(&mut provider(), &pos, &masses, &resume).expect("resumed run")
+}
+
+fn assert_bit_identical(full: &MdRunOutcome, resumed: &MdRunOutcome, what: &str) {
+    assert_eq!(full.state.positions.len(), resumed.state.positions.len());
+    for (i, (a, b)) in full.state.positions.iter().zip(&resumed.state.positions).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: position {i} diverged");
+    }
+    for (i, (a, b)) in
+        full.state.velocities.iter().zip(&resumed.state.velocities).enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: velocity {i} diverged");
+    }
+    assert_eq!(
+        full.report.drift_mev_atom_ps.to_bits(),
+        resumed.report.drift_mev_atom_ps.to_bits(),
+        "{what}: drift fit diverged"
+    );
+}
+
+/// The core acceptance sweep: kill at several production steps across two
+/// checkpoint cadences (including a kill before the first cadence point,
+/// which resumes from checkpoint 0) and require bit-identity with the
+/// uninterrupted run every time.
+#[test]
+fn kill_and_resume_is_bit_identical_across_cadences() {
+    let _g = guard();
+    failpoint::clear_all();
+    let (pos, masses) = geometry();
+    let steps = 60;
+
+    let ref_dir = tmpdir("reference");
+    let full =
+        run_md(&mut provider(), &pos, &masses, &cfg(steps, &ref_dir, 10)).expect("full run");
+    assert_eq!(full.last_step, steps as u64);
+    let ref_frames = frame_bytes(&ref_dir);
+    assert_eq!(ref_frames.len(), steps + 1);
+
+    for (cadence, kill_step) in
+        [(10, 1), (10, 15), (10, 30), (10, 55), (7, 23), (25, 49)]
+    {
+        let dir = tmpdir(&format!("kill_c{cadence}_k{kill_step}"));
+        let resumed = kill_and_resume(&dir, steps, cadence, kill_step);
+        assert_eq!(resumed.last_step, steps as u64);
+        assert!(
+            resumed.resumed_from.is_some(),
+            "cadence {cadence}, kill {kill_step}: run did not resume from a checkpoint"
+        );
+        assert_bit_identical(&full, &resumed, &format!("cadence {cadence}, kill {kill_step}"));
+        // frame byte streams carry step, time, pe, ke, positions, velocities
+        // as raw little-endian f64 bits — equality here IS bit-identity of
+        // the whole persisted trajectory, energies included
+        assert_eq!(
+            frame_bytes(&dir),
+            ref_frames,
+            "cadence {cadence}, kill {kill_step}: persisted trajectory diverged"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
+
+/// Two crashes in one trajectory: kill, resume, kill again later, resume
+/// again — the final trajectory still matches the uninterrupted run bit
+/// for bit.
+#[test]
+fn double_kill_double_resume_is_bit_identical() {
+    let _g = guard();
+    failpoint::clear_all();
+    let (pos, masses) = geometry();
+    let steps = 50;
+
+    let ref_dir = tmpdir("double_ref");
+    let full =
+        run_md(&mut provider(), &pos, &masses, &cfg(steps, &ref_dir, 10)).expect("full run");
+
+    let dir = tmpdir("double_kill");
+    // first life: dies at step 18
+    failpoint::set("md/step", "err:18").unwrap();
+    assert!(run_md(&mut provider(), &pos, &masses, &cfg(steps, &dir, 10)).is_err());
+    // second life: resumes from 10, dies at its 22nd own step (step 32)
+    failpoint::set("md/step", "err:22").unwrap();
+    let mut again = cfg(steps, &dir, 10);
+    again.resume = true;
+    assert!(run_md(&mut provider(), &pos, &masses, &again).is_err());
+    failpoint::clear_all();
+    // third life: runs to completion
+    let resumed = run_md(&mut provider(), &pos, &masses, &again).expect("final resume");
+
+    assert_eq!(resumed.last_step, steps as u64);
+    assert_bit_identical(&full, &resumed, "double kill");
+    assert_eq!(frame_bytes(&dir), frame_bytes(&ref_dir), "double kill: trajectory diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
+
+/// A crash that tears the segment tails on disk (garbage appended to both
+/// the frame and checkpoint segments, as a power-cut mid-write would
+/// leave): recovery truncates to the last valid record boundary and the
+/// resumed run is still bit-identical.
+#[test]
+fn resume_recovers_torn_tails_bit_identically() {
+    let _g = guard();
+    failpoint::clear_all();
+    let (pos, masses) = geometry();
+    let steps = 40;
+
+    let ref_dir = tmpdir("torn_ref");
+    let full =
+        run_md(&mut provider(), &pos, &masses, &cfg(steps, &ref_dir, 10)).expect("full run");
+
+    let dir = tmpdir("torn");
+    failpoint::set("md/step", "err:27").unwrap();
+    assert!(run_md(&mut provider(), &pos, &masses, &cfg(steps, &dir, 10)).is_err());
+    failpoint::clear_all();
+
+    // tear both segment tails: a partial record header on the frames
+    // segment, a few raw bytes on the checkpoints segment
+    let tear = |name: &str, junk: &[u8]| {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join(name))
+            .expect("open segment for tearing");
+        f.write_all(junk).expect("append torn tail");
+    };
+    tear(gaq_md::store::FRAMES_SEG, &[0x11, 0x22, 0x33, 0x44, 0x55]);
+    tear(gaq_md::store::CHECKPOINTS_SEG, &[0xde, 0xad, 0xbe]);
+
+    let mut resume = cfg(steps, &dir, 10);
+    resume.resume = true;
+    let resumed =
+        run_md(&mut provider(), &pos, &masses, &resume).expect("resume after torn tails");
+    assert_eq!(resumed.resumed_from, Some(20), "latest intact checkpoint is step 20");
+    assert_eq!(resumed.last_step, steps as u64);
+    assert_bit_identical(&full, &resumed, "torn tails");
+    assert_eq!(frame_bytes(&dir), frame_bytes(&ref_dir), "torn tails: trajectory diverged");
+
+    // and the recovered store reopens clean: no torn bytes remain
+    let (_, report) = RunStore::open(&dir, "md", Json::Null).expect("reopen");
+    assert_eq!(report.truncated_bytes(), 0, "recovery left torn bytes behind");
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&ref_dir);
+}
