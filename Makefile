@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTEST ?= python3 -m pytest
 
-BENCHES = coordinator parallel_scaling gnn_inference fig3_nve table1_complexity table3_lee table4_latency store_io
+BENCHES = coordinator parallel_scaling gnn_inference md_steps fig3_nve table1_complexity table3_lee table4_latency store_io
 
 .PHONY: build test fmt fmt-fix clippy verify pytest fixture artifacts smoke bench-smoke \
 	bench-baselines serve-smoke trace-smoke store-smoke fault-smoke clean
@@ -61,6 +61,7 @@ bench-smoke:
 bench-baselines:
 	GAQ_BENCH_JSON=BENCH_gemm.json $(CARGO) bench --bench parallel_scaling
 	GAQ_BENCH_JSON=BENCH_gnn_inference.json $(CARGO) bench --bench gnn_inference
+	GAQ_BENCH_JSON=BENCH_md.json $(CARGO) bench --bench md_steps
 
 # end-to-end network smoke: bind the TCP front-end on a free loopback port,
 # drive the multi-connection network loadgen against it, and fail unless
@@ -76,12 +77,18 @@ serve-smoke: build
 
 # span-tracing smoke: short traced MD run, then validate the exported
 # Chrome trace — JSON parses, expected span names present, and direct
-# children cover >=95% of md/step wall time (ISSUE 8 acceptance)
+# children cover >=95% of md/step wall time (ISSUE 8 acceptance). The gnn
+# leg additionally asserts the skin neighbor-list spans (ISSUE 10):
+# neighbor_filter fires every step, neighbor_build on (re)builds.
 trace-smoke: build
 	$(CARGO) run --release -q -- md --steps 50 --equil 10 --report-every 0 \
 		--trace-out target/trace.json
 	$(CARGO) run --release -q -- trace-check target/trace.json \
 		--expect md/step,md/integrate,md/force,md/thermostat
+	$(CARGO) run --release -q -- md --backend gnn --steps 30 --equil 5 \
+		--report-every 0 --trace-out target/trace_gnn.json
+	$(CARGO) run --release -q -- trace-check target/trace_gnn.json \
+		--expect md/step,md/force,neighbor_build,neighbor_filter
 
 # crash/resume smoke (DESIGN.md §13): run a short stored MD trajectory to
 # completion as the reference; run the identical trajectory again but let

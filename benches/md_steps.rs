@@ -1,0 +1,183 @@
+//! MD hot-path steps/s baseline (DESIGN.md §14): the perf surface ISSUE 10
+//! overhauled. Two families of cases land in the JSON report:
+//!
+//! - `neighbor_*_512`: the skin-based Verlet list vs a fresh
+//!   `NeighborGraph::build` every step, swept along a 512-atom jiggled
+//!   trajectory. Before timing, every swept frame is asserted bitwise
+//!   identical between the two paths — the speedup is only admissible
+//!   because the physics cannot differ. The checked-in baseline records
+//!   the >=1.5x skin-reuse acceptance figure.
+//! - `md_step_<variant>`: one full velocity-Verlet step (`verlet_step_into`,
+//!   zero-alloc scratch path) on the GNN backend per quantization variant.
+//!
+//! Results are diffed warn-only against `BENCH_md.json` via
+//! `warn_against_baseline` so the steps/s trajectory cannot silently
+//! regress. Run: `cargo bench --bench md_steps` (GAQ_BENCH_FAST=1 to
+//! shrink).
+
+use std::collections::BTreeMap;
+
+use gaq_md::md::classical::synthetic_lj;
+use gaq_md::md::integrator::{verlet_step_into, MdState};
+use gaq_md::md::ForceProvider;
+use gaq_md::model::{NeighborGraph, NeighborList};
+use gaq_md::runtime::{load_variant_choice, BackendChoice, ModelForceProvider};
+use gaq_md::util::benchkit::{black_box, warn_against_baseline, Bench};
+use gaq_md::util::json::{to_string, Json};
+use gaq_md::util::prng::Rng;
+
+const CUTOFF: f64 = 4.0;
+const SKIN: f64 = 0.5;
+const FRAMES: usize = 32;
+
+struct Case {
+    name: String,
+    step_ns: f64,
+    atoms: usize,
+    extra: Vec<(String, f64)>,
+}
+
+fn case_json(c: &Case) -> Json {
+    let mut obj = BTreeMap::from([
+        ("case".to_string(), Json::Str(c.name.clone())),
+        ("step_ns".to_string(), Json::Num(c.step_ns)),
+        ("steps_per_s".to_string(), Json::Num(1e9 / c.step_ns.max(1e-9))),
+        ("atoms".to_string(), Json::Num(c.atoms as f64)),
+    ]);
+    for (k, v) in &c.extra {
+        obj.insert(k.clone(), Json::Num(*v));
+    }
+    Json::Obj(obj)
+}
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut cases: Vec<Case> = Vec::new();
+
+    // --- neighbor path: 512-atom jiggled trajectory ------------------
+    let (_ff, pos0) = synthetic_lj(8, 7);
+    let n_atoms = pos0.len() / 3;
+    let mut frames: Vec<Vec<f64>> = Vec::with_capacity(FRAMES);
+    let mut rng = Rng::new(11);
+    let mut pos = pos0;
+    for _ in 0..FRAMES {
+        for x in pos.iter_mut() {
+            *x += 0.02 * rng.gaussian();
+        }
+        frames.push(pos.clone());
+    }
+
+    // correctness first: the skin list must be bitwise identical to a
+    // fresh build at every frame, or the timing below is meaningless
+    let mut list = NeighborList::new(CUTOFF, SKIN);
+    for f in &frames {
+        let g = list.update(f);
+        let fresh = NeighborGraph::build(f, CUTOFF);
+        assert!(g.bitwise_eq(&fresh), "skin list diverged from fresh build");
+    }
+    let (rebuilds, reuses) = (list.rebuilds(), list.reuses());
+    let reuse_ratio = reuses as f64 / (rebuilds + reuses) as f64;
+    println!(
+        "neighbor sweep: {n_atoms} atoms, {FRAMES} frames — {rebuilds} rebuild(s), \
+         {reuses} reuse(s) ({:.0}% reuse)\n",
+        100.0 * reuse_ratio
+    );
+
+    let rebuild = b.run("neighbor/rebuild_every_step", || {
+        let mut edges = 0usize;
+        for f in &frames {
+            edges += NeighborGraph::build(black_box(f), CUTOFF).n_edges();
+        }
+        edges
+    });
+    let mut list = NeighborList::new(CUTOFF, SKIN);
+    let skin = b.run("neighbor/skin_reuse", || {
+        let mut edges = 0usize;
+        for f in &frames {
+            edges += list.update(black_box(f)).n_edges();
+        }
+        edges
+    });
+    let speedup = rebuild.median_ns / skin.median_ns.max(1e-9);
+    cases.push(Case {
+        name: format!("neighbor_rebuild_{n_atoms}"),
+        step_ns: rebuild.median_ns / FRAMES as f64,
+        atoms: n_atoms,
+        extra: vec![],
+    });
+    cases.push(Case {
+        name: format!("neighbor_skin_{n_atoms}"),
+        step_ns: skin.median_ns / FRAMES as f64,
+        atoms: n_atoms,
+        extra: vec![
+            ("skin_speedup".to_string(), speedup),
+            ("reuse_ratio".to_string(), reuse_ratio),
+        ],
+    });
+
+    // --- full MD step per variant, GNN backend scratch path ----------
+    for v in ["fp32", "naive_int8", "degree_quant", "gaq_w4a8"] {
+        let (m, _engine, ff) =
+            load_variant_choice("/nonexistent/nowhere", v, BackendChoice::Gnn).expect("gnn load");
+        let atoms = m.molecule.masses.len();
+        let mut provider = ModelForceProvider::new(ff);
+        let mut state = MdState::new(m.molecule.positions.clone(), m.molecule.masses.clone());
+        let mut rng = Rng::new(3);
+        state.thermalize(300.0, &mut rng);
+        let mut forces = vec![0.0f64; 3 * atoms];
+        provider.energy_forces_into(&state.positions, &mut forces).unwrap();
+
+        let s = b.run(&format!("md/{v}/step"), || {
+            verlet_step_into(&mut state, &mut forces, 0.5, &mut provider).unwrap()
+        });
+        cases.push(Case {
+            name: format!("md_step_{v}"),
+            step_ns: s.median_ns,
+            atoms,
+            extra: vec![],
+        });
+    }
+
+    b.report();
+
+    println!("\n=== MD hot path ===");
+    println!("{:<28} {:>8} {:>12} {:>12}", "case", "atoms", "step", "steps/s");
+    for c in &cases {
+        println!(
+            "{:<28} {:>8} {:>10.2}us {:>12.0}",
+            c.name,
+            c.atoms,
+            c.step_ns / 1e3,
+            1e9 / c.step_ns.max(1e-9)
+        );
+    }
+    println!("\nskin reuse speedup at {n_atoms} atoms: {speedup:.2}x (acceptance floor 1.5x)");
+
+    let json = Json::Obj(BTreeMap::from([
+        ("bench".to_string(), Json::Str("md_steps".to_string())),
+        ("cutoff".to_string(), Json::Num(CUTOFF)),
+        ("skin".to_string(), Json::Num(SKIN)),
+        ("cases".to_string(), Json::Arr(cases.iter().map(case_json).collect())),
+    ]));
+    let path = std::env::var("GAQ_BENCH_JSON").unwrap_or_else(|_| {
+        gaq_md::workspace_root()
+            .join("target")
+            .join("md_steps.json")
+            .to_string_lossy()
+            .into_owned()
+    });
+    if let Some(parent) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(parent);
+    }
+    match std::fs::write(&path, to_string(&json)) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+
+    // warn-only diff against the checked-in baseline (DESIGN.md §10)
+    let baseline = gaq_md::workspace_root().join("BENCH_md.json");
+    let warnings = warn_against_baseline(&json, &baseline, "case", 4.0);
+    if warnings > 0 {
+        println!("{warnings} baseline warning(s) — investigate or refresh the baseline");
+    }
+}

@@ -178,6 +178,9 @@ METRICS (network mode):
 ENVIRONMENT:
   GAQ_THREADS        worker budget of the data-parallel pool
                      (0/unset: all cores)
+  GAQ_SIMD           i8 GEMM micro-kernel override: auto (default, best
+                     detected), off/scalar, or an explicit kernel name
+                     (avx2/sse2/neon); every choice is bit-identical
   GAQ_FAILPOINTS     deterministic fault injection, `name:mode[:arg],...`
                      (modes err/panic/exit/stall/shortwrite/disconnect;
                      e.g. `md/step:exit:90` kills MD at step 90,
@@ -379,16 +382,16 @@ fn run_md_replica(job: &MdJob) -> Result<MdRunStats> {
     }
     state.remove_com_velocity();
 
-    // NVE production
+    // NVE production: the allocation-free hot loop (forces updated in
+    // place, tracker pre-sized; DESIGN.md §14)
     let mut tracker = gaq_md::md::drift::DriftTracker::new(mol.n_atoms());
-    let (pe0, f0) = provider.energy_forces(&state.positions)?;
-    forces = f0;
+    tracker.reserve(steps + 1);
+    let pe0 = provider.energy_forces_into(&state.positions, &mut forces)?;
     tracker.record(0.0, pe0 + state.kinetic_energy(), state.temperature());
 
     let t_start = std::time::Instant::now();
     for step in 1..=steps {
-        let (pe, f) = integrator::verlet_step(&mut state, &forces, dt, &mut provider)?;
-        forces = f;
+        let pe = integrator::verlet_step_into(&mut state, &mut forces, dt, &mut provider)?;
         let etot = pe + state.kinetic_energy();
         tracker.record(state.time_fs, etot, state.temperature());
         if tracker.exploded() {
@@ -870,9 +873,13 @@ fn validate_serve_registry(
         }
     }
     if choice == BackendChoice::Gnn {
-        for prefix in
-            ["model_message_ns", "model_attention_ns", "model_neighbor_build_ns", "gemm_time_ns"]
-        {
+        for prefix in [
+            "model_message_ns",
+            "model_attention_ns",
+            "model_neighbor_build_ns",
+            "model_neighbor_filter_ns",
+            "gemm_time_ns",
+        ] {
             if !any_hist_nonzero(registry, prefix) {
                 bail!("no nonzero {prefix}* histogram after a gnn-backend load run");
             }

@@ -46,6 +46,14 @@ impl DriftTracker {
         DriftTracker { n_atoms, ..Default::default() }
     }
 
+    /// Pre-size the sample vectors for `n` records so the production loop's
+    /// pushes never reallocate (the zero-allocation hot path, DESIGN.md §14).
+    pub fn reserve(&mut self, n: usize) {
+        self.times_fs.reserve(n);
+        self.e_total.reserve(n);
+        self.temperature.reserve(n);
+    }
+
     pub fn record(&mut self, t_fs: f64, e_total_ev: f64, temperature_k: f64) {
         let e0 = self.e_total.first().copied().unwrap_or(e_total_ev);
         let na = self.n_atoms.max(1) as f64;

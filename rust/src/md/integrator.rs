@@ -111,6 +111,23 @@ pub fn verlet_step(
     dt_fs: f64,
     provider: &mut dyn ForceProvider,
 ) -> Result<(f64, Vec<f64>)> {
+    let mut f = forces.to_vec();
+    let e = verlet_step_into(state, &mut f, dt_fs, provider)?;
+    Ok((e, f))
+}
+
+/// Allocation-free velocity-Verlet step (the MD hot path, DESIGN.md §14).
+/// On entry `forces` holds the forces at the *current* positions; on return
+/// it holds the forces at the new positions (evaluated in place through
+/// [`ForceProvider::energy_forces_into`]). Returns the potential energy at
+/// the new positions. Identical arithmetic to [`verlet_step`] — that entry
+/// point is now a copying wrapper over this one.
+pub fn verlet_step_into(
+    state: &mut MdState,
+    forces: &mut [f64],
+    dt_fs: f64,
+    provider: &mut dyn ForceProvider,
+) -> Result<f64> {
     let obs = md_obs();
     let _step = crate::obs::SpanGuard::enter_timed(obs.step, obs.step_ns);
     obs.steps.inc();
@@ -127,10 +144,10 @@ pub fn verlet_step(
             }
         }
     }
-    // force at new positions
-    let (e, new_forces) = {
+    // force at new positions, written over the old ones
+    let e = {
         let _t = crate::obs::SpanGuard::enter_timed(obs.force, obs.force_ns);
-        provider.energy_forces(&state.positions)?
+        provider.energy_forces_into(&state.positions, forces)?
     };
     {
         // second half-kick
@@ -139,12 +156,12 @@ pub fn verlet_step(
             let inv_m = ACC_UNIT / state.masses[i];
             for ax in 0..3 {
                 let idx = 3 * i + ax;
-                state.velocities[idx] += 0.5 * dt_fs * new_forces[idx] * inv_m;
+                state.velocities[idx] += 0.5 * dt_fs * forces[idx] * inv_m;
             }
         }
     }
     state.time_fs += dt_fs;
-    Ok((e, new_forces))
+    Ok(e)
 }
 
 /// One BAOAB Langevin step (NVT): friction `gamma` (1/fs), bath at

@@ -28,6 +28,17 @@ pub trait ForceProvider {
     /// (potential energy eV, forces eV/A).
     fn energy_forces(&mut self, positions: &[f64]) -> Result<(f64, Vec<f64>)>;
 
+    /// In-place variant for the MD hot path: overwrite `forces` (same flat
+    /// [n*3] layout) and return the potential energy. Providers with
+    /// reusable internal state (runtime::ModelForceProvider over the GNN
+    /// backend) evaluate with zero heap allocations; the default delegates
+    /// to [`ForceProvider::energy_forces`] so results always agree.
+    fn energy_forces_into(&mut self, positions: &[f64], forces: &mut [f64]) -> Result<f64> {
+        let (e, f) = self.energy_forces(positions)?;
+        forces.copy_from_slice(&f);
+        Ok(e)
+    }
+
     /// Human-readable tag for reports.
     fn label(&self) -> String {
         "force-provider".into()

@@ -21,7 +21,7 @@
 use std::path::PathBuf;
 
 use super::drift::{DriftReport, DriftTracker};
-use super::integrator::{langevin_step, verlet_step, MdState};
+use super::integrator::{langevin_step, verlet_step_into, MdState};
 use super::{ForceProvider, KB_EV};
 use crate::store::checkpoint::{MdCheckpoint, MdFrame};
 use crate::store::RunStore;
@@ -183,6 +183,7 @@ pub fn run_md(
 
     // tracker: replay persisted frames on resume, seed from step 0 when fresh
     let mut tracker = DriftTracker::new(n_atoms);
+    tracker.reserve(cfg.steps + 1);
     let (_, mut forces) = provider.energy_forces(&state.positions)?;
     match resumed_from {
         Some(_) => {
@@ -224,8 +225,7 @@ pub fn run_md(
         // the kill-switch: GAQ_FAILPOINTS=md/step:exit:N dies here, exactly
         // between two completed steps — the crash the store must survive
         failpoint::fail("md/step")?;
-        let (pe, f) = verlet_step(&mut state, &forces, cfg.dt_fs, provider)?;
-        forces = f;
+        let pe = verlet_step_into(&mut state, &mut forces, cfg.dt_fs, provider)?;
         let ke = state.kinetic_energy();
         let etot = pe + ke;
         let temp = temperature_from_ke(ke, n_atoms);

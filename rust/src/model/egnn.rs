@@ -35,9 +35,11 @@ use crate::quant::codebook::{fibonacci_sphere, nearest_codeword, oct_quantize};
 use crate::runtime::manifest::Variant;
 use crate::util::error::Result;
 
-use super::graph::{cosine_cutoff, radial_basis, NeighborGraph};
+use super::graph::{cosine_cutoff, radial_basis};
 use super::layers::{robust_attention_norm, silu_inplace, GemmKind, QuantLinear};
+use super::scratch::{reuse_f32, reuse_vec3, InferenceScratch, DEFAULT_SKIN};
 use super::weights::{ModelWeights, N_SPECIES};
+use crate::quant::pack::QuantizedI8;
 
 /// Direction-grid bits of the MDDQ vector path (two 12-bit axis codes —
 /// the 3-byte direction payload of the deployed W4A8 transport format).
@@ -253,12 +255,25 @@ impl EgnnModel {
 
         // calibrate the force head on the unquantized twin at the reference
         // geometry — deterministic and identical for every variant
-        let (_, v_raw) = model.network(&molecule.positions, false);
-        let rms = (v_raw.iter().map(|w| w[0] * w[0] + w[1] * w[1] + w[2] * w[2]).sum::<f64>()
+        let mut scratch = model.one_shot_scratch();
+        model.network(&molecule.positions, false, &mut scratch);
+        let rms = (scratch.v.iter().map(|w| w[0] * w[0] + w[1] * w[1] + w[2] * w[2]).sum::<f64>()
             / n.max(1) as f64)
             .sqrt();
         model.f_scale = TARGET_FORCE_RMS / rms.max(1e-9);
         Ok(model)
+    }
+
+    /// A persistent scratch for this model with the default Verlet skin —
+    /// one per evaluation stream (MD loop, serving worker).
+    pub fn make_scratch(&self) -> InferenceScratch {
+        InferenceScratch::new(self.cfg.cutoff, DEFAULT_SKIN)
+    }
+
+    /// A zero-skin scratch: every update rebuilds, which is what one-shot
+    /// evaluations want (no stale candidates, no over-wide candidate set).
+    fn one_shot_scratch(&self) -> InferenceScratch {
+        InferenceScratch::new(self.cfg.cutoff, 0.0)
     }
 
     pub fn n_atoms(&self) -> usize {
@@ -300,59 +315,95 @@ impl EgnnModel {
 
     /// Full model evaluation: (energy eV, forces eV/A flat `[n*3]`).
     /// Pure function of the positions — no interior mutability, so a shared
-    /// reference can be evaluated from many pool workers concurrently.
+    /// reference can be evaluated from many pool workers concurrently (each
+    /// call builds its own one-shot scratch).
     pub fn energy_forces(&self, positions: &[f64]) -> (f64, Vec<f64>) {
-        let (e_raw, v) = self.network(positions, true);
-        let (e_prior, mut forces) = self.prior_energy_forces(positions);
-        for (i, w) in v.iter().enumerate() {
+        let mut scratch = self.one_shot_scratch();
+        let mut forces = vec![0.0; positions.len()];
+        let e = self.energy_forces_into(positions, &mut forces, &mut scratch);
+        (e, forces)
+    }
+
+    /// [`EgnnModel::energy_forces`] into caller-owned buffers: `forces` is
+    /// overwritten, transients live in `scratch`. With a persistent scratch
+    /// this is the zero-allocation hot path of the MD loop (DESIGN.md §14),
+    /// and the result is bit-identical to the allocating entry point.
+    pub fn energy_forces_into(
+        &self,
+        positions: &[f64],
+        forces: &mut [f64],
+        scratch: &mut InferenceScratch,
+    ) -> f64 {
+        assert_eq!(positions.len(), forces.len(), "forces buffer shape mismatch");
+        let e_raw = self.network(positions, true, scratch);
+        let e_prior = self.prior_energy_forces_into(positions, forces);
+        for (i, w) in scratch.v.iter().enumerate() {
             for ax in 0..3 {
                 forces[3 * i + ax] += self.f_scale * w[ax];
             }
         }
-        (ENERGY_SCALE * e_raw + e_prior, forces)
+        ENERGY_SCALE * e_raw + e_prior
     }
 
-    /// The network pass: returns the raw invariant readout sum and the raw
-    /// (unscaled) per-atom vector stream. `quantized = false` runs the
-    /// unquantized twin (master f32 weights, no vector quantizer) used for
-    /// calibration.
-    fn network(&self, positions: &[f64], quantized: bool) -> (f64, Vec<Vec3>) {
-        let g = NeighborGraph::build(positions, self.cfg.cutoff);
+    /// The network pass: returns the raw invariant readout sum, leaving the
+    /// raw (unscaled) per-atom vector stream in `scratch.v`. `quantized =
+    /// false` runs the unquantized twin (master f32 weights, no vector
+    /// quantizer) used for calibration. All transients come from `scratch`;
+    /// the graph comes from its persistent skin list.
+    fn network(&self, positions: &[f64], quantized: bool, scratch: &mut InferenceScratch) -> f64 {
+        let InferenceScratch {
+            nlist,
+            rbf,
+            env,
+            h,
+            v,
+            x,
+            msg,
+            logits,
+            att,
+            coef,
+            agg,
+            cat,
+            upd,
+            eout,
+            act,
+        } = scratch;
+        let g = nlist.update(positions);
         let (f, r) = (self.cfg.f, self.cfg.n_rbf);
         let (n, ne) = (g.n_atoms, g.n_edges());
 
         // invariant edge features
-        let mut rbf = vec![0f32; ne * r];
-        let mut env = vec![0f32; ne];
+        reuse_f32(rbf, ne * r);
+        reuse_f32(env, ne);
         for (e, edge) in g.edges.iter().enumerate() {
             radial_basis(edge.dist, edge.env, self.cfg.cutoff, &mut rbf[e * r..(e + 1) * r]);
             env[e] = edge.env as f32;
         }
 
         // scalar stream from species embeddings; vector stream from zero
-        let mut h = vec![0f32; n * f];
+        reuse_f32(h, n * f);
         for i in 0..n {
             let z = self.species[i] as usize;
             h[i * f..(i + 1) * f].copy_from_slice(&self.embed[z * f..(z + 1) * f]);
         }
-        let mut v: Vec<Vec3> = vec![[0.0; 3]; n];
+        reuse_vec3(v, n);
 
-        let run = |lin: &QuantLinear, a: &[f32], m: usize, out: &mut [f32]| {
+        let run = |lin: &QuantLinear, a: &[f32], m: usize, out: &mut [f32], act: &mut QuantizedI8| {
             if quantized {
-                lin.forward(a, m, out);
+                lin.forward_with(a, m, out, act);
             } else {
                 lin.forward_f32(a, m, out);
             }
         };
 
-        let mut x = vec![0f32; ne * (2 * f + r)];
-        let mut msg = vec![0f32; ne * f];
-        let mut logits = vec![0f32; ne];
-        let mut att = vec![0f32; ne];
-        let mut coef = vec![0f32; ne];
-        let mut agg = vec![0f32; n * f];
-        let mut cat = vec![0f32; n * 2 * f];
-        let mut upd = vec![0f32; n * f];
+        reuse_f32(x, ne * (2 * f + r));
+        reuse_f32(msg, ne * f);
+        reuse_f32(logits, ne);
+        reuse_f32(att, ne);
+        reuse_f32(coef, ne);
+        reuse_f32(agg, n * f);
+        reuse_f32(cat, n * 2 * f);
+        reuse_f32(upd, n * f);
 
         for block in &self.blocks {
             {
@@ -364,16 +415,16 @@ impl EgnnModel {
                     row[f..2 * f].copy_from_slice(&h[edge.src * f..(edge.src + 1) * f]);
                     row[2 * f..].copy_from_slice(&rbf[e * r..(e + 1) * r]);
                 }
-                run(&block.msg, &x, ne, &mut msg);
-                silu_inplace(&mut msg);
+                run(&block.msg, x, ne, msg, act);
+                silu_inplace(msg);
             }
 
             {
                 // robust attention over each receiver's neighborhood, then
                 // attention-weighted scalar aggregation (receiver-major)
                 let _t = self.stages.attention.enter();
-                run(&block.att, &msg, ne, &mut logits);
-                robust_attention_norm(&logits, &env, &g.recv, &mut att);
+                run(&block.att, msg, ne, logits, act);
+                robust_attention_norm(logits, env, &g.recv, att);
                 agg.fill(0.0);
                 for (e, edge) in g.edges.iter().enumerate() {
                     let dst = &mut agg[edge.dst * f..(edge.dst + 1) * f];
@@ -391,9 +442,9 @@ impl EgnnModel {
                     row[..f].copy_from_slice(&h[i * f..(i + 1) * f]);
                     row[f..].copy_from_slice(&agg[i * f..(i + 1) * f]);
                 }
-                run(&block.upd, &cat, n, &mut upd);
-                silu_inplace(&mut upd);
-                for (hv, &u) in h.iter_mut().zip(&upd) {
+                run(&block.upd, cat, n, upd, act);
+                silu_inplace(upd);
+                for (hv, &u) in h.iter_mut().zip(upd.iter()) {
                     *hv += u;
                 }
             }
@@ -401,32 +452,39 @@ impl EgnnModel {
             {
                 // equivariant vector update: invariant coefficients x units
                 let _t = self.stages.vector.enter();
-                run(&block.vec, &msg, ne, &mut coef);
+                run(&block.vec, msg, ne, coef, act);
                 for (e, edge) in g.edges.iter().enumerate() {
                     let c = coef[e] as f64 * att[e] as f64 * edge.env;
                     v[edge.dst] = add(v[edge.dst], scale(edge.unit, c));
                 }
                 if quantized {
-                    quantize_vectors(&self.vec_scheme, &mut v);
+                    quantize_vectors(&self.vec_scheme, v);
                 }
             }
         }
 
         // invariant energy readout
         let _t = self.stages.readout.enter();
-        let mut eout = vec![0f32; n];
-        run(&self.out, &h, n, &mut eout);
-        let e_raw: f64 = eout.iter().map(|&e| e as f64).sum();
-        (e_raw, v)
+        reuse_f32(eout, n);
+        run(&self.out, h, n, eout, act);
+        eout.iter().map(|&e| e as f64).sum()
     }
 
     /// The conservative Morse pair prior: energy + analytic forces. Smoothly
     /// cut off, pairwise central — exactly equivariant and exactly the
     /// gradient of its energy.
     fn prior_energy_forces(&self, positions: &[f64]) -> (f64, Vec<f64>) {
+        let mut forces = vec![0.0; positions.len()];
+        let energy = self.prior_energy_forces_into(positions, &mut forces);
+        (energy, forces)
+    }
+
+    /// [`EgnnModel::prior_energy_forces`] into a caller-owned buffer:
+    /// `forces` is zeroed and overwritten. Returns the prior energy.
+    fn prior_energy_forces_into(&self, positions: &[f64], forces: &mut [f64]) -> f64 {
         let rc = self.cfg.cutoff;
         let mut energy = 0.0;
-        let mut forces = vec![0.0; positions.len()];
+        forces.fill(0.0);
         for p in &self.prior_pairs {
             let mut d = [0.0; 3];
             for ax in 0..3 {
@@ -449,7 +507,7 @@ impl EgnnModel {
                 forces[3 * p.j + ax] -= mag * u;
             }
         }
-        (energy, forces)
+        energy
     }
 }
 
@@ -663,6 +721,33 @@ mod tests {
             err_mddq * 10.0 < err_naive,
             "mddq commutation {err_mddq} not 10x below naive {err_naive}"
         );
+    }
+
+    #[test]
+    fn scratch_path_matches_allocating_path() {
+        // one persistent scratch (skin candidate reuse + high-water buffer
+        // reuse) across a drifting trajectory must reproduce the allocating
+        // one-shot path bit for bit at every step, for a quantized variant
+        let m = Manifest::reference();
+        let model = model("gaq_w4a8");
+        let mut scratch = model.make_scratch();
+        let mut pos = m.molecule.positions.clone();
+        let mut forces = vec![0.0; pos.len()];
+        let mut rng = Rng::new(17);
+        for step in 0..40 {
+            for p in pos.iter_mut() {
+                *p += 0.02 * rng.gaussian();
+            }
+            let e_s = model.energy_forces_into(&pos, &mut forces, &mut scratch);
+            let (e_a, f_a) = model.energy_forces(&pos);
+            assert_eq!(e_s.to_bits(), e_a.to_bits(), "energy diverged at step {step}");
+            for (i, (a, b)) in forces.iter().zip(&f_a).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "force {i} diverged at step {step}");
+            }
+        }
+        let (rebuilds, reuses) = scratch.neighbor_stats();
+        assert_eq!(rebuilds + reuses, 40, "every step is one update");
+        assert!(reuses > 0, "default skin never reused over 40 small steps");
     }
 
     #[test]

@@ -74,6 +74,11 @@ pub struct NeighborGraph {
 /// and the cell-list bookkeeping is pure overhead.
 pub const CELL_LIST_MIN_ATOMS: usize = 64;
 
+/// Debug builds cross-check one in this many cell-list builds (and skin-list
+/// updates) against the O(n^2) scan oracle for n <= 512.
+#[cfg(debug_assertions)]
+pub const ORACLE_SAMPLE_PERIOD: u64 = 16;
+
 impl NeighborGraph {
     /// Build the graph from flat `[n*3]` f64 positions: the O(n^2) scan
     /// for small systems, the O(n) cell list at
@@ -97,13 +102,20 @@ impl NeighborGraph {
         let t0 = crate::obs::span::now_ns();
         let g = NeighborGraph::build_cell_list(positions, cutoff);
         record_ns_per_atom(obs, t0, n);
+        // Sampled oracle: the O(n^2) scan costs more than the build itself,
+        // and the per-step reuse path multiplies build counts in debug test
+        // runs — check every ORACLE_SAMPLE_PERIOD-th build instead of all.
         #[cfg(debug_assertions)]
         if n <= 512 {
-            let oracle = NeighborGraph::build_scan(positions, cutoff);
-            debug_assert!(
-                g.bitwise_eq(&oracle),
-                "cell-list graph diverged from the O(n^2) scan oracle"
-            );
+            use std::sync::atomic::{AtomicU64, Ordering};
+            static BUILDS: AtomicU64 = AtomicU64::new(0);
+            if BUILDS.fetch_add(1, Ordering::Relaxed) % ORACLE_SAMPLE_PERIOD == 0 {
+                let oracle = NeighborGraph::build_scan(positions, cutoff);
+                debug_assert!(
+                    g.bitwise_eq(&oracle),
+                    "cell-list graph diverged from the O(n^2) scan oracle"
+                );
+            }
         }
         g
     }
@@ -268,6 +280,294 @@ fn push_edge(edges: &mut Vec<Edge>, positions: &[f64], i: usize, j: usize, cutof
         unit: [d[0] / r, d[1] / r, d[2] / r],
         env: cosine_cutoff(r, cutoff),
     });
+}
+
+/// Skin-list instrumentation: rebuild/reuse counts plus the per-step
+/// filter-pass duration, surfaced through the same registry as the build
+/// metrics so the reuse ratio is observable in production serving.
+struct NeighborListObs {
+    skin_builds: &'static crate::obs::Counter,
+    rebuilds: &'static crate::obs::Counter,
+    reuses: &'static crate::obs::Counter,
+    reuse_ratio_pct: &'static crate::obs::Gauge,
+    filter_ns: &'static crate::obs::LogHistogram,
+    filter_span: u32,
+}
+
+fn neighbor_list_obs() -> &'static NeighborListObs {
+    static S: std::sync::OnceLock<NeighborListObs> = std::sync::OnceLock::new();
+    S.get_or_init(|| NeighborListObs {
+        skin_builds: crate::obs::counter("model_neighbor_builds{path=\"skin\"}"),
+        rebuilds: crate::obs::counter("md_neighbor_rebuilds_total"),
+        reuses: crate::obs::counter("md_neighbor_reuses_total"),
+        reuse_ratio_pct: crate::obs::gauge("md_neighbor_reuse_ratio_pct"),
+        filter_ns: crate::obs::histogram("model_neighbor_filter_ns"),
+        filter_span: crate::obs::span::intern("neighbor_filter"),
+    })
+}
+
+/// A persistent Verlet/skin neighbor list (DESIGN.md §14).
+///
+/// Candidates are collected once at `cutoff + skin` and reused across MD
+/// steps; each [`NeighborList::update`] filters them at the true cutoff
+/// through the same [`push_edge`] arithmetic as a fresh build, so the
+/// filtered CSR is **bitwise identical** to `NeighborGraph::build` at the
+/// same positions. The candidate list is rebuilt only once some atom has
+/// moved `skin/2` or more since the last rebuild: between rebuilds every
+/// displacement is strictly below `skin/2`, so any pair now inside the
+/// cutoff was strictly inside `cutoff + skin` at build time and is in the
+/// candidate set. Candidates deliberately skip the `r < 1e-9` exclusion —
+/// a coincident pair at build time may separate into the valid range later;
+/// the exclusion is applied by the filter, exactly as a fresh build would.
+///
+/// All storage (candidates, cell bins, the filtered graph) is retained
+/// between calls, so steady-state updates — including rebuilds — perform no
+/// heap allocation once high-water capacity is reached.
+pub struct NeighborList {
+    cutoff: f64,
+    skin: f64,
+    /// positions at the last candidate rebuild, flat `[n*3]`
+    ref_positions: Vec<f64>,
+    /// receiver-major candidate `src` indices, ascending per receiver
+    cand_src: Vec<usize>,
+    /// CSR offsets into `cand_src`, length `n + 1`
+    cand_off: Vec<usize>,
+    /// the filtered graph, storage reused across updates
+    graph: NeighborGraph,
+    // rebuild scratch (cell bins + per-receiver candidate buffer)
+    head: Vec<usize>,
+    next: Vec<usize>,
+    cell_buf: Vec<usize>,
+    rebuilds: u64,
+    reuses: u64,
+    #[cfg(debug_assertions)]
+    oracle_tick: u64,
+}
+
+impl NeighborList {
+    /// `skin` is the extra candidate radius in Angstrom; `skin = 0` degrades
+    /// gracefully to rebuild-every-update (still bit-identical to `build`).
+    pub fn new(cutoff: f64, skin: f64) -> NeighborList {
+        assert!(cutoff > 0.0, "cutoff must be positive");
+        assert!(skin >= 0.0, "skin must be non-negative");
+        NeighborList {
+            cutoff,
+            skin,
+            ref_positions: Vec::new(),
+            cand_src: Vec::new(),
+            cand_off: Vec::new(),
+            graph: NeighborGraph { n_atoms: 0, cutoff, edges: Vec::new(), recv: vec![0] },
+            head: Vec::new(),
+            next: Vec::new(),
+            cell_buf: Vec::new(),
+            rebuilds: 0,
+            reuses: 0,
+            #[cfg(debug_assertions)]
+            oracle_tick: 0,
+        }
+    }
+
+    /// Candidate rebuilds performed so far (first update counts as one).
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds
+    }
+
+    /// Updates that reused the existing candidate list.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+
+    /// The most recently filtered graph.
+    pub fn graph(&self) -> &NeighborGraph {
+        &self.graph
+    }
+
+    /// Refresh the graph for `positions`: rebuild candidates if the skin
+    /// invariant no longer holds, then filter at the true cutoff. The result
+    /// is bitwise identical to `NeighborGraph::build(positions, cutoff)`.
+    pub fn update(&mut self, positions: &[f64]) -> &NeighborGraph {
+        assert_eq!(positions.len() % 3, 0, "positions not [n*3]");
+        let obs = neighbor_list_obs();
+        if self.needs_rebuild(positions) {
+            self.rebuilds += 1;
+            obs.rebuilds.inc();
+            self.rebuild_candidates(positions);
+        } else {
+            self.reuses += 1;
+            obs.reuses.inc();
+        }
+        let total = self.rebuilds + self.reuses;
+        obs.reuse_ratio_pct.set((100 * self.reuses / total.max(1)) as i64);
+        self.filter(positions);
+        #[cfg(debug_assertions)]
+        {
+            // sampled oracle: the filtered CSR must match a fresh build
+            self.oracle_tick += 1;
+            if positions.len() / 3 <= 512 && self.oracle_tick % ORACLE_SAMPLE_PERIOD == 1 {
+                let fresh = NeighborGraph::build(positions, self.cutoff);
+                debug_assert!(
+                    self.graph.bitwise_eq(&fresh),
+                    "skin-filtered graph diverged from a fresh build"
+                );
+            }
+        }
+        &self.graph
+    }
+
+    /// True once any atom has moved `skin/2` or more since the last rebuild
+    /// (`>=` so the exact-boundary displacement forces a rebuild), or when
+    /// the system size changed / no rebuild has happened yet.
+    fn needs_rebuild(&self, positions: &[f64]) -> bool {
+        if self.ref_positions.len() != positions.len() || self.ref_positions.is_empty() {
+            return true;
+        }
+        let half = 0.5 * self.skin;
+        let lim = half * half;
+        positions.chunks_exact(3).zip(self.ref_positions.chunks_exact(3)).any(|(p, q)| {
+            let d = [p[0] - q[0], p[1] - q[1], p[2] - q[2]];
+            d[0] * d[0] + d[1] * d[1] + d[2] * d[2] >= lim
+        })
+    }
+
+    /// Collect all pairs within `cutoff + skin` into the receiver-major
+    /// candidate CSR, ascending `src` per receiver — the same order both
+    /// graph builders emit, so the filter pass reproduces it exactly.
+    fn rebuild_candidates(&mut self, positions: &[f64]) {
+        let obs = neighbor_obs();
+        let _t = crate::span!("neighbor_build", obs.build_ns);
+        neighbor_list_obs().skin_builds.inc();
+        let t0 = crate::obs::span::now_ns();
+        let n = positions.len() / 3;
+        let rc = self.cutoff + self.skin;
+        let rc2 = rc * rc;
+        self.ref_positions.clear();
+        self.ref_positions.extend_from_slice(positions);
+        self.cand_src.clear();
+        self.cand_off.clear();
+        self.cand_off.push(0);
+
+        let within = |i: usize, j: usize| -> bool {
+            let d = [
+                positions[3 * i] - positions[3 * j],
+                positions[3 * i + 1] - positions[3 * j + 1],
+                positions[3 * i + 2] - positions[3 * j + 2],
+            ];
+            d[0] * d[0] + d[1] * d[1] + d[2] * d[2] < rc2
+        };
+
+        if n < CELL_LIST_MIN_ATOMS {
+            for i in 0..n {
+                for j in 0..n {
+                    if i != j && within(i, j) {
+                        self.cand_src.push(j);
+                    }
+                }
+                self.cand_off.push(self.cand_src.len());
+            }
+            record_ns_per_atom(obs, t0, n);
+            return;
+        }
+
+        // cell binning at width >= cutoff + skin (same scheme as
+        // `build_cell_list`, reusing this list's bin storage)
+        let mut lo = [f64::INFINITY; 3];
+        let mut hi = [f64::NEG_INFINITY; 3];
+        for p in positions.chunks_exact(3) {
+            for ax in 0..3 {
+                lo[ax] = lo[ax].min(p[ax]);
+                hi[ax] = hi[ax].max(p[ax]);
+            }
+        }
+        let mut dims = [1usize; 3];
+        for ax in 0..3 {
+            let extent = hi[ax] - lo[ax];
+            let mut d = ((extent / rc).floor() as usize).max(1);
+            while d > 1 && extent / d as f64 < rc {
+                d -= 1;
+            }
+            dims[ax] = d;
+        }
+        let cap = 8 * n + 64;
+        while dims[0] * dims[1] * dims[2] > cap {
+            let ax = (0..3).max_by_key(|&ax| dims[ax]).unwrap();
+            dims[ax] = dims[ax].div_ceil(2);
+        }
+        let mut width = [0f64; 3];
+        for ax in 0..3 {
+            width[ax] = (hi[ax] - lo[ax]) / dims[ax] as f64;
+        }
+        let cell_coord = |i: usize, ax: usize| -> usize {
+            if width[ax] > 0.0 {
+                (((positions[3 * i + ax] - lo[ax]) / width[ax]) as usize).min(dims[ax] - 1)
+            } else {
+                0
+            }
+        };
+        let cell_id = |c: [usize; 3]| -> usize { (c[2] * dims[1] + c[1]) * dims[0] + c[0] };
+
+        const NONE: usize = usize::MAX;
+        let ncells = dims[0] * dims[1] * dims[2];
+        let NeighborList { cand_src, cand_off, head, next, cell_buf, .. } = self;
+        if head.capacity() < cap {
+            // one-time worst-case reservation so later grid growth within
+            // the cap never reallocates mid-trajectory
+            head.reserve(cap - head.len());
+        }
+        head.clear();
+        head.resize(ncells, NONE);
+        next.clear();
+        next.resize(n, NONE);
+        for i in 0..n {
+            let c = cell_id([cell_coord(i, 0), cell_coord(i, 1), cell_coord(i, 2)]);
+            next[i] = head[c];
+            head[c] = i;
+        }
+
+        for i in 0..n {
+            cell_buf.clear();
+            let c = [cell_coord(i, 0), cell_coord(i, 1), cell_coord(i, 2)];
+            for cz in c[2].saturating_sub(1)..=(c[2] + 1).min(dims[2] - 1) {
+                for cy in c[1].saturating_sub(1)..=(c[1] + 1).min(dims[1] - 1) {
+                    for cx in c[0].saturating_sub(1)..=(c[0] + 1).min(dims[0] - 1) {
+                        let mut j = head[cell_id([cx, cy, cz])];
+                        while j != NONE {
+                            if j != i {
+                                cell_buf.push(j);
+                            }
+                            j = next[j];
+                        }
+                    }
+                }
+            }
+            cell_buf.sort_unstable();
+            for &j in cell_buf.iter() {
+                if within(i, j) {
+                    cand_src.push(j);
+                }
+            }
+            cand_off.push(cand_src.len());
+        }
+        record_ns_per_atom(obs, t0, n);
+    }
+
+    /// Filter the candidates at the true cutoff into the reused graph,
+    /// through the shared [`push_edge`] path.
+    fn filter(&mut self, positions: &[f64]) {
+        let obs = neighbor_list_obs();
+        let _t = crate::obs::SpanGuard::enter_timed(obs.filter_span, obs.filter_ns);
+        let n = positions.len() / 3;
+        self.graph.n_atoms = n;
+        self.graph.cutoff = self.cutoff;
+        self.graph.edges.clear();
+        self.graph.recv.clear();
+        self.graph.recv.push(0);
+        for i in 0..n {
+            for &j in &self.cand_src[self.cand_off[i]..self.cand_off[i + 1]] {
+                push_edge(&mut self.graph.edges, positions, i, j, self.cutoff);
+            }
+            self.graph.recv.push(self.graph.edges.len());
+        }
+    }
 }
 
 /// Smooth cosine cutoff envelope: `0.5 (1 + cos(pi r / rc))` for `r < rc`,
@@ -456,6 +756,120 @@ mod tests {
         let pos: Vec<f64> = (0..3 * n).map(|_| rng.f64() * 12.0).collect();
         let big = NeighborGraph::build(&pos, 4.0);
         assert!(big.bitwise_eq(&NeighborGraph::build_scan(&pos, 4.0)));
+    }
+
+    #[test]
+    fn prop_skin_list_matches_fresh_build_along_trajectories() {
+        // randomized 200-step trajectories across sizes, skins and cutoffs:
+        // the skin-filtered CSR must equal a fresh build bit for bit at
+        // every step, while actually reusing candidates between rebuilds
+        crate::util::proptest::check(
+            "skin list == fresh build (bitwise) along trajectories",
+            41,
+            8,
+            |r: &mut Rng| {
+                let n = 2 + r.below(90);
+                let cutoff = 1.5 + r.f64() * 3.0;
+                let skin = r.f64() * 1.2; // includes near-zero skins
+                (n, cutoff, skin, r.next_u64())
+            },
+            |&(n, cutoff, skin, seed)| {
+                let mut rng = Rng::new(seed);
+                let mut pos: Vec<f64> = (0..3 * n).map(|_| rng.f64() * 9.0).collect();
+                let mut list = NeighborList::new(cutoff, skin);
+                for step in 0..200 {
+                    for p in pos.iter_mut() {
+                        *p += 0.04 * (rng.f64() - 0.5);
+                    }
+                    let fresh = NeighborGraph::build(&pos, cutoff);
+                    let g = list.update(&pos);
+                    crate::prop_assert!(
+                        g.bitwise_eq(&fresh),
+                        "diverged at step {step} (n={n} cutoff={cutoff:.2} skin={skin:.2}): \
+                         fresh {} edges, skin {} edges",
+                        fresh.n_edges(),
+                        g.n_edges()
+                    );
+                }
+                crate::prop_assert!(
+                    list.rebuilds() + list.reuses() == 200,
+                    "update accounting broken: {} + {}",
+                    list.rebuilds(),
+                    list.reuses()
+                );
+                if skin > 0.3 {
+                    crate::prop_assert!(
+                        list.reuses() > 0,
+                        "a {skin:.2} A skin never reused over 200 small steps"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn exact_half_skin_displacement_forces_rebuild() {
+        // the rebuild trigger is `disp >= skin/2` — an atom at exactly the
+        // boundary must force a rebuild, a hair under must not
+        let mut pos = vec![0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 4.0, 0.0, 0.0];
+        let mut list = NeighborList::new(3.0, 1.0);
+        list.update(&pos);
+        assert_eq!((list.rebuilds(), list.reuses()), (1, 0), "first update builds");
+        pos[0] = 0.499; // displacement 0.499 < skin/2 = 0.5
+        list.update(&pos);
+        assert_eq!((list.rebuilds(), list.reuses()), (1, 1));
+        pos[0] = 0.5; // exactly skin/2 from the reference
+        let g = list.update(&pos);
+        assert_eq!((list.rebuilds(), list.reuses()), (2, 1));
+        assert!(g.bitwise_eq(&NeighborGraph::build(&pos, 3.0)));
+    }
+
+    #[test]
+    fn zero_skin_degrades_to_rebuild_every_update() {
+        let m = Molecule::azobenzene_builtin();
+        let mut list = NeighborList::new(5.0, 0.0);
+        for _ in 0..3 {
+            let g = list.update(&m.positions);
+            assert!(g.bitwise_eq(&NeighborGraph::build(&m.positions, 5.0)));
+        }
+        assert_eq!((list.rebuilds(), list.reuses()), (3, 0));
+    }
+
+    #[test]
+    fn skin_list_survives_coincident_pairs_separating() {
+        // two coincident atoms (excluded by the 1e-9 filter) must reappear
+        // in the graph when they separate within the same candidate epoch —
+        // i.e. candidates must not apply the coincidence exclusion
+        let mut pos = vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let mut list = NeighborList::new(2.0, 1.0);
+        let g = list.update(&pos);
+        assert!(g.bitwise_eq(&NeighborGraph::build(&pos, 2.0)));
+        pos[3] += 0.3; // separate, but stay under the skin/2 rebuild trigger
+        let g = list.update(&pos);
+        assert_eq!(list.rebuilds(), 1, "0.3 A move must not rebuild (skin/2 = 0.5)");
+        assert!(g.bitwise_eq(&NeighborGraph::build(&pos, 2.0)));
+        assert!(
+            g.edges.iter().any(|e| e.dst == 0 && e.src == 1),
+            "separated pair missing from the reused candidate set"
+        );
+    }
+
+    #[test]
+    fn skin_list_matches_fresh_build_at_cell_list_sizes() {
+        // above CELL_LIST_MIN_ATOMS the candidate rebuild takes the binned
+        // path; the filtered stream must still match build() bitwise
+        let mut rng = Rng::new(77);
+        let n = CELL_LIST_MIN_ATOMS + 30;
+        let mut pos: Vec<f64> = (0..3 * n).map(|_| rng.f64() * 11.0).collect();
+        let mut list = NeighborList::new(4.0, 0.5);
+        for _ in 0..30 {
+            for p in pos.iter_mut() {
+                *p += 0.03 * (rng.f64() - 0.5);
+            }
+            let g = list.update(&pos);
+            assert!(g.bitwise_eq(&NeighborGraph::build(&pos, 4.0)));
+        }
     }
 
     #[test]

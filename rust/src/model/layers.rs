@@ -24,7 +24,8 @@
 
 use crate::quant::gemm::{gemm_f32_auto, gemm_packed_auto};
 use crate::quant::pack::{
-    dequantize_i4, dequantize_i8, quantize_i4, quantize_i8, PackedB, QuantizedI4, QuantizedI8,
+    dequantize_i4, dequantize_i8, quantize_i4, quantize_i8, quantize_i8_into, PackedB, QuantizedI4,
+    QuantizedI8,
 };
 
 /// Which GEMM kernel a [`QuantLinear`] routes through.
@@ -96,6 +97,15 @@ impl QuantLinear {
     /// `out` is `[m, out_dim]`. Quantized kinds quantize the activations
     /// per call and stream the pre-packed weight panel.
     pub fn forward(&self, a: &[f32], m: usize, out: &mut [f32]) {
+        let mut act = QuantizedI8 { data: Vec::new(), scale: 1.0 };
+        self.forward_with(a, m, out, &mut act);
+    }
+
+    /// [`QuantLinear::forward`] with a caller-owned activation image: the
+    /// per-call activation quantisation writes into `act`'s buffer instead
+    /// of allocating, so a reused scratch makes the quantized forward
+    /// allocation-free (DESIGN.md §14). Bit-identical to `forward`.
+    pub fn forward_with(&self, a: &[f32], m: usize, out: &mut [f32], act: &mut QuantizedI8) {
         assert_eq!(a.len(), m * self.in_dim);
         assert_eq!(out.len(), m * self.out_dim);
         match self.kind {
@@ -103,9 +113,9 @@ impl QuantLinear {
                 gemm_f32_auto(a, &self.w_f32, out, m, self.in_dim, self.out_dim);
             }
             GemmKind::Int8 | GemmKind::W4A8 => {
-                let qa = quantize_i8(a);
+                quantize_i8_into(a, act);
                 let qw = self.packed.as_ref().expect("packed image");
-                gemm_packed_auto(&qa, qw, out, m, self.in_dim, self.out_dim);
+                gemm_packed_auto(act, qw, out, m, self.in_dim, self.out_dim);
             }
         }
     }

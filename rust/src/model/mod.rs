@@ -14,13 +14,18 @@
 //!   conservative Morse pair prior
 //! * [`weights`] — deterministic seed-generated parameters (no checkpoint
 //!   files) with an optional JSON manifest-loading path
+//! * [`scratch`] — the persistent per-caller [`InferenceScratch`] (skin
+//!   neighbor list + reusable forward buffers) behind the zero-allocation
+//!   MD hot path (DESIGN.md §14)
 
 pub mod egnn;
 pub mod graph;
 pub mod layers;
+pub mod scratch;
 pub mod weights;
 
 pub use egnn::{EgnnConfig, EgnnModel, VecScheme};
-pub use graph::NeighborGraph;
+pub use graph::{NeighborGraph, NeighborList};
 pub use layers::{GemmKind, QuantLinear};
+pub use scratch::{InferenceScratch, DEFAULT_SKIN};
 pub use weights::{ModelWeights, DEFAULT_WEIGHT_SEED};

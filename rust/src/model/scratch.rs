@@ -1,0 +1,96 @@
+//! Persistent inference scratch (DESIGN.md §14).
+//!
+//! [`InferenceScratch`] owns every transient the EGNN forward pass needs —
+//! the skin neighbor list, per-block edge/atom feature buffers, the
+//! activation quantisation image — so a caller that keeps one scratch
+//! alive across calls (the MD loop, a serving worker) evaluates the model
+//! with **zero heap allocations** once buffer capacities reach their
+//! high-water marks. The scratch is plain owned state: the model itself
+//! stays immutable and shareable across pool workers; concurrency comes
+//! from one scratch per caller, not interior mutability.
+//!
+//! Buffer reuse is `clear()` + `resize(len, 0)` — identical contents to the
+//! `vec![0; len]` the allocating path used, so outputs are bit-identical
+//! (asserted by `egnn::tests::scratch_path_matches_allocating_path`).
+
+use crate::geometry::Vec3;
+use crate::quant::pack::QuantizedI8;
+
+use super::graph::NeighborList;
+
+/// Default Verlet skin, Angstrom. At ~300 K with dt = 0.5 fs an atom moves
+/// ~0.01 A/step, so `skin/2 = 0.25 A` buys a few dozen reused steps per
+/// rebuild while keeping the candidate set within ~(1 + skin/rc)^3 of the
+/// true edge count.
+pub const DEFAULT_SKIN: f64 = 0.5;
+
+/// Reusable buffers for one evaluation stream of one model.
+pub struct InferenceScratch {
+    /// persistent skin neighbor list (candidates survive across calls)
+    pub(crate) nlist: NeighborList,
+    /// radial basis features, `[ne, R]`
+    pub(crate) rbf: Vec<f32>,
+    /// cutoff envelope per edge, `[ne]`
+    pub(crate) env: Vec<f32>,
+    /// scalar stream, `[n, F]`
+    pub(crate) h: Vec<f32>,
+    /// vector stream, `[n]` — holds the raw per-atom vectors after a pass
+    pub(crate) v: Vec<Vec3>,
+    /// edge message inputs `[ne, 2F+R]`
+    pub(crate) x: Vec<f32>,
+    /// edge messages `[ne, F]`
+    pub(crate) msg: Vec<f32>,
+    /// attention logits / weights / vector coefficients, `[ne]` each
+    pub(crate) logits: Vec<f32>,
+    pub(crate) att: Vec<f32>,
+    pub(crate) coef: Vec<f32>,
+    /// aggregated messages `[n, F]`, update input `[n, 2F]`, update `[n, F]`
+    pub(crate) agg: Vec<f32>,
+    pub(crate) cat: Vec<f32>,
+    pub(crate) upd: Vec<f32>,
+    /// per-atom energy readout, `[n]`
+    pub(crate) eout: Vec<f32>,
+    /// activation quantisation image shared by every QuantLinear call
+    pub(crate) act: QuantizedI8,
+}
+
+impl InferenceScratch {
+    /// A scratch for models with the given neighbor cutoff. `skin = 0`
+    /// degrades to rebuild-every-call (used for one-shot evaluations).
+    pub fn new(cutoff: f64, skin: f64) -> InferenceScratch {
+        InferenceScratch {
+            nlist: NeighborList::new(cutoff, skin),
+            rbf: Vec::new(),
+            env: Vec::new(),
+            h: Vec::new(),
+            v: Vec::new(),
+            x: Vec::new(),
+            msg: Vec::new(),
+            logits: Vec::new(),
+            att: Vec::new(),
+            coef: Vec::new(),
+            agg: Vec::new(),
+            cat: Vec::new(),
+            upd: Vec::new(),
+            eout: Vec::new(),
+            act: QuantizedI8 { data: Vec::new(), scale: 1.0 },
+        }
+    }
+
+    /// The skin list's rebuild / reuse counters (for benches and tests).
+    pub fn neighbor_stats(&self) -> (u64, u64) {
+        (self.nlist.rebuilds(), self.nlist.reuses())
+    }
+}
+
+/// Resize a buffer to `len` zeros without releasing capacity.
+pub(crate) fn reuse_f32(buf: &mut Vec<f32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Resize a vector buffer to `len` zero vectors without releasing capacity.
+pub(crate) fn reuse_vec3(buf: &mut Vec<Vec3>, len: usize) {
+    buf.clear();
+    buf.resize(len, [0.0; 3]);
+}

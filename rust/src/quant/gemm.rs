@@ -200,27 +200,23 @@ fn gemm_packed_core(
     debug_assert_eq!((b.k, b.n), (k, n));
     debug_assert_eq!(c.len(), m * n);
     const NR: usize = PANEL_NR;
+    // full MR x NR tiles run the process-wide micro-kernel: AVX2/SSE2/NEON
+    // when detected (see quant::simd), else the scalar broadcast-MAC loop.
+    // Integer accumulation is exact, so the choice never changes the bits.
+    let kern = crate::quant::simd::tile_kernel();
     for p in 0..b.panels() {
         let (j0, w, panel) = b.panel(p);
         let mut i0 = 0usize;
         if w == NR {
-            // full MR x NR register tiles
             while i0 + TILE_MR <= m {
                 let mut acc = [[0i32; NR]; TILE_MR];
-                let a0 = &a[i0 * k..(i0 + 1) * k];
-                let a1 = &a[(i0 + 1) * k..(i0 + 2) * k];
-                let a2 = &a[(i0 + 2) * k..(i0 + 3) * k];
-                let a3 = &a[(i0 + 3) * k..(i0 + 4) * k];
-                for (kk, brow) in panel.chunks_exact(NR).enumerate() {
-                    let av = [a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32];
-                    for (acc_r, &av_r) in acc.iter_mut().zip(&av) {
-                        // fixed 16-lane trip count: LLVM lifts this to a
-                        // widen-multiply-accumulate vector loop
-                        for (x, &bv) in acc_r.iter_mut().zip(brow) {
-                            *x += av_r * bv as i32;
-                        }
-                    }
-                }
+                let rows = [
+                    &a[i0 * k..(i0 + 1) * k],
+                    &a[(i0 + 1) * k..(i0 + 2) * k],
+                    &a[(i0 + 2) * k..(i0 + 3) * k],
+                    &a[(i0 + 3) * k..(i0 + 4) * k],
+                ];
+                kern(rows, panel, &mut acc);
                 for (r, acc_r) in acc.iter().enumerate() {
                     let crow = &mut c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR];
                     for (cv, &x) in crow.iter_mut().zip(acc_r) {

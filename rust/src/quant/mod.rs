@@ -9,3 +9,4 @@ pub mod codebook;
 pub mod gemm;
 pub mod mddq;
 pub mod pack;
+pub mod simd;

@@ -23,14 +23,22 @@ pub struct QuantizedI4 {
 
 /// Quantise to INT8 (symmetric, per-tensor max-abs calibration).
 pub fn quantize_i8(x: &[f32]) -> QuantizedI8 {
+    let mut q = QuantizedI8 { data: Vec::with_capacity(x.len()), scale: 1.0 };
+    quantize_i8_into(x, &mut q);
+    q
+}
+
+/// [`quantize_i8`] into an existing image, reusing its buffer — the
+/// zero-allocation activation path of [`InferenceScratch`]
+/// (DESIGN.md §14). Identical arithmetic, identical bits.
+///
+/// [`InferenceScratch`]: crate::model::InferenceScratch
+pub fn quantize_i8_into(x: &[f32], out: &mut QuantizedI8) {
     let maxabs = x.iter().fold(0f32, |m, v| m.max(v.abs()));
-    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
-    let inv = 1.0 / scale;
-    let data = x
-        .iter()
-        .map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8)
-        .collect();
-    QuantizedI8 { data, scale }
+    out.scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let inv = 1.0 / out.scale;
+    out.data.clear();
+    out.data.extend(x.iter().map(|&v| (v * inv).round().clamp(-127.0, 127.0) as i8));
 }
 
 /// Dequantise INT8 back to f32.

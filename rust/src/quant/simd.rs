@@ -1,0 +1,349 @@
+//! Runtime-dispatched SIMD i8-dot micro-kernels (DESIGN.md §14).
+//!
+//! The register-tiled GEMM core ([`super::gemm`]) spends its inner loop on
+//! a fixed-shape [`TILE_MR`]`x`[`PANEL_NR`] broadcast-MAC over i8 operands
+//! with i32 accumulators. This module provides explicit vector
+//! implementations of that tile — AVX2 and SSE2 on x86_64, NEON on
+//! aarch64 — selected **once per process** by runtime feature detection
+//! and the `GAQ_SIMD` environment override, with the scalar loop as the
+//! universal fallback.
+//!
+//! **Bit-identity:** every i8×i8 product fits i32 exactly (|p| ≤ 16129)
+//! and the i16 intermediates the SSE2/NEON paths use are exact too
+//! (16129 < 32767), so the per-lane i32 accumulators hold the exact
+//! integer dot products regardless of lane order. All kernels therefore
+//! produce identical accumulator blocks, and the shared f32 epilogue in
+//! the GEMM core produces identical output bits — SIMD == tiled ==
+//! scalar == pooled at every `GAQ_THREADS`, asserted by
+//! `tests/parallel_parity.rs` and the CI `GAQ_SIMD={auto,off}` matrix.
+//!
+//! `GAQ_SIMD` values: `auto` (default — best available), `off` / `scalar`
+//! (force the scalar tile), or an explicit kernel name (`avx2`, `sse2`,
+//! `neon`) which falls back to scalar when unavailable.
+
+use super::gemm::TILE_MR;
+use super::pack::PANEL_NR;
+use std::sync::OnceLock;
+
+/// A full-tile kernel: accumulate `acc[r][j] += sum_k a[r][k] * panel[k*NR+j]`
+/// over the whole K extent. `a` holds [`TILE_MR`] row slices of length `k`;
+/// `panel` is one K-major full-width panel (`k * PANEL_NR` elements).
+pub type TileKernel =
+    fn(a: [&[i8]; TILE_MR], panel: &[i8], acc: &mut [[i32; PANEL_NR]; TILE_MR]);
+
+/// The scalar reference tile — the exact loop the autovectorizer lifts,
+/// kept as the universal fallback and the oracle the vector tiles must
+/// reproduce bit-for-bit.
+pub fn tile_scalar(a: [&[i8]; TILE_MR], panel: &[i8], acc: &mut [[i32; PANEL_NR]; TILE_MR]) {
+    debug_assert!(panel.len() == a[0].len() * PANEL_NR);
+    for (kk, brow) in panel.chunks_exact(PANEL_NR).enumerate() {
+        let av = [a[0][kk] as i32, a[1][kk] as i32, a[2][kk] as i32, a[3][kk] as i32];
+        for (acc_r, &av_r) in acc.iter_mut().zip(&av) {
+            for (x, &bv) in acc_r.iter_mut().zip(brow) {
+                *x += av_r * bv as i32;
+            }
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::{PANEL_NR, TILE_MR};
+    use std::arch::x86_64::*;
+
+    /// AVX2 tile: per k-step, sign-extend the 16 panel bytes to two 8-lane
+    /// i32 vectors, broadcast each row's activation and run exact 32-bit
+    /// multiply-adds into eight ymm accumulators (4 rows × lo/hi half).
+    ///
+    /// # Safety
+    /// Requires AVX2 (checked by the dispatcher); slice lengths are
+    /// validated by the safe wrapper's debug asserts + the GEMM core.
+    #[target_feature(enable = "avx2")]
+    unsafe fn tile_avx2_impl(
+        a: [&[i8]; TILE_MR],
+        panel: &[i8],
+        acc: &mut [[i32; PANEL_NR]; TILE_MR],
+    ) {
+        let k = a[0].len();
+        let mut vacc = [[_mm256_setzero_si256(); 2]; TILE_MR];
+        for kk in 0..k {
+            let b = _mm_loadu_si128(panel.as_ptr().add(kk * PANEL_NR) as *const __m128i);
+            let b16 = _mm256_cvtepi8_epi16(b);
+            let blo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(b16));
+            let bhi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256(b16, 1));
+            for (row, va) in vacc.iter_mut().zip(&a) {
+                let av = _mm256_set1_epi32(*va.get_unchecked(kk) as i32);
+                row[0] = _mm256_add_epi32(row[0], _mm256_mullo_epi32(av, blo));
+                row[1] = _mm256_add_epi32(row[1], _mm256_mullo_epi32(av, bhi));
+            }
+        }
+        for (out, row) in acc.iter_mut().zip(&vacc) {
+            _mm256_storeu_si256(out.as_mut_ptr() as *mut __m256i, row[0]);
+            _mm256_storeu_si256(out.as_mut_ptr().add(8) as *mut __m256i, row[1]);
+        }
+    }
+
+    pub fn tile_avx2(a: [&[i8]; TILE_MR], panel: &[i8], acc: &mut [[i32; PANEL_NR]; TILE_MR]) {
+        debug_assert!(panel.len() == a[0].len() * PANEL_NR);
+        debug_assert!(a.iter().all(|r| r.len() == a[0].len()));
+        // SAFETY: only reachable through the dispatcher / tile_with after an
+        // is_x86_feature_detected!("avx2") check; lengths asserted above.
+        unsafe { tile_avx2_impl(a, panel, acc) }
+    }
+
+    /// SSE2 tile (x86_64 baseline): sign-extend the panel bytes with
+    /// compare+unpack, pair each i16 value with a zero and use `pmaddwd`
+    /// so every lane holds the exact i32 product `a * b` (both factors'
+    /// product ≤ 16129 fits i16, and madd widens to i32).
+    ///
+    /// # Safety
+    /// SSE2 is part of the x86_64 baseline; slice lengths are validated by
+    /// the safe wrapper's debug asserts + the GEMM core.
+    unsafe fn tile_sse2_impl(
+        a: [&[i8]; TILE_MR],
+        panel: &[i8],
+        acc: &mut [[i32; PANEL_NR]; TILE_MR],
+    ) {
+        let k = a[0].len();
+        let zero = _mm_setzero_si128();
+        let mut vacc = [[zero; 4]; TILE_MR];
+        for kk in 0..k {
+            let b = _mm_loadu_si128(panel.as_ptr().add(kk * PANEL_NR) as *const __m128i);
+            let sign = _mm_cmpgt_epi8(zero, b);
+            let b16lo = _mm_unpacklo_epi8(b, sign);
+            let b16hi = _mm_unpackhi_epi8(b, sign);
+            // interleave with zero so pmaddwd's pair-sum is a pure product
+            let bq = [
+                _mm_unpacklo_epi16(b16lo, zero),
+                _mm_unpackhi_epi16(b16lo, zero),
+                _mm_unpacklo_epi16(b16hi, zero),
+                _mm_unpackhi_epi16(b16hi, zero),
+            ];
+            for (row, va) in vacc.iter_mut().zip(&a) {
+                let av = _mm_set1_epi16(*va.get_unchecked(kk) as i16);
+                for (lane, &bv) in row.iter_mut().zip(&bq) {
+                    *lane = _mm_add_epi32(*lane, _mm_madd_epi16(av, bv));
+                }
+            }
+        }
+        for (out, row) in acc.iter_mut().zip(&vacc) {
+            for (q, &lane) in row.iter().enumerate() {
+                _mm_storeu_si128(out.as_mut_ptr().add(4 * q) as *mut __m128i, lane);
+            }
+        }
+    }
+
+    pub fn tile_sse2(a: [&[i8]; TILE_MR], panel: &[i8], acc: &mut [[i32; PANEL_NR]; TILE_MR]) {
+        debug_assert!(panel.len() == a[0].len() * PANEL_NR);
+        debug_assert!(a.iter().all(|r| r.len() == a[0].len()));
+        // SAFETY: SSE2 is unconditionally available on x86_64; lengths
+        // asserted above.
+        unsafe { tile_sse2_impl(a, panel, acc) }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::{PANEL_NR, TILE_MR};
+    use std::arch::aarch64::*;
+
+    /// NEON tile: `vmull_s8` widens each 8-lane i8 product to i16 exactly,
+    /// then widening adds accumulate into four i32 quads per row.
+    ///
+    /// # Safety
+    /// NEON is part of the aarch64 baseline; slice lengths are validated by
+    /// the safe wrapper's debug asserts + the GEMM core.
+    unsafe fn tile_neon_impl(
+        a: [&[i8]; TILE_MR],
+        panel: &[i8],
+        acc: &mut [[i32; PANEL_NR]; TILE_MR],
+    ) {
+        let k = a[0].len();
+        let zero = vdupq_n_s32(0);
+        let mut vacc = [[zero; 4]; TILE_MR];
+        for kk in 0..k {
+            let b = vld1q_s8(panel.as_ptr().add(kk * PANEL_NR));
+            let blo = vget_low_s8(b);
+            let bhi = vget_high_s8(b);
+            for (row, va) in vacc.iter_mut().zip(&a) {
+                let av = vdup_n_s8(*va.get_unchecked(kk));
+                let plo = vmull_s8(av, blo);
+                let phi = vmull_s8(av, bhi);
+                row[0] = vaddw_s16(row[0], vget_low_s16(plo));
+                row[1] = vaddw_s16(row[1], vget_high_s16(plo));
+                row[2] = vaddw_s16(row[2], vget_low_s16(phi));
+                row[3] = vaddw_s16(row[3], vget_high_s16(phi));
+            }
+        }
+        for (out, row) in acc.iter_mut().zip(&vacc) {
+            for (q, &lane) in row.iter().enumerate() {
+                vst1q_s32(out.as_mut_ptr().add(4 * q), lane);
+            }
+        }
+    }
+
+    pub fn tile_neon(a: [&[i8]; TILE_MR], panel: &[i8], acc: &mut [[i32; PANEL_NR]; TILE_MR]) {
+        debug_assert!(panel.len() == a[0].len() * PANEL_NR);
+        debug_assert!(a.iter().all(|r| r.len() == a[0].len()));
+        // SAFETY: NEON is unconditionally available on aarch64; lengths
+        // asserted above.
+        unsafe { tile_neon_impl(a, panel, acc) }
+    }
+}
+
+/// Kernel names available on this machine, best first, `"scalar"` always
+/// last. Used by the parity tests to exercise every reachable path
+/// in-process regardless of the `GAQ_SIMD` setting.
+pub fn available_kernels() -> Vec<&'static str> {
+    let mut names = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            names.push("avx2");
+        }
+        names.push("sse2");
+    }
+    #[cfg(target_arch = "aarch64")]
+    names.push("neon");
+    names.push("scalar");
+    names
+}
+
+/// Run the named kernel on one tile; returns `false` when that kernel is
+/// not available on this machine (nothing written).
+pub fn tile_with(
+    name: &str,
+    a: [&[i8]; TILE_MR],
+    panel: &[i8],
+    acc: &mut [[i32; PANEL_NR]; TILE_MR],
+) -> bool {
+    match name {
+        "scalar" => tile_scalar(a, panel, acc),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" if std::arch::is_x86_feature_detected!("avx2") => x86::tile_avx2(a, panel, acc),
+        #[cfg(target_arch = "x86_64")]
+        "sse2" => x86::tile_sse2(a, panel, acc),
+        #[cfg(target_arch = "aarch64")]
+        "neon" => arm::tile_neon(a, panel, acc),
+        _ => return false,
+    }
+    true
+}
+
+fn resolve(name: &str) -> Option<TileKernel> {
+    match name {
+        "scalar" => Some(tile_scalar),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" if std::arch::is_x86_feature_detected!("avx2") => Some(x86::tile_avx2),
+        #[cfg(target_arch = "x86_64")]
+        "sse2" => Some(x86::tile_sse2),
+        #[cfg(target_arch = "aarch64")]
+        "neon" => Some(arm::tile_neon),
+        _ => None,
+    }
+}
+
+struct Dispatch {
+    kernel: TileKernel,
+    name: &'static str,
+}
+
+fn dispatch() -> &'static Dispatch {
+    static D: OnceLock<Dispatch> = OnceLock::new();
+    D.get_or_init(|| {
+        let want = std::env::var("GAQ_SIMD").unwrap_or_default().to_ascii_lowercase();
+        let name = match want.as_str() {
+            "" | "auto" => available_kernels()[0],
+            "off" | "0" | "none" | "scalar" => "scalar",
+            other => {
+                if resolve(other).is_some() {
+                    // promote to the canonical &'static str
+                    *available_kernels().iter().find(|&&n| n == other).unwrap_or(&"scalar")
+                } else {
+                    eprintln!("[gaq] GAQ_SIMD={other:?} not available here; using scalar");
+                    "scalar"
+                }
+            }
+        };
+        let kernel = resolve(name).unwrap_or(tile_scalar);
+        // surface the chosen path as gauges: the active kernel reads 1,
+        // every other detected kernel 0 (DESIGN.md §12)
+        for cand in available_kernels() {
+            crate::obs::gauge(&crate::obs::labeled("gemm_simd_kernel", &[("kernel", cand)]))
+                .set((cand == name) as i64);
+        }
+        Dispatch { kernel, name }
+    })
+}
+
+/// The process-wide tile kernel (resolved once; see module docs).
+pub fn tile_kernel() -> TileKernel {
+    dispatch().kernel
+}
+
+/// Name of the active kernel (`avx2`, `sse2`, `neon` or `scalar`).
+pub fn active_kernel() -> &'static str {
+    dispatch().name
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_tile(rng: &mut Rng, k: usize) -> (Vec<Vec<i8>>, Vec<i8>) {
+        let rows: Vec<Vec<i8>> = (0..TILE_MR)
+            .map(|_| (0..k).map(|_| (rng.below(255) as i64 - 127) as i8).collect())
+            .collect();
+        let panel: Vec<i8> =
+            (0..k * PANEL_NR).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+        (rows, panel)
+    }
+
+    #[test]
+    fn every_available_kernel_matches_scalar_exactly() {
+        let mut rng = Rng::new(0x51D);
+        for k in [1usize, 2, 7, 16, 33, 80, 257] {
+            let (rows, panel) = random_tile(&mut rng, k);
+            let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let mut want = [[0i32; PANEL_NR]; TILE_MR];
+            tile_scalar(a, &panel, &mut want);
+            for name in available_kernels() {
+                let mut got = [[0i32; PANEL_NR]; TILE_MR];
+                assert!(tile_with(name, a, &panel, &mut got), "{name} unavailable?");
+                assert_eq!(got, want, "kernel {name} diverged at k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_operands_stay_exact() {
+        // worst-case magnitudes: |(-127) * (-127)| * k must accumulate
+        // without overflow surprises in every lane
+        let k = 512;
+        let rows: Vec<Vec<i8>> = (0..TILE_MR).map(|_| vec![-127i8; k]).collect();
+        let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+        let panel = vec![-127i8; k * PANEL_NR];
+        let mut want = [[0i32; PANEL_NR]; TILE_MR];
+        tile_scalar(a, &panel, &mut want);
+        assert!(want.iter().flatten().all(|&x| x == 127 * 127 * k as i32));
+        for name in available_kernels() {
+            let mut got = [[0i32; PANEL_NR]; TILE_MR];
+            tile_with(name, a, &panel, &mut got);
+            assert_eq!(got, want, "kernel {name} diverged on saturated input");
+        }
+    }
+
+    #[test]
+    fn dispatcher_reports_a_real_kernel() {
+        let name = active_kernel();
+        assert!(available_kernels().contains(&name), "active kernel {name} not in roster");
+        // the kernel actually runs
+        let rows: Vec<Vec<i8>> = (0..TILE_MR).map(|_| vec![1i8; 3]).collect();
+        let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+        let panel = vec![2i8; 3 * PANEL_NR];
+        let mut acc = [[0i32; PANEL_NR]; TILE_MR];
+        tile_kernel()(a, &panel, &mut acc);
+        assert!(acc.iter().flatten().all(|&x| x == 6));
+    }
+}

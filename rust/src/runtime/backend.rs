@@ -16,6 +16,16 @@
 
 use crate::util::error::Result;
 
+/// Type-erased per-caller evaluation scratch (DESIGN.md §14).
+///
+/// Backends that keep reusable state between calls (the GNN backend's
+/// [`crate::model::InferenceScratch`]: skin neighbor list + forward
+/// buffers) hand one out from [`ExecBackend::new_scratch`]; the caller
+/// owns it and passes it back on every [`ExecBackend::energy_forces_into`].
+/// The erasure keeps the trait object-safe and backend-agnostic — each
+/// backend downcasts to its own concrete scratch type.
+pub type BoxedScratch = Box<dyn std::any::Any + Send>;
+
 /// One loaded force-field variant, ready to evaluate.
 pub trait ExecBackend {
     /// Variant name this backend was loaded for (e.g. "gaq_w4a8").
@@ -41,5 +51,35 @@ pub trait ExecBackend {
     /// entry point exactly.
     fn energy_forces_batch(&self, positions_batch: &[Vec<f32>]) -> Result<Vec<(f32, Vec<f32>)>> {
         positions_batch.iter().map(|p| self.energy_forces_f32(p)).collect()
+    }
+
+    /// Fresh per-caller scratch for the allocation-free f64 entry point, or
+    /// `None` when this backend has no native scratch path (the default).
+    fn new_scratch(&self) -> Option<BoxedScratch> {
+        None
+    }
+
+    /// In-place f64 evaluation for the MD hot path: writes forces into
+    /// `forces` (same flat [n*3] layout) and returns the energy. Backends
+    /// with a native scratch path evaluate with zero heap allocations when
+    /// `scratch` carries the box from [`ExecBackend::new_scratch`]; the
+    /// default converts through the f32 single entry point, so results
+    /// always match [`ExecBackend::energy_forces_f32`] up to f64 widening.
+    fn energy_forces_into(
+        &self,
+        positions: &[f64],
+        forces: &mut [f64],
+        scratch: Option<&mut BoxedScratch>,
+    ) -> Result<f64> {
+        let _ = scratch;
+        let pos: Vec<f32> = positions.iter().map(|&x| x as f32).collect();
+        let (e, f) = self.energy_forces_f32(&pos)?;
+        if forces.len() != f.len() {
+            crate::bail!("forces length {} != {}", forces.len(), f.len());
+        }
+        for (dst, &src) in forces.iter_mut().zip(&f) {
+            *dst = src as f64;
+        }
+        Ok(e as f64)
     }
 }

@@ -13,7 +13,7 @@ use crate::md::ForceProvider;
 use crate::molecule::Molecule;
 use crate::util::error::Result;
 
-use super::backend::ExecBackend;
+use super::backend::{BoxedScratch, ExecBackend};
 use super::manifest::Variant;
 use super::reference::ReferenceForceField;
 
@@ -140,29 +140,68 @@ impl CompiledForceField {
     ) -> Result<Vec<(f32, Vec<f32>)>> {
         self.backend.energy_forces_batch(positions_batch)
     }
+
+    /// Per-caller scratch for the allocation-free f64 path, when the
+    /// backend has one (DESIGN.md §14).
+    pub fn new_scratch(&self) -> Option<BoxedScratch> {
+        self.backend.new_scratch()
+    }
+
+    /// In-place f64 evaluation (the MD hot path); see
+    /// [`ExecBackend::energy_forces_into`].
+    pub fn energy_forces_into(
+        &self,
+        positions: &[f64],
+        forces: &mut [f64],
+        scratch: Option<&mut BoxedScratch>,
+    ) -> Result<f64> {
+        self.backend.energy_forces_into(positions, forces, scratch)
+    }
 }
 
 /// Adapter: a loaded variant as an MD [`ForceProvider`] (f64 boundary).
+///
+/// When the backend hands out a scratch ([`CompiledForceField::new_scratch`]),
+/// steps run through the allocation-free f64 path; otherwise the provider
+/// falls back to the f32 entry point with a reused conversion buffer.
 pub struct ModelForceProvider {
     pub ff: Arc<CompiledForceField>,
-    /// scratch to avoid re-allocating the f32 view each step
+    /// f32 view for backends without a native f64 scratch path
     buf: Vec<f32>,
+    /// backend-owned persistent scratch (zero-alloc hot path when `Some`)
+    scratch: Option<BoxedScratch>,
 }
 
 impl ModelForceProvider {
     pub fn new(ff: Arc<CompiledForceField>) -> Self {
         let n = ff.n_atoms * 3;
-        ModelForceProvider { ff, buf: vec![0.0; n] }
+        let scratch = ff.new_scratch();
+        ModelForceProvider { ff, buf: vec![0.0; n], scratch }
     }
 }
 
 impl ForceProvider for ModelForceProvider {
     fn energy_forces(&mut self, positions: &[f64]) -> Result<(f64, Vec<f64>)> {
+        let mut forces = vec![0.0; positions.len()];
+        let e = self.energy_forces_into(positions, &mut forces)?;
+        Ok((e, forces))
+    }
+
+    fn energy_forces_into(&mut self, positions: &[f64], forces: &mut [f64]) -> Result<f64> {
+        if self.scratch.is_some() {
+            return self.ff.energy_forces_into(positions, forces, self.scratch.as_mut());
+        }
         for (b, &p) in self.buf.iter_mut().zip(positions) {
             *b = p as f32;
         }
         let (e, f) = self.ff.energy_forces_f32(&self.buf)?;
-        Ok((e as f64, f.iter().map(|&x| x as f64).collect()))
+        if forces.len() != f.len() {
+            crate::bail!("forces length {} != {}", forces.len(), f.len());
+        }
+        for (dst, &src) in forces.iter_mut().zip(&f) {
+            *dst = src as f64;
+        }
+        Ok(e as f64)
     }
 
     fn label(&self) -> String {

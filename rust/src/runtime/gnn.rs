@@ -17,11 +17,11 @@
 //! exactly what the network head emits. (The reference backend deliberately
 //! skips it — the classical oracle is already absolute.)
 
-use crate::model::{EgnnConfig, EgnnModel, ModelWeights, DEFAULT_WEIGHT_SEED};
+use crate::model::{EgnnConfig, EgnnModel, InferenceScratch, ModelWeights, DEFAULT_WEIGHT_SEED};
 use crate::util::error::Result;
 use crate::util::threadpool::ThreadPool;
 
-use super::backend::ExecBackend;
+use super::backend::{BoxedScratch, ExecBackend};
 use super::manifest::{Manifest, Variant};
 
 /// One loaded GNN variant, ready to evaluate.
@@ -119,6 +119,34 @@ impl ExecBackend for GnnForceField {
 
     fn energy_forces_batch(&self, positions_batch: &[Vec<f32>]) -> Result<Vec<(f32, Vec<f32>)>> {
         self.energy_forces_batch_with(positions_batch, ThreadPool::global())
+    }
+
+    fn new_scratch(&self) -> Option<BoxedScratch> {
+        Some(Box::new(self.model.make_scratch()))
+    }
+
+    fn energy_forces_into(
+        &self,
+        positions: &[f64],
+        forces: &mut [f64],
+        scratch: Option<&mut BoxedScratch>,
+    ) -> Result<f64> {
+        if positions.len() != self.n_atoms * 3 || forces.len() != positions.len() {
+            crate::bail!(
+                "positions/forces lengths {}/{} != 3*n_atoms ({})",
+                positions.len(),
+                forces.len(),
+                3 * self.n_atoms
+            );
+        }
+        match scratch.and_then(|b| b.downcast_mut::<InferenceScratch>()) {
+            Some(s) => Ok(self.model.energy_forces_into(positions, forces, s) + self.e_shift),
+            None => {
+                let (e, f) = self.model.energy_forces(positions);
+                forces.copy_from_slice(&f);
+                Ok(e + self.e_shift)
+            }
+        }
     }
 }
 

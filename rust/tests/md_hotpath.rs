@@ -1,0 +1,88 @@
+//! ISSUE 10 acceptance: steady-state MD steps on the GNN backend perform
+//! ZERO heap allocations. A counting global allocator wraps the system
+//! allocator; after a warmup phase (buffer high-water marks, span-stack
+//! capacity, at least one skin-list rebuild) the allocation counter must
+//! not move across 50 production `verlet_step_into` steps.
+//!
+//! This file intentionally holds a single #[test]: the global allocator is
+//! process-wide, and a concurrently running sibling test would perturb the
+//! counter. See DESIGN.md §14 for the hot-path memory model this pins down.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use gaq_md::md::integrator::{verlet_step_into, MdState};
+use gaq_md::md::ForceProvider;
+use gaq_md::runtime::{load_variant_choice, BackendChoice, ModelForceProvider};
+use gaq_md::util::prng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_gnn_md_steps_do_not_allocate() {
+    // Serial GEMM path: the worker pool would allocate per dispatch (task
+    // boxing, channel nodes), which is out of scope for the single-replica
+    // hot path this test pins down. The pool itself is exercised for
+    // bit-parity in tests/parallel_parity.rs.
+    std::env::set_var("GAQ_THREADS", "1");
+
+    let (manifest, _engine, ff) =
+        load_variant_choice("/nonexistent/nowhere", "gaq_w4a8", BackendChoice::Gnn).unwrap();
+    let mol = &manifest.molecule;
+    let mut provider = ModelForceProvider::new(ff);
+
+    let mut state = MdState::new(mol.positions.clone(), mol.masses.clone());
+    let mut rng = Rng::new(17);
+    state.thermalize(300.0, &mut rng);
+
+    let n3 = mol.positions.len();
+    let mut forces = vec![0.0f64; n3];
+    provider.energy_forces_into(&state.positions, &mut forces).unwrap();
+
+    // Warmup: scratch buffers reach their high-water sizes, the span
+    // thread-local stack reaches full nesting depth, interned span names
+    // are created, and the skin list rebuilds at least once as atoms
+    // drift. 100 steps at 0.5 fs is far past all of those.
+    for _ in 0..100 {
+        verlet_step_into(&mut state, &mut forces, 0.5, &mut provider).unwrap();
+    }
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..50 {
+        let pe = verlet_step_into(&mut state, &mut forces, 0.5, &mut provider).unwrap();
+        assert!(pe.is_finite());
+    }
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+
+    assert_eq!(
+        delta, 0,
+        "steady-state MD steps allocated {delta} time(s); the GNN hot path \
+         must be zero-alloc (DESIGN.md §14)"
+    );
+}

@@ -10,9 +10,10 @@ use gaq_md::md::ForceProvider;
 use gaq_md::molecule::ForceField;
 use gaq_md::quant::gemm::{
     f32_bits_eq, gemm_f32, gemm_f32_pool, gemm_i8, gemm_i8_pool, gemm_i8_scalar, gemm_packed,
-    gemm_packed_pool, gemm_w4a8, gemm_w4a8_pool, gemm_w4a8_scalar,
+    gemm_packed_pool, gemm_w4a8, gemm_w4a8_pool, gemm_w4a8_scalar, TILE_MR,
 };
 use gaq_md::quant::pack::{quantize_i4, quantize_i8, PackedB, PANEL_NR};
+use gaq_md::quant::simd::{active_kernel, available_kernels, tile_scalar, tile_with};
 use gaq_md::util::error::Result;
 use gaq_md::util::prng::Rng;
 use gaq_md::util::proptest::check;
@@ -164,6 +165,80 @@ fn prop_packed_pool_bit_identical_to_serial_on_randomized_shapes() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn prop_simd_tile_kernels_bit_identical_to_scalar_tile() {
+    // every SIMD micro-kernel reachable on this machine against the scalar
+    // tile oracle over randomized K extents and full ±127 operand range —
+    // run here (not only in the unit tests) so the `GAQ_SIMD={auto,off}`
+    // CI matrix exercises the kernels alongside the pooled-parity suite
+    check(
+        "simd tile kernels == scalar tile (bitwise)",
+        93,
+        40,
+        |r: &mut Rng| (1 + r.below(130), r.next_u64()),
+        |&(k, seed)| {
+            let mut rng = Rng::new(seed);
+            let rows: Vec<Vec<i8>> = (0..TILE_MR)
+                .map(|_| (0..k).map(|_| (rng.below(255) as i64 - 127) as i8).collect())
+                .collect();
+            let panel: Vec<i8> =
+                (0..k * PANEL_NR).map(|_| (rng.below(255) as i64 - 127) as i8).collect();
+            let a = [&rows[0][..], &rows[1][..], &rows[2][..], &rows[3][..]];
+            let mut want = [[0i32; PANEL_NR]; TILE_MR];
+            tile_scalar(a, &panel, &mut want);
+            for name in available_kernels() {
+                let mut got = [[0i32; PANEL_NR]; TILE_MR];
+                if !tile_with(name, a, &panel, &mut got) {
+                    return Err(format!("kernel {name} listed as available but refused"));
+                }
+                if got != want {
+                    return Err(format!("kernel {name} != scalar tile at k={k}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dispatched_gemm_matches_scalar_oracle_and_pool_under_gaq_simd() {
+    // the full dispatched path (whatever GAQ_SIMD selected for this
+    // process) against the scalar triple-loop oracle and the pooled
+    // shards, both nibble parities — the CI matrix runs this test twice,
+    // once with SIMD auto-detected and once forced off
+    let kernel = active_kernel();
+    assert!(available_kernels().contains(&kernel), "dispatch picked unknown kernel {kernel}");
+    let mut rng = Rng::new(2024);
+    for (m, k, n) in [(5usize, 33usize, PANEL_NR + 3), (8, 64, 2 * PANEL_NR), (3, 17, 7)] {
+        let a = random_vec(&mut rng, m * k);
+        let b = random_vec(&mut rng, k * n);
+        let qa = quantize_i8(&a);
+        let qb8 = quantize_i8(&b);
+        let qb4 = quantize_i4(&b);
+        let mut c_simd = vec![0f32; m * n];
+        let mut c_scalar = vec![0f32; m * n];
+        let mut c_pool = vec![0f32; m * n];
+
+        gemm_packed(&qa, &PackedB::from_i8(&qb8, k, n), &mut c_simd, m, k, n);
+        gemm_i8_scalar(&qa, &qb8, &mut c_scalar, m, k, n);
+        f32_bits_eq(&c_simd, &c_scalar)
+            .unwrap_or_else(|e| panic!("[{kernel}] i8 dispatch != scalar at ({m},{k},{n}): {e}"));
+
+        let packed4 = PackedB::from_i4(&qb4, k, n);
+        gemm_packed(&qa, &packed4, &mut c_simd, m, k, n);
+        gemm_w4a8_scalar(&qa, &qb4, &mut c_scalar, m, k, n);
+        f32_bits_eq(&c_simd, &c_scalar)
+            .unwrap_or_else(|e| panic!("[{kernel}] w4a8 dispatch != scalar at ({m},{k},{n}): {e}"));
+
+        for threads in [2usize, 5] {
+            gemm_packed_pool(&ThreadPool::new(threads), &qa, &packed4, &mut c_pool, m, k, n);
+            f32_bits_eq(&c_simd, &c_pool).unwrap_or_else(|e| {
+                panic!("[{kernel}] pooled != serial at ({m},{k},{n}) threads={threads}: {e}")
+            });
+        }
+    }
 }
 
 #[test]
